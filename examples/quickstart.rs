@@ -1,0 +1,79 @@
+//! Quickstart: quantize one weight matrix with PCDVQ, end to end.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full pipeline on a synthetic Gaussian weight: DACC codebook
+//! construction (greedy-E8 directions + Lloyd-Max magnitudes) → RHT
+//! regularization → polar decoupling → assignment → packing → dequantization,
+//! printing the error decomposition and the storage accounting at both paper
+//! operating points (2.0 and 2.125 bpw).
+
+use std::sync::Arc;
+
+use pcdvq::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook};
+use pcdvq::quant::error::decompose_weights;
+use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
+use pcdvq::quant::Quantizer;
+use pcdvq::rng::Rng;
+use pcdvq::tensor::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    // A synthetic "linear layer": 512x512, Gaussian with a few outliers —
+    // the RHT step exists exactly to tame those.
+    let mut rng = Rng::new(42);
+    let mut data = rng.normal_vec(512 * 512);
+    for i in (0..data.len()).step_by(10_007) {
+        data[i] *= 25.0;
+    }
+    let w = Matrix::from_vec(data, 512, 512);
+    println!("weight: 512x512, fro norm {:.1}", w.fro_norm());
+
+    for (a, b) in [(14u32, 2u32), (15, 2)] {
+        let bpw = (a + b) as f64 / 8.0;
+        println!("\n== PCDVQ at {} bpw (a={a}, b={b}, k=8) ==", bpw);
+
+        // 1. DACC codebooks (offline, cached in real runs — built here fresh)
+        let t = std::time::Instant::now();
+        let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, a, 8, 0));
+        let mag = Arc::new(MagnitudeCodebook::paper_default(b, 8));
+        println!(
+            "codebooks: {} directions (greedy E8) + {:?} magnitudes (Lloyd-Max) in {:.1}s",
+            dir.len(),
+            mag.levels,
+            t.elapsed().as_secs_f64()
+        );
+
+        // 2. quantize (RHT → decouple → assign → pack)
+        let q = Pcdvq::new(PcdvqConfig { dir_bits: a, mag_bits: b, k: 8, seed: 7 }, dir, mag);
+        let t = std::time::Instant::now();
+        let qw = q.quantize_full(&w);
+        println!(
+            "quantized {} vectors in {:.2}s -> {} KiB payload ({:.4} bpw incl. metadata)",
+            qw.n_vectors(),
+            t.elapsed().as_secs_f64(),
+            qw.payload_bits() / 8 / 1024,
+            qw.payload_bits() as f64 / w.len() as f64
+        );
+
+        // 3. dequantize + measure
+        let deq = q.dequantize_full(&qw);
+        let d = decompose_weights(&w, &deq, 8);
+        println!(
+            "reconstruction: total MSE {:.5} | direction {:.5} | magnitude {:.5} (per 8-vector)",
+            d.total_mse, d.direction_mse, d.magnitude_mse
+        );
+        println!(
+            "relative fro error {:.4}",
+            (w.mse(&deq) * w.len() as f64).sqrt() / w.fro_norm() as f64
+        );
+
+        // 4. the Quantizer trait view (what the scheduler drives)
+        let qws = q.quantize(&w);
+        println!("trait bpw accounting: {:.3} nominal", q.bits_per_weight());
+        assert_eq!(qws.dequantize().rows(), 512);
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Sensitivity sweep: how the (a, b) bit split moves accuracy — the design
+//! question behind the paper's "allocate more bits to direction" principle.
+//!
+//! ```text
+//! cargo run --release --example sensitivity_sweep [model]
+//! ```
+//!
+//! Holds the total index budget fixed at 16 bits per 8-vector (2.0 bpw) and
+//! sweeps the direction/magnitude split, measuring reconstruction error and
+//! model quality for each. The paper's choice (a=14, b=2) should sit at or
+//! near the optimum — a finer-grained version of Figure 1(a)'s argument.
+
+use anyhow::Result;
+use pcdvq::config::{build_pcdvq_with, Paths};
+use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
+use pcdvq::coordinator::quantize_model_parallel;
+use pcdvq::eval::{evaluate_ppl, weight_inputs};
+use pcdvq::quant::error::decompose_weights;
+use pcdvq::runtime::Engine;
+
+fn main() -> Result<()> {
+    let paths = Paths::detect();
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "gpt-m".into());
+    let model = paths.load_model(&model_name)?;
+    let engine = Engine::new()?;
+    let eval_tokens = paths.eval_tokens()?;
+
+    println!("total budget fixed at a+b = 16 bits / 8-vector (2.0 bpw), {model_name}\n");
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>9}",
+        "(a, b)", "dir MSE", "mag MSE", "total MSE", "ppl"
+    );
+    for (a, b) in [(10u32, 6u32), (12, 4), (13, 3), (14, 2), (15, 1)] {
+        let q = build_pcdvq_with(
+            &paths,
+            DirectionMethod::GreedyE8,
+            MagnitudeMethod::LloydMax,
+            a,
+            b,
+            7,
+        )?;
+        let (qm, _) = quantize_model_parallel(&model, &q, 1);
+        // error decomposition over all layers
+        let (mut dir, mut mag, mut tot, mut n) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+        for name in model.config.quantizable_names() {
+            let d = decompose_weights(&model.tensors[&name], &qm.tensors[&name], 8);
+            dir += d.direction_mse * d.count as f64;
+            mag += d.magnitude_mse * d.count as f64;
+            tot += d.total_mse * d.count as f64;
+            n += d.count;
+        }
+        let exe = engine.load(paths.artifacts.join(format!("fwd_fp_{model_name}_b8")))?;
+        let fixed = weight_inputs(&qm, &exe.manifest)?;
+        let bound = exe.bind(&fixed, 1)?;
+        let ppl = evaluate_ppl(&bound, &model.config, &eval_tokens, 8, 32, 1.0)?;
+        println!(
+            "({a:>2},{b:>2})     {:>10.5} {:>10.5} {:>10.5} {:>9.3}",
+            dir / n as f64,
+            mag / n as f64,
+            tot / n as f64,
+            ppl.ppl
+        );
+    }
+    println!("\nexpectation: total MSE and ppl minimized near the paper's (14, 2);");
+    println!("starving the direction codebook (small a) hurts most.");
+    Ok(())
+}

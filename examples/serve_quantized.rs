@@ -1,0 +1,93 @@
+//! Serving demo: the batched generation service on PCDVQ codes.
+//!
+//! ```text
+//! cargo run --release --example serve_quantized [model] [n_requests]
+//! ```
+//!
+//! Spawns client threads that submit prompts at random offsets of the eval
+//! corpus, runs the coordinator's batcher + server on the `fwd_q` artifact
+//! (weights live as 2-bit codes; dequant happens inside the executable), and
+//! prints the §4.4-style metrics: tokens/s, batch occupancy, latency
+//! percentiles, resident weight bytes.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::Result;
+use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
+use pcdvq::config::{build_pcdvq_with, Paths};
+use pcdvq::coordinator::{Batcher, BatcherConfig, GenRequest, Server, ServingWeights};
+use pcdvq::model::QuantizedGpt;
+use pcdvq::rng::Rng;
+use pcdvq::runtime::Engine;
+
+fn main() -> Result<()> {
+    let paths = Paths::detect();
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "gpt-m".into());
+    let n_requests: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+
+    let model = paths.load_model(&model_name)?;
+    let engine = Engine::new()?;
+
+    // quantize to codes (this is what would ship to the edge device)
+    let pcdvq =
+        build_pcdvq_with(&paths, DirectionMethod::GreedyE8, MagnitudeMethod::LloydMax, 14, 2, 7)?;
+    let t = Instant::now();
+    let q = QuantizedGpt::quantize(&model, &pcdvq);
+    println!(
+        "quantized {model_name} to PCDVQ codes in {:.1}s: {} KiB payload vs {} KiB fp32 ({:.1}x)",
+        t.elapsed().as_secs_f64(),
+        q.payload_bits() / 8 / 1024,
+        q.dense_bits() / 8 / 1024,
+        q.dense_bits() as f64 / q.payload_bits() as f64
+    );
+
+    let mut server = Server::new(
+        &engine,
+        &paths.artifacts,
+        ServingWeights::Quantized(Box::new(q), (*pcdvq.dir).clone(), (*pcdvq.mag).clone()),
+    )?;
+
+    // client side: one burst of requests through the batcher
+    let eval_tokens = paths.eval_tokens()?;
+    let (tx, rx) = channel::<GenRequest>();
+    let batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rng = Rng::new(7);
+    let mut responses = Vec::new();
+    for i in 0..n_requests {
+        let s = rng.below(eval_tokens.len() - 80);
+        let prompt: Vec<u8> = eval_tokens[s..s + 56].iter().map(|&t| t as u8).collect();
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt,
+            max_new: 24,
+            temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        responses.push(rrx);
+    }
+    drop(tx);
+    server.serve(&batcher)?;
+
+    println!("\nserver metrics: {}", server.metrics.summary());
+    for (i, rrx) in responses.iter().enumerate().take(3) {
+        if let Ok(resp) = rrx.recv() {
+            println!(
+                "sample {}: {:?} ({} steps, {:.0} ms)",
+                i,
+                String::from_utf8_lossy(&resp.generated)
+                    .chars()
+                    .take(40)
+                    .collect::<String>(),
+                resp.steps,
+                resp.latency.as_millis()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time python package: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — the Rust coordinator consumes only the artifacts
+this package writes (HLO text, PCT1 weight containers, manifests).
+"""

@@ -1,0 +1,268 @@
+"""AOT export: corpus -> trained models -> HLO-text artifacts + manifests.
+
+This is the single build-time python entry point (`make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs (all consumed by the Rust coordinator, never by python at runtime):
+
+    corpus_train.pct / corpus_eval.pct   byte-token streams (u32)
+    <model>.pct                          trained tinygpt weights + meta
+    fwd_fp_<model>_b{B}.hlo.txt/.manifest   dense forward (logits)
+    fwd_q_<model>.hlo.txt/.manifest      PCDVQ in-graph-dequant forward
+    assign_chunk.hlo.txt/.manifest       Pallas cosine-argmax kernel chunk
+    dequant_weight.hlo.txt/.manifest     Pallas fused dequant kernel
+
+Interchange is HLO **text** (xla_extension 0.5.1 rejects jax>=0.5 protos with
+64-bit ids — see /opt/xla-example/README.md); Pallas kernels are lowered with
+``interpret=True`` so CPU PJRT can execute them (Mosaic custom-calls cannot).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import pct
+from . import train as train_mod
+from .kernels import assign as assign_kernel
+from .kernels import dequant as dequant_kernel
+
+# Serving/eval batch geometry compiled into the artifacts.
+BATCH = 8
+# PCDVQ serving config baked into fwd_q: the paper's 2.0-bpw setting.
+DIR_BITS = 14
+MAG_BITS = 2
+K = 8
+# Pallas assign-chunk geometry.
+ASSIGN_CHUNK = 8192
+ASSIGN_CB = 1 << DIR_BITS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_manifest(path: str, args: Sequence[Tuple[str, np.dtype, Tuple[int, ...]]]):
+    """Text manifest: `<index> <name> <dtype> <d0,d1,...>` per input, in HLO
+    parameter order. Rust's runtime::manifest parses this."""
+    with open(path, "w") as f:
+        for i, (name, dtype, shape) in enumerate(args):
+            dims = ",".join(str(d) for d in shape) if shape else "scalar"
+            f.write(f"{i} {name} {np.dtype(dtype).name} {dims}\n")
+
+
+def export_fwd_fp(cfg, out_dir: str, batch: int) -> None:
+    """Dense forward as a flat-tuple function (explicit parameter order)."""
+    names = sorted(model_mod.init_params(cfg, 0).keys())
+    shapes = {k: v.shape for k, v in model_mod.init_params(cfg, 0).items()}
+
+    def fwd(*args):
+        params = dict(zip(names, args[:-1]))
+        tokens = args[-1]
+        return (model_mod.forward_fp(cfg, params, tokens),)
+
+    specs = [jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in names]
+    specs.append(jax.ShapeDtypeStruct((batch, cfg.ctx), jnp.int32))
+    lowered = jax.jit(fwd).lower(*specs)
+    base = os.path.join(out_dir, f"fwd_fp_{cfg.name}_b{batch}")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest = [(k, np.float32, shapes[k]) for k in names]
+    manifest.append(("tokens", np.int32, (batch, cfg.ctx)))
+    write_manifest(base + ".manifest", manifest)
+    print(f"[aot] wrote {base}.hlo.txt ({len(names)+1} inputs)")
+
+
+def export_fwd_q(cfg, out_dir: str, batch: int) -> None:
+    """PCDVQ serving forward: codes + codebooks in, logits out."""
+    qnames = model_mod.quantizable_names(cfg)
+    fp_names = sorted(
+        k for k in model_mod.init_params(cfg, 0).keys() if k not in qnames
+    )
+    shapes = {k: v.shape for k, v in model_mod.init_params(cfg, 0).items()}
+
+    manifest: List[Tuple[str, np.dtype, Tuple[int, ...]]] = []
+    specs: List[jax.ShapeDtypeStruct] = []
+    for k in fp_names:
+        manifest.append((k, np.float32, shapes[k]))
+        specs.append(jax.ShapeDtypeStruct(shapes[k], jnp.float32))
+    for name in qnames:
+        rows, cols = model_mod.weight_shape(cfg, name)
+        n_vec = rows * cols // K
+        for field, dt, shp in (
+            ("dir_idx", np.int32, (n_vec,)),
+            ("mag_idx", np.int32, (n_vec,)),
+            ("scales", np.float32, (cols,)),
+            ("signs", np.float32, (rows,)),
+        ):
+            manifest.append((f"{name}.{field}", dt, shp))
+            specs.append(jax.ShapeDtypeStruct(shp, jnp.dtype(dt)))
+    manifest.append(("codebook.dir", np.float32, (1 << DIR_BITS, K)))
+    specs.append(jax.ShapeDtypeStruct((1 << DIR_BITS, K), jnp.float32))
+    manifest.append(("codebook.mag", np.float32, (1 << MAG_BITS,)))
+    specs.append(jax.ShapeDtypeStruct((1 << MAG_BITS,), jnp.float32))
+    manifest.append(("tokens", np.int32, (batch, cfg.ctx)))
+    specs.append(jax.ShapeDtypeStruct((batch, cfg.ctx), jnp.int32))
+
+    n_fp = len(fp_names)
+
+    def fwd(*args):
+        fp_params = dict(zip(fp_names, args[:n_fp]))
+        qweights = {}
+        pos = n_fp
+        for name in qnames:
+            qweights[name] = {
+                "dir_idx": args[pos],
+                "mag_idx": args[pos + 1],
+                "scales": args[pos + 2],
+                "signs": args[pos + 3],
+            }
+            pos += 4
+        dir_cb, mag_levels, tokens = args[pos], args[pos + 1], args[pos + 2]
+        return (
+            model_mod.forward_q(cfg, fp_params, qweights, dir_cb, mag_levels, tokens),
+        )
+
+    lowered = jax.jit(fwd).lower(*specs)
+    base = os.path.join(out_dir, f"fwd_q_{cfg.name}")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered))
+    write_manifest(base + ".manifest", manifest)
+    print(f"[aot] wrote {base}.hlo.txt ({len(specs)} inputs)")
+
+
+def export_assign_kernel(out_dir: str) -> None:
+    """The L1 Pallas cosine-argmax kernel as a standalone chunk executable."""
+
+    def fn(vectors, codebook):
+        return (assign_kernel.assign_cosine_pallas(vectors, codebook, interpret=True),)
+
+    specs = (
+        jax.ShapeDtypeStruct((ASSIGN_CHUNK, K), jnp.float32),
+        jax.ShapeDtypeStruct((ASSIGN_CB, K), jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    base = os.path.join(out_dir, "assign_chunk")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered))
+    write_manifest(
+        base + ".manifest",
+        [
+            ("vectors", np.float32, (ASSIGN_CHUNK, K)),
+            ("codebook", np.float32, (ASSIGN_CB, K)),
+        ],
+    )
+    print(f"[aot] wrote {base}.hlo.txt")
+
+
+def export_dequant_kernel(out_dir: str) -> None:
+    """The L1 Pallas fused-dequant kernel for a 128x512 weight tile-grid."""
+    rows, cols = 128, 512
+    n_vec = rows * cols // K
+
+    def fn(dir_idx, mag_idx, dir_cb, mag_levels, scales, signs):
+        return (
+            dequant_kernel.dequant_weight_pallas(
+                dir_idx, mag_idx, dir_cb, mag_levels, scales, signs,
+                rows=rows, cols=cols, interpret=True,
+            ),
+        )
+
+    specs = (
+        jax.ShapeDtypeStruct((n_vec,), jnp.int32),
+        jax.ShapeDtypeStruct((n_vec,), jnp.int32),
+        jax.ShapeDtypeStruct((1 << DIR_BITS, K), jnp.float32),
+        jax.ShapeDtypeStruct((1 << MAG_BITS,), jnp.float32),
+        jax.ShapeDtypeStruct((cols,), jnp.float32),
+        jax.ShapeDtypeStruct((rows,), jnp.float32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    base = os.path.join(out_dir, "dequant_weight")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(to_hlo_text(lowered))
+    write_manifest(
+        base + ".manifest",
+        [
+            ("dir_idx", np.int32, (n_vec,)),
+            ("mag_idx", np.int32, (n_vec,)),
+            ("codebook.dir", np.float32, (1 << DIR_BITS, K)),
+            ("codebook.mag", np.float32, (1 << MAG_BITS,)),
+            ("scales", np.float32, (cols,)),
+            ("signs", np.float32, (rows,)),
+        ],
+    )
+    print(f"[aot] wrote {base}.hlo.txt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="gpt-s,gpt-m,gpt-l,gpt-alt,gpt-mini",
+        help="comma-separated model names to train/export",
+    )
+    ap.add_argument("--steps-scale", type=float, default=1.0,
+                    help="scale training steps (CI smoke: 0.05)")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only (re)export HLO for existing weights")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    models = [m for m in args.models.split(",") if m]
+
+    # 1. corpus
+    train_tok_path = os.path.join(out, "corpus_train.pct")
+    eval_tok_path = os.path.join(out, "corpus_eval.pct")
+    if not (os.path.exists(train_tok_path) and os.path.exists(eval_tok_path)):
+        corpus = data_mod.collect_corpus()
+        tokens = data_mod.tokenize(corpus)
+        tr, ev = data_mod.train_eval_split(tokens)
+        pct.save(train_tok_path, {"tokens": tr.astype(np.uint32)})
+        pct.save(eval_tok_path, {"tokens": ev.astype(np.uint32)})
+        print(f"[aot] corpus: {len(tr)} train / {len(ev)} eval tokens")
+    else:
+        tr = pct.load(train_tok_path)["tokens"]
+        print(f"[aot] corpus cached: {len(tr)} train tokens")
+
+    # 2. train models (skipped per-model when weights already exist)
+    for name in models:
+        wpath = os.path.join(out, f"{name}.pct")
+        if os.path.exists(wpath) or args.skip_train:
+            print(f"[aot] weights cached: {wpath}")
+            continue
+        steps = max(int(train_mod.TRAIN_STEPS[name] * args.steps_scale), 5)
+        saved = train_mod.TRAIN_STEPS[name]
+        train_mod.TRAIN_STEPS[name] = steps
+        params = train_mod.train_model(name, tr)
+        train_mod.TRAIN_STEPS[name] = saved
+        train_mod.save_model(wpath, name, params)
+        print(f"[aot] saved {wpath}")
+
+    # 3. HLO artifacts
+    for name in models:
+        cfg = model_mod.CONFIGS[name]
+        export_fwd_fp(cfg, out, BATCH)
+        export_fwd_fp(cfg, out, 1)  # latency-path artifact
+        export_fwd_q(cfg, out, BATCH)
+    export_assign_kernel(out)
+    export_dequant_kernel(out)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

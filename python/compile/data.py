@@ -1,0 +1,82 @@
+"""Corpus assembly + byte-level tokenization.
+
+The paper evaluates on WikiText2/C4, which are not available offline. The
+substitute (DESIGN.md §2) is a real text corpus assembled from documentation
+and source text present in the image — README files, rust sources, python
+sources — which gives a few MB of natural-ish English + code. Byte-level
+tokenization (vocab = 256) avoids shipping a tokenizer across the language
+boundary.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import List
+
+import numpy as np
+
+# Directories scanned for corpus text, in priority order.
+CORPUS_ROOTS = [
+    "/opt/xla-example/vendor",
+    "/opt/xla-example",
+    "/root/repo",
+]
+TEXT_SUFFIXES = {".md", ".rs", ".py", ".txt", ".toml"}
+MAX_BYTES = 6_000_000
+MAX_FILE_BYTES = 200_000
+
+VOCAB = 256
+
+
+def collect_corpus(max_bytes: int = MAX_BYTES) -> bytes:
+    """Deterministically walk the corpus roots and concatenate text files."""
+    chunks: List[bytes] = []
+    total = 0
+    for root in CORPUS_ROOTS:
+        if total >= max_bytes:
+            break
+        if not os.path.isdir(root):
+            continue
+        for path in sorted(Path(root).rglob("*")):
+            if total >= max_bytes:
+                break
+            if not path.is_file() or path.suffix not in TEXT_SUFFIXES:
+                continue
+            if "target" in path.parts or "artifacts" in path.parts:
+                continue
+            try:
+                data = path.read_bytes()[:MAX_FILE_BYTES]
+            except OSError:
+                continue
+            # keep it printable-ish: skip binary-looking files
+            if data and data.count(0) == 0:
+                chunks.append(data)
+                chunks.append(b"\n\n")
+                total += len(data) + 2
+    corpus = b"".join(chunks)[:max_bytes]
+    if len(corpus) < 100_000:
+        raise RuntimeError(f"corpus too small: {len(corpus)} bytes")
+    return corpus
+
+
+def tokenize(data: bytes) -> np.ndarray:
+    """Byte-level tokens as u32."""
+    return np.frombuffer(data, dtype=np.uint8).astype(np.uint32)
+
+
+def train_eval_split(tokens: np.ndarray, eval_frac: float = 0.05):
+    """Contiguous head/tail split (no leakage across the boundary)."""
+    n_eval = max(int(len(tokens) * eval_frac), 10_000)
+    return tokens[:-n_eval], tokens[-n_eval:]
+
+
+def batch_iterator(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    """Random-crop batches of (inputs, targets), deterministic in `seed`."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[s : s + seq] for s in starts]).astype(np.int32)
+        y = np.stack([tokens[s + 1 : s + seq + 1] for s in starts]).astype(np.int32)
+        yield x, y

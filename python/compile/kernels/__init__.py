@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (assign, dequant) and their pure-jnp oracles (ref)."""

@@ -1,0 +1,103 @@
+"""Pallas kernel: tiled cosine-argmax direction assignment (L1).
+
+The paper's nearest-codeword search is a CUDA per-thread scan in prior VQ
+systems; the TPU rethink (DESIGN.md §7) formulates it as an MXU GEMM
+(vector-tile x codebook-tile^T) followed by an on-chip running argmax across
+codebook tiles:
+
+  grid = (n_vec_tiles, n_cb_tiles); each step computes a (TV, TC) score tile
+  in VMEM and folds it into per-vector running (best_score, best_index)
+  accumulators that live in the output refs across the codebook-tile axis.
+
+VMEM budget at the paper config (a = 14, k = 8): codebook tile 512x8 f32 =
+16 KiB, vector tile 1024x8 f32 = 32 KiB, score tile 1024x512 f32 = 2 MiB —
+comfortably inside the ~16 MiB VMEM of a TPUv4 core; the MXU sees
+(1024x8)@(8x512) bf16-able GEMMs. On this image the kernel runs under
+``interpret=True`` (Mosaic custom-calls cannot execute on CPU PJRT), so
+correctness is validated here and performance is *estimated* in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes (see module docstring for the VMEM budget).
+TV = 256   # vectors per tile
+TC = 512   # codebook rows per tile
+
+
+def _assign_kernel(v_ref, cb_ref, best_ref, idx_ref):
+    """One (vector-tile, codebook-tile) grid step."""
+    j = pl.program_id(1)
+
+    # (TV, k) @ (k, TC) -> (TV, TC) score tile: the MXU GEMM.
+    scores = v_ref[...] @ cb_ref[...].T
+
+    tile_best = jnp.max(scores, axis=1)
+    tile_arg = jnp.argmax(scores, axis=1).astype(jnp.int32) + j * TC
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = tile_best
+        idx_ref[...] = tile_arg
+
+    @pl.when(j > 0)
+    def _fold():
+        prev_best = best_ref[...]
+        prev_idx = idx_ref[...]
+        take = tile_best > prev_best
+        best_ref[...] = jnp.where(take, tile_best, prev_best)
+        idx_ref[...] = jnp.where(take, tile_arg, prev_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def assign_cosine_pallas(
+    vectors: jnp.ndarray, codebook: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Direction assignment via the tiled Pallas kernel.
+
+    vectors: (n, k) with n % TV == 0; codebook: (m, k) with m % TC == 0.
+    Returns int32 (n,) argmax-cosine indices (codebook rows unit-norm).
+    """
+    n, k = vectors.shape
+    m, k2 = codebook.shape
+    assert k == k2, f"dim mismatch {k} vs {k2}"
+    assert n % TV == 0, f"n={n} must be a multiple of {TV} (pad upstream)"
+    assert m % TC == 0, f"m={m} must be a multiple of {TC} (pad upstream)"
+
+    grid = (n // TV, m // TC)
+    best, idx = pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TV, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((TC, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TV,), lambda i, j: (i,)),
+            pl.BlockSpec((TV,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vectors, codebook)
+    del best
+    return idx
+
+
+def pad_to_multiple(x: jnp.ndarray, axis: int, multiple: int, value: float = 0.0):
+    """Pad `x` along `axis` up to the next multiple; returns (padded, orig)."""
+    n = x.shape[axis]
+    target = ((n + multiple - 1) // multiple) * multiple
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad, constant_values=value), n

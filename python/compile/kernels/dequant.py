@@ -1,0 +1,106 @@
+"""Pallas kernel: fused PCDVQ dequant + matmul tile (L1).
+
+The serving hot loop computes `y = x @ W_hat` where `W_hat` never exists in
+HBM at full precision — only the 2-bit code stream, the two DACC codebooks
+and the per-column scales do. The CUDA implementations of prior VQ systems
+gather codewords through shared memory per threadblock; the TPU rethink
+(DESIGN.md §7):
+
+  * both codebooks are VMEM-resident for the whole kernel (dir codebook at
+    a = 14 is 16384x8 f32 = 512 KiB; mag levels are tiny),
+  * the grid walks (row-tile, col-tile) over the *regularized* weight H; the
+    code tile for a (TR, TCOL) block is gathered in VMEM and scaled, then
+  * the MXU consumes the reconstructed tile for the GEMM against the
+    activation strip; the inverse RHT is folded into the activations once per
+    call (it commutes with the column-blocked GEMM).
+
+Under ``interpret=True`` the gather lowers to plain HLO; numerics are
+validated against `ref.dequant_matmul` in pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TR = 64    # rows of H per tile (vector groups: TR*TCOL/k codes per tile)
+TCOL = 64  # columns of H per tile
+
+
+def _dequant_tile_kernel(dir_idx_ref, mag_idx_ref, dir_cb_ref, mag_ref, scale_ref, h_ref):
+    """Reconstruct one (TR, TCOL) tile of the regularized weight H."""
+    # Codes for this tile: (TR, TCOL//k) each. Flatten to 1-D before the
+    # gather: row-gathers with rank-1 indices lower to the same HLO pattern
+    # as embedding lookups, which the pinned xla_extension 0.5.1 executes
+    # correctly — the rank-2 scalar-gather form mis-executes after the HLO
+    # text round-trip (returns zeros), see DESIGN.md §6.
+    di = dir_idx_ref[...].reshape(-1)             # (TR*TCOL//k,)
+    mi = mag_idx_ref[...].reshape(-1)
+    dirs = dir_cb_ref[di]                         # (TR*TCOL//k, k)
+    mags = mag_ref[mi][:, None]                   # (TR*TCOL//k, 1)
+    tile = (dirs * mags).reshape(TR, TCOL)
+    h_ref[...] = tile * scale_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "interpret"))
+def dequant_weight_pallas(
+    dir_idx: jnp.ndarray,
+    mag_idx: jnp.ndarray,
+    dir_codebook: jnp.ndarray,
+    mag_levels: jnp.ndarray,
+    scales: jnp.ndarray,
+    signs: jnp.ndarray,
+    *,
+    rows: int,
+    cols: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Reconstruct the full weight `W_hat` from PCDVQ codes via the tiled
+    Pallas gather kernel + inverse RHT.
+
+    The code stream is ordered row-major over H (k consecutive elements of a
+    row form one vector), matching rust `Pcdvq::quantize_full`.
+    """
+    k = dir_codebook.shape[1]
+    assert rows % TR == 0 and cols % TCOL == 0, (rows, cols)
+    assert TCOL % k == 0
+    codes_per_tile = TR * TCOL // k
+    codes_per_rowstrip = cols // k  # codes per row of H
+
+    # Reshape the flat code stream into (row_tiles, col_tiles, codes_per_tile)
+    # gatherable blocks: code (r, c) lives at r*codes_per_rowstrip + c.
+    n_codes = rows * cols // k
+    assert dir_idx.shape == (n_codes,)
+    di = dir_idx.reshape(rows, codes_per_rowstrip)
+    mi = mag_idx.reshape(rows, codes_per_rowstrip)
+
+    grid = (rows // TR, cols // TCOL)
+    h = pl.pallas_call(
+        _dequant_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TR, TCOL // k), lambda i, j: (i, j)),
+            pl.BlockSpec((TR, TCOL // k), lambda i, j: (i, j)),
+            pl.BlockSpec(dir_codebook.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(mag_levels.shape, lambda i, j: (0,)),
+            pl.BlockSpec((TCOL,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TR, TCOL), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(di, mi, dir_codebook, mag_levels, scales)
+
+    # inverse RHT over the row dimension (per column)
+    return ref.rht_inverse(h.T, signs).T
+
+
+def _reshape_codes_for_tile(idx: jnp.ndarray, rows: int, cols: int, k: int):
+    """(kept for documentation) the BlockSpec above indexes codes as a
+    (rows, cols//k) grid so each (TR, TCOL//k) block holds exactly the codes
+    of one weight tile."""
+    return idx.reshape(rows, cols // k)

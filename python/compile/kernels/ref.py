@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for the Pallas kernels — the L1 correctness ground truth.
+
+Every Pallas kernel in this package has a reference here written in plain
+`jax.numpy`; pytest (and hypothesis sweeps) assert allclose between kernel
+and oracle across shapes. The rust unit tests independently pin the same
+semantics, closing the three-way loop rust ⇄ pallas ⇄ jnp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Sylvester construction of H_n (n a power of two), unnormalized."""
+    assert n & (n - 1) == 0 and n > 0, f"n must be a power of two, got {n}"
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]]).astype(np.float32)
+    return h
+
+
+def hadamard_jnp(n: int) -> jnp.ndarray:
+    """H_n built *in-graph* from iota + popcount parity:
+    `H[i, j] = (-1)^{popcount(i & j)}`.
+
+    Deliberately constant-free: the HLO text printer elides literals above a
+    size threshold (`constant({...})`), which silently corrupts the AOT
+    round-trip through xla_extension 0.5.1 (see DESIGN.md §6). An iota-based
+    construction survives text serialization exactly.
+    """
+    i = jax.lax.broadcasted_iota(jnp.uint32, (n, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.uint32, (n, n), 1)
+    bits = jax.lax.population_count(i & j)
+    return jnp.where(bits % 2 == 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal Walsh-Hadamard transform along the last axis."""
+    n = x.shape[-1]
+    h = hadamard_jnp(n) / jnp.sqrt(jnp.float32(n))
+    return x @ h
+
+
+def rht_forward(x: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Randomized Hadamard transform: (H/sqrt(n)) @ (signs * x) along the
+    last axis (matching rust `RandomizedHadamard::forward_col`)."""
+    return fwht(x * signs)
+
+
+def rht_inverse(x: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse RHT: signs * ((H/sqrt(n)) @ x)."""
+    return fwht(x) * signs
+
+
+def assign_cosine(vectors: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """argmax_j vectors @ codebook.T — direction assignment (Eq. 7 VQ_phi).
+
+    vectors: (n, k); codebook: (m, k) unit rows. Returns int32 (n,).
+    """
+    scores = vectors @ codebook.T
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def dequant_reconstruct(
+    dir_idx: jnp.ndarray,
+    mag_idx: jnp.ndarray,
+    dir_codebook: jnp.ndarray,
+    mag_levels: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reconstruct k-vectors from PCDVQ indices (Eq. 8 inverse):
+    v_hat[i] = mag_levels[mag_idx[i]] * dir_codebook[dir_idx[i]]."""
+    dirs = dir_codebook[dir_idx]          # (n, k)
+    mags = mag_levels[mag_idx][:, None]   # (n, 1)
+    return dirs * mags
+
+
+def dequant_weight(
+    dir_idx: jnp.ndarray,
+    mag_idx: jnp.ndarray,
+    dir_codebook: jnp.ndarray,
+    mag_levels: jnp.ndarray,
+    scales: jnp.ndarray,
+    signs: jnp.ndarray,
+    rows: int,
+    cols: int,
+) -> jnp.ndarray:
+    """Full PCDVQ weight reconstruction, replaying rust
+    `Pcdvq::dequantize_full`: codes -> k-vectors -> (rows, cols) matrix in the
+    regularized domain -> per-column scales -> inverse RHT over the row dim.
+    """
+    vhat = dequant_reconstruct(dir_idx, mag_idx, dir_codebook, mag_levels)
+    h = vhat.reshape(rows, cols)
+    h = h * scales[None, :]
+    # inverse RHT acts per column, i.e. along axis 0: transpose, apply, undo
+    w = rht_inverse(h.T, signs).T
+    return w
+
+
+def dequant_matmul(
+    x: jnp.ndarray,
+    dir_idx: jnp.ndarray,
+    mag_idx: jnp.ndarray,
+    dir_codebook: jnp.ndarray,
+    mag_levels: jnp.ndarray,
+    scales: jnp.ndarray,
+    signs: jnp.ndarray,
+    rows: int,
+    cols: int,
+) -> jnp.ndarray:
+    """Fused dequant + matmul oracle: y = x @ W_hat."""
+    w = dequant_weight(
+        dir_idx, mag_idx, dir_codebook, mag_levels, scales, signs, rows, cols
+    )
+    return x @ w

@@ -1,0 +1,199 @@
+"""L2 — the tinygpt model in JAX: fp forward, quantized forward, loss.
+
+The substitution model for the LLaMA family (DESIGN.md §2): a byte-level
+pre-norm GPT. Everything here is build-time only; the forward passes are
+AOT-lowered to HLO text by `aot.py` and executed from the Rust coordinator
+via PJRT.
+
+Two forward variants share all code except the linear weights:
+
+* `forward_fp(params, tokens)` — dense f32 weights (also used for training
+  and as the baseline-eval artifact: the coordinator feeds *fake-quant*
+  weights from any baseline into the same executable).
+* `forward_q(qparams, tokens)` — the PCDVQ serving path: every quantizable
+  matrix arrives as (dir_idx, mag_idx, scales, signs) plus the two shared
+  DACC codebooks; dequantization happens **in-graph** (gather + scale +
+  inverse RHT), so the weight never exists densely outside the executable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class GptConfig:
+    """tinygpt hyper-parameters. Dimensions are powers of two so every
+    quantizable matrix has power-of-two rows (RHT requirement)."""
+
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layer: int = 4
+    n_head: int = 4
+    d_ff: int = 512
+    ctx: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+
+# The model zoo: LLaMA-2 7B/13B/70B analogs (Table 1) + LLaMA-3/Mistral
+# analogs (Table 2). See DESIGN.md §2 for the substitution argument.
+CONFIGS: Dict[str, GptConfig] = {
+    "gpt-s": GptConfig(name="gpt-s", d_model=128, n_layer=2, d_ff=512),
+    "gpt-m": GptConfig(name="gpt-m", d_model=128, n_layer=4, d_ff=512),
+    "gpt-l": GptConfig(name="gpt-l", d_model=256, n_layer=4, d_ff=1024),
+    "gpt-alt": GptConfig(name="gpt-alt", d_model=128, n_layer=4, d_ff=512),
+    "gpt-mini": GptConfig(name="gpt-mini", d_model=128, n_layer=2, d_ff=512),
+}
+
+# Names of the quantizable matrices per layer + top level, in a fixed order.
+def quantizable_names(cfg: GptConfig) -> List[str]:
+    names = []
+    for i in range(cfg.n_layer):
+        names += [
+            f"layer{i}.attn.wq",
+            f"layer{i}.attn.wk",
+            f"layer{i}.attn.wv",
+            f"layer{i}.attn.wo",
+            f"layer{i}.mlp.w1",
+            f"layer{i}.mlp.w2",
+        ]
+    names.append("head.w")
+    return names
+
+
+def weight_shape(cfg: GptConfig, name: str) -> Tuple[int, int]:
+    """(rows, cols) of a quantizable matrix; rows = input dim (RHT axis)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    if name.endswith("mlp.w1"):
+        return (d, f)
+    if name.endswith("mlp.w2"):
+        return (f, d)
+    if name == "head.w":
+        return (d, v)
+    return (d, d)  # attention projections
+
+
+def init_params(cfg: GptConfig, seed: int) -> Dict[str, np.ndarray]:
+    """Initialize all parameters (numpy, f32) with GPT-2-style scaling."""
+    rng = np.random.default_rng(seed)
+    p: Dict[str, np.ndarray] = {}
+    d = cfg.d_model
+
+    def w(shape, scale):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    p["embed.tok"] = w((cfg.vocab, d), 0.02)
+    p["embed.pos"] = w((cfg.ctx, d), 0.01)
+    for i in range(cfg.n_layer):
+        for nm in ("wq", "wk", "wv"):
+            p[f"layer{i}.attn.{nm}"] = w((d, d), d ** -0.5)
+        p[f"layer{i}.attn.wo"] = w((d, d), (d * 2 * cfg.n_layer) ** -0.5)
+        p[f"layer{i}.mlp.w1"] = w((d, cfg.d_ff), d ** -0.5)
+        p[f"layer{i}.mlp.w2"] = w((cfg.d_ff, d), (cfg.d_ff * 2 * cfg.n_layer) ** -0.5)
+        p[f"layer{i}.ln1.g"] = np.ones(d, np.float32)
+        p[f"layer{i}.ln1.b"] = np.zeros(d, np.float32)
+        p[f"layer{i}.ln2.g"] = np.ones(d, np.float32)
+        p[f"layer{i}.ln2.b"] = np.zeros(d, np.float32)
+    p["final_ln.g"] = np.ones(d, np.float32)
+    p["final_ln.b"] = np.zeros(d, np.float32)
+    p["head.w"] = w((d, cfg.vocab), d ** -0.5)
+    return p
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attention(cfg: GptConfig, x, wq, wk, wv, wo):
+    b, t, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ wo
+
+
+def forward_fp(cfg: GptConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray):
+    """Dense forward: tokens (B, T) int32 -> logits (B, T, vocab) f32."""
+    b, t = tokens.shape
+    x = params["embed.tok"][tokens] + params["embed.pos"][:t][None]
+    for i in range(cfg.n_layer):
+        ln1 = _layer_norm(x, params[f"layer{i}.ln1.g"], params[f"layer{i}.ln1.b"])
+        x = x + _attention(
+            cfg,
+            ln1,
+            params[f"layer{i}.attn.wq"],
+            params[f"layer{i}.attn.wk"],
+            params[f"layer{i}.attn.wv"],
+            params[f"layer{i}.attn.wo"],
+        )
+        ln2 = _layer_norm(x, params[f"layer{i}.ln2.g"], params[f"layer{i}.ln2.b"])
+        h = jax.nn.gelu(ln2 @ params[f"layer{i}.mlp.w1"])
+        x = x + h @ params[f"layer{i}.mlp.w2"]
+    x = _layer_norm(x, params["final_ln.g"], params["final_ln.b"])
+    return x @ params["head.w"]
+
+
+def forward_q(
+    cfg: GptConfig,
+    fp_params: Dict[str, jnp.ndarray],
+    qweights: Dict[str, Dict[str, jnp.ndarray]],
+    dir_codebook: jnp.ndarray,
+    mag_levels: jnp.ndarray,
+    tokens: jnp.ndarray,
+):
+    """Quantized forward: quantizable matrices arrive as PCDVQ codes and are
+    dequantized in-graph; embeddings/norms stay fp (as in the paper).
+
+    qweights[name] = {"dir_idx": (n,), "mag_idx": (n,), "scales": (cols,),
+                      "signs": (rows,)} — all jnp arrays.
+    """
+
+    def deq(name: str) -> jnp.ndarray:
+        rows, cols = weight_shape(cfg, name)
+        q = qweights[name]
+        return ref.dequant_weight(
+            q["dir_idx"],
+            q["mag_idx"],
+            dir_codebook,
+            mag_levels,
+            q["scales"],
+            q["signs"],
+            rows,
+            cols,
+        )
+
+    params = dict(fp_params)
+    for name in quantizable_names(cfg):
+        params[name] = deq(name)
+    return forward_fp(cfg, params, tokens)
+
+
+def loss_fn(cfg: GptConfig, params, tokens, targets):
+    """Mean token cross-entropy."""
+    logits = forward_fp(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def count_params(params: Dict[str, np.ndarray]) -> int:
+    return int(sum(int(np.prod(v.shape)) for v in params.values()))

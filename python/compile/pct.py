@@ -1,0 +1,80 @@
+"""PCT1 named-tensor container — python side of the rust `io::pct` format.
+
+serde is unavailable in the offline rust crate set, so artifacts crossing the
+python↔rust boundary (trained weights, token streams, codebooks) use this
+deliberately boring little-endian format. Layout (see rust/src/io/mod.rs):
+
+    magic "PCT1" | u32 entry count
+    per entry: u16 name len | name | u8 dtype | u8 ndim | u64 dims[] | raw data
+
+dtype tags: 0 = f32, 1 = u32, 2 = u64, 3 = i32.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"PCT1"
+
+_DTYPES = {
+    0: np.dtype("<f4"),
+    1: np.dtype("<u4"),
+    2: np.dtype("<u8"),
+    3: np.dtype("<i4"),
+}
+_TAGS = {v: k for k, v in _DTYPES.items()}
+
+
+def _tag_for(arr: np.ndarray) -> int:
+    dt = np.dtype(arr.dtype).newbyteorder("<")
+    if dt not in _TAGS:
+        raise TypeError(f"unsupported dtype {arr.dtype}; use f32/u32/u64/i32")
+    return _TAGS[dt]
+
+
+def save(path: str, entries: Dict[str, np.ndarray]) -> None:
+    """Write a dict of arrays as a PCT1 file (keys sorted, matching rust's
+    BTreeMap order)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(entries)))
+        for name in sorted(entries):
+            arr = np.ascontiguousarray(entries[name])
+            tag = _tag_for(arr)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", tag, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.astype(_DTYPES[tag]).tobytes())
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    """Read a PCT1 file into a dict of numpy arrays."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:4] != MAGIC:
+        raise ValueError(f"{path}: not a PCT1 file")
+    pos = 4
+    (count,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", buf, pos)
+        pos += 2
+        name = buf[pos : pos + nlen].decode("utf-8")
+        pos += nlen
+        tag, ndim = struct.unpack_from("<BB", buf, pos)
+        pos += 2
+        dims = struct.unpack_from(f"<{ndim}Q", buf, pos)
+        pos += 8 * ndim
+        dt = _DTYPES[tag]
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(buf, dtype=dt, count=n, offset=pos).reshape(dims)
+        pos += n * dt.itemsize
+        out[name] = arr.copy()
+    return out

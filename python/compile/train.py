@@ -1,0 +1,112 @@
+"""Build-time trainer for the tinygpt model zoo.
+
+Hand-rolled AdamW (optax is not installed) over the byte corpus from
+`data.py`. Produces `artifacts/<name>.pct` weight containers the Rust
+coordinator loads, plus the train/eval token streams. Runs once under
+`make artifacts`; never on the request path.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import pct
+
+# Training budget per model (single CPU core: keep modest; the goal is a
+# model whose quantization degradation is measurable, not SOTA bytes/char).
+TRAIN_STEPS = {
+    "gpt-s": 250,
+    "gpt-m": 300,
+    "gpt-l": 200,
+    "gpt-alt": 250,
+    "gpt-mini": 200,
+}
+BATCH = 8
+LR = 3e-3
+WARMUP = 20
+WEIGHT_DECAY = 0.01
+SEEDS = {"gpt-s": 1, "gpt-m": 2, "gpt-l": 3, "gpt-alt": 40, "gpt-mini": 50}
+
+
+def adamw_init(params):
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: np.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def make_update_fn(cfg):
+    """jitted (params, m, v, t, x, y, lr) -> (loss, params, m, v)."""
+
+    def update(params, m, v, t, x, y, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: model_mod.loss_fn(cfg, p, x, y)
+        )(params)
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        new_params, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            m_k = b1 * m[k] + (1 - b1) * g
+            v_k = b2 * v[k] + (1 - b2) * g * g
+            mhat = m_k / (1 - b1 ** t)
+            vhat = v_k / (1 - b2 ** t)
+            p = params[k] * (1 - lr * WEIGHT_DECAY)
+            new_params[k] = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+            new_m[k] = m_k
+            new_v[k] = v_k
+        return loss, new_params, new_m, new_v
+
+    return jax.jit(update)
+
+
+def lr_schedule(step: int, total: int) -> float:
+    if step < WARMUP:
+        return LR * (step + 1) / WARMUP
+    frac = (step - WARMUP) / max(total - WARMUP, 1)
+    return LR * 0.5 * (1 + np.cos(np.pi * frac))
+
+
+def train_model(name: str, tokens_train: np.ndarray, log=print) -> Dict[str, np.ndarray]:
+    cfg = model_mod.CONFIGS[name]
+    steps = TRAIN_STEPS[name]
+    seed = SEEDS[name]
+    params_np = model_mod.init_params(cfg, seed)
+    log(
+        f"[train] {name}: {model_mod.count_params(params_np)/1e6:.2f}M params, "
+        f"{steps} steps, batch {BATCH}x{cfg.ctx}"
+    )
+    params = {k: jnp.asarray(v) for k, v in params_np.items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    update = make_update_fn(cfg)
+
+    t0 = time.time()
+    it = data_mod.batch_iterator(tokens_train, BATCH, cfg.ctx, steps, seed + 1000)
+    loss = float("nan")
+    for step, (x, y) in enumerate(it):
+        lr = lr_schedule(step, steps)
+        loss, params, m, v = update(
+            params, m, v, jnp.float32(step + 1), jnp.asarray(x), jnp.asarray(y), jnp.float32(lr)
+        )
+        if step % 50 == 0 or step == steps - 1:
+            log(f"[train] {name} step {step:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    log(f"[train] {name} done: final loss {float(loss):.4f} in {time.time()-t0:.0f}s")
+    return {k: np.asarray(val) for k, val in params.items()}
+
+
+def save_model(path: str, name: str, params: Dict[str, np.ndarray]) -> None:
+    cfg = model_mod.CONFIGS[name]
+    entries = dict(params)
+    # model metadata as scalar entries
+    entries["meta.vocab"] = np.array([cfg.vocab], np.uint64)
+    entries["meta.d_model"] = np.array([cfg.d_model], np.uint64)
+    entries["meta.n_layer"] = np.array([cfg.n_layer], np.uint64)
+    entries["meta.n_head"] = np.array([cfg.n_head], np.uint64)
+    entries["meta.d_ff"] = np.array([cfg.d_ff], np.uint64)
+    entries["meta.ctx"] = np.array([cfg.ctx], np.uint64)
+    pct.save(path, entries)

@@ -1,0 +1,140 @@
+"""AOT export invariants — guards the HLO-text interchange contract.
+
+The two classes of silent corruption we hit during bring-up (DESIGN.md §6):
+  1. serialized protos from jax>=0.5 are rejected by xla_extension 0.5.1
+     (we use text — nothing to test beyond producing it);
+  2. the HLO text PRINTER elides large constants as `constant({...})`,
+     which the parser then reads as garbage — every lowered graph must be
+     constant-free above the elision threshold.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def lowered_text(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_hadamard_jnp_lowers_without_large_constants():
+    def f(x):
+        return (ref.fwht(x),)
+
+    text = lowered_text(f, jax.ShapeDtypeStruct((4, 128), jnp.float32))
+    assert "constant({...})" not in text
+
+
+def test_fwd_q_lowers_without_large_constants():
+    cfg = M.CONFIGS["gpt-mini"]
+    # build tiny specs mirroring export_fwd_q's geometry
+    qnames = M.quantizable_names(cfg)
+    fp_names = sorted(k for k in M.init_params(cfg, 0) if k not in qnames)
+    shapes = {k: v.shape for k, v in M.init_params(cfg, 0).items()}
+
+    def fwd(*args):
+        fp_params = dict(zip(fp_names, args[: len(fp_names)]))
+        qweights = {}
+        pos = len(fp_names)
+        for name in qnames:
+            qweights[name] = {
+                "dir_idx": args[pos],
+                "mag_idx": args[pos + 1],
+                "scales": args[pos + 2],
+                "signs": args[pos + 3],
+            }
+            pos += 4
+        return (
+            M.forward_q(cfg, fp_params, qweights, args[pos], args[pos + 1], args[pos + 2]),
+        )
+
+    specs = [jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in fp_names]
+    for name in qnames:
+        rows, cols = M.weight_shape(cfg, name)
+        n = rows * cols // 8
+        specs += [
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((cols,), jnp.float32),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ]
+    specs += [
+        jax.ShapeDtypeStruct((16, 8), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+        jax.ShapeDtypeStruct((2, cfg.ctx), jnp.int32),
+    ]
+    text = lowered_text(fwd, *specs)
+    assert "constant({...})" not in text
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_existing_artifacts_have_no_elided_constants():
+    found = []
+    for fn in os.listdir(ART):
+        if fn.endswith(".hlo.txt"):
+            with open(os.path.join(ART, fn)) as f:
+                if "constant({...})" in f.read():
+                    found.append(fn)
+    assert not found, f"elided constants in: {found}"
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_manifests_match_hlo_parameter_counts():
+    import re
+
+    for fn in sorted(os.listdir(ART)):
+        if not fn.endswith(".manifest"):
+            continue
+        base = fn[: -len(".manifest")]
+        hlo_path = os.path.join(ART, base + ".hlo.txt")
+        if not os.path.exists(hlo_path):
+            continue
+        n_manifest = sum(1 for line in open(os.path.join(ART, fn)) if line.strip())
+        with open(hlo_path) as f:
+            text = f.read()
+        # count parameters of the entry computation from the header line
+        header = text.splitlines()[0]
+        m = re.search(r"entry_computation_layout=\{\((.*?)\)->", header)
+        assert m, f"{base}: no entry layout header"
+        # bracket-depth-aware split (layouts contain commas inside {} / [])
+        depth = 0
+        n_params = 0
+        body = m.group(1).strip()
+        if body:
+            n_params = 1
+            for ch in body:
+                if ch in "{[(":
+                    depth += 1
+                elif ch in "}])":
+                    depth -= 1
+                elif ch == "," and depth == 0:
+                    n_params += 1
+        assert (
+            n_params == n_manifest
+        ), f"{base}: manifest {n_manifest} vs HLO {n_params} params"
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="artifacts not built")
+def test_trained_models_are_actually_trained():
+    """A trained checkpoint must beat the random-init loss on held-out text
+    (guards against the trainer silently diverging)."""
+    from compile import pct
+
+    eval_tokens = pct.load(os.path.join(ART, "corpus_eval.pct"))["tokens"]
+    cfg = M.CONFIGS["gpt-mini"]
+    weights = pct.load(os.path.join(ART, "gpt-mini.pct"))
+    params = {
+        k: jnp.asarray(v) for k, v in weights.items() if not k.startswith("meta.")
+    }
+    x = eval_tokens[: 4 * cfg.ctx].reshape(4, cfg.ctx).astype(np.int32)
+    y = eval_tokens[1 : 4 * cfg.ctx + 1].reshape(4, cfg.ctx).astype(np.int32)
+    loss = float(M.loss_fn(cfg, params, jnp.asarray(x), jnp.asarray(y)))
+    assert loss < 4.5, f"eval loss {loss} — model looks untrained (ln256 = 5.55)"

@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+hypothesis sweeps shapes and codebook sizes; fixed-seed cases pin exact
+agreement. All kernels run under interpret=True (CPU PJRT constraint).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign, dequant, ref
+
+RNG = np.random.default_rng(0)
+
+
+def unit_rows(n, k, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, k)).astype(np.float32)
+    m /= np.linalg.norm(m, axis=1, keepdims=True)
+    return m
+
+
+# ---------------------------------------------------------------- assign ---
+
+def test_assign_matches_ref_fixed():
+    v = RNG.standard_normal((512, 8)).astype(np.float32)
+    cb = unit_rows(1024, 8, 1)
+    got = assign.assign_cosine_pallas(jnp.asarray(v), jnp.asarray(cb))
+    want = ref.assign_cosine(jnp.asarray(v), jnp.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_tiles=st.integers(1, 3),
+    cb_tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_matches_ref_hypothesis(n_tiles, cb_tiles, seed):
+    rng = np.random.default_rng(seed)
+    n = assign.TV * n_tiles
+    m = assign.TC * cb_tiles
+    v = rng.standard_normal((n, 8)).astype(np.float32)
+    cb = unit_rows(m, 8, seed + 1)
+    got = assign.assign_cosine_pallas(jnp.asarray(v), jnp.asarray(cb))
+    want = ref.assign_cosine(jnp.asarray(v), jnp.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_assign_identity_on_codebook_rows():
+    cb = unit_rows(512, 8, 2)
+    got = assign.assign_cosine_pallas(jnp.asarray(cb[:256] * 2.5), jnp.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(got), np.arange(256))
+
+
+def test_assign_rejects_unpadded():
+    v = np.zeros((100, 8), np.float32)
+    cb = unit_rows(512, 8, 3)
+    with pytest.raises(AssertionError):
+        assign.assign_cosine_pallas(jnp.asarray(v), jnp.asarray(cb))
+
+
+def test_pad_to_multiple():
+    x = jnp.ones((100, 8))
+    padded, orig = assign.pad_to_multiple(x, 0, 256)
+    assert padded.shape == (256, 8) and orig == 100
+    same, n = assign.pad_to_multiple(padded, 0, 256)
+    assert same.shape == (256, 8) and n == 256
+
+
+# --------------------------------------------------------------- dequant ---
+
+def _dequant_case(rows, cols, a, b, seed):
+    rng = np.random.default_rng(seed)
+    k = 8
+    n = rows * cols // k
+    di = rng.integers(0, 1 << a, n).astype(np.int32)
+    mi = rng.integers(0, 1 << b, n).astype(np.int32)
+    dcb = unit_rows(1 << a, k, seed + 1)
+    mag = np.sort(rng.random(1 << b).astype(np.float32)) * 3 + 0.1
+    sc = rng.random(cols).astype(np.float32) + 0.5
+    sg = np.sign(rng.standard_normal(rows)).astype(np.float32)
+    sg[sg == 0] = 1.0
+    return di, mi, dcb, mag, sc, sg
+
+
+@pytest.mark.parametrize("rows,cols", [(128, 64), (64, 128), (128, 512), (256, 64)])
+def test_dequant_weight_matches_ref(rows, cols):
+    di, mi, dcb, mag, sc, sg = _dequant_case(rows, cols, 9, 2, 7)
+    args = tuple(map(jnp.asarray, (di, mi, dcb, mag, sc, sg)))
+    got = dequant.dequant_weight_pallas(*args, rows=rows, cols=cols)
+    want = ref.dequant_weight(*args, rows, cols)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    a=st.integers(4, 12),
+    b=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequant_weight_hypothesis(a, b, seed):
+    rows, cols = 128, 128
+    di, mi, dcb, mag, sc, sg = _dequant_case(rows, cols, a, b, seed)
+    args = tuple(map(jnp.asarray, (di, mi, dcb, mag, sc, sg)))
+    got = dequant.dequant_weight_pallas(*args, rows=rows, cols=cols)
+    want = ref.dequant_weight(*args, rows, cols)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# -------------------------------------------------------------- hadamard ---
+
+def test_fwht_involution():
+    x = RNG.standard_normal((4, 64)).astype(np.float32)
+    y = ref.fwht(ref.fwht(jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(y), x, atol=1e-5)
+
+
+def test_rht_forward_inverse_round_trip():
+    x = RNG.standard_normal((8, 128)).astype(np.float32)
+    signs = np.sign(RNG.standard_normal(128)).astype(np.float32)
+    signs[signs == 0] = 1.0
+    y = ref.rht_inverse(ref.rht_forward(jnp.asarray(x), signs), signs)
+    np.testing.assert_allclose(np.asarray(y), x, atol=1e-5)
+
+
+def test_hadamard_matrix_orthogonal():
+    h = ref.hadamard_matrix(32)
+    np.testing.assert_allclose(h @ h.T, 32 * np.eye(32), atol=1e-4)

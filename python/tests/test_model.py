@@ -1,0 +1,122 @@
+"""L2 model tests: shapes, loss sanity, fp-vs-quantized agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.CONFIGS["gpt-mini"]
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, 0).items()}
+    return cfg, params
+
+
+def test_forward_shape(tiny):
+    cfg, params = tiny
+    toks = jnp.zeros((3, cfg.ctx), jnp.int32)
+    out = M.forward_fp(cfg, params, toks)
+    assert out.shape == (3, cfg.ctx, cfg.vocab)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_causality(tiny):
+    """Changing a future token must not change past logits."""
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, 256, (1, cfg.ctx)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 7) % 256
+    l1 = M.forward_fp(cfg, params, jnp.asarray(t1))
+    l2 = M.forward_fp(cfg, params, jnp.asarray(t2))
+    np.testing.assert_allclose(
+        np.asarray(l1[0, : cfg.ctx - 1]), np.asarray(l2[0, : cfg.ctx - 1]), atol=1e-5
+    )
+
+
+def test_loss_decreases_on_repeated_batch(tiny):
+    """A couple of SGD steps on one batch must reduce its loss."""
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 256, (4, cfg.ctx)).astype(np.int32)
+    y = np.roll(x, -1, axis=1).astype(np.int32)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    grad_fn = jax.jit(jax.value_and_grad(lambda p: M.loss_fn(cfg, p, x, y)))
+    l0, g = grad_fn(params)
+    p2 = {k: v - 0.5 * g[k] for k, v in params.items()}
+    l1, _ = grad_fn(p2)
+    assert float(l1) < float(l0)
+
+
+def test_init_loss_near_uniform(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 256, (4, cfg.ctx)).astype(np.int32)
+    y = rng.integers(0, 256, (4, cfg.ctx)).astype(np.int32)
+    loss = float(M.loss_fn(cfg, params, jnp.asarray(x), jnp.asarray(y)))
+    assert abs(loss - np.log(256)) < 0.5, loss
+
+
+def test_quantizable_shapes_power_of_two_rows():
+    for name, cfg in M.CONFIGS.items():
+        for q in M.quantizable_names(cfg):
+            rows, cols = M.weight_shape(cfg, q)
+            assert rows & (rows - 1) == 0, (name, q, rows)
+            assert (rows * cols) % 8 == 0
+
+
+def test_forward_q_matches_fp_at_high_fidelity(tiny):
+    """With a huge direction codebook containing each weight's own directions
+    we can't be exact, but identity-quantization (reconstructing from exact
+    per-vector codes) must match: build codes by assigning against a codebook
+    that *contains* the true normalized vectors."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 256, (2, cfg.ctx)).astype(np.int32))
+
+    qweights = {}
+    k = 8
+    all_dirs = []
+    all_mags = []
+    per_w = {}
+    # regularize each weight the same way rust does, collect exact dirs/mags
+    for name in M.quantizable_names(cfg):
+        rows, cols = M.weight_shape(cfg, name)
+        w = np.asarray(params[name])
+        signs = np.sign(rng.standard_normal(rows)).astype(np.float32)
+        signs[signs == 0] = 1.0
+        h = np.asarray(ref.rht_forward(jnp.asarray(w.T), signs)).T
+        scales = np.linalg.norm(w, axis=0) / np.sqrt(rows)
+        scales[scales == 0] = 1.0
+        h = h / scales[None, :]
+        vecs = h.reshape(-1, k)
+        mags = np.linalg.norm(vecs, axis=1)
+        dirs = vecs / np.maximum(mags[:, None], 1e-12)
+        per_w[name] = (dirs, mags, scales, signs)
+        all_dirs.append(dirs)
+        all_mags.append(mags)
+
+    # codebooks = the exact values themselves (perfect reconstruction)
+    dir_cb = np.concatenate(all_dirs).astype(np.float32)
+    mag_lv = np.concatenate(all_mags).astype(np.float32)
+    dir_off = 0
+    mag_off = 0
+    for name in M.quantizable_names(cfg):
+        dirs, mags, scales, signs = per_w[name]
+        n = len(mags)
+        qweights[name] = {
+            "dir_idx": jnp.arange(dir_off, dir_off + n, dtype=jnp.int32),
+            "mag_idx": jnp.arange(mag_off, mag_off + n, dtype=jnp.int32),
+            "scales": jnp.asarray(scales.astype(np.float32)),
+            "signs": jnp.asarray(signs),
+        }
+        dir_off += n
+        mag_off += n
+
+    lq = M.forward_q(cfg, params, qweights, jnp.asarray(dir_cb), jnp.asarray(mag_lv), toks)
+    lf = M.forward_fp(cfg, params, toks)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lf), atol=2e-2)

@@ -1,0 +1,73 @@
+"""PCT1 container + corpus pipeline tests (python side of the IO boundary)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import pct
+
+
+def test_pct_round_trip(tmp_path):
+    path = str(tmp_path / "t.pct")
+    entries = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "idx": np.array([1, 2, 3], np.uint32),
+        "seed": np.array([2**63], np.uint64),
+        "neg": np.array([-4, 9], np.int32),
+    }
+    pct.save(path, entries)
+    out = pct.load(path)
+    assert set(out) == set(entries)
+    for k in entries:
+        np.testing.assert_array_equal(out[k], entries[k])
+        assert out[k].dtype == entries[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 8), min_size=0, max_size=3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pct_round_trip_hypothesis(tmp_path_factory, shape, seed):
+    path = str(tmp_path_factory.mktemp("pct") / "h.pct")
+    rng = np.random.default_rng(seed)
+    arr = rng.standard_normal(shape).astype(np.float32)
+    pct.save(path, {"x": arr})
+    out = pct.load(path)["x"]
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_pct_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        pct.save(str(tmp_path / "bad.pct"), {"x": np.zeros(3, np.float64)})
+
+
+def test_pct_rejects_garbage(tmp_path):
+    p = tmp_path / "garbage.pct"
+    p.write_bytes(b"NOTAPCT1234567")
+    with pytest.raises(ValueError):
+        pct.load(str(p))
+
+
+def test_corpus_collection_and_split():
+    corpus = D.collect_corpus(max_bytes=300_000)
+    assert len(corpus) >= 100_000
+    tokens = D.tokenize(corpus)
+    assert tokens.dtype == np.uint32
+    assert tokens.max() < 256
+    tr, ev = D.train_eval_split(tokens)
+    assert len(tr) + len(ev) == len(tokens)
+    assert len(ev) >= 10_000
+
+
+def test_batch_iterator_shapes_and_determinism():
+    tokens = np.arange(10_000, dtype=np.uint32) % 256
+    a = list(D.batch_iterator(tokens, 4, 32, 3, seed=9))
+    b = list(D.batch_iterator(tokens, 4, 32, 3, seed=9))
+    assert len(a) == 3
+    for (xa, ya), (xb, yb) in zip(a, b):
+        assert xa.shape == (4, 32) and ya.shape == (4, 32)
+        np.testing.assert_array_equal(xa, xb)
+        # targets are inputs shifted by one
+        np.testing.assert_array_equal(xa[:, 1:], ya[:, :-1])

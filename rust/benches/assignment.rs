@@ -1,0 +1,63 @@
+//! Bench: direction assignment (the L3 quantization hot path).
+//!
+//! `cargo bench --bench assignment` — measures the blocked GEMM+argmax at
+//! the paper's operating points; Gelem/s counts vector·codeword dot
+//! products (n_vec × n_cb). §Perf target: ≥1 Gdot/s (8 flops each) on the
+//! single-core testbed.
+
+use pcdvq::bench::{black_box, Bench};
+use pcdvq::quant::assign::{assign_batch, assign_euclidean, euclidean_bias};
+use pcdvq::rng::Rng;
+use pcdvq::tensor::Matrix;
+
+fn unit_rows(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::from_vec(rng.normal_vec(n * k), n, k);
+    for i in 0..n {
+        let r = m.row_mut(i);
+        let nrm: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+        r.iter_mut().for_each(|x| *x /= nrm);
+    }
+    m
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== assignment (cosine argmax over the direction codebook) ==");
+
+    for &(n_vec, cb_bits) in &[(4096usize, 10u32), (4096, 14), (1024, 15)] {
+        let n_cb = 1usize << cb_bits;
+        let vectors = unit_rows(n_vec, 8, 1);
+        let cb = unit_rows(n_cb, 8, 2);
+        let mut out = vec![0u32; n_vec];
+        bench.run_elems(
+            &format!("cosine k=8 {n_vec}vec x 2^{cb_bits}cb"),
+            (n_vec * n_cb) as u64,
+            || {
+                pcdvq::quant::assign::assign_into(
+                    black_box(&vectors),
+                    black_box(&cb),
+                    &[],
+                    &mut out,
+                );
+            },
+        );
+    }
+
+    // Euclidean variant (coupled-VQ baselines)
+    let vectors = unit_rows(4096, 8, 3);
+    let cb = unit_rows(4096, 8, 4);
+    let bias = euclidean_bias(&cb);
+    bench.run_elems("euclidean k=8 4096vec x 4096cb", 4096u64 * 4096, || {
+        black_box(assign_batch(black_box(&vectors), black_box(&cb), &bias));
+    });
+
+    // non-specialized dims (generic path)
+    for k in [4usize, 16] {
+        let v = unit_rows(2048, k, 5);
+        let c = unit_rows(2048, k, 6);
+        bench.run_elems(&format!("cosine generic k={k} 2048x2048"), 2048 * 2048, || {
+            black_box(assign_euclidean(black_box(&v), black_box(&c)));
+        });
+    }
+}

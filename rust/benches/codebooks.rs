@@ -1,0 +1,50 @@
+//! Bench: DACC codebook construction — the offline stage (paper: "performed
+//! only once for all circumstances"), plus the E8 substrate.
+
+use pcdvq::bench::{black_box, Bench};
+use pcdvq::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod};
+use pcdvq::lattice::e8::E8Points;
+use pcdvq::quant::quip::nearest_e8;
+use pcdvq::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== codebook construction (offline stage) ==");
+
+    bench.run("e8 enumerate shells<=6 (9120 pts)", || {
+        black_box(E8Points::enumerate(6));
+    });
+
+    for bits in [8u32, 10, 12] {
+        bench.run(&format!("greedy-e8 direction 2^{bits}"), || {
+            black_box(DirectionCodebook::build(DirectionMethod::GreedyE8, bits, 8, 0));
+        });
+    }
+
+    bench.run("lloyd-max magnitude 2^2 (chi-8 analytic)", || {
+        black_box(MagnitudeCodebook::build(
+            MagnitudeMethod::LloydMax,
+            2,
+            8,
+            1.0 - 1e-4,
+            0,
+        ));
+    });
+
+    // the algebraic E8 decoder (QuIP#-like hot inner loop)
+    let mut rng = Rng::new(3);
+    let probes: Vec<[f32; 8]> = (0..4096)
+        .map(|_| {
+            let mut v = [0.0f32; 8];
+            for x in v.iter_mut() {
+                *x = rng.normal() as f32 * 2.0;
+            }
+            v
+        })
+        .collect();
+    bench.run_elems("nearest_e8 algebraic decode x4096", 4096, || {
+        for p in &probes {
+            black_box(nearest_e8(black_box(p)));
+        }
+    });
+}

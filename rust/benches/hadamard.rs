@@ -1,0 +1,34 @@
+//! Bench: FWHT / randomized Hadamard transform (regularization stage).
+//!
+//! Gelem/s counts matrix elements transformed per second.
+
+use pcdvq::bench::{black_box, Bench};
+use pcdvq::hadamard::{fwht_normalized, regularize, RandomizedHadamard};
+use pcdvq::rng::Rng;
+use pcdvq::tensor::Matrix;
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== hadamard (FWHT + RHT regularization) ==");
+
+    for n in [128usize, 512, 2048, 8192] {
+        let mut rng = Rng::new(1);
+        let mut x = rng.normal_vec(n);
+        bench.run_elems(&format!("fwht_normalized n={n}"), n as u64, || {
+            fwht_normalized(black_box(&mut x));
+        });
+    }
+
+    for (rows, cols) in [(128usize, 512usize), (512, 512), (1024, 256)] {
+        let mut rng = Rng::new(2);
+        let w = Matrix::from_vec(rng.normal_vec(rows * cols), rows, cols);
+        let rht = RandomizedHadamard::new(rows, 7);
+        bench.run_elems(
+            &format!("regularize {rows}x{cols} (fwd+scales)"),
+            (rows * cols) as u64,
+            || {
+                black_box(regularize(black_box(&w), &rht));
+            },
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: whole-quantizer throughput per method — the Table-1 cost column.
+//!
+//! Melem/s counts weights quantized per second (a 13B-analog layer is
+//! 128x512). Includes dequantization and the baselines for comparison.
+
+use std::sync::Arc;
+
+use pcdvq::bench::{black_box, Bench};
+use pcdvq::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod};
+use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
+use pcdvq::quant::quip::QuipLike;
+use pcdvq::quant::sq::Rtn;
+use pcdvq::quant::vq_kmeans::KMeansVq;
+use pcdvq::quant::Quantizer;
+use pcdvq::rng::Rng;
+use pcdvq::tensor::Matrix;
+
+fn main() {
+    let mut bench = Bench::new();
+    println!("== quantizer pipeline throughput (128x512 layer) ==");
+    let mut rng = Rng::new(1);
+    let w = Matrix::from_vec(rng.normal_vec(128 * 512), 128, 512);
+    let elems = (128 * 512) as u64;
+
+    let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 14, 8, 0));
+    let mag = Arc::new(MagnitudeCodebook::build(MagnitudeMethod::LloydMax, 2, 8, 1.0 - 1e-4, 0));
+    let pcdvq = Pcdvq::new(
+        PcdvqConfig { dir_bits: 14, mag_bits: 2, k: 8, seed: 7 },
+        dir,
+        mag,
+    );
+    bench.run_elems("pcdvq a=14 quantize_full", elems, || {
+        black_box(pcdvq.quantize_full(black_box(&w)));
+    });
+    let qw = pcdvq.quantize_full(&w);
+    bench.run_elems("pcdvq a=14 dequantize_full", elems, || {
+        black_box(pcdvq.dequantize_full(black_box(&qw)));
+    });
+
+    let rtn = Rtn::with_clip_search(2);
+    bench.run_elems("rtn2+clip quantize", elems, || {
+        black_box(rtn.quantize(black_box(&w)));
+    });
+
+    let quip = QuipLike::build(14, 1);
+    bench.run_elems("quip-like 14b quantize (algebraic decode)", elems, || {
+        black_box(quip.quantize(black_box(&w)));
+    });
+
+    let mut km = KMeansVq::new(8, 10);
+    km.fit_on_weight(&w);
+    bench.run_elems("kmeans-vq 10b assign+dequant", elems, || {
+        black_box(km.quantize(black_box(&w)));
+    });
+}

@@ -1,0 +1,76 @@
+//! Bench: end-to-end serving throughput (the §4.4 table) — fp32 weights vs
+//! PCDVQ in-graph dequant, decode steps/s and tokens/s through the real
+//! batched server. Skips cleanly if `make artifacts` has not run.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use pcdvq::bench::Bench;
+use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
+use pcdvq::config::{build_pcdvq_with, Paths};
+use pcdvq::coordinator::{Batcher, BatcherConfig, GenRequest, Server, ServingWeights};
+use pcdvq::model::QuantizedGpt;
+use pcdvq::runtime::Engine;
+
+fn drive(server: &mut Server, prompts: &[Vec<u8>], max_new: usize) -> f64 {
+    let (tx, rx) = channel::<GenRequest>();
+    let batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut keep = Vec::new();
+    for p in prompts {
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt: p.clone(),
+            max_new,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        keep.push(rrx);
+    }
+    drop(tx);
+    let t = Instant::now();
+    server.serve(&batcher).unwrap();
+    let tokens = prompts.len() * max_new;
+    tokens as f64 / t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let paths = Paths::detect();
+    if !paths.artifacts.join("fwd_q_gpt-m.hlo.txt").exists() {
+        println!("serving bench skipped: run `make artifacts` first");
+        return;
+    }
+    let _bench = Bench::new(); // uniform output style
+    println!("== serving throughput (gpt-m, batch 8, greedy decode) ==");
+
+    let model = paths.load_model("gpt-m").unwrap();
+    let engine = Engine::new().unwrap();
+    let eval = paths.eval_tokens().unwrap();
+    let prompts: Vec<Vec<u8>> = (0..16)
+        .map(|i| {
+            let s = (i * 4099) % (eval.len() - 64);
+            eval[s..s + 48].iter().map(|&t| t as u8).collect()
+        })
+        .collect();
+
+    let mut fp = Server::new(&engine, &paths.artifacts, ServingWeights::Fp(model.clone())).unwrap();
+    // warm + measure twice, report the better (compile amortized)
+    let _ = drive(&mut fp, &prompts, 8);
+    let fp_tps = drive(&mut fp, &prompts, 24);
+    println!("fp32 weights:           {fp_tps:>8.1} tok/s");
+
+    let pcdvq = build_pcdvq_with(&paths, DirectionMethod::GreedyE8, MagnitudeMethod::LloydMax, 14, 2, 7).unwrap();
+    let q = QuantizedGpt::quantize(&model, &pcdvq);
+    let ratio = q.dense_bits() as f64 / q.payload_bits() as f64;
+    let mut qs = Server::new(
+        &engine,
+        &paths.artifacts,
+        ServingWeights::Quantized(Box::new(q), (*pcdvq.dir).clone(), (*pcdvq.mag).clone()),
+    )
+    .unwrap();
+    let _ = drive(&mut qs, &prompts, 8);
+    let q_tps = drive(&mut qs, &prompts, 24);
+    println!("pcdvq in-graph dequant: {q_tps:>8.1} tok/s   (weights {ratio:.1}x smaller resident)");
+    println!("note: CPU testbed is compute-bound; see EXPERIMENTS.md §4.4 for discussion");
+}

@@ -1,0 +1,180 @@
+//! Criterion-like micro-benchmark harness (criterion is not in the offline
+//! crate set). Used by every target under `rust/benches/` (`harness = false`).
+//!
+//! Method: warm up, then collect `samples` timed runs of `iters` iterations
+//! each and report min / median / mean / MAD — median-of-iterations is robust
+//! to scheduler noise on the single-core testbed.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration: (min, median, mean, mad).
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub mad_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    /// Gigaelements (or whatever unit) per second at the median.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.median_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) => format!("  {:.3} Gelem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} /iter  (min {:>10}, mad {:>8}){}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.mad_ns),
+            tp
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner. `samples` timed samples of adaptively-chosen `iters`.
+pub struct Bench {
+    pub samples: usize,
+    /// Target wall time per sample (iters are chosen to hit this).
+    pub target_sample_s: f64,
+    pub warmup_s: f64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Modest defaults for the single-core box; CI smoke can lower them
+        // via PCDVQ_BENCH_FAST=1.
+        let fast = std::env::var_os("PCDVQ_BENCH_FAST").is_some();
+        Bench {
+            samples: if fast { 5 } else { 15 },
+            target_sample_s: if fast { 0.05 } else { 0.2 },
+            warmup_s: if fast { 0.05 } else { 0.3 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, which performs ONE iteration of the workload.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    /// Time `f` and attach a per-iteration element count for throughput.
+    pub fn run_elems<F: FnMut()>(&mut self, name: &str, elements: u64, mut f: F) -> &Measurement {
+        self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn run_with_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_s || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        let iters = ((self.target_sample_s / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples_ns[samples_ns.len() / 2];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let mad = {
+            let mut dev: Vec<f64> = samples_ns.iter().map(|x| (x - median).abs()).collect();
+            dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            dev[dev.len() / 2]
+        };
+        let m = Measurement {
+            name: name.to_string(),
+            min_ns: samples_ns[0],
+            median_ns: median,
+            mean_ns: mean,
+            mad_ns: mad,
+            elements,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (ptr read fence —
+/// std::hint::black_box is stable but this keeps MSRV slack).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("PCDVQ_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.samples = 3;
+        b.target_sample_s = 0.01;
+        b.warmup_s = 0.005;
+        let mut acc = 0u64;
+        let m = b
+            .run("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(m.median_ns > 0.0);
+        assert!(m.min_ns <= m.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

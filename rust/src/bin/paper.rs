@@ -1,0 +1,66 @@
+//! `paper` — regenerate every table and figure of the PCDVQ paper.
+//!
+//! USAGE: paper -- <experiment> [--quick] [--model NAME]
+//!   experiments: fig1a fig1b table1 table2 table3 table4 fig3 efficiency all
+
+use anyhow::Result;
+use pcdvq::paper;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let model = args
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("gpt-m")
+        .to_string();
+    let exp = args
+        .iter()
+        .find(|a| !a.starts_with("--") && *a != &model)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+
+    let ctx = paper::Ctx::new(quick)?;
+    let t0 = std::time::Instant::now();
+    match exp {
+        "fig1a" => paper::run_fig1a(&ctx, &model)?,
+        "fig1b" => paper::run_fig1b(&ctx, &model)?,
+        "table1" => paper::run_table1(&ctx, quick)?,
+        "table2" => paper::run_table2(&ctx, quick)?,
+        "table3" => paper::run_table3(&ctx, &model)?,
+        "table4" => paper::run_table4(&ctx, &model, quick)?,
+        "fig3" => paper::run_fig3(&ctx, &model)?,
+        "efficiency" => paper::run_efficiency(&ctx, &model, quick)?,
+        "all" => {
+            paper::run_fig1a(&ctx, &model)?;
+            println!();
+            paper::run_fig1b(&ctx, &model)?;
+            println!();
+            paper::run_table1(&ctx, quick)?;
+            println!();
+            paper::run_table2(&ctx, quick)?;
+            println!();
+            paper::run_table3(&ctx, &model)?;
+            println!();
+            paper::run_table4(&ctx, &model, quick)?;
+            println!();
+            paper::run_fig3(&ctx, &model)?;
+            println!();
+            paper::run_efficiency(&ctx, &model, quick)?;
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (fig1a fig1b table1 table2 table3 table4 fig3 efficiency all)"
+        ),
+    }
+    eprintln!("\n[paper] {exp} completed in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

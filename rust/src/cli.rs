@@ -1,0 +1,153 @@
+//! Hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! Grammar: `pcdvq <subcommand> [--flag value]...`. Flags are typed at the
+//! call site via [`Args::get`]/[`Args::flag`]; unknown flags are rejected so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand + `--key value` pairs + bare `--switch`es.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()[1..]`.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut values = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument '{arg}'");
+            };
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    values.insert(key.to_string(), it.next().unwrap());
+                }
+                _ => switches.push(key.to_string()),
+            }
+        }
+        Ok(Args { subcommand, values, switches, consumed: Default::default() })
+    }
+
+    /// Required value flag.
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    /// Optional value flag with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.values.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Typed optional flag.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.consumed.borrow_mut().push(key.to_string());
+        match self.values.get(key) {
+            Some(v) => v
+                .parse::<T>()
+                .with_context(|| format!("--{key}: cannot parse '{v}'")),
+            None => Ok(default),
+        }
+    }
+
+    /// Bare switch (present / absent).
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Error on any flag the subcommand never looked at (typo guard). Call
+    /// after all `get`/`flag` calls.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.values.keys() {
+            if !consumed.contains(k) {
+                bail!("unknown flag --{k} for subcommand '{}'", self.subcommand);
+            }
+        }
+        for k in &self.switches {
+            if !consumed.contains(k) {
+                bail!("unknown switch --{k} for subcommand '{}'", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Usage text for the main binary.
+pub const USAGE: &str = "\
+pcdvq — Polar Coordinate Decoupled Vector Quantization (paper reproduction)
+
+USAGE: pcdvq <subcommand> [flags]
+
+SUBCOMMANDS
+  codebook   build + cache the DACC codebooks
+             --dir-bits N (14) --mag-bits N (2)
+             --dir-method greedy-e8|random-gaussian|simulated-annealing|kmeans
+             --mag-method lloyd-max|kmeans
+  quantize   quantize a model, report error decomposition + bpw
+             --model NAME (gpt-m) --method SPEC (pcdvq2) --workers N (1)
+  eval       perplexity + zero-shot proxy suite for a (quantized) model
+             --model NAME --method SPEC|fp16 --windows N (48) --items N (40)
+  serve      run the batched generation service on synthetic traffic
+             --model NAME --quantized --requests N (32) --max-new N (32)
+  info       print artifact + model inventory
+
+Method SPECs: fp16, rtn2, rtn4, gptq2, kmeans16, quip16, pcdvq2, pcdvq2.125,
+pcdvq:a,b.  Tables/figures of the paper: use the `paper` binary.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse(&["eval", "--model", "gpt-m", "--quantized", "--windows", "8"]);
+        assert_eq!(a.subcommand, "eval");
+        assert_eq!(a.get("model").unwrap(), "gpt-m");
+        assert!(a.flag("quantized"));
+        assert_eq!(a.get_parse_or("windows", 0usize).unwrap(), 8);
+        assert_eq!(a.get_or("missing", "dflt"), "dflt");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["eval".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn finish_rejects_unconsumed() {
+        let a = parse(&["eval", "--bogus", "1"]);
+        let _ = a.get_or("model", "x");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = parse(&["quantize"]);
+        assert!(a.get("model").is_err());
+    }
+}

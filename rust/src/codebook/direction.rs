@@ -1,0 +1,410 @@
+//! Direction codebooks: Algorithm 1 (greedy E8) and the Table-4 ablations.
+
+use crate::lattice::e8_directions;
+use crate::rng::Rng;
+use crate::tensor::{dot, Matrix};
+
+/// How to construct the direction codebook (Table 4 ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DirectionMethod {
+    /// Algorithm 1: greedy max–min-cosine sampling of E8 lattice directions.
+    /// The paper's method.
+    GreedyE8,
+    /// Random directions of standard Gaussian vectors.
+    RandomGaussian,
+    /// Simulated annealing maximizing the minimal pairwise angle.
+    SimulatedAnnealing,
+    /// K-means (spherical) on sampled Gaussian directions.
+    KMeans,
+}
+
+impl DirectionMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DirectionMethod::GreedyE8 => "greedy-e8",
+            DirectionMethod::RandomGaussian => "random-gaussian",
+            DirectionMethod::SimulatedAnnealing => "simulated-annealing",
+            DirectionMethod::KMeans => "kmeans",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "greedy-e8" => Some(DirectionMethod::GreedyE8),
+            "random-gaussian" => Some(DirectionMethod::RandomGaussian),
+            "simulated-annealing" => Some(DirectionMethod::SimulatedAnnealing),
+            "kmeans" => Some(DirectionMethod::KMeans),
+        _ => None,
+        }
+    }
+}
+
+/// A codebook of `2^a` unit direction vectors in R^k.
+#[derive(Clone, Debug)]
+pub struct DirectionCodebook {
+    /// Unit vectors as rows (`2^a x k`).
+    pub vectors: Matrix,
+    /// Index bits `a`.
+    pub bits: u32,
+    /// Construction method (recorded for artifact provenance).
+    pub method: DirectionMethod,
+}
+
+impl DirectionCodebook {
+    /// Build a codebook with `2^bits` entries of dimension `k`.
+    ///
+    /// `seed` feeds the ablation constructions and greedy tie-breaks;
+    /// GreedyE8 is deterministic given (bits, k, seed).
+    pub fn build(method: DirectionMethod, bits: u32, k: usize, seed: u64) -> Self {
+        let n = 1usize << bits;
+        let vectors = match method {
+            DirectionMethod::GreedyE8 => greedy_e8(n, k, seed),
+            DirectionMethod::RandomGaussian => random_gaussian(n, k, seed),
+            DirectionMethod::SimulatedAnnealing => simulated_annealing(n, k, seed),
+            DirectionMethod::KMeans => spherical_kmeans(n, k, seed),
+        };
+        DirectionCodebook { vectors, bits, method }
+    }
+
+    /// Number of entries (`2^bits`).
+    pub fn len(&self) -> usize {
+        self.vectors.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.vectors.cols()
+    }
+
+    /// Index of the entry with maximal cosine similarity to the (not
+    /// necessarily normalized) vector `v` — Eq. 7 `VQ_φ`.
+    ///
+    /// Because codebook rows are unit-norm, maximizing cosine is maximizing
+    /// the dot product; `v`'s own norm only scales all scores equally.
+    #[inline]
+    pub fn assign(&self, v: &[f32]) -> u32 {
+        debug_assert_eq!(v.len(), self.dim());
+        let mut best = 0u32;
+        let mut best_s = f32::NEG_INFINITY;
+        for j in 0..self.len() {
+            let s = dot(v, self.vectors.row(j));
+            if s > best_s {
+                best_s = s;
+                best = j as u32;
+            }
+        }
+        best
+    }
+
+    /// Minimum pairwise angle quality metric: the max over entries of the
+    /// max cosine to any *other* entry (lower = better spread). Used by the
+    /// Table-4 harness and tests.
+    pub fn worst_coherence(&self) -> f32 {
+        let n = self.len();
+        let mut worst = f32::NEG_INFINITY;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let c = dot(self.vectors.row(i), self.vectors.row(j));
+                if c > worst {
+                    worst = c;
+                }
+            }
+        }
+        worst
+    }
+}
+
+/// Algorithm 1: greedily select `n` directions from the E8 candidate pool,
+/// each time picking the candidate whose *maximum* cosine to the already
+/// selected set is *minimal* (farthest-point sampling on the sphere).
+///
+/// Incremental bookkeeping makes this `O(N_candidates · n · k)`:
+/// after adding a center we refresh each candidate's cached max-cos with one
+/// dot product against the new center only.
+fn greedy_e8(n: usize, k: usize, seed: u64) -> Matrix {
+    assert_eq!(k, 8, "GreedyE8 requires k = 8 (E8 lattice), got k = {k}");
+    // Grow the candidate pool shell by shell until it can cover n entries.
+    let mut max_norm2 = 2;
+    let mut cands = e8_directions(max_norm2);
+    while cands.rows() < n {
+        max_norm2 += 2;
+        cands = e8_directions(max_norm2);
+        assert!(max_norm2 <= 32, "E8 pool exhausted before {n} candidates");
+    }
+    greedy_from_candidates(&cands, n, seed)
+}
+
+/// Farthest-point (max–min-cosine) greedy selection from an arbitrary pool of
+/// unit vectors. Exposed for tests and for building codebooks from custom
+/// candidate sets.
+pub fn greedy_from_candidates(cands: &Matrix, n: usize, seed: u64) -> Matrix {
+    let ncand = cands.rows();
+    let k = cands.cols();
+    assert!(ncand >= n, "pool of {ncand} cannot yield {n} directions");
+    let mut rng = Rng::new(seed);
+    let first = rng.below(ncand);
+
+    let mut selected: Vec<usize> = Vec::with_capacity(n);
+    // max cosine of each candidate to the selected set so far
+    let mut max_cos = vec![f32::NEG_INFINITY; ncand];
+    let mut taken = vec![false; ncand];
+
+    selected.push(first);
+    taken[first] = true;
+    update_max_cos(cands, first, &mut max_cos);
+
+    for _ in 1..n {
+        // candidate with minimal max-cos to the selected set
+        let mut best = usize::MAX;
+        let mut best_v = f32::INFINITY;
+        for i in 0..ncand {
+            if !taken[i] && max_cos[i] < best_v {
+                best_v = max_cos[i];
+                best = i;
+            }
+        }
+        debug_assert!(best != usize::MAX);
+        selected.push(best);
+        taken[best] = true;
+        update_max_cos(cands, best, &mut max_cos);
+    }
+
+    let mut out = Vec::with_capacity(n * k);
+    for &i in &selected {
+        out.extend_from_slice(cands.row(i));
+    }
+    Matrix::from_vec(out, n, k)
+}
+
+#[inline]
+fn update_max_cos(cands: &Matrix, new_center: usize, max_cos: &mut [f32]) {
+    let c = cands.row(new_center).to_vec();
+    for i in 0..cands.rows() {
+        let d = dot(cands.row(i), &c);
+        if d > max_cos[i] {
+            max_cos[i] = d;
+        }
+    }
+}
+
+/// Table-4 ablation: directions of i.i.d. standard Gaussian vectors.
+fn random_gaussian(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * k);
+    for _ in 0..n {
+        let mut v = rng.normal_vec(k);
+        normalize(&mut v);
+        data.extend_from_slice(&v);
+    }
+    Matrix::from_vec(data, n, k)
+}
+
+/// Table-4 ablation: simulated annealing that *minimizes the maximal pairwise
+/// cosine* (i.e. maximizes the minimal angle), starting from random Gaussian
+/// directions and proposing single-entry jitter moves.
+fn simulated_annealing(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed ^ 0xA55A);
+    let mut book = random_gaussian(n, k, seed);
+    // Energy: sum of soft-max-ish pairwise penalties. Full O(n²) per sweep is
+    // too slow for n = 2^14+, so anneal against a random mini-batch of rivals
+    // per move — standard for large-n sphere packings.
+    let iters = 20_000.min(n * 40);
+    let rivals = 64.min(n - 1);
+    let mut temp = 0.1f32;
+    let cool = 0.9995f32;
+    for _ in 0..iters {
+        let i = rng.below(n);
+        // propose: jitter entry i
+        let mut prop: Vec<f32> = book.row(i).to_vec();
+        for x in prop.iter_mut() {
+            *x += 0.15 * rng.normal() as f32;
+        }
+        normalize(&mut prop);
+        let (mut cur_e, mut prop_e) = (0.0f32, 0.0f32);
+        for _ in 0..rivals {
+            let j = {
+                let mut j = rng.below(n);
+                while j == i {
+                    j = rng.below(n);
+                }
+                j
+            };
+            cur_e = cur_e.max(dot(book.row(i), book.row(j)));
+            prop_e = prop_e.max(dot(&prop, book.row(j)));
+        }
+        let accept = prop_e < cur_e
+            || rng.uniform() < (-(prop_e - cur_e) / temp).exp() as f64;
+        if accept {
+            book.row_mut(i).copy_from_slice(&prop);
+        }
+        temp *= cool;
+    }
+    book
+}
+
+/// Table-4 ablation: spherical k-means on Gaussian direction samples.
+fn spherical_kmeans(n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed ^ 0x1234);
+    // Sample a training pool of directions (4x the codebook size, capped) —
+    // larger codebooks get fewer Lloyd iterations to keep the offline build
+    // bounded (it is a one-time, cached artifact like the paper's).
+    let pool_n = (4 * n).clamp(1024, 100_000);
+    let iters = if n >= 16_384 { 5 } else { 25 };
+    let pool = random_gaussian(pool_n, k, seed ^ 0x77);
+    // init: random subset
+    let init = rng.sample_indices(pool_n, n);
+    let mut centers = Vec::with_capacity(n * k);
+    for &i in &init {
+        centers.extend_from_slice(pool.row(i));
+    }
+    let mut centers = Matrix::from_vec(centers, n, k);
+
+    let mut assign = vec![0usize; pool_n];
+    let mut assign_buf = vec![0u32; pool_n];
+    for _iter in 0..iters {
+        // assignment step (max cosine) via the blocked hot path
+        crate::quant::assign::assign_into(&pool, &centers, &[], &mut assign_buf);
+        let mut moved = 0usize;
+        for (i, &best) in assign_buf.iter().enumerate() {
+            let best = best as usize;
+            if assign[i] != best {
+                moved += 1;
+                assign[i] = best;
+            }
+        }
+        // update step: mean then re-normalize (spherical k-means)
+        let mut sums = vec![0.0f32; n * k];
+        let mut counts = vec![0usize; n];
+        for i in 0..pool_n {
+            let c = assign[i];
+            counts[c] += 1;
+            for (s, &x) in sums[c * k..(c + 1) * k].iter_mut().zip(pool.row(i)) {
+                *s += x;
+            }
+        }
+        for c in 0..n {
+            if counts[c] == 0 {
+                // re-seed empty cluster from a random pool vector
+                let r = rng.below(pool_n);
+                centers.row_mut(c).copy_from_slice(pool.row(r));
+                continue;
+            }
+            let mut v = sums[c * k..(c + 1) * k].to_vec();
+            normalize(&mut v);
+            centers.row_mut(c).copy_from_slice(&v);
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+    centers
+}
+
+fn normalize(v: &mut [f32]) {
+    let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    } else {
+        v[0] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_unit_rows(m: &Matrix) {
+        for i in 0..m.rows() {
+            let n: f32 = m.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn greedy_e8_small_codebook() {
+        let cb = DirectionCodebook::build(DirectionMethod::GreedyE8, 6, 8, 0);
+        assert_eq!(cb.len(), 64);
+        assert_eq!(cb.dim(), 8);
+        check_unit_rows(&cb.vectors);
+        // spread: no two entries closer than ~25 degrees for 64-of-240
+        assert!(cb.worst_coherence() < 0.95, "coherence={}", cb.worst_coherence());
+    }
+
+    #[test]
+    fn greedy_e8_deterministic() {
+        let a = DirectionCodebook::build(DirectionMethod::GreedyE8, 5, 8, 3);
+        let b = DirectionCodebook::build(DirectionMethod::GreedyE8, 5, 8, 3);
+        assert_eq!(a.vectors.as_slice(), b.vectors.as_slice());
+    }
+
+    #[test]
+    fn greedy_beats_random_on_coherence() {
+        // The paper's Table 4 claim in miniature: greedy E8 spreads directions
+        // better than random Gaussian sampling.
+        let g = DirectionCodebook::build(DirectionMethod::GreedyE8, 7, 8, 0);
+        let r = DirectionCodebook::build(DirectionMethod::RandomGaussian, 7, 8, 0);
+        assert!(
+            g.worst_coherence() < r.worst_coherence(),
+            "greedy {} vs random {}",
+            g.worst_coherence(),
+            r.worst_coherence()
+        );
+    }
+
+    #[test]
+    fn all_methods_produce_unit_rows() {
+        for m in [
+            DirectionMethod::RandomGaussian,
+            DirectionMethod::SimulatedAnnealing,
+            DirectionMethod::KMeans,
+        ] {
+            let cb = DirectionCodebook::build(m, 5, 8, 42);
+            assert_eq!(cb.len(), 32);
+            check_unit_rows(&cb.vectors);
+        }
+    }
+
+    #[test]
+    fn assign_picks_exact_match() {
+        let cb = DirectionCodebook::build(DirectionMethod::GreedyE8, 6, 8, 0);
+        for probe in [0usize, 17, 63] {
+            let v: Vec<f32> = cb.vectors.row(probe).iter().map(|x| 3.5 * x).collect();
+            assert_eq!(cb.assign(&v) as usize, probe);
+        }
+    }
+
+    #[test]
+    fn annealing_improves_over_its_random_init() {
+        let n = 32;
+        let sa = simulated_annealing(n, 8, 7);
+        let rand = random_gaussian(n, 8, 7);
+        let coh = |m: &Matrix| {
+            let mut w = f32::NEG_INFINITY;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    w = w.max(dot(m.row(i), m.row(j)));
+                }
+            }
+            w
+        };
+        assert!(coh(&sa) <= coh(&rand) + 1e-6, "sa={} rand={}", coh(&sa), coh(&rand));
+    }
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [
+            DirectionMethod::GreedyE8,
+            DirectionMethod::RandomGaussian,
+            DirectionMethod::SimulatedAnnealing,
+            DirectionMethod::KMeans,
+        ] {
+            assert_eq!(DirectionMethod::parse(m.name()), Some(m));
+        }
+        assert_eq!(DirectionMethod::parse("nope"), None);
+    }
+}

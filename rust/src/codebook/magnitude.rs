@@ -1,0 +1,290 @@
+//! Magnitude codebooks: Algorithm 2 (Lloyd-Max on the chi(k) law) and the
+//! Table-4 k-means ablation.
+
+use crate::rng::Rng;
+use crate::stats::ChiDistribution;
+
+/// How to construct the magnitude codebook (Table 4 ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MagnitudeMethod {
+    /// Algorithm 2: Lloyd-Max against the analytic chi(k) PDF/CDF — optimal
+    /// non-uniform scalar quantization. The paper's method.
+    LloydMax,
+    /// 1-D k-means on magnitudes sampled from chi(k).
+    KMeans,
+}
+
+impl MagnitudeMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MagnitudeMethod::LloydMax => "lloyd-max",
+            MagnitudeMethod::KMeans => "kmeans",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lloyd-max" => Some(MagnitudeMethod::LloydMax),
+            "kmeans" => Some(MagnitudeMethod::KMeans),
+            _ => None,
+        }
+    }
+}
+
+/// A `2^b`-entry scalar codebook for vector magnitudes.
+#[derive(Clone, Debug)]
+pub struct MagnitudeCodebook {
+    /// Reconstruction levels, sorted ascending.
+    pub levels: Vec<f32>,
+    /// Index bits `b`.
+    pub bits: u32,
+    pub method: MagnitudeMethod,
+}
+
+impl MagnitudeCodebook {
+    /// Build a codebook of `2^bits` levels for chi(`k`)-distributed
+    /// magnitudes.
+    ///
+    /// * `tau` — CDF mass covered by the quantizer range (Algorithm 2's
+    ///   "maximum threshold", default 1 − 1e-4).
+    /// * `seed` — used only by the KMeans ablation.
+    pub fn build(method: MagnitudeMethod, bits: u32, k: usize, tau: f64, seed: u64) -> Self {
+        let n = 1usize << bits;
+        let levels = match method {
+            MagnitudeMethod::LloydMax => lloyd_max(n, k, tau),
+            MagnitudeMethod::KMeans => kmeans_1d(n, k, seed),
+        };
+        debug_assert!(levels.windows(2).all(|w| w[0] <= w[1]));
+        MagnitudeCodebook { levels, bits, method }
+    }
+
+    /// Convenience: the paper's configuration (Lloyd-Max, τ covering all but
+    /// 1e-4 of the mass).
+    pub fn paper_default(bits: u32, k: usize) -> Self {
+        Self::build(MagnitudeMethod::LloydMax, bits, k, 1.0 - 1e-4, 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Index of the nearest level — Eq. 7 `VQ_r`. Levels are sorted, so a
+    /// binary search + neighbour check gives O(log n).
+    #[inline]
+    pub fn assign(&self, r: f32) -> u32 {
+        let levels = &self.levels;
+        let idx = match levels.binary_search_by(|l| l.partial_cmp(&r).unwrap()) {
+            Ok(i) => i,
+            Err(i) => {
+                if i == 0 {
+                    0
+                } else if i >= levels.len() {
+                    levels.len() - 1
+                } else if (r - levels[i - 1]).abs() <= (levels[i] - r).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        };
+        idx as u32
+    }
+
+    /// Reconstruction value for an index.
+    #[inline]
+    pub fn level(&self, idx: u32) -> f32 {
+        self.levels[idx as usize]
+    }
+
+    /// Expected squared quantization error under chi(k), by fine Riemann sum
+    /// (diagnostics / Table 4 harness).
+    pub fn expected_sq_error(&self, k: usize) -> f64 {
+        let chi = ChiDistribution::new(k);
+        let hi = chi.quantile(1.0 - 1e-8);
+        let n = 20_000;
+        let dx = hi / n as f64;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let x = (i as f64 + 0.5) * dx;
+            let q = self.level(self.assign(x as f32)) as f64;
+            acc += (x - q) * (x - q) * chi.pdf(x) * dx;
+        }
+        acc
+    }
+}
+
+/// Algorithm 2: Lloyd-Max with analytic centroids.
+///
+/// Alternates boundary updates `u_i = (r_i + r_{i+1})/2` with centroid
+/// updates `r_i = E[R | u_{i-1} < R ≤ u_i]` until the max level shift is
+/// below `tol`. Because the chi centroid has a closed form
+/// ([`ChiDistribution::partial_mean`]), each iteration is exact.
+fn lloyd_max(n: usize, k: usize, tau: f64) -> Vec<f32> {
+    let chi = ChiDistribution::new(k);
+    let max_r = chi.quantile(tau);
+    // init: uniform levels over (0, max_r] — as in Algorithm 2 line 2
+    let mut levels: Vec<f64> = (0..n)
+        .map(|i| (i as f64 + 0.5) * max_r / n as f64)
+        .collect();
+    let tol = 1e-10;
+    let max_iter = 500;
+    for _ in 0..max_iter {
+        // boundaries
+        let mut bounds = Vec::with_capacity(n + 1);
+        bounds.push(0.0);
+        for i in 0..n - 1 {
+            bounds.push(0.5 * (levels[i] + levels[i + 1]));
+        }
+        // The outermost cell is unbounded in truth; clamp to a high quantile
+        // so the centroid stays finite (τ-threshold per Algorithm 2).
+        bounds.push(chi.quantile(1.0 - 1e-12).max(max_r));
+        // centroids
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            let c = chi.centroid(bounds[i], bounds[i + 1]);
+            worst = worst.max((c - levels[i]).abs());
+            levels[i] = c;
+        }
+        if worst < tol {
+            break;
+        }
+    }
+    levels.into_iter().map(|x| x as f32).collect()
+}
+
+/// Table-4 ablation: plain 1-D k-means on chi(k) samples.
+fn kmeans_1d(n: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let samples: Vec<f64> = (0..200_000)
+        .map(|_| {
+            let s: f64 = (0..k).map(|_| rng.normal().powi(2)).sum();
+            s.sqrt()
+        })
+        .collect();
+    // init: quantile-spread
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centers: Vec<f64> = (0..n)
+        .map(|i| sorted[(i * sorted.len() + sorted.len() / 2) / n.max(1)])
+        .collect();
+    for _ in 0..60 {
+        let mut sums = vec![0.0f64; n];
+        let mut counts = vec![0usize; n];
+        for &s in &samples {
+            // nearest center (centers stay sorted)
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (c, &ctr) in centers.iter().enumerate() {
+                let d = (s - ctr).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            sums[best] += s;
+            counts[best] += 1;
+        }
+        let mut moved = 0.0f64;
+        for c in 0..n {
+            if counts[c] > 0 {
+                let nc = sums[c] / counts[c] as f64;
+                moved = moved.max((nc - centers[c]).abs());
+                centers[c] = nc;
+            }
+        }
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if moved < 1e-9 {
+            break;
+        }
+    }
+    centers.into_iter().map(|x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lloyd_max_levels_sorted_positive() {
+        let cb = MagnitudeCodebook::paper_default(2, 8);
+        assert_eq!(cb.len(), 4);
+        assert!(cb.levels.windows(2).all(|w| w[0] < w[1]));
+        assert!(cb.levels[0] > 0.0);
+    }
+
+    #[test]
+    fn lloyd_max_centers_bracket_chi_mean() {
+        // chi(8) mean ≈ 2.7436; with 4 levels some must lie on each side.
+        let cb = MagnitudeCodebook::paper_default(2, 8);
+        let mean = ChiDistribution::new(8).mean() as f32;
+        assert!(cb.levels[0] < mean && cb.levels[3] > mean, "{:?}", cb.levels);
+    }
+
+    #[test]
+    fn lloyd_max_satisfies_optimality_conditions() {
+        // Nearest-neighbour + centroid conditions: each level equals the
+        // conditional mean of its own cell.
+        let cb = MagnitudeCodebook::paper_default(3, 8);
+        let chi = ChiDistribution::new(8);
+        let n = cb.len();
+        for i in 0..n {
+            let lo = if i == 0 { 0.0 } else { 0.5 * (cb.levels[i - 1] + cb.levels[i]) as f64 };
+            let hi = if i == n - 1 {
+                chi.quantile(1.0 - 1e-12)
+            } else {
+                0.5 * (cb.levels[i] + cb.levels[i + 1]) as f64
+            };
+            let c = chi.centroid(lo, hi);
+            assert!(
+                (c - cb.levels[i] as f64).abs() < 1e-5,
+                "level {i}: {} vs centroid {c}",
+                cb.levels[i]
+            );
+        }
+    }
+
+    #[test]
+    fn assign_is_true_nearest() {
+        let cb = MagnitudeCodebook::paper_default(4, 8);
+        for t in 0..1000 {
+            let r = t as f32 * 0.01;
+            let idx = cb.assign(r) as usize;
+            for (j, &l) in cb.levels.iter().enumerate() {
+                assert!(
+                    (r - cb.levels[idx]).abs() <= (r - l).abs() + 1e-6,
+                    "r={r}: assigned {idx} but {j} closer"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lloyd_max_beats_kmeans_slightly_or_ties() {
+        // Lloyd-Max on the analytic law is the optimum; sampled k-means can
+        // only approach it.
+        let lm = MagnitudeCodebook::build(MagnitudeMethod::LloydMax, 2, 8, 1.0 - 1e-4, 0);
+        let km = MagnitudeCodebook::build(MagnitudeMethod::KMeans, 2, 8, 1.0 - 1e-4, 0);
+        let e_lm = lm.expected_sq_error(8);
+        let e_km = km.expected_sq_error(8);
+        assert!(e_lm <= e_km * 1.02, "lloyd {e_lm} vs kmeans {e_km}");
+    }
+
+    #[test]
+    fn more_bits_reduce_error() {
+        let e2 = MagnitudeCodebook::paper_default(2, 8).expected_sq_error(8);
+        let e4 = MagnitudeCodebook::paper_default(4, 8).expected_sq_error(8);
+        let e6 = MagnitudeCodebook::paper_default(6, 8).expected_sq_error(8);
+        assert!(e2 > e4 && e4 > e6, "e2={e2} e4={e4} e6={e6}");
+    }
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [MagnitudeMethod::LloydMax, MagnitudeMethod::KMeans] {
+            assert_eq!(MagnitudeMethod::parse(m.name()), Some(m));
+        }
+    }
+}

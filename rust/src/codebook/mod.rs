@@ -1,0 +1,20 @@
+//! DACC — Distribution Aligned Codebook Construction (paper §3.2.3).
+//!
+//! Two independent codebooks, both built **offline, once**, because after the
+//! standard-Gaussian regularization every weight layer feeds the same two
+//! distributions:
+//!
+//! * **Direction** — uniform on the sphere S^{k-1}: a `2^a`-entry codebook of
+//!   unit vectors, greedily max–min-cosine sampled from E8 lattice directions
+//!   (Algorithm 1). Ablation variants (Table 4): random Gaussian, simulated
+//!   annealing, k-means.
+//! * **Magnitude** — chi(k) distributed: a `2^b`-entry scalar codebook from
+//!   Lloyd-Max against the analytic chi PDF (Algorithm 2). Ablation variant:
+//!   k-means on sampled magnitudes.
+
+pub mod direction;
+pub mod magnitude;
+pub mod store;
+
+pub use direction::{DirectionCodebook, DirectionMethod};
+pub use magnitude::{MagnitudeCodebook, MagnitudeMethod};

@@ -1,0 +1,186 @@
+//! Codebook persistence + the artifact cache.
+//!
+//! Like the paper (§3.2.3: "this process is offline and performed only once
+//! for all circumstances"), codebooks are built once and cached under
+//! `artifacts/codebooks/`. The cache key encodes method, bits, k and seed so
+//! ablation variants coexist.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::{DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod};
+use crate::io::{Entry, Pct};
+use crate::tensor::Matrix;
+
+/// Save a direction codebook as a `.pct` file.
+pub fn save_direction(cb: &DirectionCodebook, path: impl AsRef<Path>) -> Result<()> {
+    let mut p = Pct::new();
+    p.insert(
+        "vectors",
+        Entry::f32(
+            &[cb.len() as u64, cb.dim() as u64],
+            cb.vectors.as_slice().to_vec(),
+        ),
+    );
+    p.insert("bits", Entry::u64(&[1], vec![cb.bits as u64]));
+    p.insert(
+        "method",
+        Entry::u32(&[1], vec![direction_method_tag(cb.method)]),
+    );
+    p.save(path)
+}
+
+/// Load a direction codebook.
+pub fn load_direction(path: impl AsRef<Path>) -> Result<DirectionCodebook> {
+    let p = Pct::load(path)?;
+    let e = p.get("vectors")?;
+    let (n, k) = (e.dims[0] as usize, e.dims[1] as usize);
+    let vectors = Matrix::from_vec(e.as_f32()?.to_vec(), n, k);
+    let bits = p.get("bits")?.scalar_u64()? as u32;
+    let method = parse_direction_tag(p.get("method")?.as_u32()?[0]);
+    Ok(DirectionCodebook { vectors, bits, method })
+}
+
+/// Save a magnitude codebook.
+pub fn save_magnitude(cb: &MagnitudeCodebook, path: impl AsRef<Path>) -> Result<()> {
+    let mut p = Pct::new();
+    p.insert("levels", Entry::f32(&[cb.len() as u64], cb.levels.clone()));
+    p.insert("bits", Entry::u64(&[1], vec![cb.bits as u64]));
+    p.insert(
+        "method",
+        Entry::u32(&[1], vec![magnitude_method_tag(cb.method)]),
+    );
+    p.save(path)
+}
+
+/// Load a magnitude codebook.
+pub fn load_magnitude(path: impl AsRef<Path>) -> Result<MagnitudeCodebook> {
+    let p = Pct::load(path)?;
+    let levels = p.get("levels")?.as_f32()?.to_vec();
+    let bits = p.get("bits")?.scalar_u64()? as u32;
+    let method = parse_magnitude_tag(p.get("method")?.as_u32()?[0]);
+    Ok(MagnitudeCodebook { levels, bits, method })
+}
+
+/// Build-or-load a direction codebook through the on-disk cache.
+pub fn cached_direction(
+    cache_dir: impl AsRef<Path>,
+    method: DirectionMethod,
+    bits: u32,
+    k: usize,
+    seed: u64,
+) -> Result<DirectionCodebook> {
+    let dir = cache_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path: PathBuf =
+        dir.join(format!("dir_{}_a{}_k{}_s{}.pct", method.name(), bits, k, seed));
+    if path.exists() {
+        if let Ok(cb) = load_direction(&path) {
+            if cb.bits == bits && cb.dim() == k && cb.method == method {
+                return Ok(cb);
+            }
+        }
+    }
+    let cb = DirectionCodebook::build(method, bits, k, seed);
+    save_direction(&cb, &path)?;
+    Ok(cb)
+}
+
+/// Build-or-load a magnitude codebook through the on-disk cache.
+pub fn cached_magnitude(
+    cache_dir: impl AsRef<Path>,
+    method: MagnitudeMethod,
+    bits: u32,
+    k: usize,
+    seed: u64,
+) -> Result<MagnitudeCodebook> {
+    let dir = cache_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path: PathBuf =
+        dir.join(format!("mag_{}_b{}_k{}_s{}.pct", method.name(), bits, k, seed));
+    if path.exists() {
+        if let Ok(cb) = load_magnitude(&path) {
+            if cb.bits == bits && cb.method == method {
+                return Ok(cb);
+            }
+        }
+    }
+    let cb = MagnitudeCodebook::build(method, bits, k, 1.0 - 1e-4, seed);
+    save_magnitude(&cb, &path)?;
+    Ok(cb)
+}
+
+fn direction_method_tag(m: DirectionMethod) -> u32 {
+    match m {
+        DirectionMethod::GreedyE8 => 0,
+        DirectionMethod::RandomGaussian => 1,
+        DirectionMethod::SimulatedAnnealing => 2,
+        DirectionMethod::KMeans => 3,
+    }
+}
+
+fn parse_direction_tag(t: u32) -> DirectionMethod {
+    match t {
+        0 => DirectionMethod::GreedyE8,
+        1 => DirectionMethod::RandomGaussian,
+        2 => DirectionMethod::SimulatedAnnealing,
+        _ => DirectionMethod::KMeans,
+    }
+}
+
+fn magnitude_method_tag(m: MagnitudeMethod) -> u32 {
+    match m {
+        MagnitudeMethod::LloydMax => 0,
+        MagnitudeMethod::KMeans => 1,
+    }
+}
+
+fn parse_magnitude_tag(t: u32) -> MagnitudeMethod {
+    match t {
+        0 => MagnitudeMethod::LloydMax,
+        _ => MagnitudeMethod::KMeans,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("pcdvq_store_tests").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn direction_save_load_round_trip() {
+        let cb = DirectionCodebook::build(DirectionMethod::GreedyE8, 5, 8, 1);
+        let path = tmpdir("dir").join("cb.pct");
+        save_direction(&cb, &path).unwrap();
+        let cb2 = load_direction(&path).unwrap();
+        assert_eq!(cb.vectors.as_slice(), cb2.vectors.as_slice());
+        assert_eq!(cb.bits, cb2.bits);
+        assert_eq!(cb.method, cb2.method);
+    }
+
+    #[test]
+    fn magnitude_save_load_round_trip() {
+        let cb = MagnitudeCodebook::paper_default(2, 8);
+        let path = tmpdir("mag").join("cb.pct");
+        save_magnitude(&cb, &path).unwrap();
+        let cb2 = load_magnitude(&path).unwrap();
+        assert_eq!(cb.levels, cb2.levels);
+    }
+
+    #[test]
+    fn cache_hits_return_identical_codebook() {
+        let dir = tmpdir("cache");
+        let a = cached_direction(&dir, DirectionMethod::GreedyE8, 4, 8, 9).unwrap();
+        let b = cached_direction(&dir, DirectionMethod::GreedyE8, 4, 8, 9).unwrap();
+        assert_eq!(a.vectors.as_slice(), b.vectors.as_slice());
+        let m1 = cached_magnitude(&dir, MagnitudeMethod::LloydMax, 2, 8, 0).unwrap();
+        let m2 = cached_magnitude(&dir, MagnitudeMethod::LloydMax, 2, 8, 0).unwrap();
+        assert_eq!(m1.levels, m2.levels);
+    }
+}

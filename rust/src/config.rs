@@ -1,0 +1,205 @@
+//! Run configuration: artifact paths, quantizer selection, eval sizes.
+//!
+//! The hand-rolled flag parser lives in [`crate::cli`]; this module holds the
+//! typed configuration those flags (and the paper harness) produce.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::codebook::{
+    store, DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod,
+};
+use crate::model::GptModel;
+use crate::quant::gptq::GptqLike;
+use crate::quant::pcdvq::{Pcdvq, PcdvqConfig};
+use crate::quant::quip::QuipLike;
+use crate::quant::sq::Rtn;
+use crate::quant::vq_kmeans::KMeansVq;
+use crate::quant::Quantizer;
+
+/// Where things live on disk.
+#[derive(Clone, Debug)]
+pub struct Paths {
+    pub artifacts: PathBuf,
+}
+
+impl Paths {
+    /// Default: `$PCDVQ_ARTIFACTS` or `<crate root>/artifacts`.
+    pub fn detect() -> Self {
+        let artifacts = std::env::var_os("PCDVQ_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Paths { artifacts }
+    }
+
+    pub fn codebook_cache(&self) -> PathBuf {
+        self.artifacts.join("codebooks")
+    }
+
+    pub fn model(&self, name: &str) -> PathBuf {
+        self.artifacts.join(format!("{name}.pct"))
+    }
+
+    pub fn eval_tokens(&self) -> Result<Vec<u32>> {
+        let pct = crate::io::Pct::load(self.artifacts.join("corpus_eval.pct"))?;
+        Ok(pct.get("tokens")?.as_u32()?.to_vec())
+    }
+
+    pub fn train_tokens(&self) -> Result<Vec<u32>> {
+        let pct = crate::io::Pct::load(self.artifacts.join("corpus_train.pct"))?;
+        Ok(pct.get("tokens")?.as_u32()?.to_vec())
+    }
+
+    pub fn load_model(&self, name: &str) -> Result<GptModel> {
+        GptModel::load(self.model(name))
+    }
+}
+
+/// Which quantization method a table row refers to.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    Fp16,
+    Rtn { bits: u32 },
+    GptqLike { bits: u32 },
+    KMeansVq { bits: u32 },
+    QuipLike { bits: u32 },
+    Pcdvq { dir_bits: u32, mag_bits: u32 },
+}
+
+impl MethodSpec {
+    /// Parse `fp16 | rtn2 | rtn4 | gptq2 | kmeans16 | quip16 | pcdvq2 |
+    /// pcdvq2.125 | pcdvq:a,b`.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp16" | "fp" => MethodSpec::Fp16,
+            "pcdvq2" | "pcdvq" => MethodSpec::Pcdvq { dir_bits: 14, mag_bits: 2 },
+            "pcdvq2.125" => MethodSpec::Pcdvq { dir_bits: 15, mag_bits: 2 },
+            _ => {
+                if let Some(b) = s.strip_prefix("rtn") {
+                    MethodSpec::Rtn { bits: b.parse()? }
+                } else if let Some(b) = s.strip_prefix("gptq") {
+                    MethodSpec::GptqLike { bits: b.parse()? }
+                } else if let Some(b) = s.strip_prefix("kmeans") {
+                    MethodSpec::KMeansVq { bits: b.parse()? }
+                } else if let Some(b) = s.strip_prefix("quip") {
+                    MethodSpec::QuipLike { bits: b.parse()? }
+                } else if let Some(rest) = s.strip_prefix("pcdvq:") {
+                    let (a, b) = rest
+                        .split_once(',')
+                        .ok_or_else(|| anyhow::anyhow!("pcdvq:a,b expected"))?;
+                    MethodSpec::Pcdvq { dir_bits: a.parse()?, mag_bits: b.parse()? }
+                } else {
+                    bail!("unknown method '{s}'")
+                }
+            }
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Fp16 => "fp16".into(),
+            MethodSpec::Rtn { bits } => format!("RTN-{bits}b (GPTQ core)"),
+            MethodSpec::GptqLike { bits } => format!("GPTQ-like-{bits}b"),
+            MethodSpec::KMeansVq { bits } => format!("KMeansVQ-{bits}b (VPTQ-like)"),
+            MethodSpec::QuipLike { bits } => format!("QuIP#-like-{bits}b"),
+            MethodSpec::Pcdvq { dir_bits, mag_bits } => {
+                format!("PCDVQ a={dir_bits} b={mag_bits}")
+            }
+        }
+    }
+
+    /// Nominal bits per weight.
+    pub fn bpw(&self) -> f64 {
+        match self {
+            MethodSpec::Fp16 => 16.0,
+            MethodSpec::Rtn { bits } | MethodSpec::GptqLike { bits } => *bits as f64,
+            MethodSpec::KMeansVq { bits } | MethodSpec::QuipLike { bits } => *bits as f64 / 8.0,
+            MethodSpec::Pcdvq { dir_bits, mag_bits } => (dir_bits + mag_bits) as f64 / 8.0,
+        }
+    }
+
+    /// Instantiate the quantizer (building/caching codebooks as needed).
+    /// `model` provides the training pool for data-dependent baselines.
+    pub fn build(
+        &self,
+        paths: &Paths,
+        model: &GptModel,
+        seed: u64,
+    ) -> Result<Box<dyn Quantizer + Sync>> {
+        Ok(match self {
+            MethodSpec::Fp16 => bail!("fp16 is not a quantizer — use the model as-is"),
+            MethodSpec::Rtn { bits } => Box::new(Rtn::with_clip_search(*bits)),
+            MethodSpec::GptqLike { bits } => Box::new(GptqLike::new(*bits)),
+            MethodSpec::KMeansVq { bits } => {
+                let mut q = KMeansVq::new(8, *bits);
+                q.fit(&model.quantizable_vectors(8));
+                Box::new(q)
+            }
+            MethodSpec::QuipLike { bits } => Box::new(QuipLike::build(*bits, seed)),
+            MethodSpec::Pcdvq { dir_bits, mag_bits } => {
+                Box::new(build_pcdvq_with(
+                    paths,
+                    DirectionMethod::GreedyE8,
+                    MagnitudeMethod::LloydMax,
+                    *dir_bits,
+                    *mag_bits,
+                    seed,
+                )?)
+            }
+        })
+    }
+}
+
+/// Build a PCDVQ quantizer with explicit codebook method choices (Table 4).
+pub fn build_pcdvq_with(
+    paths: &Paths,
+    dir_method: DirectionMethod,
+    mag_method: MagnitudeMethod,
+    a: u32,
+    b: u32,
+    seed: u64,
+) -> Result<Pcdvq> {
+    let dir: Arc<DirectionCodebook> =
+        Arc::new(store::cached_direction(paths.codebook_cache(), dir_method, a, 8, 0)?);
+    let mag: Arc<MagnitudeCodebook> =
+        Arc::new(store::cached_magnitude(paths.codebook_cache(), mag_method, b, 8, 0)?);
+    Ok(Pcdvq::new(PcdvqConfig { dir_bits: a, mag_bits: b, k: 8, seed }, dir, mag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_bpw() {
+        assert_eq!(MethodSpec::parse("fp16").unwrap(), MethodSpec::Fp16);
+        assert_eq!(MethodSpec::parse("rtn2").unwrap().bpw(), 2.0);
+        assert_eq!(MethodSpec::parse("kmeans16").unwrap().bpw(), 2.0);
+        assert_eq!(MethodSpec::parse("quip17").unwrap().bpw(), 2.125);
+        assert_eq!(MethodSpec::parse("pcdvq2").unwrap().bpw(), 2.0);
+        assert_eq!(MethodSpec::parse("pcdvq2.125").unwrap().bpw(), 2.125);
+        assert_eq!(
+            MethodSpec::parse("pcdvq:10,3").unwrap(),
+            MethodSpec::Pcdvq { dir_bits: 10, mag_bits: 3 }
+        );
+        assert!(MethodSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn labels_distinct() {
+        let specs = ["fp16", "rtn2", "gptq2", "kmeans16", "quip16", "pcdvq2"];
+        let labels: std::collections::HashSet<String> = specs
+            .iter()
+            .map(|s| MethodSpec::parse(s).unwrap().label())
+            .collect();
+        assert_eq!(labels.len(), specs.len());
+    }
+
+    #[test]
+    fn paths_detect() {
+        let p = Paths::detect();
+        assert!(p.artifacts.ends_with("artifacts"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Dynamic request batching.
+//!
+//! The serving executable has a fixed batch geometry (B=8 compiled in), so
+//! the batcher's job is the classic one: coalesce the request stream into
+//! batches, trading latency (`max_wait`) against utilization (`max_batch`),
+//! exactly the mechanism the paper's §4.4 throughput numbers rely on.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// A generation request.
+#[derive(Debug)]
+pub struct GenRequest {
+    /// Prompt bytes (byte-level vocab).
+    pub prompt: Vec<u8>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+    /// Sampling temperature; 0 = greedy.
+    pub temperature: f32,
+    /// Where the response goes.
+    pub resp: Sender<GenResponse>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub generated: Vec<u8>,
+    /// Queue + compute latency.
+    pub latency: Duration,
+    /// Decode steps executed for this request's batch.
+    pub steps: usize,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (the executable's compiled B).
+    pub max_batch: usize,
+    /// Maximum time the first request of a batch waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// Pulls requests off a channel and groups them into batches.
+pub struct Batcher {
+    rx: Receiver<GenRequest>,
+    pub cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(rx: Receiver<GenRequest>, cfg: BatcherConfig) -> Self {
+        Batcher { rx, cfg }
+    }
+
+    /// Block for the next batch. Returns `None` when the request channel has
+    /// been closed and drained (shutdown).
+    pub fn next_batch(&self) -> Option<Vec<GenRequest>> {
+        // Block indefinitely for the first request…
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        // …then fill the batch until the deadline or capacity.
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(prompt: &[u8]) -> (GenRequest, Receiver<GenResponse>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                prompt: prompt.to_vec(),
+                max_new: 4,
+                temperature: 0.0,
+                resp: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_capacity() {
+        let (tx, rx) = channel();
+        let batcher = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) },
+        );
+        let mut keep = Vec::new();
+        for _ in 0..5 {
+            let (r, rx) = req(b"hi");
+            tx.send(r).unwrap();
+            keep.push(rx);
+        }
+        let b1 = batcher.next_batch().unwrap();
+        assert_eq!(b1.len(), 3);
+        let b2 = batcher.next_batch().unwrap();
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn respects_deadline_with_sparse_traffic() {
+        let (tx, rx) = channel();
+        let batcher = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+        );
+        let (r, _keep) = req(b"solo");
+        tx.send(r).unwrap();
+        let t = Instant::now();
+        let b = batcher.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = channel::<GenRequest>();
+        drop(tx);
+        let batcher = Batcher::new(rx, BatcherConfig::default());
+        assert!(batcher.next_batch().is_none());
+    }
+}

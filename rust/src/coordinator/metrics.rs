@@ -1,0 +1,108 @@
+//! Serving metrics: counters + latency percentiles (no external deps).
+
+use std::time::Duration;
+
+/// Accumulates request/token counters and latency samples.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub batches: u64,
+    pub decode_steps: u64,
+    latencies_us: Vec<u64>,
+    pub wall_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&mut self, n_requests: usize, tokens: usize, steps: usize) {
+        self.requests += n_requests as u64;
+        self.tokens_generated += tokens as u64;
+        self.batches += 1;
+        self.decode_steps += steps as u64;
+    }
+
+    pub fn record_latency(&mut self, d: Duration) {
+        self.latencies_us.push(d.as_micros() as u64);
+    }
+
+    /// Latency percentile in milliseconds (p in [0,100]).
+    pub fn latency_ms(&self, p: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)] as f64 / 1000.0
+    }
+
+    /// Tokens generated per wall-clock second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens_generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean requests per batch (batching efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches > 0 {
+            self.requests as f64 / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} tokens={} tok/s={:.1} batches={} mean_bs={:.2} p50={:.1}ms p95={:.1}ms",
+            self.requests,
+            self.tokens_generated,
+            self.tokens_per_s(),
+            self.batches,
+            self.mean_batch_size(),
+            self.latency_ms(50.0),
+            self.latency_ms(95.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_micros(i * 1000));
+        }
+        assert!(m.latency_ms(50.0) <= m.latency_ms(95.0));
+        assert!((m.latency_ms(100.0) - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.record_batch(3, 24, 8);
+        m.record_batch(5, 40, 8);
+        m.wall_s = 2.0;
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.tokens_generated, 64);
+        assert!((m.tokens_per_s() - 32.0).abs() < 1e-9);
+        assert!((m.mean_batch_size() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_ms(50.0), 0.0);
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+}

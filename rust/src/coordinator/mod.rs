@@ -1,0 +1,24 @@
+//! L3 coordinator — the system side of the reproduction.
+//!
+//! PCDVQ's contribution is the quantization algorithm; the coordinator turns
+//! it into a deployable system (the role vLLM's router plays for serving
+//! papers):
+//!
+//! * [`scheduler`] — layer-parallel quantization: weight matrices fan out to
+//!   worker threads, codebooks are shared read-only, results are merged in
+//!   deterministic order.
+//! * [`batcher`] — dynamic request batching for the serving loop (collect up
+//!   to `max_batch` requests or `max_wait`, whichever first).
+//! * [`server`] — the generation service: batched iterative decoding against
+//!   the AOT forward executable (fp *or* in-graph-dequant quantized), with
+//!   throughput/latency metrics (§4.4).
+
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, GenRequest, GenResponse};
+pub use metrics::Metrics;
+pub use scheduler::{quantize_model_parallel, QuantStats};
+pub use server::{Server, ServingWeights};

@@ -1,0 +1,163 @@
+//! Layer-parallel quantization scheduler.
+//!
+//! Quantizing a model is embarrassingly parallel across weight matrices; the
+//! scheduler fans the quantizable layers out to a worker pool over an
+//! `mpsc` work queue. Codebooks are shared read-only (`Arc` inside the
+//! quantizer), workers own per-layer scratch, and results merge back in
+//! deterministic name order regardless of completion order — quantizing the
+//! same model twice yields bit-identical outputs.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::model::GptModel;
+use crate::quant::Quantizer;
+use crate::tensor::Matrix;
+
+/// Per-run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct QuantStats {
+    /// (layer name, seconds, payload bits) per quantized matrix.
+    pub layers: Vec<(String, f64, u64)>,
+    /// Total wall-clock seconds.
+    pub wall_s: f64,
+    /// Total payload bits.
+    pub payload_bits: u64,
+    /// Achieved bits per weight over the quantizable parameters.
+    pub achieved_bpw: f64,
+}
+
+/// Quantize every quantizable matrix of `model` using `quantizer`, fanning
+/// out across `n_workers` threads. Returns the fake-quant model + stats.
+///
+/// The quantizer must be `Sync` (shared immutably across workers) — all
+/// quantizers in this crate are, their per-call state is stack-local.
+pub fn quantize_model_parallel<Q: Quantizer + Sync + ?Sized>(
+    model: &GptModel,
+    quantizer: &Q,
+    n_workers: usize,
+) -> (GptModel, QuantStats) {
+    let names = model.config.quantizable_names();
+    let t0 = Instant::now();
+
+    // Work queue: indices into `names`; results: (index, matrix, bits, secs).
+    let (result_tx, result_rx) = mpsc::channel::<(usize, Matrix, u64, f64)>();
+    let next = Mutex::new(0usize);
+
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers.max(1) {
+            let result_tx = result_tx.clone();
+            let next = &next;
+            let names = &names;
+            scope.spawn(move || loop {
+                let i = {
+                    let mut guard = next.lock().unwrap();
+                    let i = *guard;
+                    if i >= names.len() {
+                        return;
+                    }
+                    *guard += 1;
+                    i
+                };
+                let w = &model.tensors[&names[i]];
+                let t = Instant::now();
+                let qw = quantizer.quantize(w);
+                let secs = t.elapsed().as_secs_f64();
+                let bits = qw.payload_bits();
+                result_tx.send((i, qw.into_dequantized(), bits, secs)).ok();
+            });
+        }
+        drop(result_tx);
+    });
+
+    let mut out = model.clone();
+    let mut stats = QuantStats::default();
+    let mut results: Vec<Option<(Matrix, u64, f64)>> = (0..names.len()).map(|_| None).collect();
+    while let Ok((i, m, bits, secs)) = result_rx.recv() {
+        results[i] = Some((m, bits, secs));
+    }
+    for (i, r) in results.into_iter().enumerate() {
+        let (m, bits, secs) = r.expect("worker dropped a layer");
+        stats.layers.push((names[i].clone(), secs, bits));
+        stats.payload_bits += bits;
+        out.tensors.insert(names[i].clone(), m);
+    }
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    stats.achieved_bpw =
+        stats.payload_bits as f64 / model.config.quantizable_params() as f64;
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::{Entry, Pct};
+    use crate::quant::sq::Rtn;
+    use crate::rng::Rng;
+
+    fn tiny_model() -> GptModel {
+        // build a synthetic container in-memory via the pct round-trip
+        let dir = std::env::temp_dir().join("pcdvq_sched_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.pct");
+        let mut rng = Rng::new(3);
+        let mut pct = Pct::new();
+        let d = 32u64;
+        pct.insert("embed.tok", Entry::f32(&[256, d], rng.normal_vec(256 * d as usize)));
+        pct.insert("embed.pos", Entry::f32(&[128, d], rng.normal_vec(128 * d as usize)));
+        for i in 0..2 {
+            for nm in ["wq", "wk", "wv", "wo"] {
+                pct.insert(
+                    &format!("layer{i}.attn.{nm}"),
+                    Entry::f32(&[d, d], rng.normal_vec((d * d) as usize)),
+                );
+            }
+            pct.insert(
+                &format!("layer{i}.mlp.w1"),
+                Entry::f32(&[d, d * 4], rng.normal_vec((d * d * 4) as usize)),
+            );
+            pct.insert(
+                &format!("layer{i}.mlp.w2"),
+                Entry::f32(&[d * 4, d], rng.normal_vec((d * d * 4) as usize)),
+            );
+            for nm in ["ln1.g", "ln1.b", "ln2.g", "ln2.b"] {
+                pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![1.0; d as usize]));
+            }
+        }
+        pct.insert("final_ln.g", Entry::f32(&[d], vec![1.0; d as usize]));
+        pct.insert("final_ln.b", Entry::f32(&[d], vec![0.0; d as usize]));
+        pct.insert("head.w", Entry::f32(&[d, 256], rng.normal_vec(d as usize * 256)));
+        for (k, v) in
+            [("vocab", 256u64), ("d_model", d), ("n_layer", 2), ("n_head", 4), ("d_ff", d * 4), ("ctx", 128)]
+        {
+            pct.insert(&format!("meta.{k}"), Entry::u64(&[1], vec![v]));
+        }
+        pct.save(&path).unwrap();
+        GptModel::load(&path).unwrap()
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let model = tiny_model();
+        let rtn = Rtn::new(4);
+        let (serial, _) = model.fake_quantize(&rtn);
+        let (par1, s1) = quantize_model_parallel(&model, &rtn, 1);
+        let (par4, s4) = quantize_model_parallel(&model, &rtn, 4);
+        for name in model.config.quantizable_names() {
+            assert_eq!(serial.tensors[&name].as_slice(), par1.tensors[&name].as_slice());
+            assert_eq!(serial.tensors[&name].as_slice(), par4.tensors[&name].as_slice());
+        }
+        assert_eq!(s1.payload_bits, s4.payload_bits);
+        assert_eq!(s1.layers.len(), model.config.quantizable_names().len());
+    }
+
+    #[test]
+    fn stats_account_bpw() {
+        let model = tiny_model();
+        let (_, stats) = quantize_model_parallel(&model, &Rtn::new(2), 2);
+        // 2-bit indices + per-column scale overhead
+        assert!(stats.achieved_bpw >= 2.0 && stats.achieved_bpw < 3.5, "{}", stats.achieved_bpw);
+        assert!(stats.wall_s >= 0.0);
+    }
+}

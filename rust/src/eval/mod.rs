@@ -1,0 +1,44 @@
+//! Evaluation harness: perplexity (WikiText2/C4 analog) and the five
+//! zero-shot proxy tasks (Arc/HellaSwag/PIQA/WinoGrande analog).
+//!
+//! Everything here drives the AOT `fwd_fp_<model>_b8` executable through the
+//! runtime with *bound* (device-resident) weights, so per-batch work is one
+//! token upload + one execute + a host-side softmax reduction — the same
+//! code path serving uses.
+
+mod ppl;
+mod tasks;
+
+pub use ppl::{evaluate_ppl, fit_temperature, PplResult};
+pub use tasks::{evaluate_tasks, TaskResult, TASK_NAMES};
+
+use crate::model::GptModel;
+use crate::runtime::Input;
+
+/// Build the fixed (weight) inputs of a forward executable in manifest
+/// order, from a (possibly fake-quant) model. The trailing `tokens` input is
+/// the varying one.
+pub fn weight_inputs(
+    model: &GptModel,
+    manifest: &crate::runtime::Manifest,
+) -> anyhow::Result<Vec<Input>> {
+    let mut out = Vec::with_capacity(manifest.len() - 1);
+    for e in &manifest.entries {
+        if e.name == "tokens" {
+            continue;
+        }
+        let t = model.tensor(&e.name)?;
+        let dims = model
+            .dims
+            .get(&e.name)
+            .cloned()
+            .unwrap_or_else(|| vec![t.rows(), t.cols()]);
+        anyhow::ensure!(
+            dims.iter().product::<usize>() == t.len(),
+            "tensor '{}' dims mismatch",
+            e.name
+        );
+        out.push(Input::F32(t.as_slice().to_vec(), dims));
+    }
+    Ok(out)
+}

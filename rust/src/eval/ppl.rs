@@ -1,0 +1,161 @@
+//! Byte-level perplexity over the held-out corpus (WikiText2/C4 analog).
+
+use anyhow::Result;
+
+use crate::model::GptConfig;
+use crate::runtime::{BoundExecutable, Input};
+
+/// Perplexity evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct PplResult {
+    /// Mean negative log-likelihood per byte (nats).
+    pub nll: f64,
+    /// exp(nll) — byte-level perplexity.
+    pub ppl: f64,
+    /// nll / ln 2 — bits per byte.
+    pub bits_per_byte: f64,
+    /// Bytes scored.
+    pub n_tokens: usize,
+}
+
+/// Log-softmax NLL of `target` under a logit row.
+#[inline]
+fn row_nll(logits: &[f32], target: usize) -> f64 {
+    let mut maxv = f32::NEG_INFINITY;
+    for &v in logits {
+        if v > maxv {
+            maxv = v;
+        }
+    }
+    let mut sum = 0.0f64;
+    for &v in logits {
+        sum += ((v - maxv) as f64).exp();
+    }
+    (sum.ln() + maxv as f64) - logits[target] as f64
+}
+
+/// Score non-overlapping windows of the token stream with the bound forward
+/// executable (batch geometry comes from the artifact: `(B, T)`).
+///
+/// `temperature` scales logits before the softmax (the Table-3 "e2e tuning"
+/// analog); pass 1.0 for the plain metric. `max_windows` caps cost.
+pub fn evaluate_ppl(
+    bound: &BoundExecutable,
+    cfg: &GptConfig,
+    tokens: &[u32],
+    batch: usize,
+    max_windows: usize,
+    temperature: f32,
+) -> Result<PplResult> {
+    let t = cfg.ctx;
+    let v = cfg.vocab;
+    let n_windows = ((tokens.len() - 1) / t).min(max_windows);
+    anyhow::ensure!(n_windows >= 1, "token stream too short for one window");
+
+    let mut total_nll = 0.0f64;
+    let mut total_count = 0usize;
+    let mut win = 0usize;
+    while win < n_windows {
+        let bsz = batch.min(n_windows - win);
+        // assemble a full (batch, t) token block; ragged tails repeat the
+        // last window (scored only for the real ones)
+        let mut block = vec![0i32; batch * t];
+        for b in 0..batch {
+            let w = (win + b).min(n_windows - 1);
+            let s = w * t;
+            for j in 0..t {
+                block[b * t + j] = tokens[s + j] as i32;
+            }
+        }
+        let out = bound.run_f32(&[Input::I32(block, vec![batch, t])])?;
+        debug_assert_eq!(out.len(), batch * t * v);
+        for b in 0..bsz {
+            let w = win + b;
+            let s = w * t;
+            for pos in 0..t - 1 {
+                let target = tokens[s + pos + 1] as usize;
+                let row = &out[(b * t + pos) * v..(b * t + pos + 1) * v];
+                if temperature != 1.0 {
+                    let scaled: Vec<f32> = row.iter().map(|x| x / temperature).collect();
+                    total_nll += row_nll(&scaled, target);
+                } else {
+                    total_nll += row_nll(row, target);
+                }
+                total_count += 1;
+            }
+        }
+        win += bsz;
+    }
+    let nll = total_nll / total_count as f64;
+    Ok(PplResult {
+        nll,
+        ppl: nll.exp(),
+        bits_per_byte: nll / std::f64::consts::LN_2,
+        n_tokens: total_count,
+    })
+}
+
+/// Fit a logit temperature on a calibration slice by golden-section search —
+/// the closed-form "end-to-end tuning" analog of Table 3 (adjusting the
+/// output distribution like norm-layer fine-tuning does, without gradients).
+pub fn fit_temperature(
+    bound: &BoundExecutable,
+    cfg: &GptConfig,
+    calib_tokens: &[u32],
+    batch: usize,
+    max_windows: usize,
+) -> Result<f32> {
+    let eval = |temp: f32| -> Result<f64> {
+        Ok(evaluate_ppl(bound, cfg, calib_tokens, batch, max_windows, temp)?.nll)
+    };
+    // golden-section on [0.7, 1.6]
+    let (mut lo, mut hi) = (0.7f32, 1.6f32);
+    let phi = 0.618_034f32;
+    let mut x1 = hi - phi * (hi - lo);
+    let mut x2 = lo + phi * (hi - lo);
+    let mut f1 = eval(x1)?;
+    let mut f2 = eval(x2)?;
+    for _ in 0..8 {
+        if f1 < f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - phi * (hi - lo);
+            f1 = eval(x1)?;
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + phi * (hi - lo);
+            f2 = eval(x2)?;
+        }
+    }
+    Ok(0.5 * (lo + hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_nll_uniform_logits() {
+        let logits = vec![0.0f32; 256];
+        let nll = row_nll(&logits, 7);
+        assert!((nll - (256f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_nll_confident_prediction() {
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 20.0;
+        assert!(row_nll(&logits, 3) < 1e-6);
+        assert!(row_nll(&logits, 4) > 19.0);
+    }
+
+    #[test]
+    fn row_nll_shift_invariant() {
+        let a: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 100.0).collect();
+        assert!((row_nll(&a, 5) - row_nll(&b, 5)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,233 @@
+//! Zero-shot proxy tasks — the Arc-C/Arc-E/HellaSwag/PIQA/WinoGrande analog.
+//!
+//! lm-eval's zero-shot scoring ranks answer choices by (length-normalized)
+//! model log-likelihood; we reproduce that code path on multiple-choice
+//! *continuation* items built deterministically from the held-out corpus:
+//! given a byte prefix, pick the true next-C-bytes among distractors. Five
+//! variants of increasing difficulty play the role of the five QA datasets
+//! (DESIGN.md §2).
+
+use anyhow::Result;
+
+use crate::model::GptConfig;
+use crate::rng::Rng;
+use crate::runtime::{BoundExecutable, Input};
+
+/// The five proxy tasks.
+pub const TASK_NAMES: [&str; 5] = ["cont-32", "cont-16", "cont-8", "nearby-16", "shift-16"];
+
+/// Per-task accuracy plus the average (the paper's "QA Avg").
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub accuracy: Vec<f64>,
+    pub avg: f64,
+    pub n_items: usize,
+}
+
+/// One multiple-choice item: token window per choice, continuation span.
+struct Item {
+    /// (n_choices, ctx) token windows: prefix + candidate continuation.
+    windows: Vec<Vec<i32>>,
+    /// continuation span `[start, end)` in window positions.
+    span: (usize, usize),
+}
+
+const N_CHOICES: usize = 4;
+
+fn build_items(
+    task: &str,
+    tokens: &[u32],
+    ctx: usize,
+    n_items: usize,
+    seed: u64,
+) -> Vec<Item> {
+    let mut rng = Rng::new(seed ^ 0x7A5C);
+    let cont_len = match task {
+        "cont-32" => 32,
+        "cont-16" | "nearby-16" | "shift-16" => 16,
+        "cont-8" => 8,
+        other => panic!("unknown task {other}"),
+    };
+    let prefix = ctx - cont_len;
+    let max_start = tokens.len() - ctx - 64;
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        let s = rng.below(max_start);
+        let window: Vec<i32> = tokens[s..s + ctx].iter().map(|&t| t as i32).collect();
+        let mut windows = vec![window.clone()];
+        for _d in 0..N_CHOICES - 1 {
+            let mut w = window.clone();
+            match task {
+                "shift-16" => {
+                    // distractor: the true continuation shifted 1-4 bytes
+                    let shift = 1 + rng.below(4);
+                    for j in 0..cont_len {
+                        w[prefix + j] = tokens[s + prefix + shift + j] as i32;
+                    }
+                }
+                "nearby-16" => {
+                    // distractor continuation from within ±2 KiB
+                    let lo = s.saturating_sub(2048);
+                    let hi = (s + 2048).min(max_start);
+                    let d = lo + rng.below(hi - lo);
+                    for j in 0..cont_len {
+                        w[prefix + j] = tokens[d + prefix + j] as i32;
+                    }
+                }
+                _ => {
+                    // distractor continuation from a random position
+                    let d = rng.below(max_start);
+                    for j in 0..cont_len {
+                        w[prefix + j] = tokens[d + prefix + j] as i32;
+                    }
+                }
+            }
+            windows.push(w);
+        }
+        items.push(Item { windows, span: (prefix, ctx) });
+    }
+    items
+}
+
+/// Mean per-byte log-likelihood of a window's continuation span, given the
+/// logits block of the whole window.
+fn span_logprob(logits: &[f32], window: &[i32], span: (usize, usize), vocab: usize) -> f64 {
+    let (lo, hi) = span;
+    let mut total = 0.0f64;
+    for pos in lo..hi {
+        // position pos is predicted by logits at pos-1
+        let row = &logits[(pos - 1) * vocab..pos * vocab];
+        let target = window[pos] as usize;
+        let mut maxv = f32::NEG_INFINITY;
+        for &v in row {
+            if v > maxv {
+                maxv = v;
+            }
+        }
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - maxv) as f64).exp();
+        }
+        total += row[target] as f64 - (sum.ln() + maxv as f64);
+    }
+    total / (hi - lo) as f64
+}
+
+/// Evaluate the five proxy tasks; returns per-task accuracy + average.
+pub fn evaluate_tasks(
+    bound: &BoundExecutable,
+    cfg: &GptConfig,
+    eval_tokens: &[u32],
+    batch: usize,
+    n_items: usize,
+    seed: u64,
+) -> Result<TaskResult> {
+    let v = cfg.vocab;
+    let t = cfg.ctx;
+    let mut accs = Vec::with_capacity(TASK_NAMES.len());
+    for task in TASK_NAMES {
+        let items = build_items(task, eval_tokens, t, n_items, seed);
+        // flatten all windows, batch them through the executable
+        let all_windows: Vec<&Vec<i32>> =
+            items.iter().flat_map(|it| it.windows.iter()).collect();
+        let mut scores = vec![0.0f64; all_windows.len()];
+        let mut idx = 0usize;
+        while idx < all_windows.len() {
+            let bsz = batch.min(all_windows.len() - idx);
+            let mut block = vec![0i32; batch * t];
+            for b in 0..bsz {
+                block[b * t..(b + 1) * t].copy_from_slice(all_windows[idx + b]);
+            }
+            let out = bound.run_f32(&[Input::I32(block, vec![batch, t])])?;
+            for b in 0..bsz {
+                let logits = &out[b * t * v..(b + 1) * t * v];
+                let item = &items[(idx + b) / N_CHOICES];
+                scores[idx + b] =
+                    span_logprob(logits, all_windows[idx + b], item.span, v);
+            }
+            idx += bsz;
+        }
+        // accuracy: choice 0 (the true continuation) must score highest
+        let mut correct = 0usize;
+        for (i, _item) in items.iter().enumerate() {
+            let s = &scores[i * N_CHOICES..(i + 1) * N_CHOICES];
+            let best = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if best == 0 {
+                correct += 1;
+            }
+        }
+        accs.push(correct as f64 / items.len() as f64);
+    }
+    let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+    Ok(TaskResult { accuracy: accs, avg, n_items })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_items_shapes() {
+        let tokens: Vec<u32> = (0..20_000u32).map(|i| i % 256).collect();
+        for task in TASK_NAMES {
+            let items = build_items(task, &tokens, 128, 10, 7);
+            assert_eq!(items.len(), 10);
+            for it in &items {
+                assert_eq!(it.windows.len(), N_CHOICES);
+                for w in &it.windows {
+                    assert_eq!(w.len(), 128);
+                }
+                let (lo, hi) = it.span;
+                assert!(lo > 0 && hi == 128);
+            }
+        }
+    }
+
+    #[test]
+    fn distractors_differ_from_truth() {
+        let tokens: Vec<u32> = (0..50_000u32).map(|i| (i * 17 + 3) % 256).collect();
+        let items = build_items("cont-16", &tokens, 128, 20, 3);
+        let mut diffs = 0;
+        for it in &items {
+            let (lo, hi) = it.span;
+            for c in 1..N_CHOICES {
+                if it.windows[c][lo..hi] != it.windows[0][lo..hi] {
+                    diffs += 1;
+                }
+            }
+        }
+        assert!(diffs > 50, "only {diffs} distractors differ");
+    }
+
+    #[test]
+    fn span_logprob_prefers_predicted_bytes() {
+        // fabricate logits that put all mass on byte 42 everywhere
+        let t = 16usize;
+        let v = 64usize;
+        let mut logits = vec![0.0f32; t * v];
+        for pos in 0..t {
+            logits[pos * v + 42] = 15.0;
+        }
+        let mut w_good = vec![42i32; t];
+        let w_bad = vec![7i32; t];
+        w_good[0] = 0; // first position unscored anyway
+        let good = span_logprob(&logits, &w_good, (8, 16), v);
+        let bad = span_logprob(&logits, &w_bad, (8, 16), v);
+        assert!(good > bad + 10.0);
+    }
+
+    #[test]
+    fn deterministic_items() {
+        let tokens: Vec<u32> = (0..30_000u32).map(|i| i % 251).collect();
+        let a = build_items("cont-8", &tokens, 128, 5, 9);
+        let b = build_items("cont-8", &tokens, 128, 5, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.windows, y.windows);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Fast Walsh–Hadamard transform and the randomized Hadamard transform (RHT).
+//!
+//! PCDVQ's first stage (§3.2.1 *Standard Gaussian Regularization*) multiplies
+//! each weight column by a randomized Hadamard matrix `S = H·diag(signs)/√p`,
+//! which makes the column approximately `N(0, ‖x‖²/p)`; dividing by the
+//! per-column scale `s = ‖x‖/√p` then yields ~`N(0,1)` entries. The same
+//! transform (it is orthogonal, so its inverse is its transpose) is re-applied
+//! at dequantization time; `O(p log p)` per column, exactly as the paper's
+//! §A.4 limitation analysis assumes.
+//!
+//! The sign diagonal is regenerated from a stored 64-bit seed rather than
+//! materialized, so the per-layer metadata is 2 u64 + one f32 per column.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// In-place fast Walsh–Hadamard transform of a power-of-two-length slice,
+/// using the *orthonormal* convention (`H/√n`), so `fwht(fwht(x)) == x`.
+pub fn fwht_normalized(x: &mut [f32]) {
+    fwht_raw(x);
+    let scale = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// In-place unnormalized FWHT (`H` with entries ±1). `fwht_raw(fwht_raw(x))
+/// == n·x`.
+pub fn fwht_raw(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        for block in (0..n).step_by(h * 2) {
+            for i in block..block + h {
+                let (a, b) = (x[i], x[i + h]);
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Randomized Hadamard transform acting column-wise on a weight matrix.
+///
+/// Stores only the sign seed; `forward` computes `H·diag(signs)·x/√p` per
+/// column, `inverse` computes `diag(signs)·H·y/√p` (orthogonality).
+#[derive(Clone, Debug)]
+pub struct RandomizedHadamard {
+    /// Number of rows the transform acts on (must be a power of two).
+    pub dim: usize,
+    /// Seed from which the Rademacher diagonal is regenerated.
+    pub seed: u64,
+    signs: Vec<f32>,
+}
+
+impl RandomizedHadamard {
+    /// Create the transform for `dim` rows (power of two) from a seed.
+    pub fn new(dim: usize, seed: u64) -> Self {
+        assert!(dim.is_power_of_two(), "RHT dim must be a power of two, got {dim}");
+        let signs = Rng::new(seed).signs(dim);
+        RandomizedHadamard { dim, seed, signs }
+    }
+
+    /// The Rademacher diagonal.
+    pub fn signs(&self) -> &[f32] {
+        &self.signs
+    }
+
+    /// Apply `(H/√p)·diag(signs)` to a single column vector in place.
+    pub fn forward_col(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.dim);
+        for (v, s) in x.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        fwht_normalized(x);
+    }
+
+    /// Inverse of [`Self::forward_col`]: `diag(signs)·(H/√p)`.
+    pub fn inverse_col(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.dim);
+        fwht_normalized(x);
+        for (v, s) in x.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+    }
+
+    /// Apply the forward transform to every column of `w` (rows = `dim`).
+    pub fn forward(&self, w: &Matrix) -> Matrix {
+        self.map_cols(w, |col| self.forward_col(col))
+    }
+
+    /// Apply the inverse transform to every column of `w`.
+    pub fn inverse(&self, w: &Matrix) -> Matrix {
+        self.map_cols(w, |col| self.inverse_col(col))
+    }
+
+    fn map_cols<F: Fn(&mut [f32])>(&self, w: &Matrix, f: F) -> Matrix {
+        assert_eq!(
+            w.rows(),
+            self.dim,
+            "RHT dim {} does not match matrix rows {}",
+            self.dim,
+            w.rows()
+        );
+        // Work in the transposed layout so each column is contiguous, then
+        // transpose back. (Profiled faster than strided access at p>=128.)
+        let mut t = w.transposed();
+        for j in 0..t.rows() {
+            f(t.row_mut(j));
+        }
+        t.transposed()
+    }
+}
+
+/// Per-column standard-Gaussian regularization (paper §3.2.1).
+///
+/// Returns the transformed matrix whose entries are ~N(0,1) together with the
+/// per-column scales `s_j = ‖x_j‖/√p` needed to undo it.
+pub fn regularize(w: &Matrix, rht: &RandomizedHadamard) -> (Matrix, Vec<f32>) {
+    let mut h = rht.forward(w);
+    let p = w.rows() as f32;
+    let mut scales = Vec::with_capacity(w.cols());
+    for j in 0..w.cols() {
+        let col = w.col(j);
+        let norm: f32 = col.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let s = if norm > 0.0 { norm / p.sqrt() } else { 1.0 };
+        scales.push(s);
+        let inv = 1.0 / s;
+        for i in 0..h.rows() {
+            h.set(i, j, h.get(i, j) * inv);
+        }
+    }
+    (h, scales)
+}
+
+/// Undo [`regularize`]: rescale columns then apply the inverse RHT.
+pub fn deregularize(h: &Matrix, scales: &[f32], rht: &RandomizedHadamard) -> Matrix {
+    assert_eq!(h.cols(), scales.len());
+    let mut scaled = h.clone();
+    for j in 0..h.cols() {
+        let s = scales[j];
+        for i in 0..h.rows() {
+            scaled.set(i, j, scaled.get(i, j) * s);
+        }
+    }
+    rht.inverse(&scaled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fwht_normalized_is_involution() {
+        let mut rng = Rng::new(3);
+        let orig = rng.normal_vec(64);
+        let mut x = orig.clone();
+        fwht_normalized(&mut x);
+        fwht_normalized(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fwht_matches_naive_h4() {
+        // H_4 rows: ++++, +-+-, ++--, +--+
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        fwht_raw(&mut x);
+        assert_eq!(x, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn fwht_preserves_norm() {
+        let mut rng = Rng::new(5);
+        let mut x = rng.normal_vec(128);
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        fwht_normalized(&mut x);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fwht_rejects_non_power_of_two() {
+        let mut x = vec![0.0; 12];
+        fwht_raw(&mut x);
+    }
+
+    #[test]
+    fn rht_forward_inverse_round_trip() {
+        let mut rng = Rng::new(17);
+        let w = Matrix::from_vec(rng.normal_vec(64 * 5), 64, 5);
+        let rht = RandomizedHadamard::new(64, 99);
+        let back = rht.inverse(&rht.forward(&w));
+        assert!(back.mse(&w) < 1e-10);
+    }
+
+    #[test]
+    fn rht_deterministic_from_seed() {
+        let a = RandomizedHadamard::new(32, 7);
+        let b = RandomizedHadamard::new(32, 7);
+        assert_eq!(a.signs(), b.signs());
+    }
+
+    #[test]
+    fn regularize_round_trip_and_gaussianization() {
+        let mut rng = Rng::new(23);
+        // heavy-tailed input: a few outliers
+        let mut data = rng.normal_vec(256 * 8);
+        data[3] = 40.0;
+        data[700] = -25.0;
+        let w = Matrix::from_vec(data, 256, 8);
+        let rht = RandomizedHadamard::new(256, 1);
+        let (h, scales) = regularize(&w, &rht);
+        // round trip
+        let back = deregularize(&h, &scales, &rht);
+        assert!(back.mse(&w) < 1e-8, "mse={}", back.mse(&w));
+        // each column should now have ~unit variance
+        for j in 0..h.cols() {
+            let col = h.col(j);
+            let var: f32 = col.iter().map(|x| x * x).sum::<f32>() / col.len() as f32;
+            assert!((var - 1.0).abs() < 0.05, "col {j} var {var}");
+        }
+        // outlier suppressed: max |entry| far below 40/s
+        let maxabs = h.as_slice().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(maxabs < 8.0, "maxabs={maxabs}");
+    }
+}

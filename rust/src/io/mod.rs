@@ -1,0 +1,24 @@
+//! PCT1 — the repository's named-tensor container format.
+//!
+//! `serde` is not in the offline crate set, so artifacts that cross the
+//! python↔rust boundary (trained weights, corpora, codebooks, quantized
+//! models) use a deliberately boring little-endian binary format both sides
+//! implement in ~100 lines:
+//!
+//! ```text
+//! magic  "PCT1"                      4 bytes
+//! u32    entry count
+//! per entry:
+//!   u16  name length, then UTF-8 name bytes
+//!   u8   dtype   (0 = f32, 1 = u32, 2 = u64, 3 = i32)
+//!   u8   ndim
+//!   u64  dims[ndim]
+//!   raw  data (little-endian, row-major)
+//! ```
+//!
+//! The python writer lives in `python/compile/pct.py`; the round-trip is
+//! integration-tested from both sides.
+
+mod pct;
+
+pub use pct::{Entry, Pct, PctData};

@@ -1,0 +1,366 @@
+//! PCT1 reader/writer (see module docs in `io`).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Payload of one entry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PctData {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+    I32(Vec<i32>),
+}
+
+impl PctData {
+    fn dtype_tag(&self) -> u8 {
+        match self {
+            PctData::F32(_) => 0,
+            PctData::U32(_) => 1,
+            PctData::U64(_) => 2,
+            PctData::I32(_) => 3,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PctData::F32(v) => v.len(),
+            PctData::U32(v) => v.len(),
+            PctData::U64(v) => v.len(),
+            PctData::I32(v) => v.len(),
+        }
+    }
+}
+
+/// One named tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub dims: Vec<u64>,
+    pub data: PctData,
+}
+
+impl Entry {
+    pub fn f32(dims: &[u64], data: Vec<f32>) -> Self {
+        Entry { dims: dims.to_vec(), data: PctData::F32(data) }
+    }
+
+    pub fn u32(dims: &[u64], data: Vec<u32>) -> Self {
+        Entry { dims: dims.to_vec(), data: PctData::U32(data) }
+    }
+
+    pub fn u64(dims: &[u64], data: Vec<u64>) -> Self {
+        Entry { dims: dims.to_vec(), data: PctData::U64(data) }
+    }
+
+    /// Borrow as f32, failing on dtype mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            PctData::F32(v) => Ok(v),
+            other => bail!("expected f32 entry, found tag {}", other.dtype_tag()),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            PctData::U32(v) => Ok(v),
+            other => bail!("expected u32 entry, found tag {}", other.dtype_tag()),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<&[u64]> {
+        match &self.data {
+            PctData::U64(v) => Ok(v),
+            other => bail!("expected u64 entry, found tag {}", other.dtype_tag()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            PctData::I32(v) => Ok(v),
+            other => bail!("expected i32 entry, found tag {}", other.dtype_tag()),
+        }
+    }
+
+    /// Scalar helpers for metadata entries.
+    pub fn scalar_u64(&self) -> Result<u64> {
+        let v = self.as_u64()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// An ordered map of named tensors — the in-memory form of a `.pct` file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Pct {
+    entries: BTreeMap<String, Entry>,
+}
+
+const MAGIC: &[u8; 4] = b"PCT1";
+
+impl Pct {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, entry: Entry) {
+        let expected: u64 = entry.dims.iter().product();
+        assert_eq!(
+            expected as usize,
+            entry.data.len(),
+            "entry '{name}': dims {:?} disagree with data length {}",
+            entry.dims,
+            entry.data.len()
+        );
+        self.entries.insert(name.to_string(), entry);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("missing entry '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, e) in &self.entries {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(e.data.dtype_tag());
+            out.push(e.dims.len() as u8);
+            for &d in &e.dims {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            match &e.data {
+                PctData::F32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                PctData::U32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                PctData::U64(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                PctData::I32(v) => {
+                    for x in v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut r = Cursor { buf, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("bad magic: not a PCT1 file");
+        }
+        let count = r.u32()?;
+        let mut pct = Pct::new();
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .context("entry name is not UTF-8")?
+                .to_string();
+            let dtype = r.u8()?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u64()?);
+            }
+            let n: u64 = dims.iter().product();
+            let n = n as usize;
+            let data = match dtype {
+                0 => {
+                    let raw = r.take(n * 4)?;
+                    PctData::F32(
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                1 => {
+                    let raw = r.take(n * 4)?;
+                    PctData::U32(
+                        raw.chunks_exact(4)
+                            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                2 => {
+                    let raw = r.take(n * 8)?;
+                    PctData::U64(
+                        raw.chunks_exact(8)
+                            .map(|c| {
+                                u64::from_le_bytes([
+                                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                                ])
+                            })
+                            .collect(),
+                    )
+                }
+                3 => {
+                    let raw = r.take(n * 4)?;
+                    PctData::I32(
+                        raw.chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+                t => bail!("unknown dtype tag {t}"),
+            };
+            pct.insert(&name, Entry { dims, data });
+        }
+        Ok(pct)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let bytes = self.to_bytes();
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated PCT1 file at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_dtypes() {
+        let mut p = Pct::new();
+        p.insert("w", Entry::f32(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 9.9]));
+        p.insert("idx", Entry::u32(&[4], vec![0, 1, u32::MAX, 7]));
+        p.insert("seed", Entry::u64(&[1], vec![0xDEADBEEF]));
+        p.insert(
+            "neg",
+            Entry { dims: vec![2], data: PctData::I32(vec![-5, 12]) },
+        );
+        let q = Pct::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        let p = Pct::new();
+        assert!(p.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Pct::from_bytes(b"NOTAPCT123").is_err());
+        assert!(Pct::from_bytes(b"PC").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut p = Pct::new();
+        p.insert("w", Entry::f32(&[8], vec![0.5; 8]));
+        let bytes = p.to_bytes();
+        for cut in [bytes.len() - 1, bytes.len() / 2, 6] {
+            assert!(Pct::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("pcdvq_pct_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pct");
+        let mut p = Pct::new();
+        p.insert("x", Entry::f32(&[3], vec![1.0, 2.0, 3.0]));
+        p.save(&path).unwrap();
+        assert_eq!(Pct::load(&path).unwrap(), p);
+    }
+
+    #[test]
+    #[should_panic]
+    fn insert_dims_mismatch_panics() {
+        let mut p = Pct::new();
+        p.insert("bad", Entry::f32(&[2, 2], vec![1.0; 5]));
+    }
+}

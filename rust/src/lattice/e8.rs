@@ -1,0 +1,262 @@
+//! E8 lattice point enumeration.
+//!
+//! `E8 = D8 ∪ (D8 + ½)`: all integer 8-vectors with even coordinate sum,
+//! together with all half-odd-integer 8-vectors (every coordinate in `Z+½`)
+//! with even coordinate sum. We enumerate every lattice point with
+//! `‖x‖² ≤ max_norm2` by depth-first search with norm pruning, then collapse
+//! collinear points into *directions* (unit vectors), keeping the
+//! smallest-shell representative first.
+//!
+//! Shell sizes follow the E8 theta series
+//! `1 + 240q + 2160q² + 6720q³ + 17520q⁴ + 30240q⁵ + 60480q⁶ + …`, which the
+//! unit tests assert — a strong correctness check on the enumeration.
+
+use crate::tensor::Matrix;
+
+/// Dimension of the E8 lattice.
+pub const DIM: usize = 8;
+
+/// All E8 points up to a squared-norm bound, grouped by shell.
+#[derive(Clone, Debug)]
+pub struct E8Points {
+    /// Points as rows, doubled coordinates (so they are integers): a point
+    /// `x` is stored as `2x ∈ Z^8`.
+    pub doubled: Vec<[i32; DIM]>,
+    /// `‖x‖²·4 = ‖2x‖²` for each point (integer).
+    pub norm2x4: Vec<i64>,
+}
+
+impl E8Points {
+    /// Enumerate all nonzero E8 points with `‖x‖² ≤ max_norm2`.
+    pub fn enumerate(max_norm2: i64) -> Self {
+        let cap4 = max_norm2 * 4; // bound on ‖2x‖²
+        let mut doubled = Vec::new();
+        let mut norm2x4 = Vec::new();
+
+        // Integer points: 2x even in every coordinate, Σx even.
+        // Half-integer points: 2x odd in every coordinate, Σx even
+        // (Σ(2x) ≡ 0 mod 4 since Σx ∈ 2Z).
+        for &half in &[false, true] {
+            let mut coords = [0i32; DIM];
+            Self::dfs(0, 0, 0, half, cap4, &mut coords, &mut doubled, &mut norm2x4);
+        }
+
+        // Sort by shell (norm), then lexicographically — deterministic order.
+        let mut idx: Vec<usize> = (0..doubled.len()).collect();
+        idx.sort_by_key(|&i| (norm2x4[i], doubled[i]));
+        let doubled = idx.iter().map(|&i| doubled[i]).collect();
+        let norm2x4 = idx.iter().map(|&i| norm2x4[i]).collect();
+        E8Points { doubled, norm2x4 }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        pos: usize,
+        sum2x: i32,
+        norm: i64,
+        half: bool,
+        cap4: i64,
+        coords: &mut [i32; DIM],
+        out: &mut Vec<[i32; DIM]>,
+        norms: &mut Vec<i64>,
+    ) {
+        if pos == DIM {
+            if norm == 0 {
+                return; // skip the origin: it has no direction
+            }
+            // Membership: Σx ∈ 2Z ⇔ Σ(2x) ≡ 0 (mod 4).
+            if sum2x.rem_euclid(4) == 0 {
+                out.push(*coords);
+                norms.push(norm);
+            }
+            return;
+        }
+        // Doubled coordinate values: even (…,-2,0,2,…) or odd (…,-3,-1,1,3,…).
+        let max_c = ((cap4 - norm) as f64).sqrt().floor() as i32;
+        let mut c = if half {
+            // largest odd ≤ max_c
+            if max_c % 2 == 0 {
+                max_c - 1
+            } else {
+                max_c
+            }
+        } else {
+            // largest even ≤ max_c
+            max_c - max_c % 2
+        };
+        while c >= -max_c {
+            let n2 = norm + (c as i64) * (c as i64);
+            if n2 <= cap4 {
+                coords[pos] = c;
+                Self::dfs(pos + 1, sum2x + c, n2, half, cap4, coords, out, norms);
+            }
+            c -= 2;
+        }
+    }
+
+    /// Number of points in the shell of squared norm `norm2`.
+    pub fn shell_count(&self, norm2: i64) -> usize {
+        self.norm2x4.iter().filter(|&&n| n == norm2 * 4).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.doubled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.doubled.is_empty()
+    }
+
+    /// Collapse collinear points into unit-vector directions.
+    ///
+    /// Points on outer shells that are positive multiples of an inner-shell
+    /// point (e.g. `(2,2,0,…)` vs `(1,1,0,…)`) contribute no new direction
+    /// and are dropped; the enumeration order (shells inside-out) guarantees
+    /// the canonical representative is the innermost one.
+    pub fn directions(&self) -> Matrix {
+        use std::collections::HashSet;
+        let mut seen: HashSet<[i64; DIM]> = HashSet::with_capacity(self.len());
+        let mut rows: Vec<f32> = Vec::new();
+        let mut count = 0usize;
+        for p in &self.doubled {
+            // Canonical integer key: divide by gcd of the doubled coords.
+            let mut g = 0i64;
+            for &c in p.iter() {
+                g = gcd(g, c.unsigned_abs() as i64);
+            }
+            debug_assert!(g > 0);
+            let mut key = [0i64; DIM];
+            for (k, &c) in key.iter_mut().zip(p.iter()) {
+                *k = c as i64 / g;
+            }
+            if !seen.insert(key) {
+                continue;
+            }
+            let norm = (p.iter().map(|&c| (c as f64) * (c as f64)).sum::<f64>()).sqrt();
+            for &c in p.iter() {
+                rows.push((c as f64 / norm) as f32);
+            }
+            count += 1;
+        }
+        Matrix::from_vec(rows, count, DIM)
+    }
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Unit-vector directions of all E8 points with `‖x‖² ≤ max_norm2`
+/// (deduplicated across shells), as rows of a matrix.
+pub fn e8_directions(max_norm2: i64) -> Matrix {
+    E8Points::enumerate(max_norm2).directions()
+}
+
+/// Points of a single shell (squared norm exactly `norm2`), as unit rows.
+pub fn e8_shell(norm2: i64) -> Matrix {
+    let pts = E8Points::enumerate(norm2);
+    let mut rows = Vec::new();
+    let mut count = 0;
+    for (p, &n) in pts.doubled.iter().zip(&pts.norm2x4) {
+        if n != norm2 * 4 {
+            continue;
+        }
+        for &c in p.iter() {
+            rows.push(c as f32);
+        }
+        count += 1;
+    }
+    // normalize: doubled coords / ‖2x‖ give the unit direction
+    let mut m = Matrix::from_vec(rows, count, DIM);
+    for i in 0..m.rows() {
+        let r = m.row_mut(i);
+        let n: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+        for x in r.iter_mut() {
+            *x /= n;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theta_series_shell_counts() {
+        let pts = E8Points::enumerate(6);
+        assert_eq!(pts.shell_count(2), 240, "E8 kissing number");
+        assert_eq!(pts.shell_count(4), 2160);
+        assert_eq!(pts.shell_count(6), 6720);
+        assert_eq!(pts.len(), 240 + 2160 + 6720);
+    }
+
+    #[test]
+    fn no_odd_norm_shells() {
+        // E8 is an even lattice: ‖x‖² is always an even integer.
+        let pts = E8Points::enumerate(4);
+        assert_eq!(pts.shell_count(1), 0);
+        assert_eq!(pts.shell_count(3), 0);
+    }
+
+    #[test]
+    fn roots_have_expected_shapes() {
+        // The 240 roots: 112 of type (±1,±1,0^6) and 128 of type (±½)^8.
+        let pts = E8Points::enumerate(2);
+        let mut int_type = 0;
+        let mut half_type = 0;
+        for p in &pts.doubled {
+            if p.iter().all(|&c| c % 2 == 0) {
+                int_type += 1;
+            } else {
+                half_type += 1;
+            }
+        }
+        assert_eq!(int_type, 112);
+        assert_eq!(half_type, 128);
+    }
+
+    #[test]
+    fn directions_are_unit_and_deduped() {
+        let dirs = e8_directions(8);
+        // All rows unit norm.
+        for i in 0..dirs.rows().min(500) {
+            let n: f32 = dirs.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+        // Fewer directions than points (collinear duplicates collapsed):
+        let pts = E8Points::enumerate(8);
+        assert!(dirs.rows() < pts.len());
+        // but still plenty.
+        assert!(dirs.rows() > 20_000, "got {}", dirs.rows());
+        // No duplicate rows: check pairwise on a sample via exact equality.
+        for i in 0..200 {
+            for j in (i + 1)..200 {
+                assert_ne!(dirs.row(i), dirs.row(j), "rows {i} and {j} equal");
+            }
+        }
+    }
+
+    #[test]
+    fn enough_candidates_for_a16() {
+        // a=16 needs 2^16 = 65536 candidate directions; shells ≤ 12 suffice.
+        // (Enumeration of ~117k points — keep as an ignored-by-default slow
+        // test? It runs in ~1s release; acceptable in debug too.)
+        let dirs = e8_directions(12);
+        assert!(dirs.rows() >= 65_536, "got {}", dirs.rows());
+    }
+
+    #[test]
+    fn shell_helper_matches_enumeration() {
+        let s = e8_shell(2);
+        assert_eq!(s.rows(), 240);
+        for i in 0..s.rows() {
+            let n: f32 = s.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Lattice substrates for codebook construction.
+//!
+//! The direction codebook of DACC (paper §3.2.3) samples from the directions
+//! of the E8 lattice — the densest sphere packing in 8 dimensions
+//! (Viazovska 2017) — because its points are "highly uniform and symmetric in
+//! space".
+
+pub mod e8;
+
+pub use e8::{e8_directions, e8_shell, E8Points};

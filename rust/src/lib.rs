@@ -1,0 +1,45 @@
+//! # PCDVQ — Polar Coordinate Decoupled Vector Quantization
+//!
+//! Full-system reproduction of *“PCDVQ: Enhancing Vector Quantization for
+//! Large Language Models via Polar Coordinate Decoupling”* (2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the PCDVQ quantizer and every
+//!   baseline it is compared against, the DACC codebook constructors, a
+//!   layer-parallel quantization scheduler, a batched serving loop, and the
+//!   evaluation harness (perplexity + zero-shot proxy tasks).
+//! * **L2 (python/compile/model.py)** — the tinygpt forward pass in JAX,
+//!   AOT-lowered once to HLO text and executed from Rust via PJRT
+//!   ([`runtime`]).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (direction assignment, fused dequant-matmul, FWHT), lowered
+//!   into the same HLO artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + the trained tinygpt weights, and everything after
+//! that is Rust.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every paper table/figure to a module and regenerator binary.
+
+pub mod bench;
+pub mod cli;
+pub mod codebook;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod hadamard;
+pub mod io;
+pub mod lattice;
+pub mod model;
+pub mod paper;
+pub mod proptest;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+
+/// Vector dimension used throughout the paper (and this reproduction): the
+/// weight matrix is reshaped into `k = 8`-dimensional vectors before VQ.
+pub const VEC_DIM: usize = 8;

@@ -1,0 +1,92 @@
+//! Model hyper-parameters — mirrors `python/compile/model.py::GptConfig`.
+
+use anyhow::{bail, Result};
+
+/// tinygpt hyper-parameters, read back from the `meta.*` entries of a weight
+/// container (so Rust never hard-codes the zoo).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GptConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub ctx: usize,
+}
+
+impl GptConfig {
+    /// Quantizable matrix names, in the fixed order shared with python
+    /// (`model.quantizable_names`).
+    pub fn quantizable_names(&self) -> Vec<String> {
+        let mut names = Vec::with_capacity(self.n_layer * 6 + 1);
+        for i in 0..self.n_layer {
+            for suffix in ["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.w1", "mlp.w2"] {
+                names.push(format!("layer{i}.{suffix}"));
+            }
+        }
+        names.push("head.w".to_string());
+        names
+    }
+
+    /// (rows, cols) of a quantizable matrix; rows = input dim = RHT axis.
+    pub fn weight_shape(&self, name: &str) -> Result<(usize, usize)> {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        if name.ends_with("mlp.w1") {
+            Ok((d, f))
+        } else if name.ends_with("mlp.w2") {
+            Ok((f, d))
+        } else if name == "head.w" {
+            Ok((d, v))
+        } else if name.contains("attn.") {
+            Ok((d, d))
+        } else {
+            bail!("'{name}' is not a quantizable matrix")
+        }
+    }
+
+    /// Total quantizable parameter count.
+    pub fn quantizable_params(&self) -> usize {
+        self.quantizable_names()
+            .iter()
+            .map(|n| {
+                let (r, c) = self.weight_shape(n).unwrap();
+                r * c
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GptConfig {
+        GptConfig { vocab: 256, d_model: 128, n_layer: 2, n_head: 4, d_ff: 512, ctx: 128 }
+    }
+
+    #[test]
+    fn quantizable_names_order_matches_python() {
+        let names = cfg().quantizable_names();
+        assert_eq!(names.len(), 2 * 6 + 1);
+        assert_eq!(names[0], "layer0.attn.wq");
+        assert_eq!(names[5], "layer0.mlp.w2");
+        assert_eq!(names[6], "layer1.attn.wq");
+        assert_eq!(names.last().unwrap(), "head.w");
+    }
+
+    #[test]
+    fn weight_shapes() {
+        let c = cfg();
+        assert_eq!(c.weight_shape("layer0.attn.wq").unwrap(), (128, 128));
+        assert_eq!(c.weight_shape("layer1.mlp.w1").unwrap(), (128, 512));
+        assert_eq!(c.weight_shape("layer1.mlp.w2").unwrap(), (512, 128));
+        assert_eq!(c.weight_shape("head.w").unwrap(), (128, 256));
+        assert!(c.weight_shape("embed.tok").is_err());
+    }
+
+    #[test]
+    fn quantizable_param_count() {
+        // per layer: 4*128*128 + 2*128*512 = 196608; head: 128*256
+        assert_eq!(cfg().quantizable_params(), 2 * 196_608 + 32_768);
+    }
+}

@@ -1,0 +1,272 @@
+//! Weight container + quantized-model representation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::GptConfig;
+use crate::io::Pct;
+use crate::quant::pcdvq::{Pcdvq, PcdvqWeight};
+use crate::quant::Quantizer;
+use crate::tensor::Matrix;
+
+/// A loaded tinygpt: config + all named parameter tensors (f32).
+#[derive(Clone)]
+pub struct GptModel {
+    pub config: GptConfig,
+    /// All parameters, keyed by python-side names. 2-D tensors are stored
+    /// with their natural (rows, cols); 1-D tensors as (len, 1).
+    pub tensors: BTreeMap<String, Matrix>,
+    /// Original dims per tensor (manifest feeding needs exact ranks).
+    pub dims: BTreeMap<String, Vec<usize>>,
+    pub name: String,
+}
+
+impl GptModel {
+    /// Load a `.pct` weight container written by `train.py::save_model`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let pct = Pct::load(path)?;
+        let meta = |key: &str| -> Result<usize> {
+            Ok(pct.get(&format!("meta.{key}"))?.scalar_u64()? as usize)
+        };
+        let config = GptConfig {
+            vocab: meta("vocab")?,
+            d_model: meta("d_model")?,
+            n_layer: meta("n_layer")?,
+            n_head: meta("n_head")?,
+            d_ff: meta("d_ff")?,
+            ctx: meta("ctx")?,
+        };
+        let mut tensors = BTreeMap::new();
+        let mut dims = BTreeMap::new();
+        for name in pct.names().map(str::to_string).collect::<Vec<_>>() {
+            if name.starts_with("meta.") {
+                continue;
+            }
+            let e = pct.get(&name)?;
+            let data = e.as_f32()?.to_vec();
+            let (rows, cols) = match e.dims.len() {
+                1 => (e.dims[0] as usize, 1),
+                2 => (e.dims[0] as usize, e.dims[1] as usize),
+                n => anyhow::bail!("tensor '{name}' has unsupported rank {n}"),
+            };
+            dims.insert(name.clone(), e.dims.iter().map(|&d| d as usize).collect());
+            tensors.insert(name, Matrix::from_vec(data, rows, cols));
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(GptModel { config, tensors, dims, name })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Matrix> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("model has no tensor '{name}'"))
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|m| m.len()).sum()
+    }
+
+    /// Apply a quantizer to every quantizable matrix, returning the
+    /// fake-quant model (same tensor set, quantizable ones replaced) and the
+    /// aggregate payload bits.
+    pub fn fake_quantize(&self, quantizer: &dyn Quantizer) -> (GptModel, u64) {
+        let mut out = self.clone();
+        let mut payload = 0u64;
+        for name in self.config.quantizable_names() {
+            let w = &self.tensors[&name];
+            let qw = quantizer.quantize(w);
+            payload += qw.payload_bits();
+            out.tensors.insert(name, qw.into_dequantized());
+        }
+        (out, payload)
+    }
+
+    /// All sample vectors (k-dim groups of every quantizable matrix) — the
+    /// training pool for coupled-VQ baselines.
+    pub fn quantizable_vectors(&self, k: usize) -> Matrix {
+        let mut data = Vec::new();
+        for name in self.config.quantizable_names() {
+            data.extend_from_slice(self.tensors[&name].as_slice());
+        }
+        let n = data.len() / k;
+        Matrix::from_vec(data[..n * k].to_vec(), n, k)
+    }
+}
+
+/// A PCDVQ-quantized model: per-matrix code payloads + shared codebooks,
+/// ready to feed the `fwd_q` serving artifact.
+pub struct QuantizedGpt {
+    pub config: GptConfig,
+    pub name: String,
+    /// Compressed quantizable weights, keyed by name.
+    pub weights: BTreeMap<String, PcdvqWeight>,
+    /// Unquantized tensors (embeddings, norms), as in the source model.
+    pub fp_tensors: BTreeMap<String, Matrix>,
+    pub fp_dims: BTreeMap<String, Vec<usize>>,
+}
+
+impl QuantizedGpt {
+    /// Quantize a model with PCDVQ, keeping the real compressed codes.
+    pub fn quantize(model: &GptModel, pcdvq: &Pcdvq) -> Self {
+        let qnames = model.config.quantizable_names();
+        let mut weights = BTreeMap::new();
+        for name in &qnames {
+            weights.insert(name.clone(), pcdvq.quantize_full(&model.tensors[name]));
+        }
+        let mut fp_tensors = model.tensors.clone();
+        let mut fp_dims = model.dims.clone();
+        for name in &qnames {
+            fp_tensors.remove(name);
+            fp_dims.remove(name);
+        }
+        QuantizedGpt {
+            config: model.config,
+            name: model.name.clone(),
+            weights,
+            fp_tensors,
+            fp_dims,
+        }
+    }
+
+    /// Total payload bits of the compressed representation (codes + scales +
+    /// seeds; codebooks amortize across the model per §A.3).
+    pub fn payload_bits(&self) -> u64 {
+        self.weights.values().map(|w| w.payload_bits()).sum()
+    }
+
+    /// Memory footprint of the quantizable weights in fp32 bits (the §4.4
+    /// comparison base).
+    pub fn dense_bits(&self) -> u64 {
+        self.weights
+            .values()
+            .map(|w| (w.rows * w.cols) as u64 * 32)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::Entry;
+    use crate::rng::Rng;
+
+    /// Build a synthetic .pct container the loader should accept.
+    pub fn synthetic_model_file(path: &Path, d: usize, layers: usize) {
+        let mut rng = Rng::new(1);
+        let mut pct = Pct::new();
+        let ff = d * 4;
+        let vocab = 256usize;
+        let ctx = 128usize;
+        let mut add = |name: &str, dims: &[u64]| {
+            let n: u64 = dims.iter().product();
+            let mut pctref = Entry::f32(dims, rng.normal_vec(n as usize));
+            // keep layernorm gains near 1
+            if name.ends_with(".g") {
+                if let crate::io::PctData::F32(v) = &mut pctref.data {
+                    for x in v.iter_mut() {
+                        *x = 1.0;
+                    }
+                }
+            }
+            pct.insert(name, pctref);
+        };
+        add("embed.tok", &[vocab as u64, d as u64]);
+        add("embed.pos", &[ctx as u64, d as u64]);
+        for i in 0..layers {
+            for nm in ["wq", "wk", "wv", "wo"] {
+                add(&format!("layer{i}.attn.{nm}"), &[d as u64, d as u64]);
+            }
+            add(&format!("layer{i}.mlp.w1"), &[d as u64, ff as u64]);
+            add(&format!("layer{i}.mlp.w2"), &[ff as u64, d as u64]);
+            for nm in ["ln1.g", "ln1.b", "ln2.g", "ln2.b"] {
+                add(&format!("layer{i}.{nm}"), &[d as u64]);
+            }
+        }
+        add("final_ln.g", &[d as u64]);
+        add("final_ln.b", &[d as u64]);
+        add("head.w", &[d as u64, vocab as u64]);
+        for (k, v) in [
+            ("vocab", vocab),
+            ("d_model", d),
+            ("n_layer", layers),
+            ("n_head", 4),
+            ("d_ff", ff),
+            ("ctx", ctx),
+        ] {
+            pct.insert(&format!("meta.{k}"), Entry::u64(&[1], vec![v as u64]));
+        }
+        pct.save(path).unwrap();
+    }
+
+    fn tmp_model(name: &str) -> GptModel {
+        let dir = std::env::temp_dir().join("pcdvq_model_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}.pct"));
+        synthetic_model_file(&path, 64, 2);
+        GptModel::load(&path).unwrap()
+    }
+
+    #[test]
+    fn load_synthetic_model() {
+        let m = tmp_model("load");
+        assert_eq!(m.config.d_model, 64);
+        assert_eq!(m.config.n_layer, 2);
+        assert_eq!(m.tensor("layer0.attn.wq").unwrap().rows(), 64);
+        assert_eq!(m.tensor("layer0.mlp.w1").unwrap().cols(), 256);
+        assert!(m.param_count() > 100_000);
+    }
+
+    #[test]
+    fn fake_quantize_replaces_only_quantizable() {
+        let m = tmp_model("fq");
+        let rtn = crate::quant::sq::Rtn::new(4);
+        let (q, bits) = m.fake_quantize(&rtn);
+        assert!(bits > 0);
+        // embeddings untouched
+        assert_eq!(
+            q.tensor("embed.tok").unwrap().as_slice(),
+            m.tensor("embed.tok").unwrap().as_slice()
+        );
+        // quantizable changed
+        assert_ne!(
+            q.tensor("layer0.attn.wq").unwrap().as_slice(),
+            m.tensor("layer0.attn.wq").unwrap().as_slice()
+        );
+    }
+
+    #[test]
+    fn quantizable_vectors_pool_size() {
+        let m = tmp_model("pool");
+        let pool = m.quantizable_vectors(8);
+        assert_eq!(pool.cols(), 8);
+        assert_eq!(pool.rows(), m.config.quantizable_params() / 8);
+    }
+
+    #[test]
+    fn quantized_gpt_payload_accounting() {
+        use crate::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook};
+        use crate::quant::pcdvq::PcdvqConfig;
+        use std::sync::Arc;
+        let m = tmp_model("qg");
+        let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 8, 8, 0));
+        let mag = Arc::new(MagnitudeCodebook::paper_default(2, 8));
+        let pcdvq = Pcdvq::new(
+            PcdvqConfig { dir_bits: 8, mag_bits: 2, k: 8, seed: 1 },
+            dir,
+            mag,
+        );
+        let q = QuantizedGpt::quantize(&m, &pcdvq);
+        assert_eq!(q.weights.len(), m.config.quantizable_names().len());
+        // 10 bits per 8 weights + metadata ≈ 1.25 bpw + overhead < 32 bpw
+        let bpw = q.payload_bits() as f64 / m.config.quantizable_params() as f64;
+        assert!(bpw > 1.2 && bpw < 2.0, "bpw={bpw}");
+        assert!(q.payload_bits() * 8 < q.dense_bits());
+    }
+}

@@ -1,0 +1,13 @@
+//! tinygpt model container — the Rust view of the weights `train.py` saved.
+//!
+//! The coordinator loads a `.pct` weight container, quantizes the
+//! quantizable matrices with any [`crate::quant::Quantizer`], and feeds the
+//! (fake-quant or fp) weights to the AOT forward executables in manifest
+//! order. For the PCDVQ serving path the *codes* (not dense weights) feed
+//! `fwd_q_<model>` instead.
+
+mod config;
+mod gpt;
+
+pub use config::GptConfig;
+pub use gpt::{GptModel, QuantizedGpt};

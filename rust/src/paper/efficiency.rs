@@ -1,0 +1,101 @@
+//! §4.4 — efficiency analysis: memory footprint + serving throughput.
+//!
+//! Paper: PCDVQ-2bit cuts ~87.5% of weight memory, and tokens/s on an
+//! RTX-4090 rises 33.1 → 95.7 because decoding is HBM-bandwidth-bound and
+//! 2-bit weights shrink the traffic.
+//!
+//! On this CPU testbed the memory claim reproduces directly (payload
+//! accounting below); the throughput claim does *not* transfer mechanically:
+//! CPU XLA decode is compute-bound, so the in-graph dequant costs more than
+//! the saved DRAM traffic. We report both honestly — the resident-bytes
+//! ratio is the mechanism the paper's GPU speedup rides on.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::codebook::{DirectionMethod, MagnitudeMethod};
+use crate::config::build_pcdvq_with;
+use crate::coordinator::{Batcher, BatcherConfig, GenRequest, Server, ServingWeights};
+use crate::model::QuantizedGpt;
+use crate::rng::Rng;
+
+fn drive(server: &mut Server, ctx: &Ctx, n_requests: usize, max_new: usize) -> Result<f64> {
+    let (tx, rx) = channel::<GenRequest>();
+    let batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rng = Rng::new(321);
+    let mut keep = Vec::new();
+    for _ in 0..n_requests {
+        let s = rng.below(ctx.eval_tokens.len() - 64);
+        let prompt: Vec<u8> = ctx.eval_tokens[s..s + 48].iter().map(|&t| t as u8).collect();
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt,
+            max_new,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        keep.push(rrx);
+    }
+    drop(tx);
+    server.serve(&batcher)?;
+    Ok(server.metrics.tokens_per_s())
+}
+
+pub fn run_efficiency(ctx: &Ctx, model_name: &str, quick: bool) -> Result<()> {
+    println!("=== §4.4: efficiency analysis ({model_name}) ===");
+    println!("paper: 2-bit ≈ 87.5% weight-memory saved; RTX-4090 tokens/s 33.1 → 95.7.\n");
+
+    let model = ctx.paths.load_model(model_name)?;
+    let pcdvq = build_pcdvq_with(
+        &ctx.paths,
+        DirectionMethod::GreedyE8,
+        MagnitudeMethod::LloydMax,
+        14,
+        2,
+        7,
+    )?;
+    let q = QuantizedGpt::quantize(&model, &pcdvq);
+
+    // --- memory accounting (the §A.3 / §4.4 claim) ---
+    let dense_fp16_bits = q.dense_bits() / 2; // paper baselines against fp16
+    let payload = q.payload_bits();
+    let codebook_bits =
+        (pcdvq.dir.len() * pcdvq.dir.dim() * 32 + pcdvq.mag.len() * 32) as u64;
+    let saved = 100.0 * (1.0 - payload as f64 / dense_fp16_bits as f64);
+    println!("quantizable weights ({}):", model_name);
+    println!("  fp16 baseline:        {:>9.1} KiB", dense_fp16_bits as f64 / 8.0 / 1024.0);
+    println!("  PCDVQ payload:        {:>9.1} KiB (codes + scales + seeds)", payload as f64 / 8.0 / 1024.0);
+    println!("  shared codebooks:     {:>9.1} KiB (amortized across the model)", codebook_bits as f64 / 8.0 / 1024.0);
+    println!("  memory saved:         {:>9.2}%  (paper: ~87.5% at 2.0 bpw)", saved);
+
+    // --- serving throughput ---
+    let (n_req, max_new) = if quick { (8, 12) } else { (32, 32) };
+    let engine = &ctx.engine;
+    let mut fp_server =
+        Server::new(engine, &ctx.paths.artifacts, ServingWeights::Fp(model.clone()))?;
+    let fp_tps = drive(&mut fp_server, ctx, n_req, max_new)?;
+    let mut q_server = Server::new(
+        engine,
+        &ctx.paths.artifacts,
+        ServingWeights::Quantized(Box::new(q), (*pcdvq.dir).clone(), (*pcdvq.mag).clone()),
+    )?;
+    let q_tps = drive(&mut q_server, ctx, n_req, max_new)?;
+
+    println!("\nserving throughput ({n_req} requests x {max_new} new tokens, batch 8):");
+    println!("  fp32 weights:         {fp_tps:>9.1} tok/s  (p50 {:.0} ms)", fp_server.metrics.latency_ms(50.0));
+    println!("  PCDVQ in-graph deq:   {q_tps:>9.1} tok/s  (p50 {:.0} ms)", q_server.metrics.latency_ms(50.0));
+    println!("  resident weight bits: fp {:.1} KiB vs quantized {:.1} KiB ({:.1}x smaller)",
+        fp_server.resident_weight_bits as f64 / 8.0 / 1024.0,
+        q_server.resident_weight_bits as f64 / 8.0 / 1024.0,
+        fp_server.resident_weight_bits as f64 / q_server.resident_weight_bits as f64,
+    );
+    println!("\nnote: the paper's tok/s gain comes from GPU HBM bandwidth; on this");
+    println!("compute-bound CPU testbed the dequant adds work instead, so we report");
+    println!("the memory ratio (the mechanism) plus honest CPU throughput numbers.");
+    Ok(())
+}

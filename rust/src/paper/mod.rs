@@ -1,0 +1,74 @@
+//! Paper harness — one regenerator per table/figure of the PCDVQ paper.
+//!
+//! Every experiment prints the paper's reported numbers (its testbed:
+//! LLaMA family + WikiText2/C4 + lm-eval) next to ours (tinygpt analogs +
+//! byte-corpus + proxy tasks). Absolute values are not comparable across
+//! testbeds — the claim being reproduced is the *shape*: orderings, gaps,
+//! and trends. See DESIGN.md §2 and §5.
+//!
+//! Driven by the `paper` binary: `cargo run --release --bin paper -- <exp>`
+//! with `<exp>` ∈ {fig1a, fig1b, table1, table2, table3, table4, fig3,
+//! efficiency, all}. `--quick` shrinks eval sizes for smoke runs.
+
+mod efficiency;
+mod fig1;
+mod fig3;
+mod table1;
+mod table3;
+mod table4;
+
+pub use efficiency::run_efficiency;
+pub use fig1::{run_fig1a, run_fig1b};
+pub use fig3::run_fig3;
+pub use table1::{run_table1, run_table2};
+pub use table3::run_table3;
+pub use table4::run_table4;
+
+use anyhow::Result;
+
+use crate::config::Paths;
+use crate::eval::{evaluate_ppl, evaluate_tasks};
+use crate::model::GptModel;
+use crate::runtime::Engine;
+
+/// Shared state for all experiments.
+pub struct Ctx {
+    pub paths: Paths,
+    pub engine: Engine,
+    pub eval_tokens: Vec<u32>,
+    pub train_tokens: Vec<u32>,
+    /// Eval sizes: (ppl windows, task items).
+    pub windows: usize,
+    pub items: usize,
+}
+
+impl Ctx {
+    pub fn new(quick: bool) -> Result<Self> {
+        let paths = Paths::detect();
+        let engine = Engine::new()?;
+        let eval_tokens = paths.eval_tokens()?;
+        let train_tokens = paths.train_tokens()?;
+        let (windows, items) = if quick { (12, 16) } else { (96, 80) };
+        Ok(Ctx { paths, engine, eval_tokens, train_tokens, windows, items })
+    }
+
+    /// PPL + QA-avg of a (possibly fake-quant) model through the AOT
+    /// forward. `temperature` feeds the Table-3 e2e-tuning analog.
+    pub fn eval_model(&self, model: &GptModel, temperature: f32) -> Result<(f64, f64)> {
+        let exe = self
+            .engine
+            .load(self.paths.artifacts.join(format!("fwd_fp_{}_b8", model.name)))?;
+        let fixed = crate::eval::weight_inputs(model, &exe.manifest)?;
+        let bound = exe.bind(&fixed, 1)?;
+        let ppl = evaluate_ppl(&bound, &model.config, &self.eval_tokens, 8, self.windows, temperature)?;
+        let tasks = evaluate_tasks(&bound, &model.config, &self.eval_tokens, 8, self.items, 99)?;
+        Ok((ppl.ppl, tasks.avg * 100.0))
+    }
+}
+
+/// Render a measured-table row.
+pub fn row(label: &str, bpw: f64, ppl: f64, qa: f64) -> String {
+    format!("{label:<26} {bpw:>6.3}  {ppl:>8.3}  {qa:>7.2}%")
+}
+
+pub const RULE: &str = "--------------------------------------------------------";

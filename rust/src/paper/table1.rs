@@ -1,0 +1,91 @@
+//! Tables 1 & 2 — main results: PCDVQ vs baselines at the 2-bit level.
+//!
+//! Model mapping (DESIGN.md §2): gpt-s/m/l play LLaMA-2-7B/13B/70B (Table 1);
+//! gpt-alt and gpt-mini play LLaMA-3-8B and Mistral-7B (Table 2). Methods map
+//! GPTQ→RTN/error-feedback SQ, GPTVQ/VPTQ→coupled k-means VQ,
+//! QuIP#→RHT+E8-ball VQ, PCDVQ→this repo's implementation.
+
+use anyhow::Result;
+
+use super::{row, Ctx, RULE};
+use crate::config::MethodSpec;
+use crate::coordinator::quantize_model_parallel;
+
+/// Paper numbers for the side-by-side header (Wiki2 ppl, QA avg).
+const PAPER_T1_7B: &[(&str, f64, f64, f64)] = &[
+    ("fp16", 16.0, 5.12, 62.24),
+    ("GPTQ", 2.125, 50.75, 39.16),
+    ("GPTVQ", 2.25, 6.71, 56.14),
+    ("QuIP#", 2.02, 6.19, 58.23),
+    ("VPTQ", 2.02, 6.13, 58.13),
+    ("PCDVQ", 2.0, 5.81, 58.60),
+    ("PCDVQ", 2.125, 5.68, 60.44),
+];
+
+fn methods(quick: bool) -> Vec<&'static str> {
+    if quick {
+        vec!["rtn2", "quip16", "pcdvq2"]
+    } else {
+        vec!["rtn2", "gptq2", "kmeans16", "quip16", "pcdvq2", "pcdvq2.125"]
+    }
+}
+
+pub fn run_table_models(ctx: &Ctx, models: &[(&str, &str)], quick: bool) -> Result<()> {
+    for (model_name, analog) in models {
+        let model = ctx.paths.load_model(model_name)?;
+        println!("\n--- {model_name} (plays {analog}) ---");
+        println!("{:<26} {:>6}  {:>8}  {:>8}", "method", "bpw", "ppl↓", "QA Avg↑");
+        println!("{RULE}");
+        let (ppl, qa) = ctx.eval_model(&model, 1.0)?;
+        println!("{}", row("fp16", 16.0, ppl, qa));
+        for m in methods(quick) {
+            let spec = MethodSpec::parse(m)?;
+            let quantizer = spec.build(&ctx.paths, &model, 7)?;
+            let (qm, stats) = quantize_model_parallel(&model, quantizer.as_ref(), 1);
+            let (ppl, qa) = ctx.eval_model(&qm, 1.0)?;
+            println!("{}", row(&spec.label(), stats.achieved_bpw, ppl, qa));
+        }
+    }
+    Ok(())
+}
+
+/// Table 1 (LLaMA-2 series analogs).
+pub fn run_table1(ctx: &Ctx, quick: bool) -> Result<()> {
+    println!("=== Table 1: 2-bit quantization, LLaMA-2-series analogs ===");
+    println!("paper (LLaMA-2-7B column: bpw, Wiki2 ppl↓, QA avg↑):");
+    for (m, bpw, ppl, qa) in PAPER_T1_7B {
+        println!("  {m:<8} {bpw:>6.3}  {ppl:>8.2}  {qa:>7.2}%");
+    }
+    println!("\nmeasured on the tinygpt analogs (byte ppl / proxy tasks — compare");
+    println!("ORDER and GAPS, not absolute values):");
+    let models: &[(&str, &str)] = if quick {
+        &[("gpt-s", "LLaMA-2-7B")]
+    } else {
+        &[
+            ("gpt-s", "LLaMA-2-7B"),
+            ("gpt-m", "LLaMA-2-13B"),
+            ("gpt-l", "LLaMA-2-70B"),
+        ]
+    };
+    run_table_models(ctx, models, quick)?;
+    println!("\nshape check: VQ ≫ SQ at 2 bits (RTN/GPTQ-like collapse hardest,");
+    println!("like the paper's GPTQ row), PCDVQ at or near the top of the VQ");
+    println!("group. Caveat: the per-model k-means baseline enjoys a memorization");
+    println!("advantage at tiny scale (3-6 weight vectors per centroid vs ~10^4");
+    println!("at LLaMA scale), so its rows are stronger here than VPTQ's are in");
+    println!("the paper; PCDVQ's codebooks are model-independent.");
+    Ok(())
+}
+
+/// Table 2 (LLaMA-3 / Mistral analogs).
+pub fn run_table2(ctx: &Ctx, quick: bool) -> Result<()> {
+    println!("=== Table 2: 2-bit quantization, LLaMA-3-8B / Mistral-7B analogs ===");
+    println!("paper: PCDVQ 2-bit beats all sub-2.1-bit baselines on both models");
+    println!("(e.g. LLaMA-3-8B: GPTQ 210 ppl vs VPTQ 9.29 vs PCDVQ 8.77).");
+    let models: &[(&str, &str)] = if quick {
+        &[("gpt-mini", "Mistral-7B")]
+    } else {
+        &[("gpt-alt", "LLaMA-3-8B"), ("gpt-mini", "Mistral-7B")]
+    };
+    run_table_models(ctx, models, quick)
+}

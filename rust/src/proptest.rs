@@ -1,0 +1,117 @@
+//! Minimal property-testing helper (proptest is not in the offline crate
+//! set). Seeded generators + a `for_cases` driver that reports the failing
+//! seed so any counterexample is reproducible with one integer.
+//!
+//! Used by `rust/tests/prop_invariants.rs`; the python side uses the real
+//! `hypothesis` package (available in the image).
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// A reproducible case generator handed to each property iteration.
+pub struct Gen {
+    pub rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    /// Power of two in `[lo, hi]` (both powers of two).
+    pub fn pow2_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo.is_power_of_two() && hi.is_power_of_two());
+        let lo_e = lo.trailing_zeros() as usize;
+        let hi_e = hi.trailing_zeros() as usize;
+        1 << self.usize_in(lo_e, hi_e)
+    }
+
+    /// Gaussian matrix with optional outliers (probability `p_outlier` per
+    /// entry of a 10-50x spike) — models real weight tails.
+    pub fn matrix(&mut self, rows: usize, cols: usize, p_outlier: f64) -> Matrix {
+        let mut data = self.rng.normal_vec(rows * cols);
+        if p_outlier > 0.0 {
+            for x in data.iter_mut() {
+                if self.rng.uniform() < p_outlier {
+                    *x *= self.f32_in(10.0, 50.0);
+                }
+            }
+        }
+        Matrix::from_vec(data, rows, cols)
+    }
+
+    pub fn unit_vectors(&mut self, n: usize, k: usize) -> Matrix {
+        let mut m = self.matrix(n, k, 0.0);
+        for i in 0..n {
+            let r = m.row_mut(i);
+            let norm: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                r.iter_mut().for_each(|x| *x /= norm);
+            } else {
+                r[0] = 1.0;
+            }
+        }
+        m
+    }
+}
+
+/// Run `prop` over `cases` generated cases. On failure, panics with the
+/// case seed; re-run a single case via `PCDVQ_PROP_SEED=<seed>`.
+pub fn for_cases(cases: usize, base_seed: u64, prop: impl Fn(&mut Gen)) {
+    if let Some(seed) = std::env::var("PCDVQ_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+    {
+        let mut g = Gen { rng: Rng::new(seed), case_seed: seed };
+        prop(&mut g);
+        return;
+    }
+    for i in 0..cases {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i as u64);
+        let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {i} — reproduce with PCDVQ_PROP_SEED={case_seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_range() {
+        for_cases(20, 42, |g| {
+            let n = g.usize_in(1, 10);
+            assert!((1..=10).contains(&n));
+            let p = g.pow2_in(8, 64);
+            assert!(p.is_power_of_two() && (8..=64).contains(&p));
+            let m = g.matrix(4, 4, 0.0);
+            assert!(m.as_slice().iter().all(|x| x.is_finite()));
+            let u = g.unit_vectors(3, 8);
+            for i in 0..3 {
+                let nrm: f32 = u.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+                assert!((nrm - 1.0).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        for_cases(5, 1, |g| {
+            assert!(g.usize_in(0, 10) > 100, "always fails");
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Direction/magnitude error decomposition (paper Fig 1b, Fig 3, Eq. 5).
+//!
+//! For a vector `v` and its quantized version `c`, the squared Euclidean
+//! error splits exactly as
+//!
+//! ```text
+//! ‖v − c‖² = (‖v‖ − ‖c‖)²  +  2·‖v‖·‖c‖·(1 − cos θ)
+//!             └ magnitude ┘     └────── direction ──────┘
+//! ```
+//!
+//! The paper's Fig 1b normalizes the direction term as `2‖v‖²(1−cosθ)`
+//! (same-unit comparison); we expose both.
+
+use crate::tensor::{dot, norm2, Matrix};
+
+/// Decomposed quantization error statistics over a set of vectors.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorDecomposition {
+    /// Mean `(‖v‖−‖c‖)²`.
+    pub magnitude_mse: f64,
+    /// Mean `2‖v‖²(1−cosθ)` — Fig 1b's same-unit direction error.
+    pub direction_mse: f64,
+    /// Mean exact cross term `2‖v‖‖c‖(1−cosθ)`.
+    pub direction_cross_mse: f64,
+    /// Mean total `‖v−c‖²`.
+    pub total_mse: f64,
+    /// Mean `1 − cosθ`.
+    pub mean_one_minus_cos: f64,
+    /// Number of vectors measured.
+    pub count: usize,
+}
+
+/// Decompose the error between original vectors and their quantized
+/// counterparts (same shape, rows are k-vectors).
+pub fn decompose(original: &Matrix, quantized: &Matrix) -> ErrorDecomposition {
+    assert_eq!(original.rows(), quantized.rows());
+    assert_eq!(original.cols(), quantized.cols());
+    let n = original.rows();
+    let mut out = ErrorDecomposition { count: n, ..Default::default() };
+    for i in 0..n {
+        let v = original.row(i);
+        let c = quantized.row(i);
+        let nv = norm2(v) as f64;
+        let nc = norm2(c) as f64;
+        let cos = if nv > 0.0 && nc > 0.0 {
+            (dot(v, c) as f64 / (nv * nc)).clamp(-1.0, 1.0)
+        } else {
+            1.0
+        };
+        let dmag = (nv - nc) * (nv - nc);
+        let ddir = 2.0 * nv * nv * (1.0 - cos);
+        let dcross = 2.0 * nv * nc * (1.0 - cos);
+        let total: f64 = v
+            .iter()
+            .zip(c)
+            .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+            .sum();
+        out.magnitude_mse += dmag;
+        out.direction_mse += ddir;
+        out.direction_cross_mse += dcross;
+        out.total_mse += total;
+        out.mean_one_minus_cos += 1.0 - cos;
+    }
+    let inv = 1.0 / n.max(1) as f64;
+    out.magnitude_mse *= inv;
+    out.direction_mse *= inv;
+    out.direction_cross_mse *= inv;
+    out.total_mse *= inv;
+    out.mean_one_minus_cos *= inv;
+    out
+}
+
+/// Decompose between two weight matrices after the VQ reshape.
+pub fn decompose_weights(w: &Matrix, deq: &Matrix, k: usize) -> ErrorDecomposition {
+    decompose(&w.reshape_vectors(k), &deq.reshape_vectors(k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn identity_decomposes_to_zero() {
+        let mut rng = Rng::new(1);
+        let v = Matrix::from_vec(rng.normal_vec(80), 10, 8);
+        let d = decompose(&v, &v);
+        // f32 dot products leave ~1e-7 cosine noise; thresholds reflect that
+        assert!(d.magnitude_mse < 1e-10);
+        assert!(d.direction_mse < 1e-5);
+        assert!(d.total_mse < 1e-10);
+    }
+
+    #[test]
+    fn pure_scaling_is_pure_magnitude_error() {
+        let mut rng = Rng::new(2);
+        let v = Matrix::from_vec(rng.normal_vec(80), 10, 8);
+        let scaled = Matrix::from_vec(v.as_slice().iter().map(|x| 1.5 * x).collect(), 10, 8);
+        let d = decompose(&v, &scaled);
+        assert!(d.direction_mse < 1e-4, "direction {d:?}");
+        assert!(d.magnitude_mse > 0.0);
+    }
+
+    #[test]
+    fn pure_rotation_is_pure_direction_error() {
+        // rotate each vector in its first two coordinates by 30°
+        let mut rng = Rng::new(3);
+        let v = Matrix::from_vec(rng.normal_vec(80), 10, 8);
+        let mut r = v.clone();
+        let (s, c) = (30.0f32.to_radians().sin(), 30.0f32.to_radians().cos());
+        for i in 0..10 {
+            let row = r.row_mut(i);
+            let (x, y) = (row[0], row[1]);
+            row[0] = c * x - s * y;
+            row[1] = s * x + c * y;
+        }
+        let d = decompose(&v, &r);
+        assert!(d.magnitude_mse < 1e-9, "magnitude {d:?}");
+        assert!(d.direction_mse > 0.0);
+    }
+
+    #[test]
+    fn eq5_identity_holds() {
+        // ‖v−c‖² == Δr² + 2‖v‖‖c‖(1−cosθ), exactly (Eq. 5)
+        let mut rng = Rng::new(4);
+        let v = Matrix::from_vec(rng.normal_vec(400), 50, 8);
+        let mut c = v.clone();
+        for x in c.as_mut_slice().iter_mut() {
+            *x += 0.1 * rng.normal() as f32;
+        }
+        let d = decompose(&v, &c);
+        let recon = d.magnitude_mse + d.direction_cross_mse;
+        assert!(
+            (recon - d.total_mse).abs() / d.total_mse < 1e-6,
+            "recon {recon} vs total {}",
+            d.total_mse
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! GPTQ-like baseline: sequential error-compensated scalar quantization.
+//!
+//! True GPTQ minimizes `‖XW − XŴ‖²` using the Hessian `H = XᵀX` of real
+//! calibration activations. Our substrate has no LLaMA calibration set, so —
+//! per the DESIGN.md substitution table — we run the *exact GPTQ update
+//! equations* (quantize one input dim at a time, propagate the weighted
+//! residual into the not-yet-quantized dims through `H^{-1}`) against a
+//! synthetic AR(1)-correlated Hessian `H[i,j] = ρ^{|i-j|}`, which models the
+//! smooth feature correlations GPTQ exploits. With ρ→0 this degenerates to
+//! plain RTN, which is the identity the unit tests pin down.
+
+use crate::quant::{QuantizedWeight, Quantizer};
+use crate::tensor::Matrix;
+
+/// GPTQ-like quantizer.
+#[derive(Clone, Debug)]
+pub struct GptqLike {
+    pub bits: u32,
+    /// AR(1) correlation of the synthetic Hessian.
+    pub rho: f64,
+}
+
+impl GptqLike {
+    pub fn new(bits: u32) -> Self {
+        GptqLike { bits, rho: 0.3 }
+    }
+}
+
+impl Quantizer for GptqLike {
+    fn name(&self) -> String {
+        format!("gptq-like{}", self.bits)
+    }
+
+    /// Quantize `w` (p×q). GPTQ walks the *input* dimension; our convention
+    /// stores weights as (in, out) = (p rows, q cols), so we walk rows.
+    fn quantize(&self, w: &Matrix) -> QuantizedWeight {
+        let p = w.rows();
+        let q = w.cols();
+        let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
+
+        // Per-column symmetric scale from max|w| (as in GPTQ's grid init).
+        let scales: Vec<f32> = (0..q)
+            .map(|j| {
+                let maxabs = w.col(j).iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                if maxabs > 0.0 {
+                    maxabs / qmax
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+
+        // For the AR(1) Hessian, the Cholesky of H^{-1} has a closed-form
+        // bidiagonal structure; the GPTQ update "err / L[i][i] times row of
+        // L" reduces to propagating the scaled error to the *next* row only:
+        //   w[i+1, :] += err[i, :] * rho
+        // (derivable from H^{-1} being tridiagonal for AR(1)).
+        let rho = self.rho as f32;
+        let mut work = w.clone();
+        let mut out = Matrix::zeros(p, q);
+        for i in 0..p {
+            // quantize row i
+            for j in 0..q {
+                let s = scales[j];
+                let x = work.get(i, j);
+                let qv = (x / s).round().clamp(-(qmax + 1.0), qmax);
+                let deq = qv * s;
+                out.set(i, j, deq);
+                let err = x - deq;
+                // error feedback into the next (not yet quantized) row
+                if i + 1 < p {
+                    let nxt = work.get(i + 1, j) + rho * err;
+                    work.set(i + 1, j, nxt);
+                }
+            }
+        }
+        let bits = w.len() as u64 * self.bits as u64 + q as u64 * 32;
+        QuantizedWeight::new(out, bits, self.name())
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sq::Rtn;
+    use crate::rng::Rng;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rng.normal_vec(rows * cols), rows, cols)
+    }
+
+    /// Weight whose rows are AR(1)-correlated — the structure the synthetic
+    /// Hessian models.
+    fn correlated(rows: usize, cols: usize, rho: f32, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            let mut prev = rng.normal() as f32;
+            for i in 0..rows {
+                let e = rng.normal() as f32;
+                let x = rho * prev + (1.0 - rho * rho).sqrt() * e;
+                m.set(i, j, x);
+                prev = x;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn rho_zero_equals_rtn() {
+        let w = gaussian(32, 8, 1);
+        let g = GptqLike { bits: 3, rho: 0.0 }.quantize(&w);
+        let r = Rtn::new(3).quantize(&w);
+        assert_eq!(g.dequantize().as_slice(), r.dequantize().as_slice());
+    }
+
+    #[test]
+    fn helps_on_correlated_weights_in_hessian_metric() {
+        // On AR(1)-structured weights, error feedback should reduce the
+        // *correlated-input* loss ‖X(w−ŵ)‖² (X with AR(1) rows), which is
+        // what GPTQ optimizes — measure with a sampled X.
+        let rho = 0.6f32;
+        let w = correlated(128, 16, rho, 2);
+        let g = GptqLike { bits: 2, rho: rho as f64 }.quantize(&w);
+        let r = Rtn::new(2).quantize(&w);
+        let mut rng = Rng::new(3);
+        // sample AR(1)-correlated activations
+        let nx = 200;
+        let mut x = Matrix::zeros(nx, 128);
+        for i in 0..nx {
+            let mut prev = rng.normal() as f32;
+            for t in 0..128 {
+                let e = rng.normal() as f32;
+                let v = rho * prev + (1.0 - rho * rho).sqrt() * e;
+                x.set(i, t, v);
+                prev = v;
+            }
+        }
+        let act_err = |deq: &Matrix| {
+            let mut s = 0.0f64;
+            for i in 0..nx {
+                for j in 0..16 {
+                    let mut d = 0.0f32;
+                    for t in 0..128 {
+                        d += x.get(i, t) * (w.get(t, j) - deq.get(t, j));
+                    }
+                    s += (d as f64) * (d as f64);
+                }
+            }
+            s
+        };
+        let eg = act_err(g.dequantize());
+        let er = act_err(r.dequantize());
+        assert!(eg < er * 1.05, "gptq-like {eg} should not lose to rtn {er}");
+    }
+
+    #[test]
+    fn output_finite_and_bounded() {
+        let w = gaussian(64, 8, 4);
+        let g = GptqLike::new(2).quantize(&w);
+        let maxabs = w.as_slice().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for &v in g.dequantize().as_slice() {
+            assert!(v.is_finite());
+            assert!(v.abs() <= maxabs * 2.0);
+        }
+    }
+}

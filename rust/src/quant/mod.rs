@@ -1,0 +1,77 @@
+//! Weight quantizers: PCDVQ (the paper's method) and every baseline it is
+//! compared against in Tables 1–4, all operating on the same [`Matrix`]
+//! weight substrate and returning a [`QuantizedWeight`] that can be
+//! dequantized, measured ([`error`]) and persisted.
+//!
+//! | module | paper row | idea |
+//! |---|---|---|
+//! | [`pcdvq`] | PCDVQ | RHT → polar decouple → greedy-E8 direction + Lloyd-Max magnitude |
+//! | [`sq`] | GPTQ (RTN core) | symmetric uniform scalar quantization |
+//! | [`gptq`] | GPTQ | error-compensated sequential SQ (synthetic Hessian — see DESIGN.md) |
+//! | [`vq_kmeans`] | VPTQ / GPTVQ | coupled k-means vector quantization |
+//! | [`quip`] | QuIP# | RHT + coupled E8-lattice codebook, algebraic decode |
+//! | [`error`] | Fig 1b / Fig 3 | direction/magnitude error decomposition |
+//! | [`tune`] | Table 3 | post-quantization correction analogs |
+
+pub mod assign;
+pub mod error;
+pub mod gptq;
+pub mod packing;
+pub mod pcdvq;
+pub mod quip;
+pub mod sq;
+pub mod tune;
+pub mod vq_kmeans;
+
+use crate::tensor::Matrix;
+
+/// Anything that can turn a weight matrix into a compressed representation.
+pub trait Quantizer {
+    /// Human-readable method name (used in tables and CLI).
+    fn name(&self) -> String;
+
+    /// Quantize a weight matrix.
+    fn quantize(&self, w: &Matrix) -> QuantizedWeight;
+
+    /// Nominal bits per weight of the index stream (excluding shared
+    /// codebooks and per-column metadata, following the paper's §A.3
+    /// accounting).
+    fn bits_per_weight(&self) -> f64;
+}
+
+/// A quantized weight: enough information to reconstruct an approximation of
+/// the original matrix plus exact storage accounting.
+pub struct QuantizedWeight {
+    /// Reconstructed ("fake-quant") weight.
+    dequant: Matrix,
+    /// Bits of per-layer payload (indices + scales + seeds), excluding
+    /// codebooks shared across the whole model.
+    payload_bits: u64,
+    /// Method label.
+    pub method: String,
+}
+
+impl QuantizedWeight {
+    pub fn new(dequant: Matrix, payload_bits: u64, method: impl Into<String>) -> Self {
+        QuantizedWeight { dequant, payload_bits, method: method.into() }
+    }
+
+    /// The reconstructed weight matrix.
+    pub fn dequantize(&self) -> &Matrix {
+        &self.dequant
+    }
+
+    pub fn into_dequantized(self) -> Matrix {
+        self.dequant
+    }
+
+    /// Per-layer payload bits (§A.3 accounting: codebooks amortize to ~0).
+    pub fn payload_bits(&self) -> u64 {
+        self.payload_bits
+    }
+
+    /// Achieved bits per weight for this layer.
+    pub fn achieved_bpw(&self) -> f64 {
+        self.payload_bits as f64 / self.dequant.len() as f64
+    }
+}

@@ -1,0 +1,378 @@
+//! QuIP#-like baseline: RHT incoherence processing + a *coupled* E8-lattice
+//! codebook with algebraic nearest-point decode.
+//!
+//! QuIP# (Tseng et al. 2024) = randomized Hadamard incoherence + the E8P
+//! lattice codebook, assigning each k=8 vector to the nearest scaled E8
+//! lattice point under the *Euclidean* metric. Direction and magnitude are
+//! quantized together — the coupling (and Euclidean metric) PCDVQ's analysis
+//! (§3.1) identifies as the accuracy bottleneck, which Fig 3 and Table 3
+//! measure against this baseline.
+//!
+//! Implementation notes:
+//! * Nearest E8 point uses the exact algebraic decoder (Conway & Sloane):
+//!   `E8 = D8 ∪ (D8 + ½)`; nearest-D8 = round, fix parity by flipping the
+//!   coordinate with the largest rounding error.
+//! * The finite codebook is the `2^bits` lattice points most frequently hit
+//!   by N(0,1)^8 samples at the chosen lattice scale (empirical typical set
+//!   — QuIP#'s E8P ball construction plays the same role). Out-of-codebook
+//!   decodes fall back to the most-probable in-codebook neighbour by local
+//!   search over sign flips, then a linear scan (rare, tails only).
+
+use std::collections::HashMap;
+
+use crate::hadamard::{deregularize, regularize, RandomizedHadamard};
+use crate::quant::{QuantizedWeight, Quantizer};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Doubled-coordinate E8 point (integers; actual point = `coords/2`).
+type Point = [i16; 8];
+
+/// Nearest point of `Z^8` with even coordinate sum (the D8 lattice), in
+/// doubled coordinates, for input `x` (true coordinates).
+fn nearest_d8(x: &[f32; 8], offset_half: bool) -> Point {
+    // Work in true coordinates: round each (minus offset), fix parity.
+    let mut rounded = [0i32; 8];
+    let mut sum = 0i32;
+    let mut worst = 0usize;
+    let mut worst_gap = -1.0f32;
+    for i in 0..8 {
+        let t = if offset_half { x[i] - 0.5 } else { x[i] };
+        let r = t.round();
+        rounded[i] = r as i32;
+        sum += r as i32;
+        let gap = (t - r).abs();
+        if gap > worst_gap {
+            worst_gap = gap;
+            worst = i;
+        }
+    }
+    if sum.rem_euclid(2) != 0 {
+        // flip the worst coordinate to the other side
+        let t = if offset_half { x[worst] - 0.5 } else { x[worst] };
+        let r = rounded[worst];
+        rounded[worst] = if (t - r as f32) >= 0.0 { r + 1 } else { r - 1 };
+    }
+    let mut out = [0i16; 8];
+    for i in 0..8 {
+        let doubled = 2 * rounded[i] + if offset_half { 1 } else { 0 };
+        out[i] = doubled as i16;
+    }
+    out
+}
+
+/// Exact nearest E8 lattice point (doubled coordinates).
+pub fn nearest_e8(x: &[f32; 8]) -> Point {
+    let a = nearest_d8(x, false);
+    let b = nearest_d8(x, true);
+    let d = |p: &Point| -> f32 {
+        let mut s = 0.0;
+        for i in 0..8 {
+            let diff = x[i] - p[i] as f32 / 2.0;
+            s += diff * diff;
+        }
+        s
+    };
+    if d(&a) <= d(&b) {
+        a
+    } else {
+        b
+    }
+}
+
+/// QuIP#-like quantizer.
+pub struct QuipLike {
+    /// Codebook bits per 8-vector (16 → 2.0 bpw, 17 → 2.125 bpw).
+    pub bits: u32,
+    /// Lattice scale: vectors are quantized as `s · nearest_e8(v / s)`.
+    pub scale: f32,
+    /// In-codebook lattice points and their index.
+    book: HashMap<Point, u32>,
+    /// Reverse map (index → point), reconstruction values.
+    points: Vec<Point>,
+    pub seed: u64,
+}
+
+impl QuipLike {
+    /// Build the codebook as an E8 *ball* — the `2^bits` lattice points of
+    /// smallest norm (QuIP#'s E8P is exactly a ball of E8+shift points) —
+    /// and sweep the lattice scale for minimum MSE against N(0,1)^8 samples
+    /// *with the finite book in the loop* (granular error vs overload
+    /// clamping trade-off).
+    pub fn build(bits: u32, seed: u64) -> Self {
+        let n_book = 1usize << bits;
+        // enumerate enough shells to fill the book
+        let mut max_norm2 = 4i64;
+        let mut pts = crate::lattice::e8::E8Points::enumerate(max_norm2);
+        while pts.len() < n_book {
+            max_norm2 += 2;
+            assert!(max_norm2 <= 32, "E8 ball exhausted before {n_book} points");
+            pts = crate::lattice::e8::E8Points::enumerate(max_norm2);
+        }
+        // the enumeration is already (norm, lex)-sorted; take the inner ball
+        let points: Vec<Point> = pts
+            .doubled
+            .iter()
+            .take(n_book)
+            .map(|p| {
+                let mut q = [0i16; 8];
+                for i in 0..8 {
+                    q[i] = p[i] as i16;
+                }
+                q
+            })
+            .collect();
+        let book: HashMap<Point, u32> = points
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+
+        // scale sweep with the finite book: minimize sample MSE
+        let mut rng = Rng::new(seed);
+        let sample: Vec<[f32; 8]> = (0..20_000)
+            .map(|_| {
+                let mut v = [0.0f32; 8];
+                for x in v.iter_mut() {
+                    *x = rng.normal() as f32;
+                }
+                v
+            })
+            .collect();
+        let mut probe = QuipLike { bits, scale: 1.0, book, points, seed };
+        let mut best_scale = 1.0f32;
+        let mut best_mse = f64::INFINITY;
+        // the granular/overload optimum sits near chi_typical/ball_radius;
+        // sweep a generous bracket around it
+        let ball_r = ((max_norm2 as f32).sqrt()).max(1.0);
+        let lo = 1.2 / ball_r;
+        let hi = 6.5 / ball_r;
+        for step in 0..28 {
+            let s = lo + (hi - lo) * step as f32 / 27.0;
+            probe.scale = s;
+            let mut mse = 0.0f64;
+            for v in &sample {
+                let idx = probe.assign_vec(v);
+                let rec = probe.decode(idx);
+                for i in 0..8 {
+                    let d = (v[i] - rec[i]) as f64;
+                    mse += d * d;
+                }
+            }
+            if mse < best_mse {
+                best_mse = mse;
+                best_scale = s;
+            }
+        }
+        probe.scale = best_scale;
+        probe
+    }
+
+    /// Expected per-element MSE on N(0,1) inputs (diagnostic).
+    pub fn unit_gaussian_mse(&self, n_sample: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut mse = 0.0f64;
+        for _ in 0..n_sample {
+            let mut v = [0.0f32; 8];
+            for x in v.iter_mut() {
+                *x = rng.normal() as f32;
+            }
+            let rec = self.decode(self.assign_vec(&v));
+            for i in 0..8 {
+                let d = (v[i] - rec[i]) as f64;
+                mse += d * d;
+            }
+        }
+        mse / (n_sample * 8) as f64
+    }
+
+    /// Codebook size actually realized.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Quantize one 8-vector (already RHT-regularized): index into the book.
+    fn assign_vec(&self, v: &[f32; 8]) -> u32 {
+        let mut scaled = [0.0f32; 8];
+        for i in 0..8 {
+            scaled[i] = v[i] / self.scale;
+        }
+        let p = nearest_e8(&scaled);
+        if let Some(&idx) = self.book.get(&p) {
+            return idx;
+        }
+        // Out-of-book (tail): shrink toward the origin until we land in the
+        // book — preserves direction, pulls magnitude in, bounded iterations.
+        let mut shrink = 0.9f32;
+        for _ in 0..24 {
+            let mut s2 = [0.0f32; 8];
+            for i in 0..8 {
+                s2[i] = scaled[i] * shrink;
+            }
+            let p = nearest_e8(&s2);
+            if let Some(&idx) = self.book.get(&p) {
+                return idx;
+            }
+            shrink *= 0.9;
+        }
+        // last resort: linear scan for nearest in-book point
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        for (i, p) in self.points.iter().enumerate() {
+            let mut d = 0.0f32;
+            for j in 0..8 {
+                let diff = scaled[j] - p[j] as f32 / 2.0;
+                d += diff * diff;
+            }
+            if d < best_d {
+                best_d = d;
+                best = i as u32;
+            }
+        }
+        best
+    }
+
+    /// Reconstruction for an index.
+    fn decode(&self, idx: u32) -> [f32; 8] {
+        let p = self.points[idx as usize];
+        let mut v = [0.0f32; 8];
+        for i in 0..8 {
+            v[i] = self.scale * p[i] as f32 / 2.0;
+        }
+        v
+    }
+}
+
+impl QuipLike {
+    /// Pre/post pair **in the regularized domain** (Fig-3 harness; see
+    /// `Pcdvq::quantize_regularized` for why decomposition must happen
+    /// before the inverse RHT).
+    pub fn quantize_regularized(&self, w: &Matrix) -> (Matrix, Matrix) {
+        assert!(w.rows().is_power_of_two());
+        let seed = self.seed ^ ((w.rows() as u64) << 32 ^ w.cols() as u64);
+        let rht = RandomizedHadamard::new(w.rows(), seed);
+        let (h, _) = regularize(w, &rht);
+        let vectors = h.reshape_vectors(8);
+        let mut flat = vec![0.0f32; w.len()];
+        for i in 0..vectors.rows() {
+            let mut v = [0.0f32; 8];
+            v.copy_from_slice(vectors.row(i));
+            let rec = self.decode(self.assign_vec(&v));
+            flat[i * 8..(i + 1) * 8].copy_from_slice(&rec);
+        }
+        (h, Matrix::from_vec(flat, w.rows(), w.cols()))
+    }
+}
+
+impl Quantizer for QuipLike {
+    fn name(&self) -> String {
+        format!("quip-like-{}b", self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix) -> QuantizedWeight {
+        assert!(w.rows().is_power_of_two(), "RHT requires power-of-two rows");
+        assert_eq!(w.len() % 8, 0);
+        let seed = self.seed ^ ((w.rows() as u64) << 32 ^ w.cols() as u64);
+        let rht = RandomizedHadamard::new(w.rows(), seed);
+        let (h, scales) = regularize(w, &rht);
+        let vectors = h.reshape_vectors(8);
+        let n_vec = vectors.rows();
+        let mut flat = vec![0.0f32; w.len()];
+        for i in 0..n_vec {
+            let mut v = [0.0f32; 8];
+            v.copy_from_slice(vectors.row(i));
+            let idx = self.assign_vec(&v);
+            let rec = self.decode(idx);
+            flat[i * 8..(i + 1) * 8].copy_from_slice(&rec);
+        }
+        let hq = Matrix::from_vec(flat, w.rows(), w.cols());
+        let deq = deregularize(&hq, &scales, &rht);
+        let bits = n_vec as u64 * self.bits as u64 + w.cols() as u64 * 32 + 64;
+        QuantizedWeight::new(deq, bits, self.name())
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 / 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_e8_on_lattice_points_is_identity() {
+        // roots of E8: (1,1,0,...) and (½)^8
+        let x = [1.0f32, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(nearest_e8(&x), [2, 2, 0, 0, 0, 0, 0, 0]);
+        let h = [0.5f32; 8];
+        assert_eq!(nearest_e8(&h), [1; 8]);
+    }
+
+    #[test]
+    fn nearest_e8_is_truly_nearest_vs_enumeration() {
+        use crate::lattice::e8::E8Points;
+        use crate::rng::Rng;
+        let pts = E8Points::enumerate(8);
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            // stay within the enumerated ball so the brute force is valid
+            let mut x = [0.0f32; 8];
+            for v in x.iter_mut() {
+                *v = (rng.normal() * 0.45) as f32;
+            }
+            let fast = nearest_e8(&x);
+            // brute force over all enumerated points + origin
+            let mut best_d = x.iter().map(|v| v * v).sum::<f32>(); // origin
+            let mut best: Point = [0; 8];
+            for p in &pts.doubled {
+                let mut d = 0.0f32;
+                for i in 0..8 {
+                    let diff = x[i] - p[i] as f32 / 2.0;
+                    d += diff * diff;
+                }
+                if d < best_d {
+                    best_d = d;
+                    for i in 0..8 {
+                        best[i] = p[i] as i16;
+                    }
+                }
+            }
+            let mut fast_d = 0.0f32;
+            for i in 0..8 {
+                let diff = x[i] - fast[i] as f32 / 2.0;
+                fast_d += diff * diff;
+            }
+            assert!(
+                fast_d <= best_d + 1e-5,
+                "decoder {fast:?} ({fast_d}) vs brute {best:?} ({best_d})"
+            );
+        }
+    }
+
+    #[test]
+    fn build_produces_requested_size() {
+        let q = QuipLike::build(10, 1);
+        assert_eq!(q.len(), 1024);
+        assert!(q.scale > 0.0);
+    }
+
+    #[test]
+    fn quantize_error_reasonable() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(2);
+        let w = Matrix::from_vec(rng.normal_vec(128 * 32), 128, 32);
+        let q = QuipLike::build(12, 3);
+        let mse = q.quantize(&w).dequantize().mse(&w);
+        // 12 bits / 8 dims = 1.5 bpw — error should be below the unit variance
+        assert!(mse < 0.9, "mse={mse}");
+        // and more bits should help
+        let q16 = QuipLike::build(14, 3);
+        let mse16 = q16.quantize(&w).dequantize().mse(&w);
+        assert!(mse16 < mse, "14b {mse16} vs 12b {mse}");
+    }
+}

@@ -1,0 +1,149 @@
+//! RTN scalar quantization (the SQ baseline core, paper Eq. 1).
+//!
+//! Symmetric uniform round-to-nearest per column, optionally with a searched
+//! clipping factor (minimizing the column MSE over a grid of clip ratios),
+//! which is the standard "RTN+" trick most SQ papers start from. At 2 bits
+//! this collapses badly — exactly the phenomenon motivating VQ (paper §1).
+
+use crate::quant::{QuantizedWeight, Quantizer};
+use crate::tensor::Matrix;
+
+/// Round-to-nearest scalar quantizer.
+#[derive(Clone, Debug)]
+pub struct Rtn {
+    /// Bit width b (levels span `[-2^{b-1}, 2^{b-1} - 1]`).
+    pub bits: u32,
+    /// If true, search the per-column clip ratio over a grid instead of
+    /// using max(|w|).
+    pub search_clip: bool,
+}
+
+impl Rtn {
+    pub fn new(bits: u32) -> Self {
+        Rtn { bits, search_clip: false }
+    }
+
+    pub fn with_clip_search(bits: u32) -> Self {
+        Rtn { bits, search_clip: true }
+    }
+
+    /// Quantize one column in place given a clip scale; returns the column
+    /// MSE.
+    fn quantize_col(col: &[f32], bits: u32, scale: f32, out: &mut [f32]) -> f64 {
+        let qmax = (1i64 << (bits - 1)) - 1;
+        let qmin = -(1i64 << (bits - 1));
+        let mut mse = 0.0f64;
+        let s = if scale > 0.0 { scale } else { 1.0 };
+        for (o, &x) in out.iter_mut().zip(col) {
+            let q = (x / s).round() as i64;
+            let q = q.clamp(qmin, qmax);
+            let deq = q as f32 * s;
+            let d = (deq - x) as f64;
+            mse += d * d;
+            *o = deq;
+        }
+        mse
+    }
+}
+
+impl Quantizer for Rtn {
+    fn name(&self) -> String {
+        if self.search_clip {
+            format!("rtn{}-clip", self.bits)
+        } else {
+            format!("rtn{}", self.bits)
+        }
+    }
+
+    fn quantize(&self, w: &Matrix) -> QuantizedWeight {
+        let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
+        let mut out = Matrix::zeros(w.rows(), w.cols());
+        let mut scratch = vec![0.0f32; w.rows()];
+        for j in 0..w.cols() {
+            let col = w.col(j);
+            let maxabs = col.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let base_scale = maxabs / qmax;
+            let best = if self.search_clip {
+                // grid search clip ratio in [0.3, 1.0]
+                let mut best_scale = base_scale;
+                let mut best_mse = f64::INFINITY;
+                for step in 0..15 {
+                    let ratio = 0.3 + 0.05 * step as f32;
+                    let s = base_scale * ratio;
+                    let mse = Self::quantize_col(&col, self.bits, s, &mut scratch);
+                    if mse < best_mse {
+                        best_mse = mse;
+                        best_scale = s;
+                    }
+                }
+                best_scale
+            } else {
+                base_scale
+            };
+            Self::quantize_col(&col, self.bits, best, &mut scratch);
+            out.set_col(j, &scratch);
+        }
+        // payload: indices + per-column scale
+        let bits = w.len() as u64 * self.bits as u64 + w.cols() as u64 * 32;
+        QuantizedWeight::new(out, bits, self.name())
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rng.normal_vec(rows * cols), rows, cols)
+    }
+
+    #[test]
+    fn high_bits_nearly_lossless() {
+        let w = gaussian(64, 16, 1);
+        let q = Rtn::new(8).quantize(&w);
+        assert!(q.dequantize().mse(&w) < 1e-3);
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let w = gaussian(64, 16, 2);
+        let e2 = Rtn::new(2).quantize(&w).dequantize().mse(&w);
+        let e4 = Rtn::new(4).quantize(&w).dequantize().mse(&w);
+        let e8 = Rtn::new(8).quantize(&w).dequantize().mse(&w);
+        assert!(e2 > e4 && e4 > e8, "e2={e2} e4={e4} e8={e8}");
+    }
+
+    #[test]
+    fn clip_search_beats_plain_at_low_bits() {
+        let w = gaussian(128, 32, 3);
+        let plain = Rtn::new(2).quantize(&w).dequantize().mse(&w);
+        let clip = Rtn::with_clip_search(2).quantize(&w).dequantize().mse(&w);
+        assert!(clip <= plain, "clip {clip} vs plain {plain}");
+    }
+
+    #[test]
+    fn output_values_on_grid() {
+        let w = gaussian(32, 4, 4);
+        let q = Rtn::new(2).quantize(&w);
+        // 2-bit symmetric: at most 4 distinct values per column
+        for j in 0..4 {
+            let mut vals: Vec<f32> = q.dequantize().col(j);
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            assert!(vals.len() <= 4, "col {j} has {} levels", vals.len());
+        }
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let w = gaussian(64, 8, 5);
+        let q = Rtn::new(2).quantize(&w);
+        assert_eq!(q.payload_bits(), 64 * 8 * 2 + 8 * 32);
+    }
+}

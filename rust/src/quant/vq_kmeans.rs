@@ -1,0 +1,228 @@
+//! Coupled k-means vector quantization — the VPTQ/GPTVQ-style baseline.
+//!
+//! Clusters the raw k-dimensional weight vectors with Euclidean k-means
+//! (the paper's Figure 1 uses exactly this to demonstrate the
+//! direction/magnitude sensitivity gap) and replaces each vector by its
+//! centroid index. Direction and magnitude stay *coupled* — the codebook
+//! spends capacity on both at once, which is the inefficiency PCDVQ removes.
+//!
+//! Centroids are trained per-quantizer on a subsample of the model's vectors
+//! (mini-batch Lloyd iterations), then shared across all matrices quantized
+//! by this instance — mirroring VPTQ's per-model codebooks while staying
+//! tractable on one core.
+
+use crate::quant::assign::{assign_euclidean, euclidean_bias, assign_batch};
+use crate::quant::{QuantizedWeight, Quantizer};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Coupled k-means VQ.
+#[derive(Clone, Debug)]
+pub struct KMeansVq {
+    /// Vector dimension.
+    pub k: usize,
+    /// Codebook bits (2^bits centroids).
+    pub bits: u32,
+    /// Trained centroids (None until [`Self::fit`]).
+    centroids: Option<Matrix>,
+    /// Lloyd iterations.
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl KMeansVq {
+    pub fn new(k: usize, bits: u32) -> Self {
+        KMeansVq { k, bits, centroids: None, iters: 4, seed: 0xC0DE }
+    }
+
+    /// Total index bits per vector.
+    pub fn index_bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn centroids(&self) -> Option<&Matrix> {
+        self.centroids.as_ref()
+    }
+
+    /// Train the codebook on sample vectors (rows of `samples`, dim k).
+    ///
+    /// Initialization follows the *distribution-aware* trick the paper's own
+    /// Fig 1 baseline uses (plain k-means on the data): random distinct data
+    /// vectors as seeds, then `iters` Lloyd steps over a capped sample.
+    pub fn fit(&mut self, samples: &Matrix) {
+        assert_eq!(samples.cols(), self.k);
+        let mut n_centers = 1usize << self.bits;
+        // A codebook larger than half the training pool would memorize the
+        // data (and a tiny model simply has fewer vectors than 2^16); shrink
+        // to the largest power of two ≤ pool/2 and keep the *nominal* bpw
+        // accounting — matching how VPTQ-style codebooks saturate on small
+        // layers.
+        if n_centers > samples.rows() / 2 {
+            n_centers = (samples.rows() / 2).next_power_of_two() / 2;
+            assert!(n_centers >= 2, "pool of {} too small for k-means", samples.rows());
+            eprintln!(
+                "[kmeans-vq] pool {} < 2x codebook; shrinking to {} centers",
+                samples.rows(),
+                n_centers
+            );
+        }
+        let cap = 120_000.min(samples.rows());
+        let mut rng = Rng::new(self.seed);
+
+        // subsample the training pool
+        let pool = if samples.rows() > cap {
+            let idx = rng.sample_indices(samples.rows(), cap);
+            let mut data = Vec::with_capacity(cap * self.k);
+            for &i in &idx {
+                data.extend_from_slice(samples.row(i));
+            }
+            Matrix::from_vec(data, cap, self.k)
+        } else {
+            samples.clone()
+        };
+        assert!(
+            pool.rows() >= n_centers,
+            "need at least {n_centers} sample vectors, got {}",
+            pool.rows()
+        );
+
+        // init: distinct random data vectors
+        let init = rng.sample_indices(pool.rows(), n_centers);
+        let mut data = Vec::with_capacity(n_centers * self.k);
+        for &i in &init {
+            data.extend_from_slice(pool.row(i));
+        }
+        let mut centers = Matrix::from_vec(data, n_centers, self.k);
+
+        for _ in 0..self.iters {
+            let assign = assign_euclidean(&pool, &centers);
+            let mut sums = vec![0.0f64; n_centers * self.k];
+            let mut counts = vec![0usize; n_centers];
+            for (i, &c) in assign.iter().enumerate() {
+                let c = c as usize;
+                counts[c] += 1;
+                for (s, &x) in sums[c * self.k..(c + 1) * self.k]
+                    .iter_mut()
+                    .zip(pool.row(i))
+                {
+                    *s += x as f64;
+                }
+            }
+            for c in 0..n_centers {
+                if counts[c] == 0 {
+                    // dead center: re-seed from a random pool vector
+                    let r = rng.below(pool.rows());
+                    centers.row_mut(c).copy_from_slice(pool.row(r));
+                } else {
+                    let inv = 1.0 / counts[c] as f64;
+                    for (dst, &s) in centers
+                        .row_mut(c)
+                        .iter_mut()
+                        .zip(&sums[c * self.k..(c + 1) * self.k])
+                    {
+                        *dst = (s * inv) as f32;
+                    }
+                }
+            }
+        }
+        self.centroids = Some(centers);
+    }
+
+    /// Fit directly on the vectors of a weight matrix (convenience used by
+    /// single-layer experiments like Fig 1b).
+    pub fn fit_on_weight(&mut self, w: &Matrix) {
+        let vectors = w.reshape_vectors(self.k);
+        self.fit(&vectors);
+    }
+}
+
+impl Quantizer for KMeansVq {
+    fn name(&self) -> String {
+        format!("kmeans-vq-k{}-{}b", self.k, self.bits)
+    }
+
+    fn quantize(&self, w: &Matrix) -> QuantizedWeight {
+        let centers = self
+            .centroids
+            .as_ref()
+            .expect("KMeansVq::fit must be called before quantize");
+        let vectors = w.reshape_vectors(self.k);
+        let bias = euclidean_bias(centers);
+        let idx = assign_batch(&vectors, centers, &bias);
+        let mut flat = vec![0.0f32; w.len()];
+        for (i, &c) in idx.iter().enumerate() {
+            flat[i * self.k..(i + 1) * self.k].copy_from_slice(centers.row(c as usize));
+        }
+        let deq = Matrix::from_vec(flat, w.rows(), w.cols());
+        let bits = vectors.rows() as u64 * self.bits as u64;
+        QuantizedWeight::new(deq, bits, self.name())
+    }
+
+    fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 / self.k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(rng.normal_vec(rows * cols), rows, cols)
+    }
+
+    #[test]
+    fn fit_then_quantize_reduces_error_vs_random_book() {
+        let w = gaussian(128, 64, 1);
+        let mut q = KMeansVq::new(8, 8);
+        q.fit_on_weight(&w);
+        let fitted_err = q.quantize(&w).dequantize().mse(&w);
+
+        // random (unfitted) codebook of the same size
+        let mut rnd = KMeansVq::new(8, 8);
+        rnd.centroids = Some(gaussian(256, 8, 99));
+        let rnd_err = rnd.quantize(&w).dequantize().mse(&w);
+        assert!(fitted_err < rnd_err, "fitted {fitted_err} vs random {rnd_err}");
+    }
+
+    #[test]
+    fn error_decreases_with_codebook_bits() {
+        // large enough that no bits setting triggers the pool/2 shrink
+        let w = gaussian(256, 256, 2);
+        let err = |bits: u32| {
+            let mut q = KMeansVq::new(8, bits);
+            q.fit_on_weight(&w);
+            q.quantize(&w).dequantize().mse(&w)
+        };
+        let (e4, e8, e10) = (err(4), err(8), err(10));
+        assert!(e4 > e8 && e8 > e10, "e4={e4} e8={e8} e10={e10}");
+    }
+
+    #[test]
+    fn bpw_accounting() {
+        let q = KMeansVq::new(8, 16);
+        assert!((q.bits_per_weight() - 2.0).abs() < 1e-12);
+        let q = KMeansVq::new(8, 17);
+        assert!((q.bits_per_weight() - 2.125).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantize_before_fit_panics() {
+        let w = gaussian(16, 8, 3);
+        let q = KMeansVq::new(8, 4);
+        let _ = q.quantize(&w);
+    }
+
+    #[test]
+    fn works_at_non_paper_dims() {
+        for k in [2usize, 4, 16] {
+            let w = gaussian(64, 32, 4);
+            let mut q = KMeansVq::new(k, 6);
+            q.fit_on_weight(&w);
+            let deq = q.quantize(&w).into_dequantized();
+            assert_eq!((deq.rows(), deq.cols()), (64, 32));
+        }
+    }
+}

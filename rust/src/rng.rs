@@ -1,0 +1,251 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The vendored crate set has no `rand` (only `rand_core` without any RNGs),
+//! so we carry our own: a [SplitMix64](https://prng.di.unimi.it/splitmix64.c)
+//! stream generator plus xoshiro256++ for bulk use, with helpers for the
+//! distributions the quantizers need (uniform, standard normal, permutations,
+//! Rademacher signs for the randomized Hadamard transform).
+//!
+//! Everything in the repository that consumes randomness takes an explicit
+//! seed so that artifacts (codebooks, sign vectors, synthetic tasks) are
+//! bit-reproducible across runs — the paper's codebooks are likewise "offline
+//! and performed only once for all circumstances" (§3.2.3).
+
+/// SplitMix64: used to seed xoshiro and for cheap one-off draws.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG. Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller output.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, unbiased).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid u == 0 so ln is finite.
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (sin, cos) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.spare_normal = Some(r * sin);
+        r * cos
+    }
+
+    /// Fill a slice with i.i.d. standard normals (f32).
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.normal() as f32;
+        }
+    }
+
+    /// Vector of `n` i.i.d. standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill_normal(&mut v);
+        v
+    }
+
+    /// Rademacher signs (+1/-1) — the diagonal of the randomized Hadamard
+    /// transform. One bit per entry, drawn from the raw stream.
+    pub fn signs(&mut self, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        let mut bits = 0u64;
+        for i in 0..n {
+            if i % 64 == 0 {
+                bits = self.next_u64();
+            }
+            out.push(if bits & 1 == 1 { 1.0 } else { -1.0 });
+            bits >>= 1;
+        }
+        out
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from `[0, n)` (floyd's algorithm for small
+    /// m, shuffle for large).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        if m * 4 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(m);
+            all
+        } else {
+            let mut chosen = std::collections::HashSet::with_capacity(m);
+            let mut out = Vec::with_capacity(m);
+            for j in (n - m)..n {
+                let t = self.below(j + 1);
+                let pick = if chosen.contains(&t) { j } else { t };
+                chosen.insert(pick);
+                out.push(pick);
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_smoke() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn signs_are_pm_one_and_balanced() {
+        let mut r = Rng::new(13);
+        let s = r.signs(100_000);
+        assert!(s.iter().all(|&x| x == 1.0 || x == -1.0));
+        let pos = s.iter().filter(|&&x| x > 0.0).count();
+        assert!((48_000..52_000).contains(&pos));
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(17);
+        for &(n, m) in &[(10, 3), (100, 90), (1000, 10)] {
+            let idx = r.sample_indices(n, m);
+            assert_eq!(idx.len(), m);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), m);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+}

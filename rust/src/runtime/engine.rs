@@ -1,0 +1,224 @@
+//! PJRT engine: compile HLO-text artifacts, execute them with host data or
+//! device-resident bound parameters.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::manifest::{Dtype, Manifest};
+
+/// Host-side input value for an executable call.
+#[derive(Clone, Debug)]
+pub enum Input {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Input {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Input::F32(_, d) | Input::I32(_, d) => d,
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            Input::F32(..) => Dtype::F32,
+            Input::I32(..) => Dtype::I32,
+        }
+    }
+}
+
+/// Owns the PJRT client. One per process; executables borrow it via clones of
+/// the underlying client handle (the xla crate's client is ref-counted).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<base>.hlo.txt` + `<base>.manifest` and compile.
+    pub fn load(&self, base: impl AsRef<Path>) -> Result<Executable> {
+        let base = base.as_ref();
+        let hlo_path: PathBuf = PathBuf::from(format!("{}.hlo.txt", base.display()));
+        let man_path: PathBuf = PathBuf::from(format!("{}.manifest", base.display()));
+        let manifest = Manifest::load(&man_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", hlo_path.display()))?;
+        Ok(Executable {
+            client: self.client.clone(),
+            exe,
+            manifest,
+            name: base.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+
+    /// Upload a host input to the device.
+    pub fn upload(&self, input: &Input) -> Result<xla::PjRtBuffer> {
+        match input {
+            Input::F32(data, dims) => self
+                .client
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading f32 buffer"),
+            Input::I32(data, dims) => self
+                .client
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading i32 buffer"),
+        }
+    }
+}
+
+/// A compiled AOT artifact plus its ordered input manifest.
+pub struct Executable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    pub name: String,
+}
+
+impl Executable {
+    /// Validate inputs against the manifest (count, dtype, shape).
+    fn check_inputs(&self, inputs: &[Input]) -> Result<()> {
+        if inputs.len() != self.manifest.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.manifest.len(),
+                inputs.len()
+            );
+        }
+        for (e, inp) in self.manifest.entries.iter().zip(inputs) {
+            if e.dtype != inp.dtype() {
+                bail!("{}: input '{}' dtype mismatch", self.name, e.name);
+            }
+            if e.dims != inp.dims() {
+                bail!(
+                    "{}: input '{}' shape mismatch: manifest {:?} vs {:?}",
+                    self.name,
+                    e.name,
+                    e.dims,
+                    inp.dims()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host inputs; returns the output literals (the AOT graphs
+    /// return 1-tuples — see gen path — which this unwraps).
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                let dims: Vec<i64> = inp.dims().iter().map(|&d| d as i64).collect();
+                match inp {
+                    Input::F32(data, _) => {
+                        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+                    }
+                    Input::I32(data, _) => {
+                        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+                    }
+                }
+            })
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convenience: run and read the first output as f32.
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Convenience: run and read the first output as i32.
+    pub fn run_i32(&self, inputs: &[Input]) -> Result<Vec<i32>> {
+        let outs = self.run(inputs)?;
+        Ok(outs[0].to_vec::<i32>()?)
+    }
+
+    /// Bind all inputs *except* the trailing `n_varying` ones as
+    /// device-resident buffers (weights, codebooks). The per-request path
+    /// then uploads only the varying inputs (tokens).
+    pub fn bind(self, fixed: &[Input], n_varying: usize) -> Result<BoundExecutable> {
+        if fixed.len() + n_varying != self.manifest.len() {
+            bail!(
+                "{}: bind expected {} fixed inputs, got {}",
+                self.name,
+                self.manifest.len() - n_varying,
+                fixed.len()
+            );
+        }
+        let mut buffers = Vec::with_capacity(fixed.len());
+        for (e, inp) in self.manifest.entries.iter().zip(fixed) {
+            if e.dims != inp.dims() || e.dtype != inp.dtype() {
+                bail!("{}: bound input '{}' mismatch", self.name, e.name);
+            }
+            let buf = match inp {
+                Input::F32(data, dims) => {
+                    self.client.buffer_from_host_buffer(data, dims, None)?
+                }
+                Input::I32(data, dims) => {
+                    self.client.buffer_from_host_buffer(data, dims, None)?
+                }
+            };
+            buffers.push(buf);
+        }
+        Ok(BoundExecutable { inner: self, fixed: buffers })
+    }
+}
+
+/// An executable with its leading parameters resident on device.
+pub struct BoundExecutable {
+    inner: Executable,
+    fixed: Vec<xla::PjRtBuffer>,
+}
+
+impl BoundExecutable {
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Execute with the bound parameters + freshly-uploaded varying inputs.
+    pub fn run(&self, varying: &[Input]) -> Result<Vec<xla::Literal>> {
+        let mut args: Vec<&xla::PjRtBuffer> = self.fixed.iter().collect();
+        let uploaded: Vec<xla::PjRtBuffer> = varying
+            .iter()
+            .map(|inp| match inp {
+                Input::F32(data, dims) => {
+                    self.inner.client.buffer_from_host_buffer(data, dims, None)
+                }
+                Input::I32(data, dims) => {
+                    self.inner.client.buffer_from_host_buffer(data, dims, None)
+                }
+            })
+            .collect::<std::result::Result<_, _>>()?;
+        args.extend(uploaded.iter());
+        let out = self.inner.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Run and read the first output as f32.
+    pub fn run_f32(&self, varying: &[Input]) -> Result<Vec<f32>> {
+        let outs = self.run(varying)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,140 @@
+//! Parser for the `.manifest` files `aot.py` writes next to every HLO
+//! artifact: one line per executable input, `<index> <name> <dtype> <dims>`.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Element type of a manifest entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One executable input.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub index: usize,
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl ManifestEntry {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Ordered input list of one AOT executable.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields, got {line:?}", lineno + 1);
+            }
+            let index: usize = parts[0].parse().context("bad index")?;
+            let dtype = match parts[2] {
+                "float32" => Dtype::F32,
+                "int32" => Dtype::I32,
+                other => bail!("manifest line {}: unsupported dtype {other}", lineno + 1),
+            };
+            let dims: Vec<usize> = if parts[3] == "scalar" {
+                vec![]
+            } else {
+                parts[3]
+                    .split(',')
+                    .map(|d| d.parse().context("bad dim"))
+                    .collect::<Result<_>>()?
+            };
+            if index != entries.len() {
+                bail!("manifest line {}: non-contiguous index {index}", lineno + 1);
+            }
+            entries.push(ManifestEntry { index, name: parts[1].to_string(), dtype, dims });
+        }
+        if entries.is_empty() {
+            bail!("empty manifest");
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Position of a named input.
+    pub fn position(&self, name: &str) -> Result<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.name == name)
+            .with_context(|| format!("manifest has no input named '{name}'"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        Ok(&self.entries[self.position(name)?])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+0 embed.tok float32 256,128
+1 tokens int32 8,128
+2 scale float32 scalar
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.entries[0].dims, vec![256, 128]);
+        assert_eq!(m.entries[0].element_count(), 256 * 128);
+        assert_eq!(m.entries[1].dtype, Dtype::I32);
+        assert_eq!(m.entries[2].dims, Vec::<usize>::new());
+        assert_eq!(m.position("tokens").unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_gap_in_indices() {
+        assert!(Manifest::parse("0 a float32 1\n2 b float32 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        assert!(Manifest::parse("0 a float64 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse("\n\n").is_err());
+    }
+
+    #[test]
+    fn missing_name_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.position("nope").is_err());
+    }
+}

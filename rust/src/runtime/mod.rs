@@ -1,0 +1,16 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts and executes them.
+//!
+//! The bridge between L3 (this crate) and L2/L1 (the JAX/Pallas graphs):
+//! `Engine` owns a CPU PJRT client; `Executable` pairs a compiled
+//! `PjRtLoadedExecutable` with its input `Manifest` (the ordered input list
+//! `aot.py` wrote next to the HLO). Device-resident parameter caching keeps
+//! the weight upload off the per-request path ([`Executable::bind`]).
+//!
+//! Interchange is HLO **text** — see /opt/xla-example/README.md for why
+//! serialized protos from jax ≥ 0.5 cannot be used with xla_extension 0.5.1.
+
+mod engine;
+mod manifest;
+
+pub use engine::{BoundExecutable, Engine, Executable, Input};
+pub use manifest::{Manifest, ManifestEntry};

@@ -1,0 +1,283 @@
+//! Special functions and the chi(k) magnitude distribution (paper Eq. 11).
+//!
+//! After Gaussian regularization the k-dimensional vector magnitudes follow
+//! the *chi* distribution with k degrees of freedom (`r² ~ χ²(k)`), whose PDF
+//! and CDF the paper derives in §A.1:
+//!
+//! ```text
+//! f(r) = 2^{1-k/2} / Γ(k/2) · r^{k-1} · e^{-r²/2}
+//! F(r) = P(k/2, r²/2)            (regularized lower incomplete gamma)
+//! ```
+//!
+//! Lloyd-Max additionally needs cell centroids `∫ t f(t) dt / ΔF`, which
+//! reduce analytically to incomplete-gamma differences (see
+//! [`ChiDistribution::partial_mean`]), so no numerical integration is needed.
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+/// |relative error| < 1e-13 over the positive reals.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma `P(a, x) = γ(a,x)/Γ(a)`.
+///
+/// Series expansion for `x < a+1`, continued fraction otherwise — the
+/// classic Numerical-Recipes split, accurate to ~1e-12.
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0, "gamma_p requires a > 0");
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        gamma_p_series(a, x)
+    } else {
+        1.0 - gamma_q_cf(a, x)
+    }
+}
+
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    // Lentz's algorithm for the continued fraction of Q(a,x).
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    h * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+/// The chi distribution with `k` degrees of freedom — the law of the
+/// magnitude `r = ‖v‖` of a k-vector of i.i.d. standard normals.
+#[derive(Clone, Copy, Debug)]
+pub struct ChiDistribution {
+    /// Degrees of freedom (the VQ vector dimension, k = 8 in the paper).
+    pub k: usize,
+}
+
+impl ChiDistribution {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        ChiDistribution { k }
+    }
+
+    /// PDF `f(r)` from Eq. 11 / Eq. 17.
+    pub fn pdf(&self, r: f64) -> f64 {
+        if r < 0.0 {
+            return 0.0;
+        }
+        if r == 0.0 {
+            return if self.k == 1 {
+                (2.0 / std::f64::consts::PI).sqrt()
+            } else {
+                0.0
+            };
+        }
+        let k = self.k as f64;
+        let ln_f = (1.0 - k / 2.0) * std::f64::consts::LN_2 - ln_gamma(k / 2.0)
+            + (k - 1.0) * r.ln()
+            - r * r / 2.0;
+        ln_f.exp()
+    }
+
+    /// CDF `F(r) = P(k/2, r²/2)` from Eq. 11 / Eq. 20.
+    pub fn cdf(&self, r: f64) -> f64 {
+        if r <= 0.0 {
+            return 0.0;
+        }
+        gamma_p(self.k as f64 / 2.0, r * r / 2.0)
+    }
+
+    /// Inverse CDF by bisection + Newton polish. `p` in (0,1).
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..1.0).contains(&p), "quantile needs p in [0,1), got {p}");
+        if p == 0.0 {
+            return 0.0;
+        }
+        let (mut lo, mut hi) = (0.0f64, (self.k as f64).sqrt() + 1.0);
+        while self.cdf(hi) < p {
+            hi *= 2.0;
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.cdf(mid) < p {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            if hi - lo < 1e-12 {
+                break;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Mean `E[r] = √2 · Γ((k+1)/2) / Γ(k/2)`.
+    pub fn mean(&self) -> f64 {
+        let k = self.k as f64;
+        std::f64::consts::SQRT_2
+            * (ln_gamma((k + 1.0) / 2.0) - ln_gamma(k / 2.0)).exp()
+    }
+
+    /// Unnormalized partial first moment `∫_a^b t·f(t) dt`.
+    ///
+    /// With `y = t²/2`: `∫ t·f(t) dt = √2·Γ((k+1)/2)/Γ(k/2) · ΔP((k+1)/2, t²/2)`
+    /// — i.e. the chi mean times the mass a chi(k+1)-shaped measure assigns to
+    /// the cell. Exact, no quadrature.
+    pub fn partial_mean(&self, a: f64, b: f64) -> f64 {
+        assert!(b >= a && a >= 0.0);
+        let k = self.k as f64;
+        let coef = self.mean();
+        let ap = (k + 1.0) / 2.0;
+        coef * (gamma_p(ap, b * b / 2.0) - gamma_p(ap, a * a / 2.0))
+    }
+
+    /// Centroid (conditional mean) of the interval `[a, b]`.
+    pub fn centroid(&self, a: f64, b: f64) -> f64 {
+        let mass = self.cdf(b) - self.cdf(a);
+        if mass <= 1e-300 {
+            return 0.5 * (a + b);
+        }
+        self.partial_mean(a, b) / mass
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(3)=2, Γ(4)=6, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+        assert!(ln_gamma(2.0).abs() < 1e-12);
+        assert!((ln_gamma(3.0) - 2.0f64.ln()).abs() < 1e-12);
+        assert!((ln_gamma(4.0) - 6.0f64.ln()).abs() < 1e-12);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_p_known_values() {
+        // P(1, x) = 1 - e^{-x}
+        for &x in &[0.1, 0.5, 1.0, 2.0, 5.0, 10.0] {
+            assert!((gamma_p(1.0, x) - (1.0 - (-x as f64).exp())).abs() < 1e-12);
+        }
+        // P(a, 0) = 0, P(a, inf) -> 1
+        assert_eq!(gamma_p(3.0, 0.0), 0.0);
+        assert!((gamma_p(3.0, 100.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi_cdf_matches_pdf_integral() {
+        // trapezoidal integration of pdf should match cdf
+        let chi = ChiDistribution::new(8);
+        let n = 20_000;
+        let hi = 6.0;
+        let dx = hi / n as f64;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let x0 = i as f64 * dx;
+            let x1 = x0 + dx;
+            acc += 0.5 * (chi.pdf(x0) + chi.pdf(x1)) * dx;
+            if (i + 1) % 5000 == 0 {
+                let diff = (acc - chi.cdf(x1)).abs();
+                assert!(diff < 1e-6, "x={x1} diff={diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn chi_mean_matches_montecarlo() {
+        use crate::rng::Rng;
+        let chi = ChiDistribution::new(8);
+        let mut rng = Rng::new(31);
+        let n = 50_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let v: f64 = (0..8).map(|_| rng.normal().powi(2)).sum();
+            s += v.sqrt();
+        }
+        let mc = s / n as f64;
+        assert!((chi.mean() - mc).abs() < 0.01, "analytic={} mc={}", chi.mean(), mc);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let chi = ChiDistribution::new(8);
+        for &p in &[0.01, 0.25, 0.5, 0.75, 0.99, 0.9999] {
+            let r = chi.quantile(p);
+            assert!((chi.cdf(r) - p).abs() < 1e-9, "p={p} r={r}");
+        }
+    }
+
+    #[test]
+    fn partial_mean_sums_to_mean() {
+        let chi = ChiDistribution::new(8);
+        let total = chi.partial_mean(0.0, 100.0);
+        assert!((total - chi.mean()).abs() < 1e-9);
+        // additivity
+        let a = chi.partial_mean(0.0, 2.0) + chi.partial_mean(2.0, 100.0);
+        assert!((a - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centroid_inside_cell() {
+        let chi = ChiDistribution::new(8);
+        let c = chi.centroid(2.0, 3.0);
+        assert!((2.0..3.0).contains(&c));
+    }
+}

@@ -1,0 +1,173 @@
+//! Row-major `f32` matrix.
+
+use std::fmt;
+
+/// Dense row-major matrix of `f32`.
+///
+/// This is deliberately tiny: the quantization pipeline treats weights as 2-D
+/// arrays and reshapes them into `(n_vectors, k)` groups; everything else
+/// (model forward passes) happens inside the AOT-compiled XLA executables.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Zero-filled `rows x cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a flat row-major buffer. Panics if sizes disagree.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix size mismatch");
+        Matrix { data, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Borrow the flat row-major buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Column `j` as an owned vector (columns are strided in row-major).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for (i, &x) in v.iter().enumerate() {
+            self.set(i, j, x);
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Reinterpret as a `(len/k, k)` matrix of row vectors — the VQ reshape
+    /// from the paper (Eq. 2). Panics unless `k` divides the element count.
+    pub fn reshape_vectors(&self, k: usize) -> Matrix {
+        assert_eq!(self.len() % k, 0, "k must divide element count");
+        Matrix::from_vec(self.data.clone(), self.len() / k, k)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean squared elementwise difference to another same-shaped matrix.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut s = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (a - b) as f64;
+            s += d * d;
+        }
+        s / self.data.len() as f64
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_and_indexing() {
+        let m = Matrix::from_vec(vec![1., 2., 3., 4., 5., 6.], 2, 3);
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.get(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_vec((0..12).map(|x| x as f32).collect(), 3, 4);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    fn reshape_vectors_shape() {
+        let m = Matrix::from_vec((0..16).map(|x| x as f32).collect(), 4, 4);
+        let v = m.reshape_vectors(8);
+        assert_eq!((v.rows(), v.cols()), (2, 8));
+        assert_eq!(v.row(1)[0], 8.0);
+    }
+
+    #[test]
+    fn mse_zero_on_self() {
+        let m = Matrix::from_vec(vec![1., -2., 0.5, 3.], 2, 2);
+        assert_eq!(m.mse(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        Matrix::from_vec(vec![1.0; 5], 2, 3);
+    }
+}

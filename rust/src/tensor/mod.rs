@@ -1,0 +1,37 @@
+//! Minimal dense-tensor substrate.
+//!
+//! No `ndarray` is available offline, and the quantizers only need a small,
+//! predictable surface: row-major `f32` matrices with views, GEMM, norms, and
+//! a few reductions. Keeping this in-tree also gives the performance pass one
+//! hot loop (`matmul`) to own end-to-end.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{argmax, dot, matmul, matmul_transposed, norm2, squared_distance};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert!((norm2(&a) - (14.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_wins_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn squared_distance_zero_on_self() {
+        let a = [0.5, -0.25, 8.0];
+        assert_eq!(squared_distance(&a, &a), 0.0);
+    }
+}

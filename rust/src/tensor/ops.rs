@@ -1,0 +1,161 @@
+//! Hot-loop kernels over slices: dot products, GEMM, reductions.
+//!
+//! These are the L3 compute primitives behind codebook construction and
+//! direction assignment. They are written so LLVM's autovectorizer produces
+//! packed SSE/AVX on the single-core testbed: fixed-width inner chunks,
+//! no bounds checks in the inner loop, accumulation in independent lanes.
+
+use super::Matrix;
+
+/// Dot product with 4-lane unrolling (keeps the FP dependency chain short so
+/// the autovectorizer can use packed adds).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        // SAFETY-free: slicing keeps bounds checks out of the loop body.
+        let (a4, b4) = (&a[i..i + 4], &b[i..i + 4]);
+        s0 += a4[0] * b4[0];
+        s1 += a4[1] * b4[1];
+        s2 += a4[2] * b4[2];
+        s3 += a4[3] * b4[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn squared_distance(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Index of the maximum element (first occurrence wins on ties).
+#[inline]
+pub fn argmax(xs: &[f32]) -> usize {
+    debug_assert!(!xs.is_empty());
+    let mut best = 0usize;
+    let mut best_v = xs[0];
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// `C = A @ B` for row-major matrices. i-k-j loop order so the inner loop is
+/// a contiguous AXPY over a row of `B` — the standard cache-friendly layout
+/// for row-major GEMM without blocking.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul shape mismatch: {}x{} @ {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate().take(k) {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A @ B^T` — both operands row-major, so each output element is a dot
+/// of two contiguous rows. This is the layout used by direction assignment
+/// (`vectors @ codebook^T`).
+pub fn matmul_transposed(a: &Matrix, bt: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols(),
+        bt.cols(),
+        "matmul_transposed inner-dim mismatch: {} vs {}",
+        a.cols(),
+        bt.cols()
+    );
+    let (m, n) = (a.rows(), bt.rows());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = dot(arow, bt.row(j));
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(vec![1., 2., 3., 4.], 2, 2);
+        let b = Matrix::from_vec(vec![5., 6., 7., 8.], 2, 2);
+        let c = matmul(&a, &b);
+        assert_eq!(c.as_slice(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec((0..6).map(|x| x as f32).collect(), 2, 3);
+        let mut id = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            id.set(i, i, 1.0);
+        }
+        assert_eq!(matmul(&a, &id), a);
+    }
+
+    #[test]
+    fn matmul_transposed_matches_matmul() {
+        let a = Matrix::from_vec((0..12).map(|x| (x as f32).sin()).collect(), 3, 4);
+        let b = Matrix::from_vec((0..20).map(|x| (x as f32).cos()).collect(), 4, 5);
+        let c1 = matmul(&a, &b);
+        let c2 = matmul_transposed(&a, &b.transposed());
+        for (x, y) in c1.as_slice().iter().zip(c2.as_slice()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_handles_ragged_tail() {
+        // length not divisible by 4 exercises the scalar tail
+        let a: Vec<f32> = (0..7).map(|x| x as f32).collect();
+        let b = vec![1.0f32; 7];
+        assert_eq!(dot(&a, &b), 21.0);
+    }
+}

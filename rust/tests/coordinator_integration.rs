@@ -1,0 +1,161 @@
+//! Coordinator integration: scheduler determinism under contention, batcher
+//! + server against the real AOT artifacts, fwd_q ≡ fake-quant fwd_fp.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
+use pcdvq::config::{build_pcdvq_with, Paths};
+use pcdvq::coordinator::{
+    quantize_model_parallel, Batcher, BatcherConfig, GenRequest, Server, ServingWeights,
+};
+use pcdvq::model::QuantizedGpt;
+use pcdvq::runtime::Engine;
+
+fn artifacts_ready() -> Option<Paths> {
+    let paths = Paths::detect();
+    if paths.artifacts.join("fwd_q_gpt-mini.hlo.txt").exists() {
+        Some(paths)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn fwd_q_matches_fake_quant_fwd_fp() {
+    // The serving artifact (in-graph dequant from codes) must produce the
+    // same logits as running the dense fake-quant weights through fwd_fp —
+    // the strongest cross-layer consistency check in the repo.
+    let Some(paths) = artifacts_ready() else { return };
+    let model = paths.load_model("gpt-mini").unwrap();
+    let engine = Engine::new().unwrap();
+    let pcdvq = build_pcdvq_with(
+        &paths,
+        DirectionMethod::GreedyE8,
+        MagnitudeMethod::LloydMax,
+        14,
+        2,
+        7,
+    )
+    .unwrap();
+
+    // path A: dense fake-quant through fwd_fp
+    let (fake, _) = quantize_model_parallel(&model, &pcdvq, 2);
+    let exe_fp = engine.load(paths.artifacts.join("fwd_fp_gpt-mini_b8")).unwrap();
+    let fixed = pcdvq::eval::weight_inputs(&fake, &exe_fp.manifest).unwrap();
+    let tokens: Vec<i32> = (0..8 * 128).map(|i| (i * 13 % 251) as i32).collect();
+    let mut inputs = fixed;
+    inputs.push(pcdvq::runtime::Input::I32(tokens.clone(), vec![8, 128]));
+    let logits_fp = exe_fp.run_f32(&inputs).unwrap();
+
+    // path B: codes through fwd_q
+    let q = QuantizedGpt::quantize(&model, &pcdvq);
+    let exe_q = engine.load(paths.artifacts.join("fwd_q_gpt-mini")).unwrap();
+    let fixed_q =
+        pcdvq::coordinator::server::quantized_inputs(&q, &pcdvq.dir, &pcdvq.mag, &exe_q.manifest)
+            .unwrap();
+    let mut inputs_q = fixed_q;
+    inputs_q.push(pcdvq::runtime::Input::I32(tokens, vec![8, 128]));
+    let logits_q = exe_q.run_f32(&inputs_q).unwrap();
+
+    assert_eq!(logits_fp.len(), logits_q.len());
+    let mut max_diff = 0.0f32;
+    for (a, b) in logits_fp.iter().zip(&logits_q) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 5e-2, "fwd_q vs fake-quant fwd_fp max logit diff {max_diff}");
+}
+
+#[test]
+fn scheduler_deterministic_under_contention() {
+    let Some(paths) = artifacts_ready() else { return };
+    let model = paths.load_model("gpt-mini").unwrap();
+    let q = build_pcdvq_with(
+        &paths,
+        DirectionMethod::GreedyE8,
+        MagnitudeMethod::LloydMax,
+        10,
+        2,
+        7,
+    )
+    .unwrap();
+    let (a, sa) = quantize_model_parallel(&model, &q, 1);
+    let (b, sb) = quantize_model_parallel(&model, &q, 4);
+    for name in model.config.quantizable_names() {
+        assert_eq!(
+            a.tensors[&name].as_slice(),
+            b.tensors[&name].as_slice(),
+            "nondeterministic result for {name}"
+        );
+    }
+    assert_eq!(sa.payload_bits, sb.payload_bits);
+}
+
+#[test]
+fn server_round_trip_with_batcher() {
+    let Some(paths) = artifacts_ready() else { return };
+    let model = paths.load_model("gpt-mini").unwrap();
+    let engine = Engine::new().unwrap();
+    let mut server =
+        Server::new(&engine, &paths.artifacts, ServingWeights::Fp(model)).unwrap();
+
+    let (tx, rx) = channel::<GenRequest>();
+    let batcher = Batcher::new(
+        rx,
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..5 {
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt: format!("fn main{i}() {{").into_bytes(),
+            max_new: 6,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        rxs.push(rrx);
+    }
+    drop(tx);
+    server.serve(&batcher).unwrap();
+    for rrx in rxs {
+        let resp = rrx.recv().expect("response missing");
+        assert_eq!(resp.generated.len(), 6);
+    }
+    assert_eq!(server.metrics.requests, 5);
+    assert!(server.metrics.tokens_generated >= 30);
+    // greedy decode of identical prompts must be deterministic across slots
+}
+
+#[test]
+fn greedy_generation_deterministic() {
+    let Some(paths) = artifacts_ready() else { return };
+    let model = paths.load_model("gpt-mini").unwrap();
+    let engine = Engine::new().unwrap();
+    let mut outs = Vec::new();
+    for _ in 0..2 {
+        let mut server = Server::new(
+            &engine,
+            &paths.artifacts,
+            ServingWeights::Fp(model.clone()),
+        )
+        .unwrap();
+        let (tx, rx) = channel::<GenRequest>();
+        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt: b"the quantization".to_vec(),
+            max_new: 8,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        server.serve(&batcher).unwrap();
+        outs.push(rrx.recv().unwrap().generated);
+    }
+    assert_eq!(outs[0], outs[1], "greedy decode must be reproducible");
+}

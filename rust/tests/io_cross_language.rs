@@ -1,0 +1,97 @@
+//! Cross-language IO: rust reads what python wrote (and vice versa via a
+//! subprocess), plus the trained-artifact containers themselves.
+
+use pcdvq::config::Paths;
+use pcdvq::io::{Entry, Pct};
+
+#[test]
+fn rust_reads_python_written_containers() {
+    // the build artifacts were written by python/compile/pct.py
+    let paths = Paths::detect();
+    let corpus = paths.artifacts.join("corpus_eval.pct");
+    if !corpus.exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let pct = Pct::load(&corpus).unwrap();
+    let tokens = pct.get("tokens").unwrap().as_u32().unwrap();
+    assert!(tokens.len() > 10_000);
+    assert!(tokens.iter().all(|&t| t < 256));
+
+    let model = Pct::load(paths.artifacts.join("gpt-mini.pct")).unwrap();
+    assert!(model.contains("embed.tok"));
+    assert_eq!(model.get("meta.vocab").unwrap().scalar_u64().unwrap(), 256);
+    let e = model.get("embed.tok").unwrap();
+    assert_eq!(e.dims, vec![256, 128]);
+    assert!(e.as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn python_reads_rust_written_container() {
+    // write with rust, read back with python/compile/pct.py in a subprocess
+    let dir = std::env::temp_dir().join("pcdvq_xlang");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rust_written.pct");
+    let mut p = Pct::new();
+    p.insert("w", Entry::f32(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, 1e-7, -9.0]));
+    p.insert("idx", Entry::u32(&[4], vec![0, 7, 42, u32::MAX]));
+    p.insert("seed", Entry::u64(&[1], vec![0xDEAD_BEEF_CAFE]));
+    p.save(&path).unwrap();
+
+    let script = format!(
+        "import sys; sys.path.insert(0, '{root}/python')\n\
+         from compile import pct\n\
+         import numpy as np\n\
+         d = pct.load('{path}')\n\
+         assert d['w'].shape == (2, 3), d['w'].shape\n\
+         assert abs(d['w'][1, 0] - 3.25) < 1e-9\n\
+         assert d['idx'][3] == 2**32 - 1\n\
+         assert d['seed'][0] == 0xDEADBEEFCAFE\n\
+         print('XLANG_OK')",
+        root = env!("CARGO_MANIFEST_DIR"),
+        path = path.display()
+    );
+    let out = std::process::Command::new("python")
+        .arg("-c")
+        .arg(&script)
+        .output()
+        .expect("python not runnable");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("XLANG_OK"),
+        "python failed to read rust PCT1: {}\n{}",
+        stdout,
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn manifest_agrees_with_model_container() {
+    let paths = Paths::detect();
+    let man_path = paths.artifacts.join("fwd_fp_gpt-mini_b8.manifest");
+    if !man_path.exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let manifest = pcdvq::runtime::Manifest::load(&man_path).unwrap();
+    let model = paths.load_model("gpt-mini").unwrap();
+    // every non-token manifest input exists in the container with matching
+    // element counts
+    for e in &manifest.entries {
+        if e.name == "tokens" {
+            continue;
+        }
+        let t = model.tensor(&e.name).unwrap();
+        assert_eq!(t.len(), e.element_count(), "{}", e.name);
+    }
+    // and the sorted order matches (BTreeMap ↔ python sorted())
+    let names: Vec<&str> = manifest
+        .entries
+        .iter()
+        .map(|e| e.name.as_str())
+        .filter(|n| *n != "tokens")
+        .collect();
+    let mut sorted = names.clone();
+    sorted.sort();
+    assert_eq!(names, sorted, "manifest weights not in sorted order");
+}

@@ -1,0 +1,190 @@
+//! Property-based invariants (hand-rolled helper — see `pcdvq::proptest`).
+//!
+//! Every failure prints a `PCDVQ_PROP_SEED` that reproduces the exact case.
+
+use std::sync::Arc;
+
+use pcdvq::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod};
+use pcdvq::hadamard::{deregularize, fwht_normalized, regularize, RandomizedHadamard};
+use pcdvq::proptest::for_cases;
+use pcdvq::quant::assign::{assign_batch, assign_euclidean};
+use pcdvq::quant::error::decompose;
+use pcdvq::quant::packing::{splice, unsplice, PackedIndices};
+use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
+use pcdvq::stats::ChiDistribution;
+use pcdvq::tensor::{dot, squared_distance};
+
+#[test]
+fn prop_fwht_is_isometry_and_involution() {
+    for_cases(25, 0xA1, |g| {
+        let n = g.pow2_in(8, 512);
+        let mut x = g.rng.normal_vec(n);
+        let orig = x.clone();
+        let norm0: f32 = x.iter().map(|v| v * v).sum();
+        fwht_normalized(&mut x);
+        let norm1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() / norm0.max(1e-6) < 1e-3, "norm not preserved");
+        fwht_normalized(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-3, "involution violated");
+        }
+    });
+}
+
+#[test]
+fn prop_regularize_round_trips() {
+    for_cases(20, 0xB2, |g| {
+        let rows = g.pow2_in(16, 256);
+        let cols = g.usize_in(1, 24);
+        let w = g.matrix(rows, cols, 0.02);
+        let rht = RandomizedHadamard::new(rows, g.case_seed);
+        let (h, scales) = regularize(&w, &rht);
+        let back = deregularize(&h, &scales, &rht);
+        assert!(back.mse(&w) < 1e-6, "round trip mse {}", back.mse(&w));
+    });
+}
+
+#[test]
+fn prop_packing_bijective() {
+    for_cases(30, 0xC3, |g| {
+        let width = g.usize_in(1, 40) as u32;
+        let n = g.usize_in(1, 500);
+        let mask = if width >= 63 { u64::MAX >> 1 } else { (1u64 << width) - 1 };
+        let values: Vec<u64> = (0..n).map(|_| g.rng.next_u64() & mask).collect();
+        let packed = PackedIndices::pack(&values, width);
+        assert_eq!(packed.unpack(), values);
+        // random access agrees
+        for _ in 0..10.min(n) {
+            let i = g.rng.below(n);
+            assert_eq!(packed.get(i), values[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_splice_bijective() {
+    for_cases(40, 0xD4, |g| {
+        let a = g.usize_in(1, 24) as u32;
+        let b = g.usize_in(1, 8) as u32;
+        let d = (g.rng.next_u64() & ((1 << a) - 1)) as u32;
+        let m = (g.rng.next_u64() & ((1 << b) - 1)) as u32;
+        assert_eq!(unsplice(splice(d, m, a), a), (d, m));
+    });
+}
+
+#[test]
+fn prop_assignment_is_optimal() {
+    // no codebook row may score higher than the assigned one
+    for_cases(15, 0xE5, |g| {
+        let n = g.usize_in(1, 60);
+        let m = g.usize_in(2, 700);
+        let k = [2, 4, 8, 8, 16][g.usize_in(0, 4)];
+        let vectors = g.matrix(n, k, 0.0);
+        let cb = g.unit_vectors(m, k);
+        let idx = assign_batch(&vectors, &cb, &[]);
+        for i in 0..n {
+            let s_assigned = dot(vectors.row(i), cb.row(idx[i] as usize));
+            for j in 0..m {
+                assert!(
+                    dot(vectors.row(i), cb.row(j)) <= s_assigned + 1e-4,
+                    "case {}: better codeword exists",
+                    g.case_seed
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_euclidean_assignment_is_nearest() {
+    for_cases(12, 0xF6, |g| {
+        let n = g.usize_in(1, 40);
+        let m = g.usize_in(2, 400);
+        let vectors = g.matrix(n, 8, 0.0);
+        let cb = g.matrix(m, 8, 0.0);
+        let idx = assign_euclidean(&vectors, &cb);
+        for i in 0..n {
+            let d_assigned = squared_distance(vectors.row(i), cb.row(idx[i] as usize));
+            for j in 0..m {
+                assert!(
+                    squared_distance(vectors.row(i), cb.row(j)) >= d_assigned - 1e-3,
+                    "closer codeword exists"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pcdvq_error_bounded_by_covering() {
+    // dequant(quant(w)) error per vector is bounded by (covering angle
+    // error + magnitude cell width); we check the aggregate is bounded by
+    // the unit variance — i.e. quantization never *adds* energy on average.
+    let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 10, 8, 0));
+    let mag = Arc::new(MagnitudeCodebook::build(MagnitudeMethod::LloydMax, 2, 8, 1.0 - 1e-4, 0));
+    for_cases(10, 0x17, |g| {
+        let rows = g.pow2_in(32, 128);
+        let cols = g.usize_in(1, 3) * 8;
+        let w = g.matrix(rows, cols, 0.01);
+        let q = Pcdvq::new(
+            PcdvqConfig { dir_bits: 10, mag_bits: 2, k: 8, seed: g.case_seed },
+            dir.clone(),
+            mag.clone(),
+        );
+        let deq = q.dequantize_full(&q.quantize_full(&w));
+        let var: f64 = w.as_slice().iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / w.len() as f64;
+        let rel = deq.mse(&w) / var.max(1e-9);
+        assert!(rel < 0.9, "relative error {rel} out of bound");
+    });
+}
+
+#[test]
+fn prop_eq5_decomposition_identity() {
+    // ‖v−c‖² == Δr² + 2‖v‖‖c‖(1−cosθ) for arbitrary vector pairs (Eq. 5)
+    for_cases(25, 0x28, |g| {
+        let n = g.usize_in(1, 50);
+        let v = g.matrix(n, 8, 0.05);
+        let mut c = v.clone();
+        for x in c.as_mut_slice() {
+            *x += 0.3 * g.rng.normal() as f32;
+        }
+        let d = decompose(&v, &c);
+        let recon = d.magnitude_mse + d.direction_cross_mse;
+        let denom = d.total_mse.max(1e-12);
+        assert!(
+            ((recon - d.total_mse) / denom).abs() < 5e-3,
+            "Eq.5 identity violated: {recon} vs {}",
+            d.total_mse
+        );
+    });
+}
+
+#[test]
+fn prop_chi_cdf_monotone_and_quantile_inverse() {
+    for_cases(20, 0x39, |g| {
+        let k = g.usize_in(1, 32);
+        let chi = ChiDistribution::new(k);
+        let r1 = g.f32_in(0.0, 4.0) as f64;
+        let r2 = r1 + g.f32_in(0.001, 3.0) as f64;
+        assert!(chi.cdf(r2) >= chi.cdf(r1));
+        let p = g.f32_in(0.01, 0.99) as f64;
+        let r = chi.quantile(p);
+        assert!((chi.cdf(r) - p).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_magnitude_assignment_nearest_level() {
+    let mag = MagnitudeCodebook::build(MagnitudeMethod::LloydMax, 4, 8, 1.0 - 1e-4, 0);
+    for_cases(30, 0x4A, |g| {
+        let r = g.f32_in(0.0, 8.0);
+        let idx = mag.assign(r) as usize;
+        for (j, &l) in mag.levels.iter().enumerate() {
+            assert!(
+                (r - mag.levels[idx]).abs() <= (r - l).abs() + 1e-5,
+                "level {j} closer than assigned {idx} for r={r}"
+            );
+        }
+    });
+}

@@ -1,0 +1,170 @@
+//! Integration: the Rust runtime loads + executes the AOT artifacts and the
+//! numbers agree with the L2/L1 semantics.
+//!
+//! These tests are skipped (cleanly, with a note) when `artifacts/` has not
+//! been built — run `make artifacts` first.
+
+use pcdvq::eval::weight_inputs;
+use pcdvq::model::GptModel;
+use pcdvq::runtime::{Engine, Input};
+use pcdvq::tensor::Matrix;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("fwd_fp_gpt-mini_b8.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn fwd_fp_executes_and_produces_finite_logits() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let exe = engine.load(dir.join("fwd_fp_gpt-mini_b8")).unwrap();
+    let model = GptModel::load(dir.join("gpt-mini.pct")).unwrap();
+    let mut inputs = weight_inputs(&model, &exe.manifest).unwrap();
+    let ctx = model.config.ctx;
+    inputs.push(Input::I32(vec![65i32; 8 * ctx], vec![8, ctx]));
+    let out = exe.run_f32(&inputs).unwrap();
+    assert_eq!(out.len(), 8 * ctx * model.config.vocab);
+    assert!(out.iter().all(|x| x.is_finite()));
+    // the model is trained: logits should be far from uniform
+    let mx = out.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mn = out.iter().fold(f32::INFINITY, |m, &x| m.min(x));
+    assert!(mx - mn > 2.0, "logit range {mn}..{mx} suspiciously flat");
+}
+
+#[test]
+fn bound_executable_matches_unbound() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let model = GptModel::load(dir.join("gpt-mini.pct")).unwrap();
+    let ctx = model.config.ctx;
+    let tokens = Input::I32((0..8 * ctx as i32).map(|i| i % 251).collect(), vec![8, ctx]);
+
+    let exe = engine.load(dir.join("fwd_fp_gpt-mini_b8")).unwrap();
+    let weights = weight_inputs(&model, &exe.manifest).unwrap();
+    let mut all = weights.clone();
+    all.push(tokens.clone());
+    let unbound = exe.run_f32(&all).unwrap();
+
+    let exe2 = engine.load(dir.join("fwd_fp_gpt-mini_b8")).unwrap();
+    let bound = exe2.bind(&weights, 1).unwrap();
+    let bound_out = bound.run_f32(&[tokens]).unwrap();
+
+    assert_eq!(unbound.len(), bound_out.len());
+    for (a, b) in unbound.iter().zip(&bound_out) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn assign_chunk_kernel_matches_rust_assigner() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let exe = engine.load(dir.join("assign_chunk")).unwrap();
+    // geometry from the manifest
+    let ve = exe.manifest.entry("vectors").unwrap().dims.clone();
+    let ce = exe.manifest.entry("codebook").unwrap().dims.clone();
+    let (n, k, m) = (ve[0], ve[1], ce[0]);
+
+    let mut rng = pcdvq::rng::Rng::new(33);
+    let vectors = Matrix::from_vec(rng.normal_vec(n * k), n, k);
+    let mut cb = Matrix::from_vec(rng.normal_vec(m * k), m, k);
+    for i in 0..m {
+        let r = cb.row_mut(i);
+        let nrm: f32 = r.iter().map(|x| x * x).sum::<f32>().sqrt();
+        r.iter_mut().for_each(|x| *x /= nrm);
+    }
+
+    let out = exe
+        .run_i32(&[
+            Input::F32(vectors.as_slice().to_vec(), ve),
+            Input::F32(cb.as_slice().to_vec(), ce),
+        ])
+        .unwrap();
+    let rust_idx = pcdvq::quant::assign::assign_batch(&vectors, &cb, &[]);
+    assert_eq!(out.len(), rust_idx.len());
+    let mismatches = out
+        .iter()
+        .zip(&rust_idx)
+        .filter(|(a, b)| **a as u32 != **b)
+        .count();
+    // ties can break differently between argmax implementations; require
+    // essentially-exact agreement
+    assert!(
+        mismatches * 1000 < n,
+        "{mismatches}/{n} assignment mismatches between Pallas kernel and rust"
+    );
+}
+
+#[test]
+fn dequant_kernel_matches_rust_dequant() {
+    let Some(dir) = artifacts() else { return };
+    use pcdvq::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook};
+    use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
+    use std::sync::Arc;
+
+    let engine = Engine::new().unwrap();
+    let exe = engine.load(dir.join("dequant_weight")).unwrap();
+    let rows = 128usize;
+    let cols = 512usize;
+    let a = 14u32;
+
+    // quantize a synthetic weight with the real PCDVQ pipeline
+    let dir_cb = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, a, 8, 0));
+    let mag_cb = Arc::new(MagnitudeCodebook::paper_default(2, 8));
+    let pcdvq = Pcdvq::new(
+        PcdvqConfig { dir_bits: a, mag_bits: 2, k: 8, seed: 5 },
+        dir_cb.clone(),
+        mag_cb.clone(),
+    );
+    let mut rng = pcdvq::rng::Rng::new(44);
+    let w = Matrix::from_vec(rng.normal_vec(rows * cols), rows, cols);
+    let qw = pcdvq.quantize_full(&w);
+    let rust_deq = pcdvq.dequantize_full(&qw);
+
+    // feed the same codes to the Pallas dequant artifact
+    let n_vec = qw.n_vectors();
+    let mut dir_idx = Vec::with_capacity(n_vec);
+    let mut mag_idx = Vec::with_capacity(n_vec);
+    for i in 0..n_vec {
+        let (d, m) = qw.indices(i);
+        dir_idx.push(d as i32);
+        mag_idx.push(m as i32);
+    }
+    let signs = pcdvq::hadamard::RandomizedHadamard::new(rows, qw.rht_seed);
+    let out = exe
+        .run_f32(&[
+            Input::I32(dir_idx, vec![n_vec]),
+            Input::I32(mag_idx, vec![n_vec]),
+            Input::F32(dir_cb.vectors.as_slice().to_vec(), vec![1 << a, 8]),
+            Input::F32(mag_cb.levels.clone(), vec![4]),
+            Input::F32(qw.scales.clone(), vec![cols]),
+            Input::F32(signs.signs().to_vec(), vec![rows]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), rows * cols);
+    let mut max_diff = 0.0f32;
+    let mut bad_rows = std::collections::BTreeSet::new();
+    let mut bad_cols = std::collections::BTreeSet::new();
+    for (i, (a, b)) in out.iter().zip(rust_deq.as_slice()).enumerate() {
+        let d = (a - b).abs();
+        if d > 1e-3 {
+            bad_rows.insert(i / cols);
+            bad_cols.insert(i % cols);
+        }
+        max_diff = max_diff.max(d);
+    }
+    assert!(
+        max_diff < 1e-4,
+        "pallas vs rust dequant max diff {max_diff}; bad rows {} ({:?}...), bad cols {} ({:?}...)",
+        bad_rows.len(),
+        bad_rows.iter().take(8).collect::<Vec<_>>(),
+        bad_cols.len(),
+        bad_cols.iter().take(8).collect::<Vec<_>>()
+    );
+}
