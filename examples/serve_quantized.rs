@@ -9,6 +9,11 @@
 //! (weights live as 2-bit codes; dequant happens inside the executable), and
 //! prints the §4.4-style metrics: tokens/s, batch occupancy, latency
 //! percentiles, resident weight bytes.
+//!
+//! When the PJRT backend is unavailable the demo falls back to the host
+//! **codes-resident** server: the same packed codes + shared codebooks are
+//! served straight through `matmul_from_codes`, with no XLA artifact and no
+//! dense weights at any point.
 
 use std::sync::mpsc::channel;
 use std::time::Instant;
@@ -30,7 +35,6 @@ fn main() -> Result<()> {
         .unwrap_or(24);
 
     let model = paths.load_model(&model_name)?;
-    let engine = Engine::new()?;
 
     // quantize to codes (this is what would ship to the edge device)
     let pcdvq =
@@ -38,18 +42,26 @@ fn main() -> Result<()> {
     let t = Instant::now();
     let q = QuantizedGpt::quantize(&model, &pcdvq);
     println!(
-        "quantized {model_name} to PCDVQ codes in {:.1}s: {} KiB payload vs {} KiB fp32 ({:.1}x)",
+        "quantized {model_name} to PCDVQ codes in {:.1}s: {} KiB payload (+{} KiB shared \
+         codebooks) vs {} KiB fp32 ({:.1}x)",
         t.elapsed().as_secs_f64(),
         q.payload_bits() / 8 / 1024,
+        q.codebook_bits() / 8 / 1024,
         q.dense_bits() / 8 / 1024,
         q.dense_bits() as f64 / q.payload_bits() as f64
     );
 
-    let mut server = Server::new(
-        &engine,
-        &paths.artifacts,
-        ServingWeights::Quantized(Box::new(q), (*pcdvq.dir).clone(), (*pcdvq.mag).clone()),
-    )?;
+    let mut server = match Engine::new() {
+        Ok(engine) => Server::new(
+            &engine,
+            &paths.artifacts,
+            ServingWeights::Quantized(Box::new(q), (*pcdvq.dir).clone(), (*pcdvq.mag).clone()),
+        )?,
+        Err(e) => {
+            println!("PJRT unavailable ({e:#}); serving codes-resident on the host");
+            Server::new_host(ServingWeights::CodesResident(Box::new(q)))?
+        }
+    };
 
     // client side: one burst of requests through the batcher
     let eval_tokens = paths.eval_tokens()?;

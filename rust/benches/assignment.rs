@@ -2,11 +2,13 @@
 //!
 //! `cargo bench --bench assignment` — measures the blocked GEMM+argmax at
 //! the paper's operating points; Gelem/s counts vector·codeword dot
-//! products (n_vec × n_cb). §Perf target: ≥1 Gdot/s (8 flops each) on the
-//! single-core testbed.
+//! products (n_vec × n_cb). Each configuration is measured twice — the
+//! serial scan ("serial", the pre-parallelization baseline) and the
+//! scoped-thread strip split ("parallel") — and the before/after Gdot/s
+//! land in `BENCH_assign.json` (set `PCDVQ_BENCH_OUT_DIR` to redirect).
 
 use pcdvq::bench::{black_box, Bench};
-use pcdvq::quant::assign::{assign_batch, assign_euclidean, euclidean_bias};
+use pcdvq::quant::assign::{assign_batch, assign_euclidean, assign_into_with_threads, euclidean_bias};
 use pcdvq::rng::Rng;
 use pcdvq::tensor::Matrix;
 
@@ -23,22 +25,38 @@ fn unit_rows(n: usize, k: usize, seed: u64) -> Matrix {
 
 fn main() {
     let mut bench = Bench::new();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("== assignment (cosine argmax over the direction codebook) ==");
+    println!("== serial vs parallel ({threads} hw threads) ==");
 
-    for &(n_vec, cb_bits) in &[(4096usize, 10u32), (4096, 14), (1024, 15)] {
+    for &(n_vec, cb_bits) in &[(16384usize, 10u32), (16384, 14), (4096, 15)] {
         let n_cb = 1usize << cb_bits;
         let vectors = unit_rows(n_vec, 8, 1);
         let cb = unit_rows(n_cb, 8, 2);
         let mut out = vec![0u32; n_vec];
         bench.run_elems(
-            &format!("cosine k=8 {n_vec}vec x 2^{cb_bits}cb"),
+            &format!("cosine k=8 {n_vec}vec x 2^{cb_bits}cb serial"),
             (n_vec * n_cb) as u64,
             || {
-                pcdvq::quant::assign::assign_into(
+                assign_into_with_threads(
                     black_box(&vectors),
                     black_box(&cb),
                     &[],
                     &mut out,
+                    1,
+                );
+            },
+        );
+        bench.run_elems(
+            &format!("cosine k=8 {n_vec}vec x 2^{cb_bits}cb parallel"),
+            (n_vec * n_cb) as u64,
+            || {
+                assign_into_with_threads(
+                    black_box(&vectors),
+                    black_box(&cb),
+                    &[],
+                    &mut out,
+                    threads,
                 );
             },
         );
@@ -60,4 +78,9 @@ fn main() {
             black_box(assign_euclidean(black_box(&v), black_box(&c)));
         });
     }
+
+    let dir = std::env::var("PCDVQ_BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join("BENCH_assign.json");
+    bench.write_json(&path).expect("writing BENCH_assign.json");
+    println!("\nwrote {}", path.display());
 }

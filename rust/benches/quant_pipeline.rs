@@ -1,7 +1,10 @@
 //! Bench: whole-quantizer throughput per method — the Table-1 cost column.
 //!
 //! Melem/s counts weights quantized per second (a 13B-analog layer is
-//! 128x512). Includes dequantization and the baselines for comparison.
+//! 128x512). Includes the compressed-artifact round trip: quantize → codes,
+//! explicit dequantize, and the fused `matmul_from_codes` serving kernel.
+//! Measurements land in `BENCH_quant.json` for the perf trajectory (set
+//! `PCDVQ_BENCH_OUT_DIR` to redirect).
 
 use std::sync::Arc;
 
@@ -33,8 +36,13 @@ fn main() {
         black_box(pcdvq.quantize_full(black_box(&w)));
     });
     let qw = pcdvq.quantize_full(&w);
-    bench.run_elems("pcdvq a=14 dequantize_full", elems, || {
-        black_box(pcdvq.dequantize_full(black_box(&qw)));
+    let mut scratch = Matrix::zeros(128, 512);
+    bench.run_elems("pcdvq a=14 dequantize_into", elems, || {
+        black_box(&qw).dequantize_into(black_box(&mut scratch));
+    });
+    let x = Matrix::from_vec(rng.normal_vec(8 * 128), 8, 128);
+    bench.run_elems("pcdvq a=14 matmul_from_codes (8x128 batch)", elems, || {
+        black_box(qw.matmul_from_codes(black_box(&x)));
     });
 
     let rtn = Rtn::with_clip_search(2);
@@ -49,7 +57,12 @@ fn main() {
 
     let mut km = KMeansVq::new(8, 10);
     km.fit_on_weight(&w);
-    bench.run_elems("kmeans-vq 10b assign+dequant", elems, || {
+    bench.run_elems("kmeans-vq 10b quantize to codes", elems, || {
         black_box(km.quantize(black_box(&w)));
     });
+
+    let dir = std::env::var("PCDVQ_BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join("BENCH_quant.json");
+    bench.write_json(&path).expect("writing BENCH_quant.json");
+    println!("\nwrote {}", path.display());
 }

@@ -37,14 +37,45 @@ fn drive(server: &mut Server, prompts: &[Vec<u8>], max_new: usize) -> f64 {
 
 fn main() {
     let paths = Paths::detect();
+    let Ok(model) = paths.load_model("gpt-m") else {
+        println!("serving bench skipped: no gpt-m.pct (run `make artifacts` first)");
+        return;
+    };
+
+    // --- host codes-resident serving (no XLA artifacts needed) ---
+    {
+        println!("== host codes-resident serving (gpt-m, batch 8, greedy decode) ==");
+        let pcdvq = build_pcdvq_with(
+            &paths,
+            DirectionMethod::GreedyE8,
+            MagnitudeMethod::LloydMax,
+            14,
+            2,
+            7,
+        )
+        .unwrap();
+        let q = QuantizedGpt::quantize(&model, &pcdvq);
+        let resident_kib = q.resident_bits() as f64 / 8.0 / 1024.0;
+        let mut host = Server::new_host(ServingWeights::CodesResident(Box::new(q))).unwrap();
+        let eval = paths.eval_tokens().unwrap();
+        let prompts: Vec<Vec<u8>> = (0..8)
+            .map(|i| {
+                let s = (i * 4099) % (eval.len() - 64);
+                eval[s..s + 48].iter().map(|&t| t as u8).collect()
+            })
+            .collect();
+        let host_tps = drive(&mut host, &prompts, 8);
+        println!(
+            "codes-resident host:    {host_tps:>8.1} tok/s   ({resident_kib:.1} KiB resident)"
+        );
+    }
+
     if !paths.artifacts.join("fwd_q_gpt-m.hlo.txt").exists() {
-        println!("serving bench skipped: run `make artifacts` first");
+        println!("XLA serving bench skipped: run `make artifacts` first");
         return;
     }
     let _bench = Bench::new(); // uniform output style
     println!("== serving throughput (gpt-m, batch 8, greedy decode) ==");
-
-    let model = paths.load_model("gpt-m").unwrap();
     let engine = Engine::new().unwrap();
     let eval = paths.eval_tokens().unwrap();
     let prompts: Vec<Vec<u8>> = (0..16)

@@ -140,6 +140,31 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Write the collected measurements as machine-readable JSON (the perf
+    /// trajectory files `BENCH_*.json`; serde is not in the offline crate
+    /// set, so this is hand-rolled — names are plain ASCII identifiers).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let mut out = String::from("[\n");
+        for (i, m) in self.results.iter().enumerate() {
+            let name = m.name.replace('\\', "\\\\").replace('"', "\\\"");
+            out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"median_ns\": {:.1}, \"min_ns\": {:.1}, \
+                 \"mean_ns\": {:.1}, \"mad_ns\": {:.1}, \"elements\": {}, \
+                 \"gelem_per_s\": {}}}{}\n",
+                name,
+                m.median_ns,
+                m.min_ns,
+                m.mean_ns,
+                m.mad_ns,
+                m.elements.map_or("null".to_string(), |e| e.to_string()),
+                m.throughput().map_or("null".to_string(), |t| format!("{t:.4}")),
+                if i + 1 < self.results.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("]\n");
+        std::fs::write(path, out)
+    }
 }
 
 /// Prevent the optimizer from deleting a computed value (ptr read fence —
@@ -155,7 +180,6 @@ mod tests {
 
     #[test]
     fn measures_something_sane() {
-        std::env::set_var("PCDVQ_BENCH_FAST", "1");
         let mut b = Bench::new();
         b.samples = 3;
         b.target_sample_s = 0.01;
@@ -168,6 +192,31 @@ mod tests {
             .clone();
         assert!(m.median_ns > 0.0);
         assert!(m.min_ns <= m.median_ns);
+    }
+
+    #[test]
+    fn write_json_is_parseable_shape() {
+        // note: no set_var here — mutating the environment from a test racing
+        // other threads' getenv is unsound; the fields are set directly.
+        let mut b = Bench::new();
+        b.samples = 2;
+        b.target_sample_s = 0.005;
+        b.warmup_s = 0.002;
+        let mut acc = 0u64;
+        b.run_elems("with \"quotes\"", 10, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        b.run("no-elems", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let path = std::env::temp_dir().join("pcdvq_bench_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n") && text.ends_with("]\n"));
+        assert!(text.contains("\\\"quotes\\\""));
+        assert!(text.contains("\"elements\": 10"));
+        assert!(text.contains("\"elements\": null"));
+        assert_eq!(text.matches("median_ns").count(), 2);
     }
 
     #[test]

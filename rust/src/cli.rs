@@ -108,6 +108,9 @@ SUBCOMMANDS
              --model NAME --method SPEC|fp16 --windows N (48) --items N (40)
   serve      run the batched generation service on synthetic traffic
              --model NAME --quantized --requests N (32) --max-new N (32)
+             --host     serve on the host backend (codes-resident with
+                        --quantized: packed codes + shared codebooks only,
+                        no XLA artifacts, no dense weights)
   info       print artifact + model inventory
 
 Method SPECs: fp16, rtn2, rtn4, gptq2, kmeans16, quip16, pcdvq2, pcdvq2.125,

@@ -1,17 +1,138 @@
-//! Codebook persistence + the artifact cache.
+//! Codebook persistence, the on-disk artifact cache, and the in-memory
+//! **shared-codebook registry**.
 //!
 //! Like the paper (§3.2.3: "this process is offline and performed only once
 //! for all circumstances"), codebooks are built once and cached under
 //! `artifacts/codebooks/`. The cache key encodes method, bits, k and seed so
 //! ablation variants coexist.
+//!
+//! The registry is the in-process layer on top of that cache: compressed
+//! weight artifacts ([`crate::quant::QuantizedWeight`]) reference their
+//! codebooks through `Arc`s, and the registry guarantees that every request
+//! for the same codebook key hands out the *same* `Arc` — so a model's
+//! resident codebook state is physically shared and counted once, no matter
+//! how many layers (or quantizer instances) reference it.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
 
 use super::{DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod};
 use crate::io::{Entry, Pct};
 use crate::tensor::Matrix;
+
+/// In-memory registry of shared codebooks, keyed by construction spec.
+#[derive(Default)]
+pub struct CodebookRegistry {
+    dirs: HashMap<String, Arc<DirectionCodebook>>,
+    mags: HashMap<String, Arc<MagnitudeCodebook>>,
+}
+
+impl CodebookRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn dir_key(method: DirectionMethod, bits: u32, k: usize, seed: u64) -> String {
+        format!("dir:{}:a{bits}:k{k}:s{seed}", method.name())
+    }
+
+    fn mag_key(method: MagnitudeMethod, bits: u32, k: usize, seed: u64) -> String {
+        format!("mag:{}:b{bits}:k{k}:s{seed}", method.name())
+    }
+
+    /// Shared direction codebook: built (through the on-disk cache when a
+    /// cache dir is given) on first request, the same `Arc` afterwards.
+    pub fn direction(
+        &mut self,
+        cache_dir: Option<&Path>,
+        method: DirectionMethod,
+        bits: u32,
+        k: usize,
+        seed: u64,
+    ) -> Result<Arc<DirectionCodebook>> {
+        let key = Self::dir_key(method, bits, k, seed);
+        if let Some(cb) = self.dirs.get(&key) {
+            return Ok(Arc::clone(cb));
+        }
+        let cb = match cache_dir {
+            Some(dir) => cached_direction(dir, method, bits, k, seed)?,
+            None => DirectionCodebook::build(method, bits, k, seed),
+        };
+        let cb = Arc::new(cb);
+        self.dirs.insert(key, Arc::clone(&cb));
+        Ok(cb)
+    }
+
+    /// Shared magnitude codebook (see [`Self::direction`]).
+    pub fn magnitude(
+        &mut self,
+        cache_dir: Option<&Path>,
+        method: MagnitudeMethod,
+        bits: u32,
+        k: usize,
+        seed: u64,
+    ) -> Result<Arc<MagnitudeCodebook>> {
+        let key = Self::mag_key(method, bits, k, seed);
+        if let Some(cb) = self.mags.get(&key) {
+            return Ok(Arc::clone(cb));
+        }
+        let cb = match cache_dir {
+            Some(dir) => cached_magnitude(dir, method, bits, k, seed)?,
+            None => MagnitudeCodebook::build(method, bits, k, 1.0 - 1e-4, seed),
+        };
+        let cb = Arc::new(cb);
+        self.mags.insert(key, Arc::clone(&cb));
+        Ok(cb)
+    }
+
+    /// Intern an already-materialized direction codebook (the io load path)
+    /// under an explicit key.
+    pub fn intern_direction(
+        &mut self,
+        key: &str,
+        cb: impl FnOnce() -> DirectionCodebook,
+    ) -> Arc<DirectionCodebook> {
+        if let Some(existing) = self.dirs.get(key) {
+            return Arc::clone(existing);
+        }
+        let cb = Arc::new(cb());
+        self.dirs.insert(key.to_string(), Arc::clone(&cb));
+        cb
+    }
+
+    /// Intern an already-materialized magnitude codebook.
+    pub fn intern_magnitude(
+        &mut self,
+        key: &str,
+        cb: impl FnOnce() -> MagnitudeCodebook,
+    ) -> Arc<MagnitudeCodebook> {
+        if let Some(existing) = self.mags.get(key) {
+            return Arc::clone(existing);
+        }
+        let cb = Arc::new(cb());
+        self.mags.insert(key.to_string(), Arc::clone(&cb));
+        cb
+    }
+
+    /// Number of distinct codebooks currently registered.
+    pub fn len(&self) -> usize {
+        self.dirs.len() + self.mags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The process-wide registry ([`crate::config::build_pcdvq_with`] routes
+/// through it, so repeated quantizer builds share codebook memory).
+pub fn global_registry() -> &'static Mutex<CodebookRegistry> {
+    static REGISTRY: OnceLock<Mutex<CodebookRegistry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(CodebookRegistry::new()))
+}
 
 /// Save a direction codebook as a `.pct` file.
 pub fn save_direction(cb: &DirectionCodebook, path: impl AsRef<Path>) -> Result<()> {
@@ -111,7 +232,7 @@ pub fn cached_magnitude(
     Ok(cb)
 }
 
-fn direction_method_tag(m: DirectionMethod) -> u32 {
+pub(crate) fn direction_method_tag(m: DirectionMethod) -> u32 {
     match m {
         DirectionMethod::GreedyE8 => 0,
         DirectionMethod::RandomGaussian => 1,
@@ -120,7 +241,7 @@ fn direction_method_tag(m: DirectionMethod) -> u32 {
     }
 }
 
-fn parse_direction_tag(t: u32) -> DirectionMethod {
+pub(crate) fn parse_direction_tag(t: u32) -> DirectionMethod {
     match t {
         0 => DirectionMethod::GreedyE8,
         1 => DirectionMethod::RandomGaussian,
@@ -129,14 +250,14 @@ fn parse_direction_tag(t: u32) -> DirectionMethod {
     }
 }
 
-fn magnitude_method_tag(m: MagnitudeMethod) -> u32 {
+pub(crate) fn magnitude_method_tag(m: MagnitudeMethod) -> u32 {
     match m {
         MagnitudeMethod::LloydMax => 0,
         MagnitudeMethod::KMeans => 1,
     }
 }
 
-fn parse_magnitude_tag(t: u32) -> MagnitudeMethod {
+pub(crate) fn parse_magnitude_tag(t: u32) -> MagnitudeMethod {
     match t {
         0 => MagnitudeMethod::LloydMax,
         _ => MagnitudeMethod::KMeans,
@@ -171,6 +292,35 @@ mod tests {
         save_magnitude(&cb, &path).unwrap();
         let cb2 = load_magnitude(&path).unwrap();
         assert_eq!(cb.levels, cb2.levels);
+    }
+
+    #[test]
+    fn registry_shares_one_arc_per_key() {
+        let mut reg = CodebookRegistry::new();
+        let a = reg.direction(None, DirectionMethod::GreedyE8, 5, 8, 3).unwrap();
+        let b = reg.direction(None, DirectionMethod::GreedyE8, 5, 8, 3).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one codebook");
+        let c = reg.direction(None, DirectionMethod::GreedyE8, 6, 8, 3).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "different bits must not share");
+        let m1 = reg.magnitude(None, MagnitudeMethod::LloydMax, 2, 8, 0).unwrap();
+        let m2 = reg.magnitude(None, MagnitudeMethod::LloydMax, 2, 8, 0).unwrap();
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn registry_intern_reuses_existing() {
+        let mut reg = CodebookRegistry::new();
+        let a = reg.intern_direction("loaded:x", || {
+            DirectionCodebook::build(DirectionMethod::RandomGaussian, 4, 8, 1)
+        });
+        let mut built_again = false;
+        let b = reg.intern_direction("loaded:x", || {
+            built_again = true;
+            DirectionCodebook::build(DirectionMethod::RandomGaussian, 4, 8, 1)
+        });
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!built_again, "intern must not rebuild on a hit");
     }
 
     #[test]

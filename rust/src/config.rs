@@ -153,6 +153,10 @@ impl MethodSpec {
 }
 
 /// Build a PCDVQ quantizer with explicit codebook method choices (Table 4).
+///
+/// Routes through the process-wide [`store::global_registry`], so every
+/// quantizer built for the same codebook spec shares one `Arc`'d codebook
+/// (disk-cached under `artifacts/codebooks/` as before).
 pub fn build_pcdvq_with(
     paths: &Paths,
     dir_method: DirectionMethod,
@@ -161,10 +165,14 @@ pub fn build_pcdvq_with(
     b: u32,
     seed: u64,
 ) -> Result<Pcdvq> {
-    let dir: Arc<DirectionCodebook> =
-        Arc::new(store::cached_direction(paths.codebook_cache(), dir_method, a, 8, 0)?);
-    let mag: Arc<MagnitudeCodebook> =
-        Arc::new(store::cached_magnitude(paths.codebook_cache(), mag_method, b, 8, 0)?);
+    let cache = paths.codebook_cache();
+    let (dir, mag): (Arc<DirectionCodebook>, Arc<MagnitudeCodebook>) = {
+        let mut reg = store::global_registry().lock().unwrap();
+        (
+            reg.direction(Some(&cache), dir_method, a, 8, 0)?,
+            reg.magnitude(Some(&cache), mag_method, b, 8, 0)?,
+        )
+    };
     Ok(Pcdvq::new(PcdvqConfig { dir_bits: a, mag_bits: b, k: 8, seed }, dir, mag))
 }
 

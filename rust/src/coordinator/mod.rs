@@ -10,8 +10,9 @@
 //! * [`batcher`] — dynamic request batching for the serving loop (collect up
 //!   to `max_batch` requests or `max_wait`, whichever first).
 //! * [`server`] — the generation service: batched iterative decoding against
-//!   the AOT forward executable (fp *or* in-graph-dequant quantized), with
-//!   throughput/latency metrics (§4.4).
+//!   the AOT forward executable (fp *or* in-graph-dequant quantized) or the
+//!   host **codes-resident** backend (packed codes + shared codebooks only),
+//!   with throughput/latency metrics (§4.4).
 
 pub mod batcher;
 pub mod metrics;
@@ -20,5 +21,5 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, GenRequest, GenResponse};
 pub use metrics::Metrics;
-pub use scheduler::{quantize_model_parallel, QuantStats};
+pub use scheduler::{quantize_model_compressed, quantize_model_parallel, QuantStats};
 pub use server::{Server, ServingWeights};

@@ -6,43 +6,57 @@
 //! quantizer), workers own per-layer scratch, and results merge back in
 //! deterministic name order regardless of completion order — quantizing the
 //! same model twice yields bit-identical outputs.
+//!
+//! Workers hand back **compressed artifacts** ([`QuantizedWeight`]), so the
+//! merge step assembles a [`QuantizedGpt`] (codes + shared codebooks) and
+//! every statistic is *measured* from the artifacts — payload bits from the
+//! packed streams, codebook bits deduplicated by decoder spec — never
+//! estimated from nominal bpw. [`quantize_model_parallel`] additionally
+//! materializes the dense fake-quant model for eval paths that need one.
 
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::model::GptModel;
-use crate::quant::Quantizer;
-use crate::tensor::Matrix;
+use crate::model::{GptModel, QuantizedGpt};
+use crate::quant::{QuantizedWeight, Quantizer};
 
-/// Per-run statistics.
+/// Per-run statistics (all measured from the merged artifacts).
 #[derive(Clone, Debug, Default)]
 pub struct QuantStats {
     /// (layer name, seconds, payload bits) per quantized matrix.
     pub layers: Vec<(String, f64, u64)>,
     /// Total wall-clock seconds.
     pub wall_s: f64,
-    /// Total payload bits.
+    /// Total payload bits (packed codes + per-layer metadata).
     pub payload_bits: u64,
+    /// Bits of the distinct shared codebooks referenced by the artifacts.
+    pub codebook_bits: u64,
     /// Achieved bits per weight over the quantizable parameters.
     pub achieved_bpw: f64,
 }
 
-/// Quantize every quantizable matrix of `model` using `quantizer`, fanning
-/// out across `n_workers` threads. Returns the fake-quant model + stats.
+/// Quantize every quantizable matrix of `model` into compressed artifacts,
+/// fanning out across `n_workers` threads. Returns the codes-resident model
+/// + stats; no dense weight is materialized.
 ///
 /// The quantizer must be `Sync` (shared immutably across workers) — all
 /// quantizers in this crate are, their per-call state is stack-local.
-pub fn quantize_model_parallel<Q: Quantizer + Sync + ?Sized>(
+pub fn quantize_model_compressed<Q: Quantizer + Sync + ?Sized>(
     model: &GptModel,
     quantizer: &Q,
     n_workers: usize,
-) -> (GptModel, QuantStats) {
+) -> (QuantizedGpt, QuantStats) {
     let names = model.config.quantizable_names();
     let t0 = Instant::now();
 
-    // Work queue: indices into `names`; results: (index, matrix, bits, secs).
-    let (result_tx, result_rx) = mpsc::channel::<(usize, Matrix, u64, f64)>();
+    // With several layer workers, pin each worker's *inner* assignment
+    // parallelism to one thread so the two levels don't oversubscribe the
+    // machine; a single worker keeps the full within-layer split.
+    let inner_threads = if n_workers > 1 { Some(1) } else { None };
+
+    // Work queue: indices into `names`; results: (index, artifact, secs).
+    let (result_tx, result_rx) = mpsc::channel::<(usize, QuantizedWeight, f64)>();
     let next = Mutex::new(0usize);
 
     std::thread::scope(|scope| {
@@ -50,43 +64,64 @@ pub fn quantize_model_parallel<Q: Quantizer + Sync + ?Sized>(
             let result_tx = result_tx.clone();
             let next = &next;
             let names = &names;
-            scope.spawn(move || loop {
-                let i = {
-                    let mut guard = next.lock().unwrap();
-                    let i = *guard;
-                    if i >= names.len() {
-                        return;
-                    }
-                    *guard += 1;
-                    i
+            scope.spawn(move || {
+                let work = || loop {
+                    let i = {
+                        let mut guard = next.lock().unwrap();
+                        let i = *guard;
+                        if i >= names.len() {
+                            return;
+                        }
+                        *guard += 1;
+                        i
+                    };
+                    let w = &model.tensors[&names[i]];
+                    let t = Instant::now();
+                    let qw = quantizer.quantize(w);
+                    let secs = t.elapsed().as_secs_f64();
+                    result_tx.send((i, qw, secs)).ok();
                 };
-                let w = &model.tensors[&names[i]];
-                let t = Instant::now();
-                let qw = quantizer.quantize(w);
-                let secs = t.elapsed().as_secs_f64();
-                let bits = qw.payload_bits();
-                result_tx.send((i, qw.into_dequantized(), bits, secs)).ok();
+                match inner_threads {
+                    Some(t) => crate::quant::assign::with_assign_threads(t, work),
+                    None => work(),
+                }
             });
         }
         drop(result_tx);
     });
 
-    let mut out = model.clone();
     let mut stats = QuantStats::default();
-    let mut results: Vec<Option<(Matrix, u64, f64)>> = (0..names.len()).map(|_| None).collect();
-    while let Ok((i, m, bits, secs)) = result_rx.recv() {
-        results[i] = Some((m, bits, secs));
+    let mut results: Vec<Option<(QuantizedWeight, f64)>> =
+        (0..names.len()).map(|_| None).collect();
+    while let Ok((i, qw, secs)) = result_rx.recv() {
+        results[i] = Some((qw, secs));
     }
+    let mut weights = std::collections::BTreeMap::new();
     for (i, r) in results.into_iter().enumerate() {
-        let (m, bits, secs) = r.expect("worker dropped a layer");
+        let (qw, secs) = r.expect("worker dropped a layer");
+        let bits = qw.payload_bits();
         stats.layers.push((names[i].clone(), secs, bits));
         stats.payload_bits += bits;
-        out.tensors.insert(names[i].clone(), m);
+        weights.insert(names[i].clone(), qw);
     }
+    let q = QuantizedGpt::from_artifacts(model, weights);
+    stats.codebook_bits = q.codebook_bits();
     stats.wall_s = t0.elapsed().as_secs_f64();
     stats.achieved_bpw =
         stats.payload_bits as f64 / model.config.quantizable_params() as f64;
-    (out, stats)
+    (q, stats)
+}
+
+/// [`quantize_model_compressed`] + explicit dense materialization: returns
+/// the fake-quant [`GptModel`] for consumers (eval ablations, the `fwd_fp`
+/// executable) that need dense weights.
+pub fn quantize_model_parallel<Q: Quantizer + Sync + ?Sized>(
+    model: &GptModel,
+    quantizer: &Q,
+    n_workers: usize,
+) -> (GptModel, QuantStats) {
+    let (q, stats) = quantize_model_compressed(model, quantizer, n_workers);
+    (q.to_dense(), stats)
 }
 
 #[cfg(test)]
@@ -159,5 +194,26 @@ mod tests {
         // 2-bit indices + per-column scale overhead
         assert!(stats.achieved_bpw >= 2.0 && stats.achieved_bpw < 3.5, "{}", stats.achieved_bpw);
         assert!(stats.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn compressed_merge_holds_codes_only() {
+        let model = tiny_model();
+        let (q, stats) = quantize_model_compressed(&model, &Rtn::new(2), 3);
+        // every quantizable layer merged, in deterministic name order
+        let names = model.config.quantizable_names();
+        assert_eq!(q.weights.len(), names.len());
+        assert_eq!(
+            stats.layers.iter().map(|(n, ..)| n.clone()).collect::<Vec<_>>(),
+            names
+        );
+        // measured payload = sum of per-artifact payloads
+        assert_eq!(stats.payload_bits, q.payload_bits());
+        assert_eq!(stats.codebook_bits, q.codebook_bits());
+        // the artifact collection is ~16x smaller than dense fp32
+        assert!(q.resident_bits() * 8 < q.dense_bits());
+        // fp tensors (embeddings, norms) pass through
+        assert!(q.fp_tensors.contains_key("embed.tok"));
+        assert!(!q.fp_tensors.contains_key("head.w"));
     }
 }

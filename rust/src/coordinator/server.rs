@@ -1,13 +1,19 @@
-//! The generation server: batched iterative decoding on the AOT executables.
+//! The generation server: batched iterative decoding.
 //!
-//! Two serving modes share every line of the decode loop:
+//! Three serving modes share every line of the decode loop:
 //!
 //! * **Fp** — dense weights bound to `fwd_fp_<model>_b8` (fp baseline, or
 //!   any fake-quant model for ablations);
 //! * **Quantized** — PCDVQ codes + codebooks bound to `fwd_q_<model>`, where
 //!   dequantization happens *inside* the executable (gather + scale +
 //!   inverse RHT fused by XLA): the dense weights never exist on the host,
-//!   which is what shrinks the per-request weight traffic 8-16x (§4.4).
+//!   which is what shrinks the per-request weight traffic 8-16x (§4.4);
+//! * **CodesResident** — the host backend ([`HostForward`]): every
+//!   quantizable linear is served straight from its packed code streams via
+//!   [`crate::quant::QuantizedWeight::matmul_from_codes`]. No XLA artifact
+//!   (and no dense weight) is involved at any point; resident weight state
+//!   is exactly codes + shared codebooks, which
+//!   [`crate::paper::verify_codes_resident`] checks against the §4.4 claim.
 //!
 //! Decoding is windowed re-forward (no KV cache — the model's ctx is 128 and
 //! the executable geometry is fixed; see DESIGN.md §9 for the trade-off).
@@ -20,16 +26,21 @@ use super::batcher::{Batcher, GenRequest, GenResponse};
 use super::metrics::Metrics;
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
 use crate::eval::weight_inputs;
-use crate::model::{GptModel, QuantizedGpt};
+use crate::model::{GptModel, HostForward, QuantizedGpt};
 use crate::rng::Rng;
 use crate::runtime::{BoundExecutable, Engine, Input};
 
 /// What the server serves.
 pub enum ServingWeights {
-    /// Dense weights (original or fake-quant).
+    /// Dense weights (original or fake-quant) through the XLA `fwd_fp`
+    /// executable — or the host backend via [`Server::new_host`].
     Fp(GptModel),
-    /// PCDVQ codes + the shared DACC codebooks.
+    /// PCDVQ codes + the shared DACC codebooks through the XLA `fwd_q`
+    /// executable (in-graph dequantization).
     Quantized(Box<QuantizedGpt>, DirectionCodebook, MagnitudeCodebook),
+    /// Compressed artifacts served on the host: packed codes + shared
+    /// codebooks are the only resident weight state.
+    CodesResident(Box<QuantizedGpt>),
 }
 
 impl ServingWeights {
@@ -37,6 +48,7 @@ impl ServingWeights {
         match self {
             ServingWeights::Fp(m) => &m.name,
             ServingWeights::Quantized(q, _, _) => &q.name,
+            ServingWeights::CodesResident(q) => &q.name,
         }
     }
 
@@ -44,13 +56,20 @@ impl ServingWeights {
         match self {
             ServingWeights::Fp(m) => m.config,
             ServingWeights::Quantized(q, _, _) => q.config,
+            ServingWeights::CodesResident(q) => q.config,
         }
     }
 }
 
-/// A ready-to-serve model: bound executable + decode state.
+/// The decode backend: a bound XLA executable or the host forward.
+enum Backend {
+    Xla(BoundExecutable),
+    Host(HostForward),
+}
+
+/// A ready-to-serve model: backend + decode state.
 pub struct Server {
-    bound: BoundExecutable,
+    backend: Backend,
     pub config: crate::model::GptConfig,
     pub batch: usize,
     pub metrics: Metrics,
@@ -58,36 +77,91 @@ pub struct Server {
     /// Weight bits actually resident for the quantizable matrices (fp32 vs
     /// packed codes) — reported by the efficiency harness.
     pub resident_weight_bits: u64,
+    /// Bits of the distinct shared codebooks resident beside the payloads
+    /// (0 for dense serving; amortized across all layers otherwise).
+    pub resident_codebook_bits: u64,
 }
 
 impl Server {
-    /// Bind a serving model against its artifact.
+    /// Bind a serving model against its AOT artifact (XLA backend).
     pub fn new(engine: &Engine, artifacts_dir: &std::path::Path, weights: ServingWeights) -> Result<Self> {
         let config = weights.config();
         let batch = 8usize;
-        let (bound, resident_weight_bits) = match &weights {
+        let (bound, resident_weight_bits, resident_codebook_bits) = match &weights {
             ServingWeights::Fp(model) => {
-                let base = artifacts_dir.join(format!("fwd_fp_{}_b{batch}", weights.model_name()));
+                let base =
+                    artifacts_dir.join(format!("fwd_fp_{}_b{batch}", weights.model_name()));
                 let exe = engine.load(&base)?;
                 let fixed = weight_inputs(model, &exe.manifest)?;
                 let bits = model.config.quantizable_params() as u64 * 32;
-                (exe.bind(&fixed, 1)?, bits)
+                (exe.bind(&fixed, 1)?, bits, 0)
             }
             ServingWeights::Quantized(q, dir_cb, mag_cb) => {
                 let base = artifacts_dir.join(format!("fwd_q_{}", weights.model_name()));
                 let exe = engine.load(&base)?;
                 let fixed = quantized_inputs(q, dir_cb, mag_cb, &exe.manifest)?;
-                (exe.bind(&fixed, 1)?, q.payload_bits())
+                let cb_bits = q.codebook_bits();
+                (exe.bind(&fixed, 1)?, q.payload_bits(), cb_bits)
             }
+            ServingWeights::CodesResident(_) => anyhow::bail!(
+                "codes-resident serving runs on the host — use Server::new_host"
+            ),
         };
         Ok(Server {
-            bound,
+            backend: Backend::Xla(bound),
             config,
             batch,
             metrics: Metrics::new(),
             rng: Rng::new(0x5E84),
             resident_weight_bits,
+            resident_codebook_bits,
         })
+    }
+
+    /// Build a host-backed server (no XLA artifacts required). `Fp` serves
+    /// dense weights; `CodesResident` serves packed codes directly.
+    pub fn new_host(weights: ServingWeights) -> Result<Self> {
+        let config = weights.config();
+        let (hf, resident_weight_bits, resident_codebook_bits) = match weights {
+            ServingWeights::Fp(model) => {
+                let bits = model.config.quantizable_params() as u64 * 32;
+                (HostForward::from_dense(model)?, bits, 0)
+            }
+            ServingWeights::CodesResident(q) => {
+                let payload = q.payload_bits();
+                let cb_bits = q.codebook_bits();
+                (HostForward::from_quantized(*q)?, payload, cb_bits)
+            }
+            ServingWeights::Quantized(..) => anyhow::bail!(
+                "the in-graph-dequant mode needs the fwd_q XLA artifact — \
+                 use ServingWeights::CodesResident for host serving"
+            ),
+        };
+        Ok(Server {
+            backend: Backend::Host(hf),
+            config,
+            batch: 8,
+            metrics: Metrics::new(),
+            rng: Rng::new(0x5E84),
+            resident_weight_bits,
+            resident_codebook_bits,
+        })
+    }
+
+    /// One forward of a `(b, t)` token block through whichever backend.
+    fn run_block(&self, block: Vec<i32>, b: usize, t: usize) -> Result<Vec<f32>> {
+        match &self.backend {
+            Backend::Xla(bound) => bound.run_f32(&[Input::I32(block, vec![b, t])]),
+            Backend::Host(hf) => hf.forward(&block, b, t),
+        }
+    }
+
+    /// True when the backend never materializes dense quantizable weights.
+    pub fn is_codes_resident(&self) -> bool {
+        match &self.backend {
+            Backend::Host(hf) => hf.is_codes_resident(),
+            Backend::Xla(_) => false,
+        }
     }
 
     /// Decode one batch of requests to completion; sends responses on each
@@ -126,10 +200,7 @@ impl Server {
                     block[s * ctx + j] = t;
                 }
             }
-            let logits = self
-                .bound
-                .run_f32(&[Input::I32(block, vec![b, ctx])])
-                .context("decode step")?;
+            let logits = self.run_block(block, b, ctx).context("decode step")?;
             steps += 1;
             let v = self.config.vocab;
             for (s, req) in batch.iter().enumerate() {
@@ -198,13 +269,25 @@ fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u8 {
 }
 
 /// Build the fixed inputs of a `fwd_q` executable from a quantized model +
-/// codebooks, following the manifest order.
+/// codebooks, following the manifest order. The artifacts must be DACC
+/// (two-stream: direction + magnitude) with an RHT seed — i.e. PCDVQ.
 pub fn quantized_inputs(
     q: &QuantizedGpt,
     dir_cb: &DirectionCodebook,
     mag_cb: &MagnitudeCodebook,
     manifest: &crate::runtime::Manifest,
 ) -> Result<Vec<Input>> {
+    let weight = |base: &str| -> Result<&crate::quant::QuantizedWeight> {
+        let w = q
+            .weights
+            .get(base)
+            .with_context(|| format!("missing codes for {base}"))?;
+        anyhow::ensure!(
+            w.codes().n_streams() == 2,
+            "'{base}' is not a two-stream (DACC) artifact"
+        );
+        Ok(w)
+    };
     let mut out = Vec::with_capacity(manifest.len() - 1);
     for e in &manifest.entries {
         if e.name == "tokens" {
@@ -215,19 +298,24 @@ pub fn quantized_inputs(
         } else if e.name == "codebook.mag" {
             Input::F32(mag_cb.levels.clone(), e.dims.clone())
         } else if let Some(base) = e.name.strip_suffix(".dir_idx") {
-            let w = q.weights.get(base).with_context(|| format!("missing codes for {base}"))?;
-            let idx: Vec<i32> = (0..w.n_vectors()).map(|i| w.indices(i).0 as i32).collect();
+            let w = weight(base)?;
+            let s = w.codes().stream(0);
+            let idx: Vec<i32> = (0..s.len).map(|i| s.get(i) as i32).collect();
             Input::I32(idx, e.dims.clone())
         } else if let Some(base) = e.name.strip_suffix(".mag_idx") {
-            let w = q.weights.get(base).with_context(|| format!("missing codes for {base}"))?;
-            let idx: Vec<i32> = (0..w.n_vectors()).map(|i| w.indices(i).1 as i32).collect();
+            let w = weight(base)?;
+            let s = w.codes().stream(1);
+            let idx: Vec<i32> = (0..s.len).map(|i| s.get(i) as i32).collect();
             Input::I32(idx, e.dims.clone())
         } else if let Some(base) = e.name.strip_suffix(".scales") {
-            let w = q.weights.get(base).with_context(|| format!("missing codes for {base}"))?;
-            Input::F32(w.scales.clone(), e.dims.clone())
+            let w = weight(base)?;
+            Input::F32(w.scales().to_vec(), e.dims.clone())
         } else if let Some(base) = e.name.strip_suffix(".signs") {
-            let w = q.weights.get(base).with_context(|| format!("missing codes for {base}"))?;
-            let rht = crate::hadamard::RandomizedHadamard::new(w.rows, w.rht_seed);
+            let w = weight(base)?;
+            let seed = w
+                .rht_seed()
+                .with_context(|| format!("'{base}' has no RHT seed"))?;
+            let rht = crate::hadamard::RandomizedHadamard::new(w.rows(), seed);
             Input::F32(rht.signs().to_vec(), e.dims.clone())
         } else {
             // fp tensor (embeddings, norms)

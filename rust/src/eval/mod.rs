@@ -1,10 +1,12 @@
 //! Evaluation harness: perplexity (WikiText2/C4 analog) and the five
 //! zero-shot proxy tasks (Arc/HellaSwag/PIQA/WinoGrande analog).
 //!
-//! Everything here drives the AOT `fwd_fp_<model>_b8` executable through the
-//! runtime with *bound* (device-resident) weights, so per-batch work is one
-//! token upload + one execute + a host-side softmax reduction — the same
-//! code path serving uses.
+//! Everything here drives a [`ForwardPass`] — either the AOT
+//! `fwd_fp_<model>_b8` executable with *bound* (device-resident) weights, so
+//! per-batch work is one token upload + one execute + a host-side softmax
+//! reduction, or the host backend ([`HostForward`]), which can evaluate a
+//! **codes-resident** model without ever materializing its dense weights.
+//! Serving uses the same two code paths.
 
 mod ppl;
 mod tasks;
@@ -12,8 +14,36 @@ mod tasks;
 pub use ppl::{evaluate_ppl, fit_temperature, PplResult};
 pub use tasks::{evaluate_tasks, TaskResult, TASK_NAMES};
 
-use crate::model::GptModel;
-use crate::runtime::Input;
+use crate::model::{GptModel, HostForward};
+use crate::runtime::{BoundExecutable, Input};
+
+/// A batched forward pass: `(b, t)` token block → logits `(b · t · vocab)`.
+pub trait ForwardPass {
+    fn forward_block(&self, tokens: Vec<i32>, b: usize, t: usize)
+        -> anyhow::Result<Vec<f32>>;
+}
+
+impl ForwardPass for BoundExecutable {
+    fn forward_block(
+        &self,
+        tokens: Vec<i32>,
+        b: usize,
+        t: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.run_f32(&[Input::I32(tokens, vec![b, t])])
+    }
+}
+
+impl ForwardPass for HostForward {
+    fn forward_block(
+        &self,
+        tokens: Vec<i32>,
+        b: usize,
+        t: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.forward(&tokens, b, t)
+    }
+}
 
 /// Build the fixed (weight) inputs of a forward executable in manifest
 /// order, from a (possibly fake-quant) model. The trailing `tokens` input is

@@ -2,8 +2,8 @@
 
 use anyhow::Result;
 
+use super::ForwardPass;
 use crate::model::GptConfig;
-use crate::runtime::{BoundExecutable, Input};
 
 /// Perplexity evaluation result.
 #[derive(Clone, Copy, Debug)]
@@ -34,13 +34,13 @@ fn row_nll(logits: &[f32], target: usize) -> f64 {
     (sum.ln() + maxv as f64) - logits[target] as f64
 }
 
-/// Score non-overlapping windows of the token stream with the bound forward
-/// executable (batch geometry comes from the artifact: `(B, T)`).
+/// Score non-overlapping windows of the token stream with a forward backend
+/// (batch geometry comes from the artifact: `(B, T)`).
 ///
 /// `temperature` scales logits before the softmax (the Table-3 "e2e tuning"
 /// analog); pass 1.0 for the plain metric. `max_windows` caps cost.
-pub fn evaluate_ppl(
-    bound: &BoundExecutable,
+pub fn evaluate_ppl<F: ForwardPass + ?Sized>(
+    bound: &F,
     cfg: &GptConfig,
     tokens: &[u32],
     batch: usize,
@@ -67,7 +67,7 @@ pub fn evaluate_ppl(
                 block[b * t + j] = tokens[s + j] as i32;
             }
         }
-        let out = bound.run_f32(&[Input::I32(block, vec![batch, t])])?;
+        let out = bound.forward_block(block, batch, t)?;
         debug_assert_eq!(out.len(), batch * t * v);
         for b in 0..bsz {
             let w = win + b;
@@ -98,8 +98,8 @@ pub fn evaluate_ppl(
 /// Fit a logit temperature on a calibration slice by golden-section search —
 /// the closed-form "end-to-end tuning" analog of Table 3 (adjusting the
 /// output distribution like norm-layer fine-tuning does, without gradients).
-pub fn fit_temperature(
-    bound: &BoundExecutable,
+pub fn fit_temperature<F: ForwardPass + ?Sized>(
+    bound: &F,
     cfg: &GptConfig,
     calib_tokens: &[u32],
     batch: usize,

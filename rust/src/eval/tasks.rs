@@ -9,9 +9,9 @@
 
 use anyhow::Result;
 
+use super::ForwardPass;
 use crate::model::GptConfig;
 use crate::rng::Rng;
-use crate::runtime::{BoundExecutable, Input};
 
 /// The five proxy tasks.
 pub const TASK_NAMES: [&str; 5] = ["cont-32", "cont-16", "cont-8", "nearby-16", "shift-16"];
@@ -114,8 +114,8 @@ fn span_logprob(logits: &[f32], window: &[i32], span: (usize, usize), vocab: usi
 }
 
 /// Evaluate the five proxy tasks; returns per-task accuracy + average.
-pub fn evaluate_tasks(
-    bound: &BoundExecutable,
+pub fn evaluate_tasks<F: ForwardPass + ?Sized>(
+    bound: &F,
     cfg: &GptConfig,
     eval_tokens: &[u32],
     batch: usize,
@@ -138,7 +138,7 @@ pub fn evaluate_tasks(
             for b in 0..bsz {
                 block[b * t..(b + 1) * t].copy_from_slice(all_windows[idx + b]);
             }
-            let out = bound.run_f32(&[Input::I32(block, vec![batch, t])])?;
+            let out = bound.forward_block(block, batch, t)?;
             for b in 0..bsz {
                 let logits = &out[b * t * v..(b + 1) * t * v];
                 let item = &items[(idx + b) / N_CHOICES];

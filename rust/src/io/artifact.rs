@@ -1,0 +1,570 @@
+//! Persistence of quantized models in their **packed** form.
+//!
+//! The whole point of the compressed-artifact refactor is that the thing we
+//! store, ship and serve is the codes — so the on-disk format mirrors the
+//! in-memory [`QuantizedWeight`] exactly (DESIGN.md §6):
+//!
+//! ```text
+//! meta.*                       model config (same keys as the fp container)
+//! fp.<name>                    unquantized tensors (embeddings, norms)
+//! q.<name>.shape               u64 [rows, cols]
+//! q.<name>.decoder             u32 [tag, param]   0=dacc 1=table(param=id) 2=scalar(param=bits)
+//! q.<name>.method              u32 byte-string (method label)
+//! q.<name>.scales              f32 [cols]         (present iff non-empty)
+//! q.<name>.rht                 u64 [seed]         (present iff RHT domain)
+//! q.<name>.nstreams            u64 [n]
+//! q.<name>.stream<s>.meta      u64 [width, record count]
+//! q.<name>.stream<s>.words     u64 raw packed words
+//! codebook.dacc.dir.vectors    f32 [2^a, k]   \  written once; every DACC
+//! codebook.dacc.dir.meta       u64 [bits, method_tag]  artifact references it
+//! codebook.dacc.mag.levels     f32 [2^b]      /
+//! codebook.dacc.mag.meta       u64 [bits, method_tag]
+//! codebook.table<i>.data       f32 [n, k]     shared reconstruction tables
+//! codebook.table<i>.label      u32 byte-string
+//! ```
+//!
+//! Shared codebooks are deduplicated by `Arc` identity at save time and
+//! re-shared on load (every weight referencing table `i` gets the same
+//! `Arc`; all DACC weights share one decoder), so a load-then-serve cycle
+//! keeps the same resident-memory profile as the original quantization run.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
+use crate::io::{Entry, Pct};
+use crate::model::{GptConfig, QuantizedGpt};
+use crate::quant::packing::{PackedIndices, PackedStreams};
+use crate::quant::pcdvq::DaccDecoder;
+use crate::quant::sq::ScalarDecoder;
+use crate::quant::{CodeDecoder, DecoderPersist, QuantizedWeight, TableDecoder};
+use crate::tensor::Matrix;
+
+const TAG_DACC: u32 = 0;
+const TAG_TABLE: u32 = 1;
+const TAG_SCALAR: u32 = 2;
+
+fn str_entry(s: &str) -> Entry {
+    let bytes: Vec<u32> = s.bytes().map(|b| b as u32).collect();
+    Entry::u32(&[bytes.len() as u64], bytes)
+}
+
+fn entry_str(e: &Entry) -> Result<String> {
+    let bytes: Vec<u8> = e.as_u32()?.iter().map(|&b| b as u8).collect();
+    String::from_utf8(bytes).context("invalid string entry")
+}
+
+/// Validated rank-2 dims of an untrusted entry (its data length must match
+/// — `Matrix::from_vec` would otherwise panic on a corrupt container).
+fn entry_dims_2d(e: &Entry, what: &str) -> Result<(usize, usize)> {
+    anyhow::ensure!(e.dims.len() == 2, "{what}: expected rank 2, got {:?}", e.dims);
+    let (n, k) = (e.dims[0] as usize, e.dims[1] as usize);
+    anyhow::ensure!(n >= 1 && k >= 1, "{what}: bad dims {n}x{k}");
+    anyhow::ensure!(
+        e.as_f32().map(|d| d.len() == n * k).unwrap_or(false),
+        "{what}: data length disagrees with dims {n}x{k}"
+    );
+    Ok((n, k))
+}
+
+/// Save a quantized model in the packed format.
+pub fn save_quantized(q: &QuantizedGpt, path: impl AsRef<Path>) -> Result<()> {
+    let mut pct = Pct::new();
+    for (k, v) in [
+        ("vocab", q.config.vocab),
+        ("d_model", q.config.d_model),
+        ("n_layer", q.config.n_layer),
+        ("n_head", q.config.n_head),
+        ("d_ff", q.config.d_ff),
+        ("ctx", q.config.ctx),
+    ] {
+        pct.insert(&format!("meta.{k}"), Entry::u64(&[1], vec![v as u64]));
+    }
+
+    for (name, t) in &q.fp_tensors {
+        let dims: Vec<u64> = q
+            .fp_dims
+            .get(name)
+            .map(|d| d.iter().map(|&x| x as u64).collect())
+            .unwrap_or_else(|| vec![t.rows() as u64, t.cols() as u64]);
+        pct.insert(&format!("fp.{name}"), Entry::f32(&dims, t.as_slice().to_vec()));
+    }
+
+    // shared codebooks, deduplicated by Arc identity
+    let mut dacc_saved: Option<(*const DirectionCodebook, *const MagnitudeCodebook)> = None;
+    let mut tables: Vec<*const Matrix> = Vec::new();
+
+    for (name, w) in &q.weights {
+        pct.insert(
+            &format!("q.{name}.shape"),
+            Entry::u64(&[2], vec![w.rows() as u64, w.cols() as u64]),
+        );
+        pct.insert(&format!("q.{name}.method"), str_entry(&w.method));
+        if !w.scales().is_empty() {
+            pct.insert(
+                &format!("q.{name}.scales"),
+                Entry::f32(&[w.scales().len() as u64], w.scales().to_vec()),
+            );
+        }
+        if let Some(seed) = w.rht_seed() {
+            pct.insert(&format!("q.{name}.rht"), Entry::u64(&[1], vec![seed]));
+        }
+        let codes = w.codes();
+        pct.insert(
+            &format!("q.{name}.nstreams"),
+            Entry::u64(&[1], vec![codes.n_streams() as u64]),
+        );
+        for (s, stream) in codes.streams().iter().enumerate() {
+            pct.insert(
+                &format!("q.{name}.stream{s}.meta"),
+                Entry::u64(&[2], vec![stream.width as u64, stream.len as u64]),
+            );
+            pct.insert(
+                &format!("q.{name}.stream{s}.words"),
+                Entry::u64(&[stream.words().len() as u64], stream.words().to_vec()),
+            );
+        }
+        let decoder_entry = match w.decoder().persist() {
+            DecoderPersist::Dacc { dir, mag } => {
+                let ids = (Arc::as_ptr(dir), Arc::as_ptr(mag));
+                match dacc_saved {
+                    None => {
+                        pct.insert(
+                            "codebook.dacc.dir.vectors",
+                            Entry::f32(
+                                &[dir.len() as u64, dir.dim() as u64],
+                                dir.vectors.as_slice().to_vec(),
+                            ),
+                        );
+                        pct.insert(
+                            "codebook.dacc.dir.meta",
+                            Entry::u64(
+                                &[2],
+                                vec![
+                                    dir.bits as u64,
+                                    crate::codebook::store::direction_method_tag(dir.method)
+                                        as u64,
+                                ],
+                            ),
+                        );
+                        pct.insert(
+                            "codebook.dacc.mag.levels",
+                            Entry::f32(&[mag.len() as u64], mag.levels.clone()),
+                        );
+                        pct.insert(
+                            "codebook.dacc.mag.meta",
+                            Entry::u64(
+                                &[2],
+                                vec![
+                                    mag.bits as u64,
+                                    crate::codebook::store::magnitude_method_tag(mag.method)
+                                        as u64,
+                                ],
+                            ),
+                        );
+                        dacc_saved = Some(ids);
+                    }
+                    Some(saved) if saved == ids => {}
+                    Some(_) => bail!(
+                        "packed container supports one DACC codebook pair; \
+                         '{name}' references a second one"
+                    ),
+                }
+                Entry::u32(&[2], vec![TAG_DACC, 0])
+            }
+            DecoderPersist::Table { table, label } => {
+                let ptr = Arc::as_ptr(table);
+                let id = match tables.iter().position(|&p| p == ptr) {
+                    Some(i) => i,
+                    None => {
+                        let i = tables.len();
+                        pct.insert(
+                            &format!("codebook.table{i}.data"),
+                            Entry::f32(
+                                &[table.rows() as u64, table.cols() as u64],
+                                table.as_slice().to_vec(),
+                            ),
+                        );
+                        pct.insert(&format!("codebook.table{i}.label"), str_entry(label));
+                        tables.push(ptr);
+                        i
+                    }
+                };
+                Entry::u32(&[2], vec![TAG_TABLE, id as u32])
+            }
+            DecoderPersist::Scalar { bits } => Entry::u32(&[2], vec![TAG_SCALAR, bits]),
+        };
+        pct.insert(&format!("q.{name}.decoder"), decoder_entry);
+    }
+    pct.save(path)
+}
+
+/// Load a quantized model saved by [`save_quantized`]. Shared codebooks are
+/// re-shared: all DACC artifacts reference one decoder, all artifacts of
+/// table `i` reference one table.
+pub fn load_quantized(path: impl AsRef<Path>, name: impl Into<String>) -> Result<QuantizedGpt> {
+    let pct = Pct::load(path)?;
+    let meta = |key: &str| -> Result<usize> {
+        Ok(pct.get(&format!("meta.{key}"))?.scalar_u64()? as usize)
+    };
+    let config = GptConfig {
+        vocab: meta("vocab")?,
+        d_model: meta("d_model")?,
+        n_layer: meta("n_layer")?,
+        n_head: meta("n_head")?,
+        d_ff: meta("d_ff")?,
+        ctx: meta("ctx")?,
+    };
+
+    let mut fp_tensors = BTreeMap::new();
+    let mut fp_dims = BTreeMap::new();
+    let mut qnames = std::collections::BTreeSet::new();
+    for full in pct.names() {
+        if let Some(name) = full.strip_prefix("fp.") {
+            let e = pct.get(full)?;
+            let dims: Vec<usize> = e.dims.iter().map(|&d| d as usize).collect();
+            let (rows, cols) = match dims.len() {
+                1 => (dims[0], 1),
+                2 => (dims[0], dims[1]),
+                n => bail!("fp tensor '{name}' has unsupported rank {n}"),
+            };
+            fp_dims.insert(name.to_string(), dims);
+            fp_tensors.insert(
+                name.to_string(),
+                Matrix::from_vec(e.as_f32()?.to_vec(), rows, cols),
+            );
+        } else if let Some(rest) = full.strip_prefix("q.") {
+            if let Some(name) = rest.strip_suffix(".shape") {
+                qnames.insert(name.to_string());
+            }
+        }
+    }
+
+    // lazily-shared decoders (one per distinct codebook, like at save time)
+    let mut dacc: Option<Arc<DaccDecoder>> = None;
+    let mut tables: BTreeMap<u32, Arc<TableDecoder>> = BTreeMap::new();
+    let mut scalars: BTreeMap<u32, Arc<ScalarDecoder>> = BTreeMap::new();
+
+    let mut weights = BTreeMap::new();
+    for name in qnames {
+        let shape = pct.get(&format!("q.{name}.shape"))?.as_u64()?.to_vec();
+        anyhow::ensure!(shape.len() == 2, "bad shape entry for '{name}'");
+        let (rows, cols) = (shape[0] as usize, shape[1] as usize);
+        anyhow::ensure!(
+            rows >= 1 && cols >= 1 && rows.checked_mul(cols).is_some(),
+            "'{name}': bad shape {rows}x{cols}"
+        );
+        let method = entry_str(pct.get(&format!("q.{name}.method"))?)?;
+        let scales = match pct.get(&format!("q.{name}.scales")) {
+            Ok(e) => e.as_f32()?.to_vec(),
+            Err(_) => Vec::new(),
+        };
+        let rht_seed = match pct.get(&format!("q.{name}.rht")) {
+            Ok(e) => Some(e.scalar_u64()?),
+            Err(_) => None,
+        };
+        let n_streams = pct.get(&format!("q.{name}.nstreams"))?.scalar_u64()?;
+        // cap before allocating: a corrupt count must be Err, not an abort
+        anyhow::ensure!(
+            (1..=8).contains(&n_streams),
+            "'{name}': implausible stream count {n_streams}"
+        );
+        let n_streams = n_streams as usize;
+        let mut streams = Vec::with_capacity(n_streams);
+        for s in 0..n_streams {
+            let m = pct.get(&format!("q.{name}.stream{s}.meta"))?.as_u64()?.to_vec();
+            anyhow::ensure!(m.len() == 2, "bad stream meta for '{name}'");
+            let (width, len) = (m[0], m[1]);
+            anyhow::ensure!(
+                (1..=63).contains(&width),
+                "'{name}' stream {s}: bad record width {width}"
+            );
+            anyhow::ensure!(
+                len <= rows as u64 * cols as u64,
+                "'{name}' stream {s}: record count {len} exceeds {rows}x{cols}"
+            );
+            let words = pct
+                .get(&format!("q.{name}.stream{s}.words"))?
+                .as_u64()?
+                .to_vec();
+            anyhow::ensure!(
+                words.len() as u64 * 64 >= len * width,
+                "'{name}' stream {s}: word array truncated"
+            );
+            streams.push(PackedIndices::from_words(words, width as u32, len as usize));
+        }
+        let dec = pct.get(&format!("q.{name}.decoder"))?.as_u32()?.to_vec();
+        anyhow::ensure!(dec.len() == 2, "bad decoder entry for '{name}'");
+        // record-range capacity per stream, checked below — this is a trust
+        // boundary (the container may be truncated/corrupt), so malformed
+        // data must come back as Err, not as a panic here or a
+        // gather-out-of-bounds later in serving
+        let stream_caps: Vec<u64>;
+        let decoder: Arc<dyn CodeDecoder> = match dec[0] {
+            TAG_DACC => {
+                anyhow::ensure!(n_streams == 2, "'{name}': DACC needs 2 streams");
+                if dacc.is_none() {
+                    let dv = pct.get("codebook.dacc.dir.vectors")?;
+                    let (n, k) = entry_dims_2d(dv, "codebook.dacc.dir.vectors")?;
+                    let dm = pct.get("codebook.dacc.dir.meta")?.as_u64()?.to_vec();
+                    anyhow::ensure!(dm.len() == 2, "bad dacc dir meta");
+                    let dir = DirectionCodebook {
+                        vectors: Matrix::from_vec(dv.as_f32()?.to_vec(), n, k),
+                        bits: dm[0] as u32,
+                        method: crate::codebook::store::parse_direction_tag(dm[1] as u32),
+                    };
+                    let mm = pct.get("codebook.dacc.mag.meta")?.as_u64()?.to_vec();
+                    anyhow::ensure!(mm.len() == 2, "bad dacc mag meta");
+                    let mag = MagnitudeCodebook {
+                        levels: pct.get("codebook.dacc.mag.levels")?.as_f32()?.to_vec(),
+                        bits: mm[0] as u32,
+                        method: crate::codebook::store::parse_magnitude_tag(mm[1] as u32),
+                    };
+                    anyhow::ensure!(!mag.levels.is_empty(), "empty dacc magnitude levels");
+                    dacc = Some(Arc::new(DaccDecoder::new(Arc::new(dir), Arc::new(mag))));
+                }
+                let d = dacc.clone().unwrap();
+                stream_caps = vec![d.dir.len() as u64, d.mag.len() as u64];
+                d
+            }
+            TAG_TABLE => {
+                let id = dec[1];
+                let d = match tables.get(&id) {
+                    Some(d) => Arc::clone(d),
+                    None => {
+                        let e = pct.get(&format!("codebook.table{id}.data"))?;
+                        let (n, k) = entry_dims_2d(e, "table codebook")?;
+                        let table = Arc::new(Matrix::from_vec(e.as_f32()?.to_vec(), n, k));
+                        let label =
+                            entry_str(pct.get(&format!("codebook.table{id}.label"))?)?;
+                        let d = Arc::new(TableDecoder::new(table, label));
+                        tables.insert(id, Arc::clone(&d));
+                        d
+                    }
+                };
+                stream_caps = vec![d.table().rows() as u64];
+                d
+            }
+            TAG_SCALAR => {
+                let bits = dec[1];
+                anyhow::ensure!((1..32).contains(&bits), "'{name}': bad scalar bits {bits}");
+                stream_caps = vec![1u64 << bits];
+                match scalars.get(&bits) {
+                    Some(d) => Arc::clone(d) as Arc<dyn CodeDecoder>,
+                    None => {
+                        let d = Arc::new(ScalarDecoder::new(bits));
+                        scalars.insert(bits, Arc::clone(&d));
+                        d
+                    }
+                }
+            }
+            t => bail!("unknown decoder tag {t} for '{name}'"),
+        };
+        // shape + record-range validation (errors, not panics/late OOB)
+        anyhow::ensure!(n_streams == stream_caps.len(), "'{name}': stream count mismatch");
+        let n_vec = streams[0].len;
+        anyhow::ensure!(
+            streams.iter().all(|s| s.len == n_vec),
+            "'{name}': stream record counts disagree"
+        );
+        anyhow::ensure!(
+            n_vec * decoder.k() == rows * cols,
+            "'{name}': {n_vec} records x k={} disagree with shape {rows}x{cols}",
+            decoder.k()
+        );
+        anyhow::ensure!(
+            scales.is_empty() || scales.len() == cols,
+            "'{name}': scales length {} != cols {cols}",
+            scales.len()
+        );
+        anyhow::ensure!(
+            rht_seed.is_none() || rows.is_power_of_two(),
+            "'{name}': RHT artifact with non-power-of-two rows {rows}"
+        );
+        for (s, (stream, &cap)) in streams.iter().zip(&stream_caps).enumerate() {
+            for i in 0..stream.len {
+                let rec = stream.get(i);
+                anyhow::ensure!(
+                    rec < cap,
+                    "'{name}' stream {s} record {i} = {rec} out of codebook range {cap}"
+                );
+            }
+        }
+        weights.insert(
+            name.clone(),
+            QuantizedWeight::new(
+                method,
+                rows,
+                cols,
+                PackedStreams::new(streams),
+                decoder,
+                scales,
+                rht_seed,
+            ),
+        );
+    }
+
+    Ok(QuantizedGpt {
+        config,
+        name: name.into(),
+        weights,
+        fp_tensors,
+        fp_dims,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codebook::{DirectionMethod, MagnitudeMethod};
+    use crate::model::GptModel;
+    use crate::quant::pcdvq::{Pcdvq, PcdvqConfig};
+    use crate::quant::sq::Rtn;
+    use crate::quant::vq_kmeans::KMeansVq;
+
+    fn tmp_model(name: &str) -> GptModel {
+        let dir = std::env::temp_dir().join("pcdvq_artifact_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}.pct"));
+        crate::model::gpt::tests::synthetic_model_file(&path, 64, 2);
+        GptModel::load(&path).unwrap()
+    }
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pcdvq_artifact_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn pcdvq(a: u32, b: u32) -> Pcdvq {
+        let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, a, 8, 0));
+        let mag = Arc::new(MagnitudeCodebook::build(
+            MagnitudeMethod::LloydMax,
+            b,
+            8,
+            1.0 - 1e-4,
+            0,
+        ));
+        Pcdvq::new(PcdvqConfig { dir_bits: a, mag_bits: b, k: 8, seed: 7 }, dir, mag)
+    }
+
+    fn assert_models_equal(a: &QuantizedGpt, b: &QuantizedGpt) {
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.payload_bits(), b.payload_bits());
+        assert_eq!(a.codebook_bits(), b.codebook_bits());
+        assert_eq!(
+            a.weights.keys().collect::<Vec<_>>(),
+            b.weights.keys().collect::<Vec<_>>()
+        );
+        for (name, wa) in &a.weights {
+            let wb = &b.weights[name];
+            assert_eq!(wa.codes(), wb.codes(), "{name} codes");
+            assert_eq!(wa.scales(), wb.scales(), "{name} scales");
+            assert_eq!(wa.rht_seed(), wb.rht_seed(), "{name} seed");
+            // bit-identical reconstruction through the loaded codebooks
+            assert_eq!(
+                wa.dequantize().as_slice(),
+                wb.dequantize().as_slice(),
+                "{name} dequant"
+            );
+        }
+        for (name, ta) in &a.fp_tensors {
+            assert_eq!(ta.as_slice(), b.fp_tensors[name].as_slice(), "fp {name}");
+        }
+    }
+
+    #[test]
+    fn pcdvq_round_trip_bit_exact() {
+        let m = tmp_model("rt_pcdvq");
+        let q = QuantizedGpt::quantize(&m, &pcdvq(8, 2));
+        let path = tmp_path("pcdvq_model.pctq");
+        save_quantized(&q, &path).unwrap();
+        let loaded = load_quantized(&path, q.name.clone()).unwrap();
+        assert_models_equal(&q, &loaded);
+        // the on-disk artifact is genuinely small: payload + codebooks +
+        // fp tensors + bookkeeping, nowhere near the dense fp32 model
+        let file_bits = std::fs::metadata(&path).unwrap().len() * 8;
+        assert!(
+            file_bits < q.dense_bits() / 2,
+            "packed container {file_bits} bits vs dense {}",
+            q.dense_bits()
+        );
+    }
+
+    #[test]
+    fn scalar_round_trip_bit_exact() {
+        let m = tmp_model("rt_rtn");
+        let q = QuantizedGpt::quantize(&m, &Rtn::with_clip_search(3));
+        let path = tmp_path("rtn_model.pctq");
+        save_quantized(&q, &path).unwrap();
+        let loaded = load_quantized(&path, "rt_rtn").unwrap();
+        assert_models_equal(&q, &loaded);
+    }
+
+    #[test]
+    fn load_rejects_corrupt_containers_with_errors_not_panics() {
+        let m = tmp_model("rt_corrupt");
+        let q = QuantizedGpt::quantize(&m, &Rtn::new(2));
+        let path = tmp_path("corrupt_base.pctq");
+        save_quantized(&q, &path).unwrap();
+        let name = q.weights.keys().next().unwrap().clone();
+
+        // 1. truncated word array (width claims more bits than stored)
+        let mut pct = Pct::load(&path).unwrap();
+        let meta = pct
+            .get(&format!("q.{name}.stream0.meta"))
+            .unwrap()
+            .as_u64()
+            .unwrap()
+            .to_vec();
+        pct.insert(
+            &format!("q.{name}.stream0.meta"),
+            Entry::u64(&[2], vec![31, meta[1]]),
+        );
+        let p = tmp_path("corrupt_trunc.pctq");
+        pct.save(&p).unwrap();
+        assert!(load_quantized(&p, "x").is_err(), "truncated stream must be Err");
+
+        // 2. records out of the decoder's codebook range (2-bit codes
+        //    reinterpreted against a 1-bit grid)
+        let mut pct = Pct::load(&path).unwrap();
+        pct.insert(&format!("q.{name}.decoder"), Entry::u32(&[2], vec![2, 1]));
+        let p = tmp_path("corrupt_range.pctq");
+        pct.save(&p).unwrap();
+        assert!(load_quantized(&p, "x").is_err(), "out-of-range records must be Err");
+
+        // 3. shape that disagrees with the record count
+        let mut pct = Pct::load(&path).unwrap();
+        let shape = pct.get(&format!("q.{name}.shape")).unwrap().as_u64().unwrap().to_vec();
+        pct.insert(
+            &format!("q.{name}.shape"),
+            Entry::u64(&[2], vec![shape[0], shape[1] * 2]),
+        );
+        let p = tmp_path("corrupt_shape.pctq");
+        pct.save(&p).unwrap();
+        assert!(load_quantized(&p, "x").is_err(), "bad shape must be Err");
+    }
+
+    #[test]
+    fn table_round_trip_shares_one_table() {
+        let m = tmp_model("rt_km");
+        let mut km = KMeansVq::new(8, 6);
+        km.fit(&m.quantizable_vectors(8));
+        let q = QuantizedGpt::quantize(&m, &km);
+        let path = tmp_path("km_model.pctq");
+        save_quantized(&q, &path).unwrap();
+        let loaded = load_quantized(&path, "rt_km").unwrap();
+        assert_models_equal(&q, &loaded);
+        // all layers reference the same loaded table Arc (counted once)
+        let specs: std::collections::BTreeSet<String> = loaded
+            .weights
+            .values()
+            .map(|w| w.decoder().spec())
+            .collect();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(loaded.codebook_bits(), (1 << 6) * 8 * 32);
+    }
+}

@@ -19,6 +19,8 @@
 //! The python writer lives in `python/compile/pct.py`; the round-trip is
 //! integration-tested from both sides.
 
+pub mod artifact;
 mod pct;
 
+pub use artifact::{load_quantized, save_quantized};
 pub use pct::{Entry, Pct, PctData};

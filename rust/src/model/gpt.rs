@@ -7,8 +7,7 @@ use anyhow::{Context, Result};
 
 use super::GptConfig;
 use crate::io::Pct;
-use crate::quant::pcdvq::{Pcdvq, PcdvqWeight};
-use crate::quant::Quantizer;
+use crate::quant::{QuantizedWeight, Quantizer};
 use crate::tensor::Matrix;
 
 /// A loaded tinygpt: config + all named parameter tensors (f32).
@@ -100,29 +99,44 @@ impl GptModel {
     }
 }
 
-/// A PCDVQ-quantized model: per-matrix code payloads + shared codebooks,
-/// ready to feed the `fwd_q` serving artifact.
+/// A quantized model as a **compressed artifact collection**: per-matrix
+/// packed-code payloads referencing shared codebooks, plus the fp tensors
+/// (embeddings, norms) the paper leaves dense. This is the form the serving
+/// stack keeps resident (codes + codebooks only) — dense weights exist only
+/// where a caller explicitly materializes them ([`Self::to_dense`]).
+#[derive(Clone)]
 pub struct QuantizedGpt {
     pub config: GptConfig,
     pub name: String,
     /// Compressed quantizable weights, keyed by name.
-    pub weights: BTreeMap<String, PcdvqWeight>,
+    pub weights: BTreeMap<String, QuantizedWeight>,
     /// Unquantized tensors (embeddings, norms), as in the source model.
     pub fp_tensors: BTreeMap<String, Matrix>,
     pub fp_dims: BTreeMap<String, Vec<usize>>,
 }
 
 impl QuantizedGpt {
-    /// Quantize a model with PCDVQ, keeping the real compressed codes.
-    pub fn quantize(model: &GptModel, pcdvq: &Pcdvq) -> Self {
-        let qnames = model.config.quantizable_names();
+    /// Quantize a model with any [`Quantizer`], keeping the real compressed
+    /// codes per layer.
+    pub fn quantize<Q: Quantizer + ?Sized>(model: &GptModel, quantizer: &Q) -> Self {
         let mut weights = BTreeMap::new();
-        for name in &qnames {
-            weights.insert(name.clone(), pcdvq.quantize_full(&model.tensors[name]));
+        for name in model.config.quantizable_names() {
+            let qw = quantizer.quantize(&model.tensors[&name]);
+            weights.insert(name, qw);
         }
+        Self::from_artifacts(model, weights)
+    }
+
+    /// Assemble from per-layer artifacts + the source model's fp tensors —
+    /// the single fp-split rule shared by [`Self::quantize`] and the
+    /// layer-parallel scheduler.
+    pub fn from_artifacts(
+        model: &GptModel,
+        weights: BTreeMap<String, QuantizedWeight>,
+    ) -> Self {
         let mut fp_tensors = model.tensors.clone();
         let mut fp_dims = model.dims.clone();
-        for name in &qnames {
+        for name in weights.keys() {
             fp_tensors.remove(name);
             fp_dims.remove(name);
         }
@@ -136,9 +150,23 @@ impl QuantizedGpt {
     }
 
     /// Total payload bits of the compressed representation (codes + scales +
-    /// seeds; codebooks amortize across the model per §A.3).
+    /// seeds; codebooks amortize across the model per §A.3) — *measured*
+    /// from the packed streams, not estimated.
     pub fn payload_bits(&self) -> u64 {
         self.weights.values().map(|w| w.payload_bits()).sum()
+    }
+
+    /// Bits of the distinct shared codebooks the artifacts reference
+    /// (deduplicated by decoder spec — `Arc`-shared codebooks count once).
+    pub fn codebook_bits(&self) -> u64 {
+        crate::quant::dedup_codebook_bits(self.weights.values())
+    }
+
+    /// Total bits actually resident when serving from codes: payloads plus
+    /// the (deduplicated) shared codebooks. The §4.4 claim is
+    /// `resident_bits ≈ payload_bits` because codebooks amortize.
+    pub fn resident_bits(&self) -> u64 {
+        self.payload_bits() + self.codebook_bits()
     }
 
     /// Memory footprint of the quantizable weights in fp32 bits (the §4.4
@@ -146,13 +174,32 @@ impl QuantizedGpt {
     pub fn dense_bits(&self) -> u64 {
         self.weights
             .values()
-            .map(|w| (w.rows * w.cols) as u64 * 32)
+            .map(|w| (w.rows() * w.cols()) as u64 * 32)
             .sum()
+    }
+
+    /// Explicitly materialize the dense fake-quant model (one layer at a
+    /// time — peak dense residency is a single layer above the artifact).
+    pub fn to_dense(&self) -> GptModel {
+        let mut tensors = self.fp_tensors.clone();
+        let mut dims = self.fp_dims.clone();
+        for (name, w) in &self.weights {
+            let mut m = Matrix::zeros(w.rows(), w.cols());
+            w.dequantize_into(&mut m);
+            dims.insert(name.clone(), vec![w.rows(), w.cols()]);
+            tensors.insert(name.clone(), m);
+        }
+        GptModel {
+            config: self.config,
+            tensors,
+            dims,
+            name: self.name.clone(),
+        }
     }
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::io::Entry;
     use crate::rng::Rng;
@@ -252,7 +299,7 @@ mod tests {
     #[test]
     fn quantized_gpt_payload_accounting() {
         use crate::codebook::{DirectionCodebook, DirectionMethod, MagnitudeCodebook};
-        use crate::quant::pcdvq::PcdvqConfig;
+        use crate::quant::pcdvq::{Pcdvq, PcdvqConfig};
         use std::sync::Arc;
         let m = tmp_model("qg");
         let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 8, 8, 0));
@@ -268,5 +315,31 @@ mod tests {
         let bpw = q.payload_bits() as f64 / m.config.quantizable_params() as f64;
         assert!(bpw > 1.2 && bpw < 2.0, "bpw={bpw}");
         assert!(q.payload_bits() * 8 < q.dense_bits());
+        // one shared DACC codebook pair, counted once across all layers
+        assert_eq!(q.codebook_bits(), (256 * 8 * 32 + 4 * 32) as u64);
+        assert_eq!(q.resident_bits(), q.payload_bits() + q.codebook_bits());
+    }
+
+    #[test]
+    fn to_dense_matches_direct_fake_quant() {
+        let m = tmp_model("dense");
+        let rtn = crate::quant::sq::Rtn::new(3);
+        let q = QuantizedGpt::quantize(&m, &rtn);
+        let dense = q.to_dense();
+        let (fq, bits) = m.fake_quantize(&rtn);
+        assert_eq!(bits, q.payload_bits());
+        for name in m.config.quantizable_names() {
+            assert_eq!(
+                dense.tensors[&name].as_slice(),
+                fq.tensors[&name].as_slice(),
+                "{name}"
+            );
+        }
+        // fp tensors pass through untouched, dims complete
+        assert_eq!(
+            dense.tensor("embed.tok").unwrap().as_slice(),
+            m.tensor("embed.tok").unwrap().as_slice()
+        );
+        assert_eq!(dense.dims.len(), m.dims.len());
     }
 }

@@ -7,7 +7,9 @@
 //! `fwd_q_<model>` instead.
 
 mod config;
-mod gpt;
+mod forward;
+pub(crate) mod gpt;
 
 pub use config::GptConfig;
+pub use forward::{HostForward, LinearW};
 pub use gpt::{GptModel, QuantizedGpt};

@@ -51,29 +51,123 @@ impl TransposedTile {
     }
 }
 
+/// §Perf: below this many vectors a strip is not worth a thread (tile loads
+/// and thread spawn dominate); the parallel split keeps strips at least this
+/// long.
+const MIN_STRIP: usize = 2048;
+
 /// Find, for every row of `vectors`, the index of the codebook row with the
 /// highest score `v·c_j + bias_j`.
 ///
 /// `bias` is either empty (cosine on unit rows) or one value per codebook
 /// row (Euclidean).
 pub fn assign_batch(vectors: &Matrix, codebook: &Matrix, bias: &[f32]) -> Vec<u32> {
-    assert_eq!(vectors.cols(), codebook.cols(), "dimension mismatch");
-    assert!(
-        bias.is_empty() || bias.len() == codebook.rows(),
-        "bias length must match codebook rows"
-    );
     let mut out = vec![0u32; vectors.rows()];
     assign_into(vectors, codebook, bias, &mut out);
     out
 }
 
+std::thread_local! {
+    /// Per-thread override of the worker count (see [`with_assign_threads`]).
+    static THREAD_OVERRIDE: std::cell::Cell<Option<usize>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Default worker count: `PCDVQ_ASSIGN_THREADS` if set (read once per
+/// process — repeated `getenv` from concurrent threads is not safe on every
+/// libc), else the available parallelism.
+fn default_threads() -> usize {
+    static DEFAULT: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("PCDVQ_ASSIGN_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Run `f` with [`assign_into`] capped at `threads` workers on this thread —
+/// the coordination hook for callers that already parallelize at a coarser
+/// grain (the layer-parallel scheduler pins its workers' inner assignment
+/// to 1 thread so the machine is not oversubscribed).
+pub fn with_assign_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_OVERRIDE.with(|c| c.replace(Some(threads)));
+    let out = f();
+    THREAD_OVERRIDE.with(|c| c.set(prev));
+    out
+}
+
 /// [`assign_batch`] into a caller-provided buffer (no allocation beyond the
 /// per-call scratch — used by the scheduler's per-worker loops).
+///
+/// The vector strip is split across scoped threads (each thread owns a
+/// disjoint `out` chunk, so writes are deterministic and the result is
+/// bit-identical to the serial scan regardless of thread count). Thread
+/// count defaults to the available parallelism, capped so each strip keeps
+/// at least [`MIN_STRIP`] vectors; `PCDVQ_ASSIGN_THREADS` or an enclosing
+/// [`with_assign_threads`] overrides it.
 pub fn assign_into(vectors: &Matrix, codebook: &Matrix, bias: &[f32], out: &mut [u32]) {
+    let threads = THREAD_OVERRIDE
+        .with(|c| c.get())
+        .unwrap_or_else(default_threads);
+    assign_into_with_threads(vectors, codebook, bias, out, threads)
+}
+
+/// [`assign_into`] with an explicit worker count (1 = the serial scan; the
+/// benches use this to measure the before/after split).
+pub fn assign_into_with_threads(
+    vectors: &Matrix,
+    codebook: &Matrix,
+    bias: &[f32],
+    out: &mut [u32],
+    threads: usize,
+) {
     assert_eq!(out.len(), vectors.rows());
+    assert_eq!(vectors.cols(), codebook.cols(), "dimension mismatch");
+    assert!(
+        bias.is_empty() || bias.len() == codebook.rows(),
+        "bias length must match codebook rows"
+    );
+    let n = vectors.rows();
+    if n == 0 {
+        return;
+    }
+    // floor division: never split into strips shorter than MIN_STRIP
+    let threads = threads.clamp(1, (n / MIN_STRIP).max(1));
+    if threads <= 1 {
+        assign_strip(vectors, 0, n, codebook, bias, out);
+        return;
+    }
+    // Deterministic split: fixed-size strips in row order; each scoped
+    // thread writes only its own chunk.
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let row_start = t * chunk;
+            let row_end = row_start + out_chunk.len();
+            scope.spawn(move || {
+                assign_strip(vectors, row_start, row_end, codebook, bias, out_chunk);
+            });
+        }
+    });
+}
+
+/// Serial scan over the vector strip `[row_start, row_end)`; `out` has one
+/// slot per strip row.
+fn assign_strip(
+    vectors: &Matrix,
+    row_start: usize,
+    row_end: usize,
+    codebook: &Matrix,
+    bias: &[f32],
+    out: &mut [u32],
+) {
+    debug_assert_eq!(out.len(), row_end - row_start);
     let k = vectors.cols();
     let n_cb = codebook.rows();
-    let mut best_score = vec![f32::NEG_INFINITY; vectors.rows()];
+    let mut best_score = vec![f32::NEG_INFINITY; row_end - row_start];
     let mut tile = TransposedTile::new(k);
     let mut scores = vec![0.0f32; CB_TILE];
 
@@ -84,6 +178,7 @@ pub fn assign_into(vectors: &Matrix, codebook: &Matrix, bias: &[f32], out: &mut 
             tile.load(codebook, tile_start, tile_end);
             assign_tile_k8(
                 vectors,
+                row_start,
                 &tile,
                 bias,
                 tile_start,
@@ -93,7 +188,16 @@ pub fn assign_into(vectors: &Matrix, codebook: &Matrix, bias: &[f32], out: &mut 
                 out,
             );
         } else {
-            assign_tile_generic(vectors, codebook, bias, tile_start, tile_end, &mut best_score, out);
+            assign_tile_generic(
+                vectors,
+                row_start,
+                codebook,
+                bias,
+                tile_start,
+                tile_end,
+                &mut best_score,
+                out,
+            );
         }
         tile_start = tile_end;
     }
@@ -107,6 +211,7 @@ pub fn assign_into(vectors: &Matrix, codebook: &Matrix, bias: &[f32], out: &mut 
 #[allow(clippy::too_many_arguments)]
 fn assign_tile_k8(
     vectors: &Matrix,
+    row_start: usize,
     tile: &TransposedTile,
     bias: &[f32],
     tile_start: usize,
@@ -127,7 +232,7 @@ fn assign_tile_k8(
         tile.component(7),
     );
     for (i, (bs, o)) in best_score.iter_mut().zip(out.iter_mut()).enumerate() {
-        let v = vectors.row(i);
+        let v = vectors.row(row_start + i);
         let (v0, v1, v2, v3, v4, v5, v6, v7) =
             (v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]);
         let s = &mut scores[..w];
@@ -163,6 +268,7 @@ fn assign_tile_k8(
 #[allow(clippy::too_many_arguments)]
 fn assign_tile_generic(
     vectors: &Matrix,
+    row_start: usize,
     codebook: &Matrix,
     bias: &[f32],
     tile_start: usize,
@@ -171,7 +277,7 @@ fn assign_tile_generic(
     out: &mut [u32],
 ) {
     for (i, (bs, o)) in best_score.iter_mut().zip(out.iter_mut()).enumerate() {
-        let v = vectors.row(i);
+        let v = vectors.row(row_start + i);
         for j in tile_start..tile_end {
             let mut s = crate::tensor::dot(v, codebook.row(j));
             if !bias.is_empty() {
@@ -269,6 +375,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_exact() {
+        // big enough that the parallel path actually splits (> MIN_STRIP)
+        let mut rng = Rng::new(7);
+        let n = 3 * MIN_STRIP + 137;
+        let vectors = Matrix::from_vec(rng.normal_vec(n * 8), n, 8);
+        let cb = Matrix::from_vec(rng.normal_vec(900 * 8), 900, 8);
+        let mut serial = vec![0u32; n];
+        assign_into_with_threads(&vectors, &cb, &[], &mut serial, 1);
+        for threads in [2usize, 3, 7] {
+            let mut par = vec![0u32; n];
+            assign_into_with_threads(&vectors, &cb, &[], &mut par, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_generic_k_matches_serial() {
+        let mut rng = Rng::new(8);
+        let n = 2 * MIN_STRIP + 11;
+        let vectors = Matrix::from_vec(rng.normal_vec(n * 4), n, 4);
+        let cb = Matrix::from_vec(rng.normal_vec(300 * 4), 300, 4);
+        let bias = euclidean_bias(&cb);
+        let mut serial = vec![0u32; n];
+        assign_into_with_threads(&vectors, &cb, &bias, &mut serial, 1);
+        let mut par = vec![0u32; n];
+        assign_into_with_threads(&vectors, &cb, &bias, &mut par, 4);
+        assert_eq!(par, serial);
     }
 
     #[test]

@@ -2,13 +2,21 @@
 //!
 //! True GPTQ minimizes `‖XW − XŴ‖²` using the Hessian `H = XᵀX` of real
 //! calibration activations. Our substrate has no LLaMA calibration set, so —
-//! per the DESIGN.md substitution table — we run the *exact GPTQ update
+//! per the DESIGN.md §3 substitution table — we run the *exact GPTQ update
 //! equations* (quantize one input dim at a time, propagate the weighted
 //! residual into the not-yet-quantized dims through `H^{-1}`) against a
 //! synthetic AR(1)-correlated Hessian `H[i,j] = ρ^{|i-j|}`, which models the
 //! smooth feature correlations GPTQ exploits. With ρ→0 this degenerates to
 //! plain RTN, which is the identity the unit tests pin down.
+//!
+//! Like [`crate::quant::sq`], the artifact is a packed stream of offset
+//! codes + per-column scales (the error feedback happens at quantization
+//! time; the stored representation is plain uniform SQ).
 
+use std::sync::Arc;
+
+use crate::quant::packing::{PackedIndices, PackedStreams};
+use crate::quant::sq::ScalarDecoder;
 use crate::quant::{QuantizedWeight, Quantizer};
 use crate::tensor::Matrix;
 
@@ -37,6 +45,7 @@ impl Quantizer for GptqLike {
         let p = w.rows();
         let q = w.cols();
         let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
+        let qmin = -(1i64 << (self.bits - 1));
 
         // Per-column symmetric scale from max|w| (as in GPTQ's grid init).
         let scales: Vec<f32> = (0..q)
@@ -57,16 +66,15 @@ impl Quantizer for GptqLike {
         // (derivable from H^{-1} being tridiagonal for AR(1)).
         let rho = self.rho as f32;
         let mut work = w.clone();
-        let mut out = Matrix::zeros(p, q);
+        let mut records = vec![0u64; p * q];
         for i in 0..p {
             // quantize row i
             for j in 0..q {
                 let s = scales[j];
                 let x = work.get(i, j);
                 let qv = (x / s).round().clamp(-(qmax + 1.0), qmax);
-                let deq = qv * s;
-                out.set(i, j, deq);
-                let err = x - deq;
+                records[i * q + j] = (qv as i64 - qmin) as u64;
+                let err = x - qv * s;
                 // error feedback into the next (not yet quantized) row
                 if i + 1 < p {
                     let nxt = work.get(i + 1, j) + rho * err;
@@ -74,8 +82,16 @@ impl Quantizer for GptqLike {
                 }
             }
         }
-        let bits = w.len() as u64 * self.bits as u64 + q as u64 * 32;
-        QuantizedWeight::new(out, bits, self.name())
+        let codes = PackedStreams::single(PackedIndices::pack(&records, self.bits));
+        QuantizedWeight::new(
+            self.name(),
+            p,
+            q,
+            codes,
+            Arc::new(ScalarDecoder::new(self.bits)),
+            scales,
+            None,
+        )
     }
 
     fn bits_per_weight(&self) -> f64 {
@@ -128,6 +144,8 @@ mod tests {
         let w = correlated(128, 16, rho, 2);
         let g = GptqLike { bits: 2, rho: rho as f64 }.quantize(&w);
         let r = Rtn::new(2).quantize(&w);
+        let g_deq = g.dequantize();
+        let r_deq = r.dequantize();
         let mut rng = Rng::new(3);
         // sample AR(1)-correlated activations
         let nx = 200;
@@ -154,8 +172,8 @@ mod tests {
             }
             s
         };
-        let eg = act_err(g.dequantize());
-        let er = act_err(r.dequantize());
+        let eg = act_err(&g_deq);
+        let er = act_err(&r_deq);
         assert!(eg < er * 1.05, "gptq-like {eg} should not lose to rtn {er}");
     }
 

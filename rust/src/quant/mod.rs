@@ -1,17 +1,40 @@
 //! Weight quantizers: PCDVQ (the paper's method) and every baseline it is
 //! compared against in Tables 1–4, all operating on the same [`Matrix`]
-//! weight substrate and returning a [`QuantizedWeight`] that can be
-//! dequantized, measured ([`error`]) and persisted.
+//! weight substrate and returning a [`QuantizedWeight`] — a first-class
+//! **compressed artifact** (packed index streams + shared-codebook
+//! references + per-column metadata) that can be lazily dequantized,
+//! multiplied against directly ([`QuantizedWeight::matmul_from_codes`]),
+//! measured ([`error`]) and persisted ([`crate::io::artifact`]).
 //!
 //! | module | paper row | idea |
 //! |---|---|---|
 //! | [`pcdvq`] | PCDVQ | RHT → polar decouple → greedy-E8 direction + Lloyd-Max magnitude |
 //! | [`sq`] | GPTQ (RTN core) | symmetric uniform scalar quantization |
-//! | [`gptq`] | GPTQ | error-compensated sequential SQ (synthetic Hessian — see DESIGN.md) |
+//! | [`gptq`] | GPTQ | error-compensated sequential SQ (synthetic Hessian — see DESIGN.md §3) |
 //! | [`vq_kmeans`] | VPTQ / GPTVQ | coupled k-means vector quantization |
 //! | [`quip`] | QuIP# | RHT + coupled E8-lattice codebook, algebraic decode |
 //! | [`error`] | Fig 1b / Fig 3 | direction/magnitude error decomposition |
 //! | [`tune`] | Table 3 | post-quantization correction analogs |
+//!
+//! ## The compressed representation
+//!
+//! Every quantizer emits the same artifact shape (DESIGN.md §6):
+//!
+//! * one or more parallel [`PackedStreams`] of fixed-width index records,
+//!   one record tuple per `k`-vector of the row-major-flattened weight;
+//! * an `Arc<dyn CodeDecoder>` referencing the **shared** codebooks (one
+//!   direction + one magnitude codebook per model for PCDVQ; one centroid /
+//!   lattice table per quantizer instance for the coupled baselines; none
+//!   for scalar methods) — codebooks amortize across layers per §A.3;
+//! * per-column scales applied in the code domain (empty ⇒ all 1.0);
+//! * an optional RHT sign seed: when present, the codes live in the
+//!   regularized domain and materialization applies the inverse transform.
+//!
+//! Dense weights exist only when a caller explicitly asks
+//! ([`QuantizedWeight::dequantize_into`]); serving and eval can instead run
+//! the fused gather → scale → inverse-FWHT kernel
+//! ([`QuantizedWeight::matmul_from_codes`]) so only codes + codebooks stay
+//! resident.
 
 pub mod assign;
 pub mod error;
@@ -23,6 +46,10 @@ pub mod sq;
 pub mod tune;
 pub mod vq_kmeans;
 
+use std::sync::Arc;
+
+use crate::hadamard::RandomizedHadamard;
+use crate::quant::packing::PackedStreams;
 use crate::tensor::Matrix;
 
 /// Anything that can turn a weight matrix into a compressed representation.
@@ -30,7 +57,7 @@ pub trait Quantizer {
     /// Human-readable method name (used in tables and CLI).
     fn name(&self) -> String;
 
-    /// Quantize a weight matrix.
+    /// Quantize a weight matrix into a compressed artifact.
     fn quantize(&self, w: &Matrix) -> QuantizedWeight;
 
     /// Nominal bits per weight of the index stream (excluding shared
@@ -39,39 +66,478 @@ pub trait Quantizer {
     fn bits_per_weight(&self) -> f64;
 }
 
-/// A quantized weight: enough information to reconstruct an approximation of
-/// the original matrix plus exact storage accounting.
+/// Decodes one `k`-vector from its per-stream index records by gathering
+/// from the shared codebook(s) it references. Implementations are cheap,
+/// immutable and shared (`Arc`) across every layer quantized with the same
+/// codebooks.
+pub trait CodeDecoder: Send + Sync {
+    /// Vector dimension produced per record tuple.
+    fn k(&self) -> usize;
+
+    /// Decode one record tuple (`records[s]` = record of stream `s`) into
+    /// `out` (length [`Self::k`]), in the code domain (pre-scale, pre-RHT).
+    fn decode_into(&self, records: &[u64], out: &mut [f32]);
+
+    /// Bits of the shared codebook state behind this decoder (amortized
+    /// across all artifacts that reference it).
+    fn codebook_bits(&self) -> u64;
+
+    /// Stable identifier: artifacts referencing decoders with equal specs
+    /// share one codebook (registry key + accounting dedup key).
+    fn spec(&self) -> String;
+
+    /// The decoder's persistable state ([`crate::io::artifact`] writes it
+    /// once per distinct codebook and re-links artifacts on load).
+    fn persist(&self) -> DecoderPersist<'_>;
+}
+
+/// Persistable view of a decoder's shared state (see
+/// [`CodeDecoder::persist`]).
+pub enum DecoderPersist<'a> {
+    /// PCDVQ's decoupled pair: direction + magnitude codebooks.
+    Dacc {
+        dir: &'a Arc<crate::codebook::DirectionCodebook>,
+        mag: &'a Arc<crate::codebook::MagnitudeCodebook>,
+    },
+    /// A dense reconstruction table (coupled-VQ baselines).
+    Table { table: &'a Arc<Matrix>, label: &'a str },
+    /// The stateless uniform integer grid.
+    Scalar { bits: u32 },
+}
+
+/// Decoder over a dense reconstruction table: record → table row. Used by
+/// the coupled-VQ baselines (k-means centroids, scaled E8-ball points).
+pub struct TableDecoder {
+    table: Arc<Matrix>,
+    label: String,
+    /// FNV-1a fingerprint of the table contents — part of [`Self::spec`], so
+    /// two *differently fitted* tables never dedup as one in the measured
+    /// codebook accounting even when their label/shape coincide.
+    fingerprint: u64,
+}
+
+impl TableDecoder {
+    pub fn new(table: Arc<Matrix>, label: impl Into<String>) -> Self {
+        let fingerprint = fnv1a_f32(FNV_OFFSET, table.as_slice());
+        TableDecoder { table, label: label.into(), fingerprint }
+    }
+
+    pub fn table(&self) -> &Arc<Matrix> {
+        &self.table
+    }
+}
+
+/// FNV-1a offset basis — the shared fingerprint seed for codebook specs.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `xs` into an FNV-1a hash (bit-exact f32 identity) — the one
+/// fingerprint rule behind every decoder's [`CodeDecoder::spec`] dedup key.
+pub(crate) fn fnv1a_f32(mut h: u64, xs: &[f32]) -> u64 {
+    for &x in xs {
+        h = (h ^ x.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl CodeDecoder for TableDecoder {
+    fn k(&self) -> usize {
+        self.table.cols()
+    }
+
+    #[inline]
+    fn decode_into(&self, records: &[u64], out: &mut [f32]) {
+        out.copy_from_slice(self.table.row(records[0] as usize));
+    }
+
+    fn codebook_bits(&self) -> u64 {
+        self.table.len() as u64 * 32
+    }
+
+    fn spec(&self) -> String {
+        format!(
+            "table:{}:{}x{}:{:016x}",
+            self.label,
+            self.table.rows(),
+            self.table.cols(),
+            self.fingerprint
+        )
+    }
+
+    fn persist(&self) -> DecoderPersist<'_> {
+        DecoderPersist::Table { table: &self.table, label: &self.label }
+    }
+}
+
+/// A quantized weight as a compressed artifact: packed index streams, a
+/// reference to the shared codebooks (via the decoder), per-column scales
+/// and the RHT seed. Enough to reconstruct the approximation — and to run
+/// matmuls without ever reconstructing it. Cloning copies the packed codes
+/// (cheap, ≈ payload bytes) and shares the codebooks.
+#[derive(Clone)]
 pub struct QuantizedWeight {
-    /// Reconstructed ("fake-quant") weight.
-    dequant: Matrix,
-    /// Bits of per-layer payload (indices + scales + seeds), excluding
-    /// codebooks shared across the whole model.
-    payload_bits: u64,
     /// Method label.
     pub method: String,
+    rows: usize,
+    cols: usize,
+    codes: PackedStreams,
+    decoder: Arc<dyn CodeDecoder>,
+    /// Per-column scales applied in the code domain; empty = all 1.0.
+    scales: Vec<f32>,
+    /// `Some(seed)` ⇒ codes live in the RHT-regularized domain.
+    rht_seed: Option<u64>,
 }
 
 impl QuantizedWeight {
-    pub fn new(dequant: Matrix, payload_bits: u64, method: impl Into<String>) -> Self {
-        QuantizedWeight { dequant, payload_bits, method: method.into() }
+    pub fn new(
+        method: impl Into<String>,
+        rows: usize,
+        cols: usize,
+        codes: PackedStreams,
+        decoder: Arc<dyn CodeDecoder>,
+        scales: Vec<f32>,
+        rht_seed: Option<u64>,
+    ) -> Self {
+        let k = decoder.k();
+        assert_eq!(
+            codes.len() * k,
+            rows * cols,
+            "codes ({} records x k={k}) disagree with shape {rows}x{cols}",
+            codes.len()
+        );
+        assert!(
+            scales.is_empty() || scales.len() == cols,
+            "scales length {} != cols {cols}",
+            scales.len()
+        );
+        if rht_seed.is_some() {
+            assert!(rows.is_power_of_two(), "RHT artifacts need power-of-two rows");
+        }
+        QuantizedWeight {
+            method: method.into(),
+            rows,
+            cols,
+            codes,
+            decoder,
+            scales,
+            rht_seed,
+        }
     }
 
-    /// The reconstructed weight matrix.
-    pub fn dequantize(&self) -> &Matrix {
-        &self.dequant
+    pub fn rows(&self) -> usize {
+        self.rows
     }
 
-    pub fn into_dequantized(self) -> Matrix {
-        self.dequant
+    pub fn cols(&self) -> usize {
+        self.cols
     }
 
-    /// Per-layer payload bits (§A.3 accounting: codebooks amortize to ~0).
+    /// Element count of the (virtual) dense weight.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of k-vectors (= records per stream).
+    pub fn n_vectors(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// The packed index streams.
+    pub fn codes(&self) -> &PackedStreams {
+        &self.codes
+    }
+
+    /// The shared-codebook decoder this artifact references.
+    pub fn decoder(&self) -> &Arc<dyn CodeDecoder> {
+        &self.decoder
+    }
+
+    /// Per-column code-domain scales (empty = all 1.0).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// RHT sign seed, if the codes live in the regularized domain.
+    pub fn rht_seed(&self) -> Option<u64> {
+        self.rht_seed
+    }
+
+    /// Per-layer payload bits: packed indices + f32 scales + RHT seed
+    /// (paper §A.3 counts the index stream; we also count per-layer
+    /// metadata for honesty). Shared codebooks amortize to ~0 per layer and
+    /// are accounted separately via [`Self::codebook_bits`].
     pub fn payload_bits(&self) -> u64 {
-        self.payload_bits
+        self.codes.payload_bits()
+            + self.scales.len() as u64 * 32
+            + if self.rht_seed.is_some() { 64 } else { 0 }
     }
 
-    /// Achieved bits per weight for this layer.
+    /// Bits of the shared codebooks behind this artifact (amortized).
+    pub fn codebook_bits(&self) -> u64 {
+        self.decoder.codebook_bits()
+    }
+
+    /// Achieved bits per weight for this layer (payload only).
     pub fn achieved_bpw(&self) -> f64 {
-        self.payload_bits as f64 / self.dequant.len() as f64
+        self.payload_bits() as f64 / self.len() as f64
+    }
+
+    /// Decode the raw codes into the code-domain matrix (no scales, no
+    /// inverse RHT) — the regularized-domain reconstruction the Fig-3
+    /// error-decomposition harness measures.
+    pub fn decode_codes(&self) -> Matrix {
+        let k = self.decoder.k();
+        let mut flat = vec![0.0f32; self.len()];
+        let mut rec = vec![0u64; self.codes.n_streams()];
+        for i in 0..self.codes.len() {
+            self.codes.records_into(i, &mut rec);
+            self.decoder.decode_into(&rec, &mut flat[i * k..(i + 1) * k]);
+        }
+        Matrix::from_vec(flat, self.rows, self.cols)
+    }
+
+    /// Explicitly materialize the dense approximation into `out`
+    /// (gather → per-column scale → inverse RHT). The only place a dense
+    /// copy of a quantized weight is ever created.
+    pub fn dequantize_into(&self, out: &mut Matrix) {
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (self.rows, self.cols),
+            "dequantize_into shape mismatch"
+        );
+        let k = self.decoder.k();
+        let mut rec = vec![0u64; self.codes.n_streams()];
+        {
+            let flat = out.as_mut_slice();
+            for i in 0..self.codes.len() {
+                self.codes.records_into(i, &mut rec);
+                self.decoder.decode_into(&rec, &mut flat[i * k..(i + 1) * k]);
+            }
+        }
+        if !self.scales.is_empty() {
+            for i in 0..self.rows {
+                for (x, &s) in out.row_mut(i).iter_mut().zip(&self.scales) {
+                    *x *= s;
+                }
+            }
+        }
+        if let Some(seed) = self.rht_seed {
+            let rht = RandomizedHadamard::new(self.rows, seed);
+            let dense = rht.inverse(out);
+            *out = dense;
+        }
+    }
+
+    /// Allocate-and-materialize convenience over [`Self::dequantize_into`].
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Consume into the dense approximation.
+    pub fn into_dequantized(self) -> Matrix {
+        self.dequantize()
+    }
+
+    /// Fused `y = x · Ŵ` straight from the codes (`x`: `(n, rows)`,
+    /// returns `(n, cols)`) — the host serving kernel. The dense weight is
+    /// never materialized: for RHT artifacts the input is transformed once
+    /// per row (`t = (H/√p)·D·x`, one FWHT), then the packed records are
+    /// streamed through the decoder and accumulated (gather → FMA), and
+    /// per-column scales fold in at the end. Bit-equivalent to
+    /// `x · dequantize()` up to f32 rounding.
+    pub fn matmul_from_codes(&self, x: &Matrix) -> Matrix {
+        assert_eq!(
+            x.cols(),
+            self.rows,
+            "matmul_from_codes: x has {} cols, weight has {} rows",
+            x.cols(),
+            self.rows
+        );
+        let n = x.rows();
+        // Transform the activations once (the transpose trick: x·D·(H/√p)
+        // per row equals applying the forward RHT to each row vector);
+        // without an RHT the input is used in place — no copy.
+        let transformed = self.rht_seed.map(|seed| {
+            let rht = RandomizedHadamard::new(self.rows, seed);
+            let mut t = x.clone();
+            for i in 0..n {
+                rht.forward_col(t.row_mut(i));
+            }
+            t
+        });
+        let t: &Matrix = transformed.as_ref().unwrap_or(x);
+        let k = self.decoder.k();
+        let cols = self.cols;
+        let mut y = Matrix::zeros(n, cols);
+        let mut rec = vec![0u64; self.codes.n_streams()];
+        let mut v = vec![0.0f32; k];
+        let mut rc = vec![(0usize, 0usize); k];
+        for i in 0..self.codes.len() {
+            self.codes.records_into(i, &mut rec);
+            self.decoder.decode_into(&rec, &mut v);
+            // (row, col) targets of this vector's k elements, computed once
+            let base = i * k;
+            for (d, slot) in rc.iter_mut().enumerate() {
+                let flat = base + d;
+                *slot = (flat / cols, flat % cols);
+            }
+            for b in 0..n {
+                let trow = t.row(b);
+                let yrow = y.row_mut(b);
+                for (&(r, c), &hval) in rc.iter().zip(&v) {
+                    yrow[c] += trow[r] * hval;
+                }
+            }
+        }
+        if !self.scales.is_empty() {
+            for b in 0..n {
+                for (yv, &s) in y.row_mut(b).iter_mut().zip(&self.scales) {
+                    *yv *= s;
+                }
+            }
+        }
+        y
+    }
+
+    /// Fused matvec: `y = xᵀ · Ŵ` for a single activation vector.
+    pub fn matvec_from_codes(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let xm = Matrix::from_vec(x.to_vec(), 1, self.rows);
+        self.matmul_from_codes(&xm).into_vec()
+    }
+}
+
+/// Sum the shared-codebook bits behind a set of artifacts, deduplicated by
+/// decoder spec — `Arc`-shared codebooks count once, however many layers
+/// reference them. The single accounting rule behind
+/// `QuantizedGpt::codebook_bits` and `HostForward::codebook_bits`.
+pub fn dedup_codebook_bits<'a, I>(weights: I) -> u64
+where
+    I: IntoIterator<Item = &'a QuantizedWeight>,
+{
+    let mut seen = std::collections::BTreeSet::new();
+    let mut bits = 0u64;
+    for w in weights {
+        if seen.insert(w.decoder().spec()) {
+            bits += w.codebook_bits();
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packing::PackedIndices;
+    use crate::rng::Rng;
+    use crate::tensor::matmul;
+
+    /// Identity-ish table decoder over a random reconstruction table.
+    fn table_artifact(rows: usize, cols: usize, bits: u32, seed: u64) -> QuantizedWeight {
+        let k = 4usize;
+        let n_entries = 1usize << bits;
+        let mut rng = Rng::new(seed);
+        let table = Arc::new(Matrix::from_vec(rng.normal_vec(n_entries * k), n_entries, k));
+        let n_vec = rows * cols / k;
+        let records: Vec<u64> =
+            (0..n_vec).map(|_| rng.below(n_entries) as u64).collect();
+        let codes = PackedStreams::single(PackedIndices::pack(&records, bits));
+        QuantizedWeight::new(
+            "test-table",
+            rows,
+            cols,
+            codes,
+            Arc::new(TableDecoder::new(table, "test")),
+            Vec::new(),
+            None,
+        )
+    }
+
+    #[test]
+    fn payload_and_shape_accounting() {
+        let qw = table_artifact(16, 8, 6, 1);
+        assert_eq!((qw.rows(), qw.cols(), qw.len()), (16, 8, 128));
+        assert_eq!(qw.n_vectors(), 32);
+        assert_eq!(qw.payload_bits(), 32 * 6);
+        assert!((qw.achieved_bpw() - 6.0 / 4.0).abs() < 1e-12);
+        assert!(qw.codebook_bits() > 0);
+    }
+
+    #[test]
+    fn dequantize_matches_decode_for_plain_tables() {
+        // no scales, no RHT: dequantize == decode_codes
+        let qw = table_artifact(16, 8, 5, 2);
+        let a = qw.decode_codes();
+        let b = qw.dequantize();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn matmul_from_codes_matches_dense_matmul() {
+        let qw = table_artifact(32, 16, 7, 3);
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_vec(rng.normal_vec(5 * 32), 5, 32);
+        let dense = matmul(&x, &qw.dequantize());
+        let fused = qw.matmul_from_codes(&x);
+        assert_eq!((fused.rows(), fused.cols()), (5, 16));
+        for (a, b) in dense.as_slice().iter().zip(fused.as_slice()) {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs())),
+                "fused {b} vs dense {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul_row() {
+        let qw = table_artifact(32, 8, 6, 5);
+        let mut rng = Rng::new(6);
+        let x = rng.normal_vec(32);
+        let y = qw.matvec_from_codes(&x);
+        let ym = qw.matmul_from_codes(&Matrix::from_vec(x.clone(), 1, 32));
+        assert_eq!(y, ym.as_slice().to_vec());
+    }
+
+    #[test]
+    fn scales_apply_per_column() {
+        let k = 4usize;
+        let table = Arc::new(Matrix::from_vec(vec![1.0; k], 1, k));
+        let codes = PackedStreams::single(PackedIndices::pack(&[0u64; 2], 1));
+        let qw = QuantizedWeight::new(
+            "t",
+            2,
+            4,
+            codes,
+            Arc::new(TableDecoder::new(table, "ones")),
+            vec![1.0, 2.0, 3.0, 4.0],
+            None,
+        );
+        let d = qw.dequantize();
+        assert_eq!(d.row(0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(d.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        // payload counts the scales
+        assert_eq!(qw.payload_bits(), 2 * 1 + 4 * 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_rejected() {
+        let table = Arc::new(Matrix::from_vec(vec![0.0; 4], 1, 4));
+        let codes = PackedStreams::single(PackedIndices::pack(&[0u64; 3], 1));
+        // 3 records x k=4 = 12 elements != 2x4
+        let _ = QuantizedWeight::new(
+            "bad",
+            2,
+            4,
+            codes,
+            Arc::new(TableDecoder::new(table, "x")),
+            Vec::new(),
+            None,
+        );
     }
 }

@@ -80,6 +80,77 @@ impl PackedIndices {
     }
 }
 
+/// Parallel packed streams over the same record axis — the multi-stream form
+/// of a compressed weight. PCDVQ stores its direction indices (`a` bits) and
+/// magnitude indices (`b` bits) as two parallel streams (record `i` of every
+/// stream describes k-vector `i`); single-codebook methods use one stream.
+/// Splitting by stream keeps each index kind contiguously packed, which is
+/// what both the serving artifact (`fwd_q` wants separate `dir_idx`/`mag_idx`
+/// gathers) and the host fused kernel consume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedStreams {
+    streams: Vec<PackedIndices>,
+}
+
+impl PackedStreams {
+    /// Bundle parallel streams; all must have the same record count.
+    pub fn new(streams: Vec<PackedIndices>) -> Self {
+        assert!(!streams.is_empty(), "at least one stream required");
+        let len = streams[0].len;
+        assert!(
+            streams.iter().all(|s| s.len == len),
+            "stream record counts disagree"
+        );
+        PackedStreams { streams }
+    }
+
+    /// A single-stream bundle.
+    pub fn single(codes: PackedIndices) -> Self {
+        Self::new(vec![codes])
+    }
+
+    /// Records per stream.
+    pub fn len(&self) -> usize {
+        self.streams[0].len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Borrow stream `s`.
+    pub fn stream(&self, s: usize) -> &PackedIndices {
+        &self.streams[s]
+    }
+
+    pub fn streams(&self) -> &[PackedIndices] {
+        &self.streams
+    }
+
+    /// Read record `i` of every stream into `out` (len = `n_streams`).
+    #[inline]
+    pub fn records_into(&self, i: usize, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.streams.len());
+        for (o, s) in out.iter_mut().zip(&self.streams) {
+            *o = s.get(i);
+        }
+    }
+
+    /// Exact payload bits across all streams.
+    pub fn payload_bits(&self) -> u64 {
+        self.streams.iter().map(|s| s.payload_bits()).sum()
+    }
+
+    /// Total bits per record across streams (the per-vector record width).
+    pub fn record_bits(&self) -> u32 {
+        self.streams.iter().map(|s| s.width).sum()
+    }
+}
+
 /// Splice a (direction, magnitude) index pair into one record: direction in
 /// the low `a` bits, magnitude above it (Eq. 8).
 #[inline]
@@ -147,6 +218,35 @@ mod tests {
             let bpw = packed.payload_bits() as f64 / (n_vectors * k) as f64;
             assert!((bpw - expect).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn packed_streams_parallel_access() {
+        let mut rng = Rng::new(9);
+        let dir: Vec<u64> = (0..500).map(|_| rng.next_u64() & 0x3FFF).collect();
+        let mag: Vec<u64> = (0..500).map(|_| rng.next_u64() & 0x3).collect();
+        let s = PackedStreams::new(vec![
+            PackedIndices::pack(&dir, 14),
+            PackedIndices::pack(&mag, 2),
+        ]);
+        assert_eq!(s.len(), 500);
+        assert_eq!(s.n_streams(), 2);
+        assert_eq!(s.record_bits(), 16);
+        assert_eq!(s.payload_bits(), 500 * 16);
+        let mut rec = [0u64; 2];
+        for i in 0..500 {
+            s.records_into(i, &mut rec);
+            assert_eq!(rec, [dir[i], mag[i]]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn packed_streams_reject_length_mismatch() {
+        PackedStreams::new(vec![
+            PackedIndices::pack(&[1, 2, 3], 4),
+            PackedIndices::pack(&[1, 2], 4),
+        ]);
     }
 
     #[test]

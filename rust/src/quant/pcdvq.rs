@@ -10,20 +10,22 @@
 //! 3. **DACC assignment** (§3.2.3): direction → max-cosine index into the
 //!    greedy-E8 codebook (`a` bits), magnitude → nearest Lloyd-Max level
 //!    (`b` bits).
-//! 4. **Packing** (§A.3 / Eq. 8): indices spliced into an `(a+b)`-bit record
-//!    stream; bpw = `(a+b)/k`.
+//! 4. **Packing** (§A.3 / Eq. 8): direction and magnitude indices pack into
+//!    two parallel bit streams of an `(a+b)`-bit-per-vector artifact;
+//!    bpw = `(a+b)/k`.
 //!
-//! Dequantization replays the pipeline backwards. The struct keeps the real
-//! compressed representation (packed codes + scales + RHT seed), not just the
-//! reconstruction, so storage accounting and the serving artifact are honest.
+//! The emitted [`QuantizedWeight`] is the real compressed representation
+//! (packed code streams + per-column scales + RHT seed + `Arc` references to
+//! the two shared DACC codebooks) — storage accounting and the serving
+//! artifact are honest, and dequantization is an explicit, lazy operation.
 
 use std::sync::Arc;
 
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
-use crate::hadamard::{deregularize, regularize, RandomizedHadamard};
+use crate::hadamard::{regularize, RandomizedHadamard};
 use crate::quant::assign::assign_into;
-use crate::quant::packing::{splice, unsplice, PackedIndices};
-use crate::quant::{QuantizedWeight, Quantizer};
+use crate::quant::packing::{PackedIndices, PackedStreams};
+use crate::quant::{CodeDecoder, QuantizedWeight, Quantizer};
 use crate::tensor::Matrix;
 
 /// Configuration of the PCDVQ quantizer.
@@ -60,15 +62,72 @@ impl PcdvqConfig {
     }
 }
 
+/// The DACC decoder: stream 0 gathers a unit direction, stream 1 a
+/// Lloyd-Max magnitude level; the decoded vector is their product. One
+/// decoder instance (and its two codebooks) serves the entire model.
+pub struct DaccDecoder {
+    pub dir: Arc<DirectionCodebook>,
+    pub mag: Arc<MagnitudeCodebook>,
+    /// FNV-1a fingerprint of both codebooks' contents — part of
+    /// [`CodeDecoder::spec`], so differently-built codebook pairs (e.g.
+    /// different seeds) never dedup as one in the measured accounting.
+    fingerprint: u64,
+}
+
+impl DaccDecoder {
+    pub fn new(dir: Arc<DirectionCodebook>, mag: Arc<MagnitudeCodebook>) -> Self {
+        let h = crate::quant::fnv1a_f32(crate::quant::FNV_OFFSET, dir.vectors.as_slice());
+        let h = crate::quant::fnv1a_f32(h, &mag.levels);
+        DaccDecoder { dir, mag, fingerprint: h }
+    }
+}
+
+impl CodeDecoder for DaccDecoder {
+    fn k(&self) -> usize {
+        self.dir.dim()
+    }
+
+    #[inline]
+    fn decode_into(&self, records: &[u64], out: &mut [f32]) {
+        let d = records[0] as usize;
+        let r = self.mag.level(records[1] as u32);
+        for (o, &dj) in out.iter_mut().zip(self.dir.vectors.row(d)) {
+            *o = r * dj;
+        }
+    }
+
+    fn codebook_bits(&self) -> u64 {
+        (self.dir.len() * self.dir.dim() * 32 + self.mag.len() * 32) as u64
+    }
+
+    fn spec(&self) -> String {
+        format!(
+            "dacc:{}-a{}:{}-b{}:k{}:{:016x}",
+            self.dir.method.name(),
+            self.dir.bits,
+            self.mag.method.name(),
+            self.mag.bits,
+            self.dir.dim(),
+            self.fingerprint
+        )
+    }
+
+    fn persist(&self) -> crate::quant::DecoderPersist<'_> {
+        crate::quant::DecoderPersist::Dacc { dir: &self.dir, mag: &self.mag }
+    }
+}
+
 /// The PCDVQ quantizer: shared codebooks + config.
 ///
 /// Codebooks are `Arc`-shared: like the paper, one direction codebook and one
 /// magnitude codebook serve the entire model (they are aligned to N(0,1), not
-/// to any particular layer).
+/// to any particular layer). Every artifact emitted by this instance
+/// references the same [`DaccDecoder`].
 pub struct Pcdvq {
     pub cfg: PcdvqConfig,
     pub dir: Arc<DirectionCodebook>,
     pub mag: Arc<MagnitudeCodebook>,
+    decoder: Arc<DaccDecoder>,
 }
 
 impl Pcdvq {
@@ -76,11 +135,17 @@ impl Pcdvq {
         assert_eq!(dir.bits, cfg.dir_bits, "direction codebook bits mismatch");
         assert_eq!(mag.bits, cfg.mag_bits, "magnitude codebook bits mismatch");
         assert_eq!(dir.dim(), cfg.k, "direction codebook dim mismatch");
-        Pcdvq { cfg, dir, mag }
+        let decoder = Arc::new(DaccDecoder::new(Arc::clone(&dir), Arc::clone(&mag)));
+        Pcdvq { cfg, dir, mag, decoder }
+    }
+
+    /// The shared decoder referenced by every artifact this instance emits.
+    pub fn decoder(&self) -> Arc<DaccDecoder> {
+        Arc::clone(&self.decoder)
     }
 
     /// Quantize a weight matrix into the full compressed representation.
-    pub fn quantize_full(&self, w: &Matrix) -> PcdvqWeight {
+    pub fn quantize_full(&self, w: &Matrix) -> QuantizedWeight {
         let k = self.cfg.k;
         assert_eq!(
             w.len() % k,
@@ -131,26 +196,25 @@ impl Pcdvq {
         //    magnitude via binary search over the sorted levels.
         let mut dir_idx = vec![0u32; n_vec];
         assign_into(&dirs, &self.dir.vectors, &[], &mut dir_idx);
-        let mag_idx: Vec<u32> = mags.iter().map(|&r| self.mag.assign(r)).collect();
+        let mag_idx: Vec<u64> =
+            mags.iter().map(|&r| self.mag.assign(r) as u64).collect();
+        let dir_idx: Vec<u64> = dir_idx.into_iter().map(|d| d as u64).collect();
 
-        // 4. splice + pack
-        let a = self.cfg.dir_bits;
-        let records: Vec<u64> = dir_idx
-            .iter()
-            .zip(&mag_idx)
-            .map(|(&d, &m)| splice(d, m, a))
-            .collect();
-        let codes = PackedIndices::pack(&records, a + self.cfg.mag_bits);
+        // 4. pack into the two parallel streams (a-bit + b-bit records)
+        let codes = PackedStreams::new(vec![
+            PackedIndices::pack(&dir_idx, self.cfg.dir_bits),
+            PackedIndices::pack(&mag_idx, self.cfg.mag_bits),
+        ]);
 
-        PcdvqWeight {
-            rows: w.rows(),
-            cols: w.cols(),
-            k,
-            dir_bits: a,
+        QuantizedWeight::new(
+            self.name(),
+            w.rows(),
+            w.cols(),
             codes,
+            self.decoder(),
             scales,
-            rht_seed: seed,
-        }
+            Some(seed),
+        )
     }
 
     /// Quantize and return the pre/post pair **in the regularized domain**
@@ -160,40 +224,15 @@ impl Pcdvq {
     /// direction/magnitude split.
     pub fn quantize_regularized(&self, w: &Matrix) -> (Matrix, Matrix) {
         let qw = self.quantize_full(w);
-        let seed = qw.rht_seed;
-        let rht = RandomizedHadamard::new(w.rows(), seed);
+        let rht = RandomizedHadamard::new(w.rows(), qw.rht_seed().expect("PCDVQ uses the RHT"));
         let (h, _) = regularize(w, &rht);
-        // reconstruct h from codes (no deregularization)
-        let k = qw.k;
-        let n_vec = qw.rows * qw.cols / k;
-        let mut flat = vec![0.0f32; qw.rows * qw.cols];
-        for i in 0..n_vec {
-            let (d, m) = unsplice(qw.codes.get(i), qw.dir_bits);
-            let dir = self.dir.vectors.row(d as usize);
-            let r = self.mag.level(m);
-            for (slot, &dj) in flat[i * k..(i + 1) * k].iter_mut().zip(dir) {
-                *slot = r * dj;
-            }
-        }
-        (h, Matrix::from_vec(flat, qw.rows, qw.cols))
+        (h, qw.decode_codes())
     }
 
-    /// Dequantize a compressed weight back to a dense matrix.
-    pub fn dequantize_full(&self, qw: &PcdvqWeight) -> Matrix {
-        let k = qw.k;
-        let n_vec = qw.rows * qw.cols / k;
-        let mut flat = vec![0.0f32; qw.rows * qw.cols];
-        for i in 0..n_vec {
-            let (d, m) = unsplice(qw.codes.get(i), qw.dir_bits);
-            let dir = self.dir.vectors.row(d as usize);
-            let r = self.mag.level(m);
-            for (slot, &dj) in flat[i * k..(i + 1) * k].iter_mut().zip(dir) {
-                *slot = r * dj;
-            }
-        }
-        let h = Matrix::from_vec(flat, qw.rows, qw.cols);
-        let rht = RandomizedHadamard::new(qw.rows, qw.rht_seed);
-        deregularize(&h, &qw.scales, &rht)
+    /// Explicitly materialize a compressed weight back to a dense matrix
+    /// (convenience over [`QuantizedWeight::dequantize`]).
+    pub fn dequantize_full(&self, qw: &QuantizedWeight) -> Matrix {
+        qw.dequantize()
     }
 }
 
@@ -203,47 +242,11 @@ impl Quantizer for Pcdvq {
     }
 
     fn quantize(&self, w: &Matrix) -> QuantizedWeight {
-        let qw = self.quantize_full(w);
-        let bits = qw.payload_bits();
-        let deq = self.dequantize_full(&qw);
-        QuantizedWeight::new(deq, bits, self.name())
+        self.quantize_full(w)
     }
 
     fn bits_per_weight(&self) -> f64 {
         self.cfg.bits_per_weight()
-    }
-}
-
-/// The compressed representation of one weight matrix.
-#[derive(Clone, Debug)]
-pub struct PcdvqWeight {
-    pub rows: usize,
-    pub cols: usize,
-    pub k: usize,
-    pub dir_bits: u32,
-    /// Packed `(a+b)`-bit records, one per k-vector.
-    pub codes: PackedIndices,
-    /// Per-column regularization scales.
-    pub scales: Vec<f32>,
-    /// Seed of the per-layer RHT sign diagonal.
-    pub rht_seed: u64,
-}
-
-impl PcdvqWeight {
-    /// Payload bits: packed indices + f32 scales + seed (paper §A.3 counts
-    /// the index stream; we also count per-layer metadata for honesty).
-    pub fn payload_bits(&self) -> u64 {
-        self.codes.payload_bits() + self.scales.len() as u64 * 32 + 64
-    }
-
-    /// Unpacked (direction, magnitude) index pair for vector `i`.
-    pub fn indices(&self, i: usize) -> (u32, u32) {
-        unsplice(self.codes.get(i), self.dir_bits)
-    }
-
-    /// Number of k-vectors.
-    pub fn n_vectors(&self) -> usize {
-        self.codes.len
     }
 }
 
@@ -296,10 +299,14 @@ mod tests {
         let q = small_pcdvq(14, 2);
         let qw = q.quantize_full(&w);
         let index_bits = (64 * 64 / 8) as u64 * 16; // (a+b) per vector
-        assert_eq!(qw.codes.payload_bits(), index_bits);
+        assert_eq!(qw.codes().payload_bits(), index_bits);
         // achieved bpw of the index stream alone = 2.0
-        let bpw = qw.codes.payload_bits() as f64 / w.len() as f64;
+        let bpw = qw.codes().payload_bits() as f64 / w.len() as f64;
         assert!((bpw - 2.0).abs() < 1e-12);
+        // and the two streams carry a / b bit records respectively
+        assert_eq!(qw.codes().n_streams(), 2);
+        assert_eq!(qw.codes().stream(0).width, 14);
+        assert_eq!(qw.codes().stream(1).width, 2);
     }
 
     #[test]
@@ -308,8 +315,9 @@ mod tests {
         let q = small_pcdvq(8, 2);
         let a = q.quantize_full(&w);
         let b = q.quantize_full(&w);
-        assert_eq!(a.codes, b.codes);
-        assert_eq!(a.scales, b.scales);
+        assert_eq!(a.codes(), b.codes());
+        assert_eq!(a.scales(), b.scales());
+        assert_eq!(a.rht_seed(), b.rht_seed());
     }
 
     #[test]
@@ -317,7 +325,7 @@ mod tests {
         let w = gaussian_weight(128, 24, 6);
         let q = small_pcdvq(10, 3);
         let qw = q.quantize_full(&w);
-        let deq = q.dequantize_full(&qw);
+        let deq = qw.dequantize();
         assert_eq!((deq.rows(), deq.cols()), (w.rows(), w.cols()));
         // column norms approximately preserved (magnitude codebook centers
         // the chi distribution)
@@ -334,7 +342,8 @@ mod tests {
         let q = small_pcdvq(9, 2);
         let qw = q.quantize_full(&w);
         for i in 0..qw.n_vectors() {
-            let (d, m) = qw.indices(i);
+            let d = qw.codes().stream(0).get(i);
+            let m = qw.codes().stream(1).get(i);
             assert!(d < 1 << 9);
             assert!(m < 1 << 2);
         }
@@ -350,5 +359,33 @@ mod tests {
         let q = small_pcdvq(6, 2);
         let deq = q.quantize(&w).into_dequantized();
         assert!(deq.as_slice().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn artifacts_share_one_decoder() {
+        // every layer references the same DACC codebooks — the Arc is
+        // literally shared, so resident codebook state is counted once
+        let q = small_pcdvq(7, 2);
+        let a = q.quantize_full(&gaussian_weight(32, 16, 10));
+        let b = q.quantize_full(&gaussian_weight(64, 8, 11));
+        assert!(Arc::ptr_eq(a.decoder(), b.decoder()));
+        assert_eq!(a.decoder().spec(), b.decoder().spec());
+    }
+
+    #[test]
+    fn fused_matmul_matches_explicit_dequant() {
+        let w = gaussian_weight(64, 32, 12);
+        let q = small_pcdvq(8, 2);
+        let qw = q.quantize_full(&w);
+        let mut rng = Rng::new(13);
+        let x = Matrix::from_vec(rng.normal_vec(3 * 64), 3, 64);
+        let dense = crate::tensor::matmul(&x, &qw.dequantize());
+        let fused = qw.matmul_from_codes(&x);
+        for (a, b) in dense.as_slice().iter().zip(fused.as_slice()) {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs())),
+                "fused {b} vs dense {a}"
+            );
+        }
     }
 }

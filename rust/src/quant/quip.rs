@@ -19,9 +19,11 @@
 //!   search over sign flips, then a linear scan (rare, tails only).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::hadamard::{deregularize, regularize, RandomizedHadamard};
-use crate::quant::{QuantizedWeight, Quantizer};
+use crate::hadamard::{regularize, RandomizedHadamard};
+use crate::quant::packing::{PackedIndices, PackedStreams};
+use crate::quant::{QuantizedWeight, Quantizer, TableDecoder};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -90,6 +92,9 @@ pub struct QuipLike {
     book: HashMap<Point, u32>,
     /// Reverse map (index → point), reconstruction values.
     points: Vec<Point>,
+    /// Materialized reconstruction table (`scale · point / 2` per row) — the
+    /// shared codebook every emitted artifact references.
+    recon: Arc<Matrix>,
     pub seed: u64,
 }
 
@@ -139,7 +144,14 @@ impl QuipLike {
                 v
             })
             .collect();
-        let mut probe = QuipLike { bits, scale: 1.0, book, points, seed };
+        let mut probe = QuipLike {
+            bits,
+            scale: 1.0,
+            book,
+            points,
+            recon: Arc::new(Matrix::zeros(0, 0)),
+            seed,
+        };
         let mut best_scale = 1.0f32;
         let mut best_mse = f64::INFINITY;
         // the granular/overload optimum sits near chi_typical/ball_radius;
@@ -165,6 +177,14 @@ impl QuipLike {
             }
         }
         probe.scale = best_scale;
+        // materialize the reconstruction table at the final scale
+        let mut recon = Matrix::zeros(probe.points.len(), 8);
+        for (i, p) in probe.points.iter().enumerate() {
+            for (slot, &c) in recon.row_mut(i).iter_mut().zip(p.iter()) {
+                *slot = probe.scale * c as f32 / 2.0;
+            }
+        }
+        probe.recon = Arc::new(recon);
         probe
     }
 
@@ -281,18 +301,26 @@ impl Quantizer for QuipLike {
         let (h, scales) = regularize(w, &rht);
         let vectors = h.reshape_vectors(8);
         let n_vec = vectors.rows();
-        let mut flat = vec![0.0f32; w.len()];
+        let mut records = Vec::with_capacity(n_vec);
         for i in 0..n_vec {
             let mut v = [0.0f32; 8];
             v.copy_from_slice(vectors.row(i));
-            let idx = self.assign_vec(&v);
-            let rec = self.decode(idx);
-            flat[i * 8..(i + 1) * 8].copy_from_slice(&rec);
+            records.push(self.assign_vec(&v) as u64);
         }
-        let hq = Matrix::from_vec(flat, w.rows(), w.cols());
-        let deq = deregularize(&hq, &scales, &rht);
-        let bits = n_vec as u64 * self.bits as u64 + w.cols() as u64 * 32 + 64;
-        QuantizedWeight::new(deq, bits, self.name())
+        let codes = PackedStreams::single(PackedIndices::pack(&records, self.bits));
+        let decoder = TableDecoder::new(
+            Arc::clone(&self.recon),
+            format!("quip-e8ball-{}b-s{}", self.bits, self.seed),
+        );
+        QuantizedWeight::new(
+            self.name(),
+            w.rows(),
+            w.cols(),
+            codes,
+            Arc::new(decoder),
+            scales,
+            Some(seed),
+        )
     }
 
     fn bits_per_weight(&self) -> f64 {

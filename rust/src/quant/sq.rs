@@ -4,9 +4,58 @@
 //! clipping factor (minimizing the column MSE over a grid of clip ratios),
 //! which is the standard "RTN+" trick most SQ papers start from. At 2 bits
 //! this collapses badly — exactly the phenomenon motivating VQ (paper §1).
+//!
+//! The emitted artifact is the real compressed form: a single packed stream
+//! of `bits`-wide offset codes (`code = q − qmin`, one per weight, k = 1)
+//! plus one f32 scale per column; dequantization is `(code + qmin) · s_j`.
 
-use crate::quant::{QuantizedWeight, Quantizer};
+use std::sync::Arc;
+
+use crate::quant::packing::{PackedIndices, PackedStreams};
+use crate::quant::{CodeDecoder, QuantizedWeight, Quantizer};
 use crate::tensor::Matrix;
+
+/// Decoder for symmetric uniform scalar codes: record → signed level
+/// `record + qmin` (per-column scales fold in via the artifact's scale
+/// vector). Stateless — the "codebook" is the integer grid.
+pub struct ScalarDecoder {
+    bits: u32,
+    qmin: i64,
+}
+
+impl ScalarDecoder {
+    pub fn new(bits: u32) -> Self {
+        assert!(bits >= 1 && bits < 32);
+        ScalarDecoder { bits, qmin: -(1i64 << (bits - 1)) }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+}
+
+impl CodeDecoder for ScalarDecoder {
+    fn k(&self) -> usize {
+        1
+    }
+
+    #[inline]
+    fn decode_into(&self, records: &[u64], out: &mut [f32]) {
+        out[0] = (records[0] as i64 + self.qmin) as f32;
+    }
+
+    fn codebook_bits(&self) -> u64 {
+        0
+    }
+
+    fn spec(&self) -> String {
+        format!("uniform-scalar-{}b", self.bits)
+    }
+
+    fn persist(&self) -> crate::quant::DecoderPersist<'_> {
+        crate::quant::DecoderPersist::Scalar { bits: self.bits }
+    }
+}
 
 /// Round-to-nearest scalar quantizer.
 #[derive(Clone, Debug)]
@@ -27,20 +76,18 @@ impl Rtn {
         Rtn { bits, search_clip: true }
     }
 
-    /// Quantize one column in place given a clip scale; returns the column
-    /// MSE.
-    fn quantize_col(col: &[f32], bits: u32, scale: f32, out: &mut [f32]) -> f64 {
+    /// Quantize one column into offset codes given a clip scale; returns the
+    /// column MSE.
+    fn quantize_col(col: &[f32], bits: u32, scale: f32, codes: &mut [u64]) -> f64 {
         let qmax = (1i64 << (bits - 1)) - 1;
         let qmin = -(1i64 << (bits - 1));
         let mut mse = 0.0f64;
         let s = if scale > 0.0 { scale } else { 1.0 };
-        for (o, &x) in out.iter_mut().zip(col) {
-            let q = (x / s).round() as i64;
-            let q = q.clamp(qmin, qmax);
-            let deq = q as f32 * s;
-            let d = (deq - x) as f64;
+        for (c, &x) in codes.iter_mut().zip(col) {
+            let q = ((x / s).round() as i64).clamp(qmin, qmax);
+            let d = (q as f32 * s - x) as f64;
             mse += d * d;
-            *o = deq;
+            *c = (q - qmin) as u64;
         }
         mse
     }
@@ -57,9 +104,11 @@ impl Quantizer for Rtn {
 
     fn quantize(&self, w: &Matrix) -> QuantizedWeight {
         let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
-        let mut out = Matrix::zeros(w.rows(), w.cols());
-        let mut scratch = vec![0.0f32; w.rows()];
-        for j in 0..w.cols() {
+        let cols = w.cols();
+        let mut records = vec![0u64; w.len()];
+        let mut scales = Vec::with_capacity(cols);
+        let mut col_codes = vec![0u64; w.rows()];
+        for j in 0..cols {
             let col = w.col(j);
             let maxabs = col.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
             let base_scale = maxabs / qmax;
@@ -70,7 +119,7 @@ impl Quantizer for Rtn {
                 for step in 0..15 {
                     let ratio = 0.3 + 0.05 * step as f32;
                     let s = base_scale * ratio;
-                    let mse = Self::quantize_col(&col, self.bits, s, &mut scratch);
+                    let mse = Self::quantize_col(&col, self.bits, s, &mut col_codes);
                     if mse < best_mse {
                         best_mse = mse;
                         best_scale = s;
@@ -80,12 +129,23 @@ impl Quantizer for Rtn {
             } else {
                 base_scale
             };
-            Self::quantize_col(&col, self.bits, best, &mut scratch);
-            out.set_col(j, &scratch);
+            Self::quantize_col(&col, self.bits, best, &mut col_codes);
+            // effective scale (0-scale columns quantize with s = 1.0)
+            scales.push(if best > 0.0 { best } else { 1.0 });
+            for (i, &c) in col_codes.iter().enumerate() {
+                records[i * cols + j] = c;
+            }
         }
-        // payload: indices + per-column scale
-        let bits = w.len() as u64 * self.bits as u64 + w.cols() as u64 * 32;
-        QuantizedWeight::new(out, bits, self.name())
+        let codes = PackedStreams::single(PackedIndices::pack(&records, self.bits));
+        QuantizedWeight::new(
+            self.name(),
+            w.rows(),
+            cols,
+            codes,
+            Arc::new(ScalarDecoder::new(self.bits)),
+            scales,
+            None,
+        )
     }
 
     fn bits_per_weight(&self) -> f64 {
@@ -132,8 +192,9 @@ mod tests {
         let w = gaussian(32, 4, 4);
         let q = Rtn::new(2).quantize(&w);
         // 2-bit symmetric: at most 4 distinct values per column
+        let deq = q.dequantize();
         for j in 0..4 {
-            let mut vals: Vec<f32> = q.dequantize().col(j);
+            let mut vals: Vec<f32> = deq.col(j);
             vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
             vals.dedup();
             assert!(vals.len() <= 4, "col {j} has {} levels", vals.len());
@@ -145,5 +206,17 @@ mod tests {
         let w = gaussian(64, 8, 5);
         let q = Rtn::new(2).quantize(&w);
         assert_eq!(q.payload_bits(), 64 * 8 * 2 + 8 * 32);
+        // scalar methods reference no shared codebook
+        assert_eq!(q.codebook_bits(), 0);
+    }
+
+    #[test]
+    fn codes_stay_resident_not_dense() {
+        // the artifact itself holds only packed codes + scales
+        let w = gaussian(64, 8, 6);
+        let q = Rtn::new(3).quantize(&w);
+        assert_eq!(q.codes().n_streams(), 1);
+        assert_eq!(q.codes().len(), 64 * 8);
+        assert_eq!(q.codes().record_bits(), 3);
     }
 }

@@ -11,8 +11,11 @@
 //! by this instance — mirroring VPTQ's per-model codebooks while staying
 //! tractable on one core.
 
+use std::sync::Arc;
+
 use crate::quant::assign::{assign_euclidean, euclidean_bias, assign_batch};
-use crate::quant::{QuantizedWeight, Quantizer};
+use crate::quant::packing::{PackedIndices, PackedStreams};
+use crate::quant::{QuantizedWeight, Quantizer, TableDecoder};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -23,8 +26,10 @@ pub struct KMeansVq {
     pub k: usize,
     /// Codebook bits (2^bits centroids).
     pub bits: u32,
-    /// Trained centroids (None until [`Self::fit`]).
-    centroids: Option<Matrix>,
+    /// Trained centroids (None until [`Self::fit`]); `Arc`-shared with every
+    /// artifact this quantizer emits (the per-model codebook the compressed
+    /// weights reference).
+    centroids: Option<Arc<Matrix>>,
     /// Lloyd iterations.
     pub iters: usize,
     pub seed: u64,
@@ -41,7 +46,7 @@ impl KMeansVq {
     }
 
     pub fn centroids(&self) -> Option<&Matrix> {
-        self.centroids.as_ref()
+        self.centroids.as_deref()
     }
 
     /// Train the codebook on sample vectors (rows of `samples`, dim k).
@@ -125,7 +130,7 @@ impl KMeansVq {
                 }
             }
         }
-        self.centroids = Some(centers);
+        self.centroids = Some(Arc::new(centers));
     }
 
     /// Fit directly on the vectors of a weight matrix (convenience used by
@@ -149,13 +154,23 @@ impl Quantizer for KMeansVq {
         let vectors = w.reshape_vectors(self.k);
         let bias = euclidean_bias(centers);
         let idx = assign_batch(&vectors, centers, &bias);
-        let mut flat = vec![0.0f32; w.len()];
-        for (i, &c) in idx.iter().enumerate() {
-            flat[i * self.k..(i + 1) * self.k].copy_from_slice(centers.row(c as usize));
-        }
-        let deq = Matrix::from_vec(flat, w.rows(), w.cols());
-        let bits = vectors.rows() as u64 * self.bits as u64;
-        QuantizedWeight::new(deq, bits, self.name())
+        let records: Vec<u64> = idx.iter().map(|&c| c as u64).collect();
+        // width stays the *nominal* bits even when the codebook saturated to
+        // fewer centers (§A.3 nominal accounting, matching VPTQ's reporting)
+        let codes = PackedStreams::single(PackedIndices::pack(&records, self.bits));
+        let decoder = TableDecoder::new(
+            Arc::clone(centers),
+            format!("kmeans-k{}-{}b-s{}", self.k, self.bits, self.seed),
+        );
+        QuantizedWeight::new(
+            self.name(),
+            w.rows(),
+            w.cols(),
+            codes,
+            Arc::new(decoder),
+            Vec::new(),
+            None,
+        )
     }
 
     fn bits_per_weight(&self) -> f64 {
@@ -181,7 +196,7 @@ mod tests {
 
         // random (unfitted) codebook of the same size
         let mut rnd = KMeansVq::new(8, 8);
-        rnd.centroids = Some(gaussian(256, 8, 99));
+        rnd.centroids = Some(Arc::new(gaussian(256, 8, 99)));
         let rnd_err = rnd.quantize(&w).dequantize().mse(&w);
         assert!(fitted_err < rnd_err, "fitted {fitted_err} vs random {rnd_err}");
     }

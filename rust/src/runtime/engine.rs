@@ -5,6 +5,7 @@ use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 use super::manifest::{Dtype, Manifest};
+use super::xla;
 
 /// Host-side input value for an executable call.
 #[derive(Clone, Debug)]

@@ -11,6 +11,7 @@
 
 mod engine;
 mod manifest;
+pub mod xla;
 
 pub use engine::{BoundExecutable, Engine, Executable, Input};
 pub use manifest::{Manifest, ManifestEntry};

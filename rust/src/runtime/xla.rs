@@ -1,0 +1,111 @@
+//! PJRT FFI seam — a compile-time stand-in for the `xla` crate.
+//!
+//! The real PJRT bindings (the `xla` crate wrapping `xla_extension`) are not
+//! in the offline crate set, so this module provides the exact API surface
+//! [`super::engine`] consumes. Every entry point fails at runtime with a
+//! clear message; the type structure is identical, so swapping the real
+//! bindings back in is a one-line change in `runtime/mod.rs` (replace
+//! `pub mod xla;` + `use super::xla` with the external crate).
+//!
+//! Everything that does *not* need PJRT — quantization, packed-code
+//! artifacts, the host codes-resident serving path, eval over
+//! [`crate::model::HostForward`] — runs without this backend. Only the AOT
+//! HLO executables (`fwd_fp_*`, `fwd_q_*`, Pallas kernel parity) require it,
+//! and the integration tests skip cleanly when `artifacts/` is absent.
+
+#![allow(dead_code)]
+
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT backend not available in this build (the `xla` crate is not in the \
+     offline crate set); host paths (codes-resident serving, quantization, \
+     eval via HostForward) do not need it";
+
+/// Stand-in for `xla::PjRtClient`.
+#[derive(Clone, Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!(UNAVAILABLE)
+    }
+}

@@ -1,5 +1,7 @@
 //! Coordinator integration: scheduler determinism under contention, batcher
-//! + server against the real AOT artifacts, fwd_q ≡ fake-quant fwd_fp.
+//! + server against the real AOT artifacts, fwd_q ≡ fake-quant fwd_fp, and
+//! the host **codes-resident** serving mode (which needs no artifacts at
+//! all — packed codes + shared codebooks are the only resident weights).
 
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
@@ -7,9 +9,12 @@ use std::time::{Duration, Instant};
 use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
 use pcdvq::config::{build_pcdvq_with, Paths};
 use pcdvq::coordinator::{
-    quantize_model_parallel, Batcher, BatcherConfig, GenRequest, Server, ServingWeights,
+    quantize_model_compressed, quantize_model_parallel, Batcher, BatcherConfig, GenRequest,
+    Server, ServingWeights,
 };
-use pcdvq::model::QuantizedGpt;
+use pcdvq::io::{Entry, Pct};
+use pcdvq::model::{GptModel, QuantizedGpt};
+use pcdvq::rng::Rng;
 use pcdvq::runtime::Engine;
 
 fn artifacts_ready() -> Option<Paths> {
@@ -20,6 +25,199 @@ fn artifacts_ready() -> Option<Paths> {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
         None
     }
+}
+
+/// Synthetic model container (no build artifacts needed): d=64, 2 layers.
+/// ctx is kept small (64) so the windowed host decode stays fast in debug
+/// builds.
+fn synthetic_model(name: &str) -> GptModel {
+    let dir = std::env::temp_dir().join("pcdvq_coord_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.pct"));
+    let mut rng = Rng::new(11);
+    let mut pct = Pct::new();
+    let d = 64u64;
+    let ff = d * 4;
+    let vocab = 256u64;
+    let ctx = 64u64;
+    let mut add = |name: &str, dims: &[u64], scale: f32| {
+        let n: u64 = dims.iter().product();
+        let data: Vec<f32> = rng.normal_vec(n as usize).iter().map(|x| x * scale).collect();
+        pct.insert(name, Entry::f32(dims, data));
+    };
+    add("embed.tok", &[vocab, d], 0.05);
+    add("embed.pos", &[ctx, d], 0.02);
+    for i in 0..2 {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            add(&format!("layer{i}.attn.{nm}"), &[d, d], 0.12);
+        }
+        add(&format!("layer{i}.mlp.w1"), &[d, ff], 0.12);
+        add(&format!("layer{i}.mlp.w2"), &[ff, d], 0.08);
+        for nm in ["ln1.g", "ln2.g"] {
+            pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![1.0; d as usize]));
+        }
+        for nm in ["ln1.b", "ln2.b"] {
+            pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![0.0; d as usize]));
+        }
+    }
+    pct.insert("final_ln.g", Entry::f32(&[d], vec![1.0; d as usize]));
+    pct.insert("final_ln.b", Entry::f32(&[d], vec![0.0; d as usize]));
+    add("head.w", &[d, vocab], 0.1);
+    for (k, v) in [
+        ("vocab", vocab),
+        ("d_model", d),
+        ("n_layer", 2),
+        ("n_head", 4),
+        ("d_ff", ff),
+        ("ctx", ctx),
+    ] {
+        pct.insert(&format!("meta.{k}"), Entry::u64(&[1], vec![v]));
+    }
+    pct.save(&path).unwrap();
+    GptModel::load(&path).unwrap()
+}
+
+/// A small PCDVQ (a=8) built directly — no artifact cache involvement.
+fn small_pcdvq() -> pcdvq::quant::pcdvq::Pcdvq {
+    use pcdvq::codebook::{DirectionCodebook, MagnitudeCodebook};
+    use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
+    use std::sync::Arc;
+    let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 8, 8, 0));
+    let mag = Arc::new(MagnitudeCodebook::build(
+        MagnitudeMethod::LloydMax,
+        2,
+        8,
+        1.0 - 1e-4,
+        0,
+    ));
+    Pcdvq::new(PcdvqConfig { dir_bits: 8, mag_bits: 2, k: 8, seed: 7 }, dir, mag)
+}
+
+#[test]
+fn host_codes_resident_server_serves_without_artifacts() {
+    // The codes-resident mode is the whole point of the compressed-artifact
+    // refactor: serving holds packed codes + shared codebooks only, and
+    // needs neither XLA nor dense weights.
+    let model = synthetic_model("host_serve");
+    let pcdvq_q = small_pcdvq();
+    let (q, stats) = quantize_model_compressed(&model, &pcdvq_q, 2);
+    let payload = q.payload_bits();
+    assert_eq!(stats.payload_bits, payload);
+    // resident state ≈ payload (codebooks amortize), far below dense fp32
+    pcdvq::paper::verify_codes_resident(&q).unwrap();
+    assert!(q.resident_bits() * 8 < q.dense_bits());
+
+    let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q))).unwrap();
+    assert!(server.is_codes_resident());
+    assert_eq!(server.resident_weight_bits, payload);
+
+    let (tx, rx) = channel::<GenRequest>();
+    let batcher = Batcher::new(
+        rx,
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..3 {
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt: format!("hello {i}").into_bytes(),
+            max_new: 4,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        rxs.push(rrx);
+    }
+    drop(tx);
+    server.serve(&batcher).unwrap();
+    for rrx in rxs {
+        let resp = rrx.recv().expect("response missing");
+        assert_eq!(resp.generated.len(), 4);
+    }
+    assert_eq!(server.metrics.requests, 3);
+}
+
+#[test]
+fn host_codes_resident_matches_dense_host_serving() {
+    // greedy decode from codes must equal greedy decode from the explicit
+    // dequantized model (same tokens, end to end)
+    let model = synthetic_model("host_parity");
+    let pcdvq_q = small_pcdvq();
+    let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 1);
+    let dense = q.to_dense();
+
+    let gen = |weights: ServingWeights| -> Vec<u8> {
+        let mut server = Server::new_host(weights).unwrap();
+        let (tx, rx) = channel::<GenRequest>();
+        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt: b"the quantization".to_vec(),
+            max_new: 6,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        server.serve(&batcher).unwrap();
+        rrx.recv().unwrap().generated
+    };
+    let from_codes = gen(ServingWeights::CodesResident(Box::new(q)));
+    let from_dense = gen(ServingWeights::Fp(dense));
+    assert_eq!(from_codes, from_dense, "codes-resident decode diverged");
+}
+
+#[test]
+fn host_eval_runs_on_codes_resident_model() {
+    // ppl + tasks through the ForwardPass trait on the host backend —
+    // evaluation without artifacts and without dense weights
+    let model = synthetic_model("host_eval");
+    let pcdvq_q = small_pcdvq();
+    let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 1);
+    let hf = pcdvq::model::HostForward::from_quantized(q).unwrap();
+    assert!(hf.is_codes_resident());
+    let ctx = model.config.ctx;
+    let tokens: Vec<u32> = (0..2 * ctx + 1).map(|i| (i * 31 % 251) as u32).collect();
+    let ppl = pcdvq::eval::evaluate_ppl(&hf, &model.config, &tokens, 2, 2, 1.0).unwrap();
+    assert!(ppl.ppl.is_finite() && ppl.ppl > 1.0);
+    assert_eq!(ppl.n_tokens, 2 * (ctx - 1));
+}
+
+#[test]
+fn packed_persistence_round_trips_into_serving() {
+    // quantize → save packed container → load → serve: the stored artifact
+    // is the serving artifact
+    let model = synthetic_model("host_io");
+    let pcdvq_q = small_pcdvq();
+    let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 2);
+    let dir = std::env::temp_dir().join("pcdvq_coord_tests");
+    let path = dir.join("host_io_packed.pctq");
+    pcdvq::io::save_quantized(&q, &path).unwrap();
+    let loaded = pcdvq::io::load_quantized(&path, "host_io").unwrap();
+    assert_eq!(loaded.payload_bits(), q.payload_bits());
+    pcdvq::paper::verify_codes_resident(&loaded).unwrap();
+
+    let gen = |qm: QuantizedGpt| -> Vec<u8> {
+        let mut server =
+            Server::new_host(ServingWeights::CodesResident(Box::new(qm))).unwrap();
+        let (tx, rx) = channel::<GenRequest>();
+        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let (rtx, rrx) = channel();
+        tx.send(GenRequest {
+            prompt: b"roundtrip".to_vec(),
+            max_new: 5,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        server.serve(&batcher).unwrap();
+        rrx.recv().unwrap().generated
+    };
+    assert_eq!(gen(q), gen(loaded), "loaded artifact decodes differently");
 }
 
 #[test]

@@ -9,7 +9,7 @@ use pcdvq::hadamard::{deregularize, fwht_normalized, regularize, RandomizedHadam
 use pcdvq::proptest::for_cases;
 use pcdvq::quant::assign::{assign_batch, assign_euclidean};
 use pcdvq::quant::error::decompose;
-use pcdvq::quant::packing::{splice, unsplice, PackedIndices};
+use pcdvq::quant::packing::{splice, unsplice, PackedIndices, PackedStreams};
 use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
 use pcdvq::stats::ChiDistribution;
 use pcdvq::tensor::{dot, squared_distance};
@@ -57,6 +57,108 @@ fn prop_packing_bijective() {
         for _ in 0..10.min(n) {
             let i = g.rng.below(n);
             assert_eq!(packed.get(i), values[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_packing_extreme_widths() {
+    // width 1 (bitmap) and width 63 (max) are the boundary geometries: a
+    // 1-bit stream packs 64 records per word, a 63-bit stream straddles a
+    // word boundary on almost every record.
+    for_cases(25, 0xC4, |g| {
+        let n = g.usize_in(1, 700);
+        let ones: Vec<u64> = (0..n).map(|_| g.rng.next_u64() & 1).collect();
+        let p1 = PackedIndices::pack(&ones, 1);
+        assert_eq!(p1.unpack(), ones, "width 1");
+        assert_eq!(p1.payload_bits(), n as u64);
+
+        let wide: Vec<u64> = (0..n).map(|_| g.rng.next_u64() >> 1).collect();
+        let p63 = PackedIndices::pack(&wide, 63);
+        assert_eq!(p63.unpack(), wide, "width 63");
+        for _ in 0..8.min(n) {
+            let i = g.rng.below(n);
+            assert_eq!(p63.get(i), wide[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_packing_cross_word_boundaries() {
+    // widths that do not divide 64 force records to straddle u64 words;
+    // every record adjacent to a 64-bit boundary must survive the split.
+    for_cases(30, 0xC5, |g| {
+        let width = [3u32, 5, 7, 11, 13, 17, 23, 29, 31, 37, 41, 53, 61]
+            [g.usize_in(0, 12)];
+        let n = g.usize_in(2, 400);
+        let mask = (1u64 << width) - 1;
+        let values: Vec<u64> = (0..n).map(|_| g.rng.next_u64() & mask).collect();
+        let packed = PackedIndices::pack(&values, width);
+        // every record that straddles a word boundary reads back exactly
+        for i in 0..n {
+            let start = i as u64 * width as u64;
+            let end = start + width as u64;
+            if start / 64 != (end - 1) / 64 {
+                assert_eq!(packed.get(i), values[i], "straddling record {i} w={width}");
+            }
+        }
+        assert_eq!(packed.unpack(), values);
+        // round trip through the raw words (the persistence path)
+        let rebuilt =
+            PackedIndices::from_words(packed.words().to_vec(), width, n);
+        assert_eq!(rebuilt, packed);
+    });
+}
+
+#[test]
+fn prop_multi_stream_records_consistent() {
+    for_cases(20, 0xC6, |g| {
+        let n = g.usize_in(1, 300);
+        let wa = g.usize_in(1, 20) as u32;
+        let wb = g.usize_in(1, 8) as u32;
+        let a: Vec<u64> = (0..n).map(|_| g.rng.next_u64() & ((1 << wa) - 1)).collect();
+        let b: Vec<u64> = (0..n).map(|_| g.rng.next_u64() & ((1 << wb) - 1)).collect();
+        let s = PackedStreams::new(vec![
+            PackedIndices::pack(&a, wa),
+            PackedIndices::pack(&b, wb),
+        ]);
+        assert_eq!(s.payload_bits(), n as u64 * (wa + wb) as u64);
+        let mut rec = [0u64; 2];
+        for i in 0..n {
+            s.records_into(i, &mut rec);
+            assert_eq!(rec, [a[i], b[i]]);
+        }
+    });
+}
+
+#[test]
+fn prop_fused_matmul_matches_dequantize_path() {
+    // serving contract: x·Ŵ straight from the codes ≡ x·dequantize(Ŵ)
+    // within 1e-5, across random shapes and bit budgets
+    let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 8, 8, 0));
+    let mag = Arc::new(MagnitudeCodebook::build(MagnitudeMethod::LloydMax, 2, 8, 1.0 - 1e-4, 0));
+    for_cases(10, 0xC7, |g| {
+        let rows = g.pow2_in(16, 128);
+        let cols = g.usize_in(1, 4) * 8;
+        let w = g.matrix(rows, cols, 0.01);
+        let q = Pcdvq::new(
+            PcdvqConfig { dir_bits: 8, mag_bits: 2, k: 8, seed: g.case_seed },
+            dir.clone(),
+            mag.clone(),
+        );
+        let qw = q.quantize_full(&w);
+        let n = g.usize_in(1, 3);
+        let x = pcdvq::tensor::Matrix::from_vec(g.rng.normal_vec(n * rows), n, rows);
+        let mut dense = pcdvq::tensor::Matrix::zeros(rows, cols);
+        qw.dequantize_into(&mut dense);
+        let reference = pcdvq::tensor::matmul(&x, &dense);
+        let fused = qw.matmul_from_codes(&x);
+        for (a, b) in reference.as_slice().iter().zip(fused.as_slice()) {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs())),
+                "case {}: fused {b} vs dense {a}",
+                g.case_seed
+            );
         }
     });
 }

@@ -12,7 +12,7 @@ use pcdvq::quant::sq::Rtn;
 use pcdvq::quant::vq_kmeans::KMeansVq;
 use pcdvq::quant::Quantizer;
 use pcdvq::rng::Rng;
-use pcdvq::tensor::Matrix;
+use pcdvq::tensor::{matmul, Matrix};
 
 /// Heavy-tailed weight: Gaussian body + outliers, like real LLM layers.
 fn realistic_weight(rows: usize, cols: usize, seed: u64) -> Matrix {
@@ -144,6 +144,76 @@ fn quantizers_preserve_shape_and_finiteness() {
             "{} produced non-finite values",
             q.name()
         );
+    }
+}
+
+#[test]
+fn fused_matmul_matches_dequantize_path_for_every_quantizer() {
+    // The serving-path contract of the compressed-artifact representation:
+    // matmul_from_codes (gather → scale → inverse-FWHT, no dense weight)
+    // must agree with explicit dequantize_into + dense matmul within 1e-5
+    // for every quantizer in the zoo.
+    let w = realistic_weight(64, 32, 21);
+    let mut km = KMeansVq::new(8, 10);
+    km.fit_on_weight(&w);
+    let quantizers: Vec<Box<dyn Quantizer>> = vec![
+        Box::new(pcdvq(9, 2)),
+        Box::new(Rtn::with_clip_search(2)),
+        Box::new(pcdvq::quant::gptq::GptqLike::new(2)),
+        Box::new(km),
+        Box::new(QuipLike::build(10, 1)),
+    ];
+    let mut rng = Rng::new(22);
+    let x = Matrix::from_vec(rng.normal_vec(4 * 64), 4, 64);
+    for q in quantizers {
+        let qw = q.quantize(&w);
+        let mut dense = Matrix::zeros(64, 32);
+        qw.dequantize_into(&mut dense);
+        let reference = matmul(&x, &dense);
+        let fused = qw.matmul_from_codes(&x);
+        assert_eq!((fused.rows(), fused.cols()), (4, 32), "{}", q.name());
+        for (i, (a, b)) in reference.as_slice().iter().zip(fused.as_slice()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs())),
+                "{}: elem {i} fused {b} vs dense {a}",
+                q.name()
+            );
+        }
+        // and the matvec agrees with row 0 of the batched kernel
+        let y = qw.matvec_from_codes(x.row(0));
+        for (a, b) in fused.row(0).iter().zip(&y) {
+            assert!((a - b).abs() < 1e-6, "{}: matvec disagrees", q.name());
+        }
+    }
+}
+
+#[test]
+fn artifacts_are_compressed_not_dense() {
+    // every quantizer's artifact must be an order of magnitude smaller than
+    // the fp32 weight it encodes (the whole point of the refactor)
+    let w = realistic_weight(128, 64, 23);
+    let mut km = KMeansVq::new(8, 12);
+    km.fit_on_weight(&w);
+    let quantizers: Vec<Box<dyn Quantizer>> = vec![
+        Box::new(pcdvq(10, 2)),
+        Box::new(Rtn::new(2)),
+        Box::new(pcdvq::quant::gptq::GptqLike::new(2)),
+        Box::new(km),
+        Box::new(QuipLike::build(12, 1)),
+    ];
+    let dense_bits = (w.len() * 32) as u64;
+    for q in quantizers {
+        let qw = q.quantize(&w);
+        assert!(
+            qw.payload_bits() * 8 <= dense_bits,
+            "{}: payload {} vs dense {dense_bits}",
+            q.name(),
+            qw.payload_bits()
+        );
+        // payload accounting matches the packed streams exactly
+        let meta = qw.scales().len() as u64 * 32
+            + if qw.rht_seed().is_some() { 64 } else { 0 };
+        assert_eq!(qw.payload_bits(), qw.codes().payload_bits() + meta, "{}", q.name());
     }
 }
 

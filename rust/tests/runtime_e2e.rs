@@ -127,23 +127,22 @@ fn dequant_kernel_matches_rust_dequant() {
     let qw = pcdvq.quantize_full(&w);
     let rust_deq = pcdvq.dequantize_full(&qw);
 
-    // feed the same codes to the Pallas dequant artifact
+    // feed the same codes to the Pallas dequant artifact (the packed
+    // artifact's two parallel streams are exactly dir_idx / mag_idx)
     let n_vec = qw.n_vectors();
-    let mut dir_idx = Vec::with_capacity(n_vec);
-    let mut mag_idx = Vec::with_capacity(n_vec);
-    for i in 0..n_vec {
-        let (d, m) = qw.indices(i);
-        dir_idx.push(d as i32);
-        mag_idx.push(m as i32);
-    }
-    let signs = pcdvq::hadamard::RandomizedHadamard::new(rows, qw.rht_seed);
+    let dir_stream = qw.codes().stream(0);
+    let mag_stream = qw.codes().stream(1);
+    let dir_idx: Vec<i32> = (0..n_vec).map(|i| dir_stream.get(i) as i32).collect();
+    let mag_idx: Vec<i32> = (0..n_vec).map(|i| mag_stream.get(i) as i32).collect();
+    let signs =
+        pcdvq::hadamard::RandomizedHadamard::new(rows, qw.rht_seed().expect("PCDVQ uses RHT"));
     let out = exe
         .run_f32(&[
             Input::I32(dir_idx, vec![n_vec]),
             Input::I32(mag_idx, vec![n_vec]),
             Input::F32(dir_cb.vectors.as_slice().to_vec(), vec![1 << a, 8]),
             Input::F32(mag_cb.levels.clone(), vec![4]),
-            Input::F32(qw.scales.clone(), vec![cols]),
+            Input::F32(qw.scales().to_vec(), vec![cols]),
             Input::F32(signs.signs().to_vec(), vec![rows]),
         ])
         .unwrap();
