@@ -1,18 +1,34 @@
-//! Bench: end-to-end serving throughput (the §4.4 table) — fp32 weights vs
-//! PCDVQ in-graph dequant, decode steps/s and tokens/s through the real
-//! batched server. Skips cleanly if `make artifacts` has not run.
+//! Bench: end-to-end serving throughput — KV-cached incremental decode vs
+//! windowed re-forward on the host codes-resident backend, plus the §4.4
+//! XLA comparison when `make artifacts` has run.
+//!
+//! Needs **no** artifacts: without `gpt-m.pct` it builds a synthetic tinygpt
+//! (the same shape the coordinator integration tests use), so CI gets real
+//! numbers. Writes `BENCH_serving.json` for the perf trajectory — the
+//! `bench-regression` CI job gates on it against `baselines/`.
 
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
-use pcdvq::bench::Bench;
+use pcdvq::bench::{black_box, Bench};
 use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
-use pcdvq::config::{build_pcdvq_with, Paths};
-use pcdvq::coordinator::{Batcher, BatcherConfig, GenRequest, Server, ServingWeights};
-use pcdvq::model::QuantizedGpt;
+use pcdvq::config::Paths;
+use pcdvq::coordinator::{
+    Batcher, BatcherConfig, DecodePolicy, GenRequest, Server, ServingWeights,
+};
+use pcdvq::model::{GptModel, KvCache, QuantizedGpt};
+use pcdvq::proptest::{synthetic_tinygpt, tiny_pcdvq};
+use pcdvq::rng::Rng;
 use pcdvq::runtime::Engine;
 
-fn drive(server: &mut Server, prompts: &[Vec<u8>], max_new: usize) -> f64 {
+/// Synthetic tinygpt (d=64, 2 layers, ctx=64) — the shared library fixture,
+/// so the bench runs on a bare CI runner without `make artifacts`.
+fn synthetic_model() -> GptModel {
+    synthetic_tinygpt("pcdvq_bench_serving", "bench-nano", 41)
+}
+
+/// Push `prompts` through the server once (greedy) and wait for completion.
+fn drive(server: &mut Server, prompts: &[Vec<u8>], max_new: usize) {
     let (tx, rx) = channel::<GenRequest>();
     let batcher = Batcher::new(rx, BatcherConfig::default());
     let mut keep = Vec::new();
@@ -29,56 +45,89 @@ fn drive(server: &mut Server, prompts: &[Vec<u8>], max_new: usize) -> f64 {
         keep.push(rrx);
     }
     drop(tx);
-    let t = Instant::now();
     server.serve(&batcher).unwrap();
-    let tokens = prompts.len() * max_new;
-    tokens as f64 / t.elapsed().as_secs_f64()
+    for rrx in keep {
+        let _ = black_box(rrx.recv().unwrap().generated.len());
+    }
 }
 
 fn main() {
     let paths = Paths::detect();
-    let Ok(model) = paths.load_model("gpt-m") else {
-        println!("serving bench skipped: no gpt-m.pct (run `make artifacts` first)");
-        return;
+    let (model, model_label) = match paths.load_model("gpt-m") {
+        Ok(m) => (m, "gpt-m"),
+        Err(_) => (synthetic_model(), "synthetic-nano"),
     };
+    let ctx = model.config.ctx;
 
-    // --- host codes-resident serving (no XLA artifacts needed) ---
-    {
-        println!("== host codes-resident serving (gpt-m, batch 8, greedy decode) ==");
-        let pcdvq = build_pcdvq_with(
-            &paths,
-            DirectionMethod::GreedyE8,
-            MagnitudeMethod::LloydMax,
-            14,
-            2,
-            7,
-        )
-        .unwrap();
-        let q = QuantizedGpt::quantize(&model, &pcdvq);
-        let resident_kib = q.resident_bits() as f64 / 8.0 / 1024.0;
-        let mut host = Server::new_host(ServingWeights::CodesResident(Box::new(q))).unwrap();
-        let eval = paths.eval_tokens().unwrap();
-        let prompts: Vec<Vec<u8>> = (0..8)
-            .map(|i| {
-                let s = (i * 4099) % (eval.len() - 64);
-                eval[s..s + 48].iter().map(|&t| t as u8).collect()
-            })
-            .collect();
-        let host_tps = drive(&mut host, &prompts, 8);
-        println!(
-            "codes-resident host:    {host_tps:>8.1} tok/s   ({resident_kib:.1} KiB resident)"
-        );
-    }
+    // deterministic synthetic prompts (the eval corpus is absent on CI)
+    let mut prng = Rng::new(99);
+    let prompts: Vec<Vec<u8>> = (0..4)
+        .map(|_| (0..24).map(|_| prng.below(256) as u8).collect())
+        .collect();
+    let max_new = 8usize;
+    let toks_per_drive = (prompts.len() * max_new) as u64;
 
-    if !paths.artifacts.join("fwd_q_gpt-m.hlo.txt").exists() {
+    let mut bench = Bench::new();
+    println!("== host codes-resident decode ({model_label}, ctx {ctx}, greedy) ==");
+    let pcdvq_q = tiny_pcdvq();
+    let q = QuantizedGpt::quantize(&model, &pcdvq_q);
+    let resident_kib = q.resident_bits() as f64 / 8.0 / 1024.0;
+    let kv_kib = model.config.kv_cache_bits() as f64 / 8.0 / 1024.0;
+    println!("resident weights {resident_kib:.1} KiB, KV cache {kv_kib:.1} KiB/slot");
+
+    let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+
+    server.decode = DecodePolicy::KvCached;
+    let cached = bench
+        .run_elems("serve_host_kv_cached_tok", toks_per_drive, || {
+            drive(&mut server, &prompts, max_new)
+        })
+        .clone();
+
+    server.decode = DecodePolicy::Reforward;
+    let reforward = bench
+        .run_elems("serve_host_reforward_tok", toks_per_drive, || {
+            drive(&mut server, &prompts, max_new)
+        })
+        .clone();
+
+    // steady-state single-step latency: decode into a nearly full cache,
+    // sliding (and rebuilding) as it overflows — the amortized serving cost
+    let hf = pcdvq::model::HostForward::from_quantized(q).unwrap();
+    let mut cache = KvCache::new(&model.config);
+    hf.prefill(&vec![7i32; ctx - 1], &mut cache).unwrap();
+    let step = bench
+        .run("decode_step_steady_state", || {
+            let _ = black_box(hf.decode_step(11, &mut cache).unwrap());
+        })
+        .clone();
+
+    let tok_s = |ns: f64, toks: f64| toks / (ns * 1e-9);
+    let cached_tps = tok_s(cached.median_ns, toks_per_drive as f64);
+    let reforward_tps = tok_s(reforward.median_ns, toks_per_drive as f64);
+    println!("kv-cached decode:   {cached_tps:>10.1} tok/s");
+    println!(
+        "windowed re-forward:{reforward_tps:>10.1} tok/s   ({:.1}x slower)",
+        cached_tps / reforward_tps.max(1e-9)
+    );
+    println!(
+        "steady-state decode_step: {:.1} µs/token ({} evictions amortized in)",
+        step.median_ns / 1e3,
+        cache.evictions()
+    );
+
+    bench.write_json("BENCH_serving.json").unwrap();
+    println!("wrote BENCH_serving.json");
+
+    // --- §4.4 XLA comparison (needs `make artifacts`) ---
+    if model_label != "gpt-m" || !paths.artifacts.join("fwd_q_gpt-m.hlo.txt").exists() {
         println!("XLA serving bench skipped: run `make artifacts` first");
         return;
     }
-    let _bench = Bench::new(); // uniform output style
-    println!("== serving throughput (gpt-m, batch 8, greedy decode) ==");
+    println!("== XLA serving throughput (gpt-m, batch 8, greedy decode) ==");
     let engine = Engine::new().unwrap();
     let eval = paths.eval_tokens().unwrap();
-    let prompts: Vec<Vec<u8>> = (0..16)
+    let xla_prompts: Vec<Vec<u8>> = (0..16)
         .map(|i| {
             let s = (i * 4099) % (eval.len() - 64);
             eval[s..s + 48].iter().map(|&t| t as u8).collect()
@@ -86,22 +135,34 @@ fn main() {
         .collect();
 
     let mut fp = Server::new(&engine, &paths.artifacts, ServingWeights::Fp(model.clone())).unwrap();
-    // warm + measure twice, report the better (compile amortized)
-    let _ = drive(&mut fp, &prompts, 8);
-    let fp_tps = drive(&mut fp, &prompts, 24);
+    // warm + measure (compile amortized)
+    drive(&mut fp, &xla_prompts, 8);
+    let t = Instant::now();
+    drive(&mut fp, &xla_prompts, 24);
+    let fp_tps = (xla_prompts.len() * 24) as f64 / t.elapsed().as_secs_f64();
     println!("fp32 weights:           {fp_tps:>8.1} tok/s");
 
-    let pcdvq = build_pcdvq_with(&paths, DirectionMethod::GreedyE8, MagnitudeMethod::LloydMax, 14, 2, 7).unwrap();
-    let q = QuantizedGpt::quantize(&model, &pcdvq);
-    let ratio = q.dense_bits() as f64 / q.payload_bits() as f64;
+    let q14 = pcdvq::config::build_pcdvq_with(
+        &paths,
+        DirectionMethod::GreedyE8,
+        MagnitudeMethod::LloydMax,
+        14,
+        2,
+        7,
+    )
+    .unwrap();
+    let qq = QuantizedGpt::quantize(&model, &q14);
+    let ratio = qq.dense_bits() as f64 / qq.payload_bits() as f64;
     let mut qs = Server::new(
         &engine,
         &paths.artifacts,
-        ServingWeights::Quantized(Box::new(q), (*pcdvq.dir).clone(), (*pcdvq.mag).clone()),
+        ServingWeights::Quantized(Box::new(qq), (*q14.dir).clone(), (*q14.mag).clone()),
     )
     .unwrap();
-    let _ = drive(&mut qs, &prompts, 8);
-    let q_tps = drive(&mut qs, &prompts, 24);
+    drive(&mut qs, &xla_prompts, 8);
+    let t = Instant::now();
+    drive(&mut qs, &xla_prompts, 24);
+    let q_tps = (xla_prompts.len() * 24) as f64 / t.elapsed().as_secs_f64();
     println!("pcdvq in-graph dequant: {q_tps:>8.1} tok/s   (weights {ratio:.1}x smaller resident)");
     println!("note: CPU testbed is compute-bound; see EXPERIMENTS.md §4.4 for discussion");
 }

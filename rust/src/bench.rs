@@ -174,6 +174,169 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Perf-trajectory regression gate (`bench_gate` bin, CI `bench-regression`)
+// ---------------------------------------------------------------------------
+
+/// One entry of a `BENCH_*.json` trajectory file (the subset the regression
+/// gate compares).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    pub name: String,
+    pub median_ns: f64,
+}
+
+/// Parse a `BENCH_*.json` file written by [`Bench::write_json`]. The format
+/// is a flat array of flat objects, so this hand-rolled reader (serde is not
+/// in the offline crate set) only needs top-level `{…}` spans plus the
+/// `name` / `median_ns` fields; unknown fields are ignored.
+pub fn parse_bench_json(text: &str) -> Result<Vec<BenchEntry>, String> {
+    let body = text.trim();
+    if !body.starts_with('[') || !body.ends_with(']') {
+        return Err("not a JSON array".into());
+    }
+    let mut out = Vec::new();
+    let mut rest = &body[1..body.len() - 1];
+    while let Some(open) = rest.find('{') {
+        let close = find_unquoted_close(&rest[open..])
+            .ok_or_else(|| "unterminated object".to_string())?;
+        let obj = &rest[open + 1..open + close];
+        out.push(BenchEntry {
+            name: json_string_field(obj, "name")
+                .ok_or_else(|| format!("entry without name: {obj}"))?,
+            median_ns: json_number_field(obj, "median_ns")
+                .ok_or_else(|| format!("entry without median_ns: {obj}"))?,
+        });
+        rest = &rest[open + close + 1..];
+    }
+    Ok(out)
+}
+
+/// Byte offset of the first `}` that is not inside a JSON string — bench
+/// names may legally contain braces, so a naive `find('}')` would split an
+/// object mid-name.
+fn find_unquoted_close(s: &str) -> Option<usize> {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '}' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Extract `"key": "…"` from a flat JSON object body, unescaping `\"`/`\\`.
+fn json_string_field(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let after = obj[obj.find(&pat)? + pat.len()..].trim_start();
+    let inner = after.strip_prefix('"')?;
+    let mut s = String::new();
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '\\' => s.push(chars.next()?),
+            '"' => return Some(s),
+            _ => s.push(c),
+        }
+    }
+    None
+}
+
+/// Extract `"key": <number>` from a flat JSON object body.
+fn json_number_field(obj: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let after = obj[obj.find(&pat)? + pat.len()..].trim_start();
+    let end = after
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(after.len());
+    after[..end].parse().ok()
+}
+
+/// Baseline-vs-current delta of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// `cur / base` — above 1.0 is a slowdown.
+    pub ratio: f64,
+}
+
+/// Result of comparing a current trajectory file against its baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BenchComparison {
+    /// Benchmarks present in both files.
+    pub deltas: Vec<BenchDelta>,
+    /// Present only in the current run (new benchmarks — informational).
+    pub added: Vec<String>,
+    /// Present only in the baseline (renamed/removed — informational).
+    pub removed: Vec<String>,
+}
+
+impl BenchComparison {
+    /// Deltas slower than `tolerance` (e.g. 1.3 = fail on >1.3x slowdown).
+    pub fn regressions(&self, tolerance: f64) -> Vec<&BenchDelta> {
+        self.deltas.iter().filter(|d| d.ratio > tolerance).collect()
+    }
+
+    /// Markdown trend table (the CI job-summary block): one row per shared
+    /// benchmark, ✅/❌ against the tolerance, plus added/removed notes.
+    pub fn markdown_table(&self, tolerance: f64) -> String {
+        let mut out = String::from(
+            "| benchmark | baseline | current | ratio | |\n|---|---:|---:|---:|---|\n",
+        );
+        for d in &self.deltas {
+            let mark = if d.ratio > tolerance { "❌" } else { "✅" };
+            out.push_str(&format!(
+                "| {} | {} | {} | {:.2}x | {} |\n",
+                d.name,
+                fmt_ns(d.base_ns),
+                fmt_ns(d.cur_ns),
+                d.ratio,
+                mark
+            ));
+        }
+        for name in &self.added {
+            out.push_str(&format!("| {name} | — | new | — | 🆕 |\n"));
+        }
+        for name in &self.removed {
+            out.push_str(&format!("| {name} | gone | — | — | ⚠️ |\n"));
+        }
+        out
+    }
+}
+
+/// Compare a current trajectory against its committed baseline, matching by
+/// benchmark name (order-insensitive).
+pub fn compare_benches(base: &[BenchEntry], cur: &[BenchEntry]) -> BenchComparison {
+    let mut cmp = BenchComparison::default();
+    for c in cur {
+        match base.iter().find(|b| b.name == c.name) {
+            Some(b) if b.median_ns > 0.0 => cmp.deltas.push(BenchDelta {
+                name: c.name.clone(),
+                base_ns: b.median_ns,
+                cur_ns: c.median_ns,
+                ratio: c.median_ns / b.median_ns,
+            }),
+            Some(_) | None => cmp.added.push(c.name.clone()),
+        }
+    }
+    for b in base {
+        if !cur.iter().any(|c| c.name == b.name) {
+            cmp.removed.push(b.name.clone());
+        }
+    }
+    cmp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +380,94 @@ mod tests {
         assert!(text.contains("\"elements\": 10"));
         assert!(text.contains("\"elements\": null"));
         assert_eq!(text.matches("median_ns").count(), 2);
+    }
+
+    #[test]
+    fn parse_round_trips_write_json() {
+        let mut b = Bench::new();
+        b.samples = 2;
+        b.target_sample_s = 0.002;
+        b.warmup_s = 0.001;
+        let mut acc = 0u64;
+        b.run_elems("alpha \"quoted\"", 4, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        b.run("beta", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let path = std::env::temp_dir().join("pcdvq_bench_roundtrip.json");
+        b.write_json(&path).unwrap();
+        let parsed = parse_bench_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].name, "alpha \"quoted\"");
+        assert_eq!(parsed[1].name, "beta");
+        for (p, m) in parsed.iter().zip(b.results()) {
+            assert!((p.median_ns - m.median_ns).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn parse_handles_empty_and_rejects_garbage() {
+        assert_eq!(parse_bench_json("[]\n").unwrap(), vec![]);
+        assert_eq!(parse_bench_json("[\n]\n").unwrap(), vec![]);
+        assert!(parse_bench_json("not json").is_err());
+        assert!(parse_bench_json("[{\"median_ns\": 1.0}]").is_err(), "missing name");
+    }
+
+    #[test]
+    fn parse_survives_braces_and_escapes_in_names() {
+        let text = "[\n  {\"name\": \"pack{w=8}\", \"median_ns\": 5.0},\n  \
+                    {\"name\": \"quo\\\"te}\", \"median_ns\": 7.0}\n]\n";
+        let parsed = parse_bench_json(text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].name, "pack{w=8}");
+        assert_eq!(parsed[0].median_ns, 5.0);
+        assert_eq!(parsed[1].name, "quo\"te}");
+        assert_eq!(parsed[1].median_ns, 7.0);
+    }
+
+    fn entry(name: &str, ns: f64) -> BenchEntry {
+        BenchEntry { name: name.into(), median_ns: ns }
+    }
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_tolerance() {
+        let base = vec![entry("a", 100.0), entry("b", 100.0), entry("gone", 5.0)];
+        let cur = vec![entry("a", 125.0), entry("b", 140.0), entry("fresh", 9.0)];
+        let cmp = compare_benches(&base, &cur);
+        assert_eq!(cmp.deltas.len(), 2);
+        assert_eq!(cmp.added, vec!["fresh".to_string()]);
+        assert_eq!(cmp.removed, vec!["gone".to_string()]);
+        let regs = cmp.regressions(1.3);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "b");
+        assert!((regs[0].ratio - 1.4).abs() < 1e-9);
+        // speedups never fail the gate
+        assert!(cmp.regressions(2.0).is_empty());
+    }
+
+    #[test]
+    fn empty_baseline_records_without_gating() {
+        // the bootstrap state: committed baselines start as `[]` until a CI
+        // run populates them — everything shows as added, nothing regresses
+        let cmp = compare_benches(&[], &[entry("a", 10.0)]);
+        assert!(cmp.deltas.is_empty());
+        assert_eq!(cmp.added.len(), 1);
+        assert!(cmp.regressions(1.3).is_empty());
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let cmp = compare_benches(
+            &[entry("fast", 100.0), entry("slow", 100.0)],
+            &[entry("fast", 90.0), entry("slow", 200.0), entry("fresh", 1.0)],
+        );
+        let md = cmp.markdown_table(1.3);
+        assert!(md.contains("| fast |"));
+        assert!(md.contains("✅"));
+        assert!(md.contains("❌"));
+        assert!(md.contains("🆕"));
+        assert!(md.lines().count() >= 5);
     }
 
     #[test]

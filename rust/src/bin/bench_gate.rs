@@ -1,0 +1,149 @@
+//! `bench_gate` — the CI perf-regression gate.
+//!
+//! Compares freshly emitted `BENCH_*.json` trajectory files against the
+//! committed baselines (`baselines/BENCH_*.json`), prints a markdown trend
+//! table (optionally appended to a summary file, e.g. `$GITHUB_STEP_SUMMARY`)
+//! and exits non-zero when any shared benchmark slowed down beyond the
+//! tolerance.
+//!
+//! ```text
+//! bench_gate --files BENCH_assign.json,BENCH_quant.json,BENCH_serving.json \
+//!            [--baseline-dir ../baselines] [--current-dir .] \
+//!            [--tolerance 1.3] [--summary out.md]
+//! ```
+//!
+//! Baseline files that are absent or empty (`[]`) record the trend without
+//! gating — the bootstrap state until a toolchain-equipped runner populates
+//! `baselines/` (procedure: DESIGN.md §10).
+
+use std::path::{Path, PathBuf};
+use std::process::exit;
+
+use pcdvq::bench::{compare_benches, parse_bench_json, BenchComparison};
+
+struct Opts {
+    files: Vec<String>,
+    baseline_dir: PathBuf,
+    current_dir: PathBuf,
+    tolerance: f64,
+    summary: Option<PathBuf>,
+}
+
+fn parse_opts() -> Result<Opts, String> {
+    let mut opts = Opts {
+        files: Vec::new(),
+        baseline_dir: PathBuf::from("../baselines"),
+        current_dir: PathBuf::from("."),
+        tolerance: 1.3,
+        summary: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        let mut val =
+            |flag: &str| it.next().ok_or_else(|| format!("--{flag} needs a value"));
+        match arg.as_str() {
+            "--files" => {
+                opts.files = val("files")?.split(',').map(|s| s.trim().to_string()).collect()
+            }
+            "--baseline-dir" => opts.baseline_dir = PathBuf::from(val("baseline-dir")?),
+            "--current-dir" => opts.current_dir = PathBuf::from(val("current-dir")?),
+            "--tolerance" => {
+                opts.tolerance = val("tolerance")?
+                    .parse()
+                    .map_err(|e| format!("--tolerance: {e}"))?
+            }
+            "--summary" => opts.summary = Some(PathBuf::from(val("summary")?)),
+            other => return Err(format!("unknown flag '{other}'")),
+        }
+    }
+    if opts.files.is_empty() {
+        return Err("--files is required (comma-separated BENCH_*.json names)".into());
+    }
+    Ok(opts)
+}
+
+fn load(path: &Path) -> Result<Vec<pcdvq::bench::BenchEntry>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_bench_json(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn main() {
+    let opts = match parse_opts() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            exit(2);
+        }
+    };
+
+    let mut report = String::from("## Bench regression gate\n\n");
+    let mut failed = false;
+    let mut bench_ran = true;
+    for file in &opts.files {
+        report.push_str(&format!("### {file}\n\n"));
+        let cur = match load(&opts.current_dir.join(file)) {
+            Ok(c) => c,
+            Err(e) => {
+                // the bench did not emit its trajectory — that's a CI failure
+                report.push_str(&format!("❌ current run missing: {e}\n\n"));
+                bench_ran = false;
+                continue;
+            }
+        };
+        let base_path = opts.baseline_dir.join(file);
+        let base = if base_path.exists() {
+            match load(&base_path) {
+                Ok(b) => b,
+                Err(e) => {
+                    // a committed baseline that no longer parses must fail
+                    // loudly — treating it as "unpopulated" would silently
+                    // disarm the gate
+                    report.push_str(&format!("❌ baseline unreadable: {e}\n\n"));
+                    failed = true;
+                    continue;
+                }
+            }
+        } else {
+            Vec::new() // no committed baseline yet (bootstrap state)
+        };
+        if base.is_empty() {
+            report.push_str(
+                "baseline unpopulated — recording trend only \
+                 (refresh procedure: DESIGN.md §10)\n\n",
+            );
+        }
+        let cmp: BenchComparison = compare_benches(&base, &cur);
+        report.push_str(&cmp.markdown_table(opts.tolerance));
+        report.push('\n');
+        let regs = cmp.regressions(opts.tolerance);
+        if !regs.is_empty() {
+            failed = true;
+            for r in regs {
+                report.push_str(&format!(
+                    "**regression**: `{}` {:.2}x slower than baseline (tolerance {:.2}x)\n",
+                    r.name, r.ratio, opts.tolerance
+                ));
+            }
+            report.push('\n');
+        }
+    }
+    if failed {
+        report.push_str("\n**gate: FAILED** — a benchmark regressed beyond tolerance\n");
+    } else if !bench_ran {
+        report.push_str("\n**gate: FAILED** — a bench run emitted no trajectory file\n");
+    } else {
+        report.push_str("\n**gate: passed**\n");
+    }
+
+    print!("{report}");
+    if let Some(summary) = &opts.summary {
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(summary) {
+            let _ = f.write_all(report.as_bytes());
+        }
+    }
+    if failed || !bench_ran {
+        exit(1);
+    }
+}

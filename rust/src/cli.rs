@@ -110,7 +110,10 @@ SUBCOMMANDS
              --model NAME --quantized --requests N (32) --max-new N (32)
              --host     serve on the host backend (codes-resident with
                         --quantized: packed codes + shared codebooks only,
-                        no XLA artifacts, no dense weights)
+                        no XLA artifacts, no dense weights); decodes
+                        incrementally with per-slot KV caches
+             --reforward  disable the KV cache: windowed re-forward every
+                        step (the parity oracle; slow)
   info       print artifact + model inventory
 
 Method SPECs: fp16, rtn2, rtn4, gptq2, kmeans16, quip16, pcdvq2, pcdvq2.125,

@@ -12,7 +12,10 @@
 //! * [`server`] — the generation service: batched iterative decoding against
 //!   the AOT forward executable (fp *or* in-graph-dequant quantized) or the
 //!   host **codes-resident** backend (packed codes + shared codebooks only),
-//!   with throughput/latency metrics (§4.4).
+//!   with throughput/latency metrics (§4.4). The host backend decodes
+//!   incrementally against per-slot KV caches
+//!   ([`server::DecodePolicy::KvCached`]); the windowed re-forward remains
+//!   as the parity oracle.
 
 pub mod batcher;
 pub mod metrics;
@@ -22,4 +25,4 @@ pub mod server;
 pub use batcher::{Batcher, BatcherConfig, GenRequest, GenResponse};
 pub use metrics::Metrics;
 pub use scheduler::{quantize_model_compressed, quantize_model_parallel, QuantStats};
-pub use server::{Server, ServingWeights};
+pub use server::{DecodePolicy, Server, ServingWeights};

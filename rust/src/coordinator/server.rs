@@ -15,8 +15,11 @@
 //!   is exactly codes + shared codebooks, which
 //!   [`crate::paper::verify_codes_resident`] checks against the §4.4 claim.
 //!
-//! Decoding is windowed re-forward (no KV cache — the model's ctx is 128 and
-//! the executable geometry is fixed; see DESIGN.md §9 for the trade-off).
+//! The host backend decodes **incrementally** with one [`KvCache`] per batch
+//! slot (reset at every request boundary — per-request state is explicit);
+//! the windowed re-forward survives as [`DecodePolicy::Reforward`], both as
+//! the parity oracle and as the only option for the fixed-geometry XLA
+//! executables (DESIGN.md §9).
 
 use std::time::Instant;
 
@@ -26,7 +29,7 @@ use super::batcher::{Batcher, GenRequest, GenResponse};
 use super::metrics::Metrics;
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
 use crate::eval::weight_inputs;
-use crate::model::{GptModel, HostForward, QuantizedGpt};
+use crate::model::{GptModel, HostForward, KvCache, QuantizedGpt};
 use crate::rng::Rng;
 use crate::runtime::{BoundExecutable, Engine, Input};
 
@@ -67,13 +70,39 @@ enum Backend {
     Host(HostForward),
 }
 
+/// How the server advances a decode step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodePolicy {
+    /// Incremental decode against per-slot [`KvCache`]s — O(1) weight work
+    /// per token. Host backend only (and its default).
+    KvCached,
+    /// Re-forward the whole window every token — O(window) per token. The
+    /// parity oracle for the cached path, and the only policy the
+    /// fixed-geometry XLA executables support.
+    Reforward,
+}
+
 /// A ready-to-serve model: backend + decode state.
 pub struct Server {
     backend: Backend,
     pub config: crate::model::GptConfig,
     pub batch: usize,
     pub metrics: Metrics,
-    rng: Rng,
+    /// Decode strategy. [`Self::new_host`] defaults to
+    /// [`DecodePolicy::KvCached`]; an XLA server ignores `KvCached` and
+    /// re-forwards regardless (its executable geometry is fixed).
+    pub decode: DecodePolicy,
+    /// Seed for the per-request sampling streams: every request draws from a
+    /// fresh `Rng` derived from this seed and its batch slot, so requests
+    /// never inherit sampler state from earlier traffic — a request replayed
+    /// in the same batch slot on a fresh server reproduces its output
+    /// exactly. (The stream does depend on slot placement, so co-batched
+    /// traffic can shift which stream a sampled request gets.)
+    pub sampler_seed: u64,
+    /// One KV cache per batch slot, built lazily on the host backend and
+    /// **reset at every request boundary** — a new request always starts
+    /// from an empty cache.
+    slot_caches: Vec<KvCache>,
     /// Weight bits actually resident for the quantizable matrices (fp32 vs
     /// packed codes) — reported by the efficiency harness.
     pub resident_weight_bits: u64,
@@ -112,7 +141,9 @@ impl Server {
             config,
             batch,
             metrics: Metrics::new(),
-            rng: Rng::new(0x5E84),
+            decode: DecodePolicy::Reforward,
+            sampler_seed: 0x5E84,
+            slot_caches: Vec::new(),
             resident_weight_bits,
             resident_codebook_bits,
         })
@@ -142,7 +173,9 @@ impl Server {
             config,
             batch: 8,
             metrics: Metrics::new(),
-            rng: Rng::new(0x5E84),
+            decode: DecodePolicy::KvCached,
+            sampler_seed: 0x5E84,
+            slot_caches: Vec::new(),
             resident_weight_bits,
             resident_codebook_bits,
         })
@@ -164,13 +197,88 @@ impl Server {
         }
     }
 
+    /// f32 bits of KV-cache state currently allocated across batch slots
+    /// (0 until the first cached batch; grows to
+    /// `batch · config.kv_cache_bits()`).
+    pub fn kv_cache_bits(&self) -> u64 {
+        self.slot_caches.iter().map(|c| c.memory_bits()).sum()
+    }
+
     /// Decode one batch of requests to completion; sends responses on each
     /// request's channel and updates metrics.
     pub fn process_batch(&mut self, batch: Vec<GenRequest>) -> Result<()> {
+        anyhow::ensure!(
+            batch.len() <= self.batch,
+            "batch larger than executable geometry"
+        );
+        let cached = matches!(&self.backend, Backend::Host(_))
+            && self.decode == DecodePolicy::KvCached;
+        if cached {
+            self.process_batch_cached(batch)
+        } else {
+            self.process_batch_reforward(batch)
+        }
+    }
+
+    /// Incremental decode: per-slot KV caches, one token of model work per
+    /// step. Each request starts from an explicitly reset cache and a fresh
+    /// sampling stream — no state crosses request boundaries.
+    fn process_batch_cached(&mut self, batch: Vec<GenRequest>) -> Result<()> {
+        let t0 = Instant::now();
+        let ctx = self.config.ctx;
+        let v = self.config.vocab;
+        let Backend::Host(hf) = &self.backend else {
+            anyhow::bail!("cached decode needs the host backend")
+        };
+        while self.slot_caches.len() < batch.len() {
+            self.slot_caches.push(KvCache::new(&self.config));
+        }
+
+        let mut generated: Vec<Vec<u8>> = vec![Vec::new(); batch.len()];
+        for (s, req) in batch.iter().enumerate() {
+            let cache = &mut self.slot_caches[s];
+            cache.reset(); // new request → fresh cache
+            let mut rng = request_rng(self.sampler_seed, s);
+            let prompt: Vec<i32> = req
+                .prompt
+                .iter()
+                .rev()
+                .take(ctx - 1) // leave room to generate
+                .rev()
+                .map(|&x| x as i32)
+                .collect();
+            if prompt.is_empty() {
+                // degenerate request: resolve with zero tokens rather than
+                // failing the whole batch (finish_batch still responds)
+                continue;
+            }
+            let mut logits = hf.prefill(&prompt, cache).context("prefill")?;
+            for step in 0..req.max_new {
+                debug_assert_eq!(logits.len(), v);
+                let next = if req.temperature <= 0.0 {
+                    crate::tensor::argmax(&logits) as u8
+                } else {
+                    sample(&logits, req.temperature, &mut rng)
+                };
+                generated[s].push(next);
+                if step + 1 < req.max_new {
+                    logits = hf.decode_step(next as i32, cache).context("decode step")?;
+                }
+            }
+        }
+
+        let steps = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
+        self.finish_batch(t0, &batch, &generated, steps);
+        Ok(())
+    }
+
+    /// Windowed re-forward: the whole prefix through the backend every step.
+    /// The parity oracle for [`DecodePolicy::KvCached`], and the decode loop
+    /// of the fixed-geometry XLA executables.
+    fn process_batch_reforward(&mut self, batch: Vec<GenRequest>) -> Result<()> {
         let t0 = Instant::now();
         let ctx = self.config.ctx;
         let b = self.batch;
-        anyhow::ensure!(batch.len() <= b, "batch larger than executable geometry");
 
         // Per-slot state: token buffer + generated bytes.
         let mut bufs: Vec<Vec<i32>> = Vec::with_capacity(b);
@@ -189,6 +297,9 @@ impl Server {
         }
         let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
         let mut generated: Vec<Vec<u8>> = vec![Vec::new(); batch.len()];
+        let mut rngs: Vec<Rng> = (0..batch.len())
+            .map(|s| request_rng(self.sampler_seed, s))
+            .collect();
 
         let mut steps = 0usize;
         for _ in 0..max_new {
@@ -204,7 +315,9 @@ impl Server {
             steps += 1;
             let v = self.config.vocab;
             for (s, req) in batch.iter().enumerate() {
-                if generated[s].len() >= req.max_new {
+                // empty-prompt slots resolve with zero tokens (no position
+                // to predict from), mirroring the cached path
+                if generated[s].len() >= req.max_new || lens[s] == 0 {
                     continue;
                 }
                 let pos = (lens[s].min(ctx)) - 1;
@@ -212,7 +325,7 @@ impl Server {
                 let next = if req.temperature <= 0.0 {
                     crate::tensor::argmax(row) as u8
                 } else {
-                    sample(row, req.temperature, &mut self.rng)
+                    sample(row, req.temperature, &mut rngs[s])
                 };
                 generated[s].push(next);
                 bufs[s].push(next as i32);
@@ -225,6 +338,18 @@ impl Server {
             }
         }
 
+        self.finish_batch(t0, &batch, &generated, steps);
+        Ok(())
+    }
+
+    /// Shared batch epilogue: responses + metrics.
+    fn finish_batch(
+        &mut self,
+        t0: Instant,
+        batch: &[GenRequest],
+        generated: &[Vec<u8>],
+        steps: usize,
+    ) {
         let mut tokens = 0usize;
         for (req, gen) in batch.iter().zip(generated.iter()) {
             tokens += gen.len();
@@ -238,7 +363,6 @@ impl Server {
         }
         self.metrics.record_batch(batch.len(), tokens, steps);
         self.metrics.wall_s += t0.elapsed().as_secs_f64();
-        Ok(())
     }
 
     /// Serve until the request channel closes.
@@ -248,6 +372,15 @@ impl Server {
         }
         Ok(())
     }
+}
+
+/// Per-request sampling stream, deterministic in (server seed, batch slot):
+/// a request's samples never depend on traffic served *before* it, so a
+/// request replayed in the same batch slot on a fresh server reproduces its
+/// output exactly. Slot placement itself still depends on how the batcher
+/// grouped concurrent traffic.
+fn request_rng(seed: u64, slot: usize) -> Rng {
+    Rng::new(seed ^ (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
 /// Temperature sampling over a logit row.
@@ -348,6 +481,18 @@ mod tests {
         for _ in 0..20 {
             assert_eq!(sample(&logits, 0.05, &mut rng), 17);
         }
+    }
+
+    #[test]
+    fn request_rng_is_slot_stable_and_slot_distinct() {
+        // same (seed, slot) → identical stream; different slots → different
+        let mut a = request_rng(7, 3);
+        let mut b = request_rng(7, 3);
+        let mut c = request_rng(7, 4);
+        let same: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        assert!(same.iter().all(|&x| x == b.next_u64()));
+        let other: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_ne!(same, other);
     }
 
     #[test]

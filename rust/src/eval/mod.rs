@@ -6,7 +6,10 @@
 //! per-batch work is one token upload + one execute + a host-side softmax
 //! reduction, or the host backend ([`HostForward`]), which can evaluate a
 //! **codes-resident** model without ever materializing its dense weights.
-//! Serving uses the same two code paths.
+//! Serving uses the same two code paths. Backends with a KV cache also
+//! expose a stateful [`DecodeSession`] ([`ForwardPass::begin_session`]):
+//! unbatched perplexity and [`greedy_decode`] ride it for O(1) model work
+//! per token instead of per-window re-forwards.
 
 mod ppl;
 mod tasks;
@@ -14,13 +17,36 @@ mod tasks;
 pub use ppl::{evaluate_ppl, fit_temperature, PplResult};
 pub use tasks::{evaluate_tasks, TaskResult, TASK_NAMES};
 
-use crate::model::{GptModel, HostForward};
+use crate::model::{GptConfig, GptModel, HostForward, KvCache};
 use crate::runtime::{BoundExecutable, Input};
 
 /// A batched forward pass: `(b, t)` token block → logits `(b · t · vocab)`.
 pub trait ForwardPass {
     fn forward_block(&self, tokens: Vec<i32>, b: usize, t: usize)
         -> anyhow::Result<Vec<f32>>;
+
+    /// Begin a stateful incremental-decode session, if the backend supports
+    /// one. `None` (the default) means block re-forward is the only mode —
+    /// the fixed-geometry XLA executables, for instance. The host backend
+    /// returns a KV-cached session.
+    fn begin_session(&self) -> Option<Box<dyn DecodeSession + '_>> {
+        None
+    }
+}
+
+/// A stateful decode stream: feed tokens one at a time, get the logits at
+/// each new position. Backed by a [`KvCache`] on the host backend, so N
+/// steps cost O(N) model work instead of the O(N²) of re-forwarding.
+pub trait DecodeSession {
+    /// Feed one token; returns the logits (`vocab` floats) at its position.
+    fn step(&mut self, token: i32) -> anyhow::Result<Vec<f32>>;
+
+    /// Tokens currently attended over (the window shrinks only when the
+    /// backing cache slides past its capacity).
+    fn window_len(&self) -> usize;
+
+    /// Drop all decode state — the next [`Self::step`] starts a new stream.
+    fn reset(&mut self);
 }
 
 impl ForwardPass for BoundExecutable {
@@ -43,6 +69,81 @@ impl ForwardPass for HostForward {
     ) -> anyhow::Result<Vec<f32>> {
         self.forward(&tokens, b, t)
     }
+
+    fn begin_session(&self) -> Option<Box<dyn DecodeSession + '_>> {
+        Some(Box::new(HostSession {
+            hf: self,
+            cache: KvCache::new(&self.config),
+        }))
+    }
+}
+
+/// Host-backend decode session: a borrowed [`HostForward`] + its own cache.
+struct HostSession<'a> {
+    hf: &'a HostForward,
+    cache: KvCache,
+}
+
+impl DecodeSession for HostSession<'_> {
+    fn step(&mut self, token: i32) -> anyhow::Result<Vec<f32>> {
+        self.hf.decode_step(token, &mut self.cache)
+    }
+
+    fn window_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn reset(&mut self) {
+        self.cache.reset();
+    }
+}
+
+/// Greedy-decode `max_new` tokens after `prompt` (truncated to the last
+/// `ctx - 1` bytes, mirroring the serving loop). Uses the backend's stateful
+/// session when it has one — O(1) model work per token — and falls back to
+/// windowed re-forward otherwise. The two paths match while
+/// `prompt + generated` fits in `ctx`; past that the cached path slides by
+/// its eviction stride rather than per-token.
+pub fn greedy_decode<F: ForwardPass + ?Sized>(
+    backend: &F,
+    cfg: &GptConfig,
+    prompt: &[u8],
+    max_new: usize,
+) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let mut buf: Vec<i32> = prompt
+        .iter()
+        .rev()
+        .take(cfg.ctx - 1)
+        .rev()
+        .map(|&x| x as i32)
+        .collect();
+    let mut out = Vec::with_capacity(max_new);
+    if let Some(mut sess) = backend.begin_session() {
+        let mut logits = Vec::new();
+        for &t in &buf {
+            logits = sess.step(t)?;
+        }
+        for i in 0..max_new {
+            let next = crate::tensor::argmax(&logits) as u8;
+            out.push(next);
+            if i + 1 < max_new {
+                logits = sess.step(next as i32)?;
+            }
+        }
+    } else {
+        for _ in 0..max_new {
+            let start = buf.len().saturating_sub(cfg.ctx);
+            let window = buf[start..].to_vec();
+            let t = window.len();
+            let logits = backend.forward_block(window, 1, t)?;
+            let row = &logits[(t - 1) * cfg.vocab..t * cfg.vocab];
+            let next = crate::tensor::argmax(row) as u8;
+            out.push(next);
+            buf.push(next as i32);
+        }
+    }
+    Ok(out)
 }
 
 /// Build the fixed (weight) inputs of a forward executable in manifest

@@ -52,6 +52,41 @@ pub fn evaluate_ppl<F: ForwardPass + ?Sized>(
     let n_windows = ((tokens.len() - 1) / t).min(max_windows);
     anyhow::ensure!(n_windows >= 1, "token stream too short for one window");
 
+    // Unbatched scoring through a stateful decode session when the backend
+    // has one: same windows, same t-1 targets per window, but the session
+    // never forwards the padded tail or the last (unscored) position. The
+    // batched block path below is unchanged (and is the only path for the
+    // fixed-geometry XLA executables).
+    let session = if batch == 1 { bound.begin_session() } else { None };
+    if let Some(mut sess) = session {
+        let mut total_nll = 0.0f64;
+        let mut total_count = 0usize;
+        for w in 0..n_windows {
+            sess.reset();
+            let s = w * t;
+            for pos in 0..t - 1 {
+                let logits = sess.step(tokens[s + pos] as i32)?;
+                debug_assert_eq!(logits.len(), v);
+                let target = tokens[s + pos + 1] as usize;
+                if temperature != 1.0 {
+                    let scaled: Vec<f32> =
+                        logits.iter().map(|x| x / temperature).collect();
+                    total_nll += row_nll(&scaled, target);
+                } else {
+                    total_nll += row_nll(&logits, target);
+                }
+                total_count += 1;
+            }
+        }
+        let nll = total_nll / total_count as f64;
+        return Ok(PplResult {
+            nll,
+            ppl: nll.exp(),
+            bits_per_byte: nll / std::f64::consts::LN_2,
+            n_tokens: total_count,
+        });
+    }
+
     let mut total_nll = 0.0f64;
     let mut total_count = 0usize;
     let mut win = 0usize;

@@ -44,6 +44,18 @@ impl GptConfig {
         }
     }
 
+    /// Per-head dimension of the attention split.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    /// f32 bits of K/V state one full-context [`crate::model::KvCache`]
+    /// holds: `2 · n_layer · ctx · d_model · 32` (K and V, one row per
+    /// position per layer). Heads factor out: `n_head · head_dim = d_model`.
+    pub fn kv_cache_bits(&self) -> u64 {
+        2 * (self.n_layer * self.ctx * self.d_model) as u64 * 32
+    }
+
     /// Total quantizable parameter count.
     pub fn quantizable_params(&self) -> usize {
         self.quantizable_names()
@@ -88,5 +100,13 @@ mod tests {
     fn quantizable_param_count() {
         // per layer: 4*128*128 + 2*128*512 = 196608; head: 128*256
         assert_eq!(cfg().quantizable_params(), 2 * 196_608 + 32_768);
+    }
+
+    #[test]
+    fn kv_cache_bits_formula() {
+        let c = cfg();
+        assert_eq!(c.head_dim(), 32);
+        // K + V, 2 layers, 128 positions, 128 dims, f32
+        assert_eq!(c.kv_cache_bits(), 2 * 2 * 128 * 128 * 32);
     }
 }

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use super::{GptConfig, GptModel, QuantizedGpt};
+use super::{GptConfig, GptModel, KvCache, QuantizedGpt};
 use crate::quant::QuantizedWeight;
 use crate::tensor::{matmul, Matrix};
 
@@ -41,12 +41,46 @@ impl LinearW {
     }
 }
 
+/// Pre-resolved tensor names of one layer — the per-token decode path looks
+/// these up every step, so they are built once instead of `format!`-ing ten
+/// fresh strings per layer per token.
+struct LayerNames {
+    ln1_g: String,
+    ln1_b: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    ln2_g: String,
+    ln2_b: String,
+    w1: String,
+    w2: String,
+}
+
+fn layer_names(n_layer: usize) -> Vec<LayerNames> {
+    (0..n_layer)
+        .map(|i| LayerNames {
+            ln1_g: format!("layer{i}.ln1.g"),
+            ln1_b: format!("layer{i}.ln1.b"),
+            wq: format!("layer{i}.attn.wq"),
+            wk: format!("layer{i}.attn.wk"),
+            wv: format!("layer{i}.attn.wv"),
+            wo: format!("layer{i}.attn.wo"),
+            ln2_g: format!("layer{i}.ln2.g"),
+            ln2_b: format!("layer{i}.ln2.b"),
+            w1: format!("layer{i}.mlp.w1"),
+            w2: format!("layer{i}.mlp.w2"),
+        })
+        .collect()
+}
+
 /// A host-servable model: fp tensors + per-linear weight representation.
 pub struct HostForward {
     pub config: GptConfig,
     pub name: String,
     fp: BTreeMap<String, Matrix>,
     linears: BTreeMap<String, LinearW>,
+    names: Vec<LayerNames>,
 }
 
 impl HostForward {
@@ -65,6 +99,7 @@ impl HostForward {
             }
         }
         let s = HostForward {
+            names: layer_names(model.config.n_layer),
             config: model.config,
             name: model.name,
             fp,
@@ -82,6 +117,7 @@ impl HostForward {
             linears.insert(name, LinearW::Codes(w));
         }
         let s = HostForward {
+            names: layer_names(q.config.n_layer),
             config: q.config,
             name: q.name,
             fp: q.fp_tensors,
@@ -240,6 +276,154 @@ impl HostForward {
         let logits = self.linear("head.w", &xf)?;
         Ok(logits.into_vec())
     }
+
+    /// Advance one token through the model with a [`KvCache`], returning the
+    /// logits (`vocab` floats) at the new position.
+    ///
+    /// Each call runs exactly one token through every layer and attends over
+    /// the cached K/V plus the new position — O(1) weight work per token
+    /// instead of the windowed re-forward's O(window). The logits are
+    /// bit-consistent (within f32 rounding, ≤1e-5) with the last row of
+    /// [`Self::forward`] over `cache.tokens()` — that re-forward is kept as
+    /// the parity oracle (DESIGN.md §9).
+    ///
+    /// When the cache is full, the window slides by `cache.evict_stride()`
+    /// tokens and the surviving window's K/V are rebuilt at their shifted
+    /// positions before the new token is processed (see [`KvCache`] for the
+    /// amortized cost).
+    pub fn decode_step(&self, token: i32, cache: &mut KvCache) -> Result<Vec<f32>> {
+        let x = self.advance_token(token, cache)?;
+        self.head_logits(&x)
+    }
+
+    /// Feed a prompt through the cache token by token, returning the logits
+    /// at the last position (the row that predicts the first generated
+    /// token). Only the final position pays the head projection — earlier
+    /// tokens advance K/V state only. Prompts longer than the cache
+    /// capacity slide the window as generation would.
+    pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let (last, head) = tokens.split_last().unwrap();
+        for &t in head {
+            self.advance_token(t, cache)?;
+        }
+        self.decode_step(*last, cache)
+    }
+
+    /// Evict if full, then advance one token (K/V appended, hidden state
+    /// returned). The head projection is the caller's decision — prefill
+    /// and eviction rebuilds never need logits, so they skip it.
+    fn advance_token(&self, token: i32, cache: &mut KvCache) -> Result<Matrix> {
+        anyhow::ensure!(
+            cache.compatible_with(&self.config),
+            "KvCache geometry does not match this model"
+        );
+        if cache.len() == cache.capacity() {
+            // Slide + rebuild: surviving tokens re-embed at shifted
+            // positions, so their K/V must be recomputed (kv_cache.rs).
+            let keep = cache.begin_evict();
+            for &t in &keep {
+                self.advance_at_tail(t, cache)?;
+            }
+        }
+        self.advance_at_tail(token, cache)
+    }
+
+    /// One token through every layer at the cache tail (`pos = cache.len()`,
+    /// which must be below capacity — eviction is the caller's job).
+    /// Returns the final hidden state `(1, d_model)` pre-head.
+    fn advance_at_tail(&self, token: i32, cache: &mut KvCache) -> Result<Matrix> {
+        let cfg = &self.config;
+        anyhow::ensure!(
+            token >= 0 && (token as usize) < cfg.vocab,
+            "token {token} out of vocab"
+        );
+        let d = cfg.d_model;
+        let n_head = cfg.n_head;
+        let hd = d / n_head;
+        let pos = cache.len();
+        debug_assert!(pos < cache.capacity(), "step_at_tail on a full cache");
+
+        // embedding of the single new position
+        let tok_emb = self.fp("embed.tok");
+        let pos_emb = self.fp("embed.pos");
+        let mut x = Matrix::zeros(1, d);
+        for ((o, &e), &p) in x
+            .row_mut(0)
+            .iter_mut()
+            .zip(tok_emb.row(token as usize))
+            .zip(pos_emb.row(pos))
+        {
+            *o = e + p;
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut scores = vec![0.0f32; pos + 1];
+        for layer in 0..cfg.n_layer {
+            let nm = &self.names[layer];
+            // attention block: project the new token, append its K/V, attend
+            // over the whole cached window (causality is free — the cache
+            // only holds past positions)
+            let ln1 = layer_norm(
+                &x,
+                self.fp(&nm.ln1_g).as_slice(),
+                self.fp(&nm.ln1_b).as_slice(),
+            );
+            let q = self.linear(&nm.wq, &ln1)?;
+            let k = self.linear(&nm.wk, &ln1)?;
+            let v = self.linear(&nm.wv, &ln1)?;
+            cache.write_kv(layer, k.row(0), v.row(0));
+            let (kc, vc) = cache.layer(layer);
+            let mut y = Matrix::zeros(1, d);
+            for h in 0..n_head {
+                let c0 = h * hd;
+                let qrow = &q.row(0)[c0..c0 + hd];
+                for (tj, s) in scores.iter_mut().enumerate() {
+                    *s = crate::tensor::dot(qrow, &kc.row(tj)[c0..c0 + hd]) * scale;
+                }
+                softmax_inplace(&mut scores);
+                let yrow = &mut y.row_mut(0)[c0..c0 + hd];
+                for (tj, &a) in scores.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vc.row(tj)[c0..c0 + hd];
+                    for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                        *o += a * vv;
+                    }
+                }
+            }
+            let attn = self.linear(&nm.wo, &y)?;
+            add_inplace(&mut x, &attn);
+
+            // mlp block
+            let ln2 = layer_norm(
+                &x,
+                self.fp(&nm.ln2_g).as_slice(),
+                self.fp(&nm.ln2_b).as_slice(),
+            );
+            let mut h1 = self.linear(&nm.w1, &ln2)?;
+            for vv in h1.as_mut_slice() {
+                *vv = gelu(*vv);
+            }
+            let h2 = self.linear(&nm.w2, &h1)?;
+            add_inplace(&mut x, &h2);
+        }
+        cache.commit(token);
+        Ok(x)
+    }
+
+    /// Final layer norm + head projection of one hidden row — the part of a
+    /// decode step that only matters when the logits are actually read.
+    fn head_logits(&self, x: &Matrix) -> Result<Vec<f32>> {
+        let xf = layer_norm(
+            x,
+            self.fp("final_ln.g").as_slice(),
+            self.fp("final_ln.b").as_slice(),
+        );
+        let logits = self.linear("head.w", &xf)?;
+        Ok(logits.into_vec())
+    }
 }
 
 /// Row-wise pre-norm layer norm (population variance, ε = 1e-5), matching
@@ -359,6 +543,38 @@ mod tests {
         }
         // and the codes path keeps far fewer bits resident
         assert!(hf_codes.resident_weight_bits() * 4 < hf_dense.resident_weight_bits());
+    }
+
+    #[test]
+    fn decode_step_matches_block_forward() {
+        // incremental KV-cached decode must reproduce the full forward's
+        // last-position logits (the §9 parity contract, unit-sized)
+        let m = tmp_model("kv_unit");
+        let hf = HostForward::from_dense(m.clone()).unwrap();
+        let t = 9usize;
+        let tokens: Vec<i32> = (0..t).map(|i| (i * 17 % 230) as i32).collect();
+        let mut cache = KvCache::new(&m.config);
+        let inc = hf.prefill(&tokens, &mut cache).unwrap();
+        assert_eq!(cache.len(), t);
+        assert_eq!(cache.tokens(), &tokens[..]);
+        let v = m.config.vocab;
+        let full = hf.forward(&tokens, 1, t).unwrap();
+        let last = &full[(t - 1) * v..t * v];
+        for (a, b) in inc.iter().zip(last) {
+            assert!((a - b).abs() <= 1e-5, "incremental {a} vs block {b}");
+        }
+    }
+
+    #[test]
+    fn decode_step_rejects_mismatched_cache() {
+        let m = tmp_model("kv_guard");
+        let hf = HostForward::from_dense(m.clone()).unwrap();
+        let other = GptConfig { d_model: m.config.d_model * 2, ..m.config };
+        let mut cache = KvCache::new(&other);
+        assert!(hf.decode_step(1, &mut cache).is_err());
+        let mut ok = KvCache::new(&m.config);
+        assert!(hf.decode_step(-1, &mut ok).is_err(), "token out of vocab");
+        assert!(ok.is_empty(), "failed step must not commit");
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Per-layer K/V cache for incremental host decode.
+//!
+//! The windowed re-forward (DESIGN.md §9, pre-KV-cache) recomputed Q/K/V and
+//! the MLP for the *entire* prefix on every generated token — O(t²) work per
+//! sequence. A [`KvCache`] keeps the attention keys and values of every
+//! position already processed, so [`crate::model::HostForward::decode_step`]
+//! runs exactly one new token through the model and attends over the cached
+//! rows: O(t) weight work per sequence, with attention's unavoidable
+//! O(len·d) read per step.
+//!
+//! ## Layout
+//!
+//! One `(capacity, d_model)` append buffer per layer for K and another for V,
+//! plus the token window those rows were computed from. Row `i` of every
+//! buffer holds the K/V of window position `i` — positions are absolute
+//! (position embedding `i` went into the row), which is what makes the cache
+//! bit-consistent with a fresh forward over the same window.
+//!
+//! ## Eviction (prompts/generations longer than `capacity`)
+//!
+//! Absolute positions mean a full cache cannot just drop its oldest row: the
+//! surviving rows would keep stale position embeddings while a re-forward of
+//! the slid window would re-embed them at shifted positions. Instead the
+//! cache slides by [`KvCache::evict_stride`] tokens and the caller
+//! ([`crate::model::HostForward::decode_step`]) rebuilds the remaining
+//! window's K/V at their new positions. Rebuild costs one prefill of
+//! `capacity - stride` tokens every `stride` tokens — amortized
+//! `(capacity/stride - 1)` extra token-forwards per generated token (the
+//! default stride of `capacity/4` makes that 3), still far below the
+//! `capacity` token-forwards per token the windowed re-forward pays.
+//!
+//! Memory: `2 · n_layer · capacity · d_model · 32` bits of f32 per cache
+//! ([`crate::model::GptConfig::kv_cache_bits`]), one cache per active
+//! session.
+
+use crate::tensor::Matrix;
+
+use super::GptConfig;
+
+/// Per-layer K/V append buffer + the token window it was computed from.
+///
+/// Constructed per serving session ([`Self::new`]), reset on request
+/// boundaries ([`Self::reset`]), advanced only through
+/// [`crate::model::HostForward::decode_step`] /
+/// [`crate::model::HostForward::prefill`].
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layer: usize,
+    d_model: usize,
+    capacity: usize,
+    evict_stride: usize,
+    /// The token window the cached rows were computed from (`len()` entries).
+    tokens: Vec<i32>,
+    /// Per layer: `(capacity, d_model)` keys; rows `0..len()` are valid.
+    k: Vec<Matrix>,
+    /// Per layer: `(capacity, d_model)` values; rows `0..len()` are valid.
+    v: Vec<Matrix>,
+    /// Tokens ever fed through this cache (survives resets; telemetry).
+    total_fed: u64,
+    /// Window slides performed (telemetry; each one cost a rebuild).
+    evictions: u64,
+}
+
+impl KvCache {
+    /// Cache sized to the model's full context window, with the default
+    /// eviction stride of `capacity / 4` (min 1).
+    pub fn new(cfg: &GptConfig) -> Self {
+        Self::with_capacity(cfg, cfg.ctx)
+    }
+
+    /// Cache over a sliding window of `capacity ≤ cfg.ctx` positions
+    /// (clamped). Smaller capacities bound attention cost and memory at the
+    /// price of a shorter effective context.
+    pub fn with_capacity(cfg: &GptConfig, capacity: usize) -> Self {
+        let capacity = capacity.clamp(1, cfg.ctx);
+        let stride = (capacity / 4).max(1);
+        Self::with_stride(cfg, capacity, stride)
+    }
+
+    /// Full control over window capacity and eviction stride (both clamped
+    /// to valid ranges; `stride` to `1..=capacity`).
+    pub fn with_stride(cfg: &GptConfig, capacity: usize, stride: usize) -> Self {
+        let capacity = capacity.clamp(1, cfg.ctx);
+        let evict_stride = stride.clamp(1, capacity);
+        KvCache {
+            n_layer: cfg.n_layer,
+            d_model: cfg.d_model,
+            capacity,
+            evict_stride,
+            tokens: Vec::with_capacity(capacity),
+            k: (0..cfg.n_layer).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
+            v: (0..cfg.n_layer).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
+            total_fed: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Valid cached positions (= tokens in the current window).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Maximum window length before eviction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Tokens dropped per window slide.
+    pub fn evict_stride(&self) -> usize {
+        self.evict_stride
+    }
+
+    /// The token window the cached K/V rows correspond to — feeding exactly
+    /// these tokens through a fresh full forward reproduces the cached state
+    /// (the re-forward parity oracle's input).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Tokens ever fed, across resets and evictions.
+    pub fn total_fed(&self) -> u64 {
+        self.total_fed
+    }
+
+    /// Window slides performed so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// K and V buffers of one layer (rows `0..len()` valid).
+    pub fn layer(&self, layer: usize) -> (&Matrix, &Matrix) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// f32 bits held by the K/V buffers (allocation, not fill level).
+    pub fn memory_bits(&self) -> u64 {
+        2 * (self.n_layer * self.capacity * self.d_model) as u64 * 32
+    }
+
+    /// True when this cache's geometry matches `cfg` (a cache built for one
+    /// model must not be fed through another).
+    pub fn compatible_with(&self, cfg: &GptConfig) -> bool {
+        self.n_layer == cfg.n_layer && self.d_model == cfg.d_model && self.capacity <= cfg.ctx
+    }
+
+    /// Drop all cached state: the explicit new-request boundary. Telemetry
+    /// counters (`total_fed`, `evictions`) survive; K/V rows and the token
+    /// window do not.
+    pub fn reset(&mut self) {
+        self.tokens.clear();
+    }
+
+    /// Begin a window slide: drop the oldest `evict_stride` tokens and
+    /// invalidate every cached row. Returns the surviving tokens, which the
+    /// caller must re-feed (their K/V carry position embeddings that shifted
+    /// with the slide). Used by `HostForward::decode_step`.
+    pub(crate) fn begin_evict(&mut self) -> Vec<i32> {
+        let stride = self.evict_stride.min(self.tokens.len());
+        let keep = self.tokens[stride..].to_vec();
+        self.tokens.clear();
+        self.evictions += 1;
+        keep
+    }
+
+    /// Write the K/V rows of the next position for one layer. All layers of
+    /// a step must be written before [`Self::commit`].
+    pub(crate) fn write_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let pos = self.tokens.len();
+        debug_assert!(pos < self.capacity, "write_kv past capacity");
+        self.k[layer].row_mut(pos).copy_from_slice(k_row);
+        self.v[layer].row_mut(pos).copy_from_slice(v_row);
+    }
+
+    /// Finish a step: record the token whose K/V rows were just written.
+    pub(crate) fn commit(&mut self, token: i32) {
+        debug_assert!(self.tokens.len() < self.capacity, "commit past capacity");
+        self.tokens.push(token);
+        self.total_fed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GptConfig {
+        GptConfig { vocab: 256, d_model: 32, n_layer: 3, n_head: 4, d_ff: 64, ctx: 16 }
+    }
+
+    #[test]
+    fn geometry_and_accounting() {
+        let c = KvCache::new(&cfg());
+        assert_eq!(c.capacity(), 16);
+        assert_eq!(c.evict_stride(), 4);
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        // 2 buffers · 3 layers · 16 positions · 32 dims · 32 bits
+        assert_eq!(c.memory_bits(), 2 * 3 * 16 * 32 * 32);
+        assert!(c.compatible_with(&cfg()));
+        let other = GptConfig { d_model: 64, ..cfg() };
+        assert!(!c.compatible_with(&other));
+    }
+
+    #[test]
+    fn capacity_and_stride_clamped() {
+        let c = KvCache::with_capacity(&cfg(), 1000);
+        assert_eq!(c.capacity(), 16, "capacity clamps to ctx");
+        let c = KvCache::with_stride(&cfg(), 8, 0);
+        assert_eq!(c.evict_stride(), 1, "stride clamps up to 1");
+        let c = KvCache::with_stride(&cfg(), 8, 99);
+        assert_eq!(c.evict_stride(), 8, "stride clamps down to capacity");
+    }
+
+    #[test]
+    fn write_commit_reset_cycle() {
+        let mut c = KvCache::with_capacity(&cfg(), 4);
+        let d = cfg().d_model;
+        for t in 0..3i32 {
+            for l in 0..cfg().n_layer {
+                c.write_kv(l, &vec![t as f32; d], &vec![-t as f32; d]);
+            }
+            c.commit(t);
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.tokens(), &[0, 1, 2]);
+        assert_eq!(c.total_fed(), 3);
+        let (k, v) = c.layer(1);
+        assert_eq!(k.row(2)[0], 2.0);
+        assert_eq!(v.row(2)[0], -2.0);
+        c.reset();
+        assert!(c.is_empty());
+        assert_eq!(c.total_fed(), 3, "telemetry survives reset");
+    }
+
+    #[test]
+    fn begin_evict_slides_window() {
+        let mut c = KvCache::with_stride(&cfg(), 8, 3);
+        for t in 0..8i32 {
+            for l in 0..cfg().n_layer {
+                c.write_kv(l, &[0.0; 32], &[0.0; 32]);
+            }
+            c.commit(t);
+        }
+        assert_eq!(c.len(), c.capacity());
+        let keep = c.begin_evict();
+        assert_eq!(keep, vec![3, 4, 5, 6, 7]);
+        assert!(c.is_empty(), "rows invalidated until the caller re-feeds");
+        assert_eq!(c.evictions(), 1);
+    }
+}

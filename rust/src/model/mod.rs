@@ -9,7 +9,9 @@
 mod config;
 mod forward;
 pub(crate) mod gpt;
+mod kv_cache;
 
 pub use config::GptConfig;
 pub use forward::{HostForward, LinearW};
 pub use gpt::{GptModel, QuantizedGpt};
+pub use kv_cache::KvCache;

@@ -1,10 +1,22 @@
 //! Minimal property-testing helper (proptest is not in the offline crate
 //! set). Seeded generators + a `for_cases` driver that reports the failing
-//! seed so any counterexample is reproducible with one integer.
+//! seed so any counterexample is reproducible with one integer — plus the
+//! shared deterministic fixtures ([`synthetic_tinygpt`], [`tiny_pcdvq`])
+//! that integration tests and benches build models from without
+//! `make artifacts`.
 //!
-//! Used by `rust/tests/prop_invariants.rs`; the python side uses the real
-//! `hypothesis` package (available in the image).
+//! Used by `rust/tests/prop_invariants.rs` and `rust/tests/decode_parity.rs`;
+//! the python side uses the real `hypothesis` package (available in the
+//! image).
 
+use std::sync::Arc;
+
+use crate::codebook::{
+    DirectionCodebook, DirectionMethod, MagnitudeCodebook, MagnitudeMethod,
+};
+use crate::io::{Entry, Pct};
+use crate::model::GptModel;
+use crate::quant::pcdvq::{Pcdvq, PcdvqConfig};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
@@ -58,6 +70,77 @@ impl Gen {
         }
         m
     }
+}
+
+/// Synthetic tinygpt weight container (d=64, 2 layers, 4 heads, ctx=64,
+/// byte vocab) written under `$TMP/<subdir>/<tag>.pct` and loaded back —
+/// the shared fixture for integration tests and benches, usable without
+/// `make artifacts`. Deterministic in `seed`.
+pub fn synthetic_tinygpt(subdir: &str, tag: &str, seed: u64) -> GptModel {
+    let dir = std::env::temp_dir().join(subdir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.pct"));
+    let mut rng = Rng::new(seed);
+    let mut pct = Pct::new();
+    let d = 64u64;
+    let ff = d * 4;
+    let vocab = 256u64;
+    let ctx = 64u64;
+    let mut add = |name: &str, dims: &[u64], scale: f32| {
+        let n: u64 = dims.iter().product();
+        let data: Vec<f32> = rng.normal_vec(n as usize).iter().map(|x| x * scale).collect();
+        pct.insert(name, Entry::f32(dims, data));
+    };
+    add("embed.tok", &[vocab, d], 0.05);
+    add("embed.pos", &[ctx, d], 0.02);
+    for i in 0..2 {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            add(&format!("layer{i}.attn.{nm}"), &[d, d], 0.12);
+        }
+        add(&format!("layer{i}.mlp.w1"), &[d, ff], 0.12);
+        add(&format!("layer{i}.mlp.w2"), &[ff, d], 0.08);
+    }
+    add("head.w", &[d, vocab], 0.1);
+    // direct inserts only after `add`'s last call (its &mut borrows end);
+    // Pct is a BTreeMap, so insertion order is irrelevant, and the norms
+    // draw nothing from rng, so the random tensors are unaffected
+    for i in 0..2 {
+        for nm in ["ln1.g", "ln2.g"] {
+            pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![1.0; d as usize]));
+        }
+        for nm in ["ln1.b", "ln2.b"] {
+            pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![0.0; d as usize]));
+        }
+    }
+    pct.insert("final_ln.g", Entry::f32(&[d], vec![1.0; d as usize]));
+    pct.insert("final_ln.b", Entry::f32(&[d], vec![0.0; d as usize]));
+    for (k, v) in [
+        ("vocab", vocab),
+        ("d_model", d),
+        ("n_layer", 2),
+        ("n_head", 4),
+        ("d_ff", ff),
+        ("ctx", ctx),
+    ] {
+        pct.insert(&format!("meta.{k}"), Entry::u64(&[1], vec![v]));
+    }
+    pct.save(&path).unwrap();
+    GptModel::load(&path).unwrap()
+}
+
+/// A small PCDVQ (a=8, b=2, k=8) built in-process — no codebook disk cache,
+/// so it runs on a bare machine. Pairs with [`synthetic_tinygpt`] as the
+/// standard fast quantizer for tests and benches.
+pub fn tiny_pcdvq() -> Pcdvq {
+    let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 8, 8, 0));
+    let mag = Arc::new(MagnitudeCodebook::build(
+        MagnitudeMethod::LloydMax,
+        2,
+        8,
+        1.0 - 1e-4,
+        0,
+    ));
+    Pcdvq::new(PcdvqConfig { dir_bits: 8, mag_bits: 2, k: 8, seed: 7 }, dir, mag)
 }
 
 /// Run `prop` over `cases` generated cases. On failure, panics with the

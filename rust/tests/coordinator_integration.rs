@@ -12,9 +12,7 @@ use pcdvq::coordinator::{
     quantize_model_compressed, quantize_model_parallel, Batcher, BatcherConfig, GenRequest,
     Server, ServingWeights,
 };
-use pcdvq::io::{Entry, Pct};
 use pcdvq::model::{GptModel, QuantizedGpt};
-use pcdvq::rng::Rng;
 use pcdvq::runtime::Engine;
 
 fn artifacts_ready() -> Option<Paths> {
@@ -27,70 +25,16 @@ fn artifacts_ready() -> Option<Paths> {
     }
 }
 
-/// Synthetic model container (no build artifacts needed): d=64, 2 layers.
-/// ctx is kept small (64) so the windowed host decode stays fast in debug
-/// builds.
+/// Synthetic model container (no build artifacts needed): d=64, 2 layers,
+/// ctx 64 — the shared library fixture, written under the dir some tests
+/// also reuse for their own artifacts.
 fn synthetic_model(name: &str) -> GptModel {
-    let dir = std::env::temp_dir().join("pcdvq_coord_tests");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join(format!("{name}.pct"));
-    let mut rng = Rng::new(11);
-    let mut pct = Pct::new();
-    let d = 64u64;
-    let ff = d * 4;
-    let vocab = 256u64;
-    let ctx = 64u64;
-    let mut add = |name: &str, dims: &[u64], scale: f32| {
-        let n: u64 = dims.iter().product();
-        let data: Vec<f32> = rng.normal_vec(n as usize).iter().map(|x| x * scale).collect();
-        pct.insert(name, Entry::f32(dims, data));
-    };
-    add("embed.tok", &[vocab, d], 0.05);
-    add("embed.pos", &[ctx, d], 0.02);
-    for i in 0..2 {
-        for nm in ["wq", "wk", "wv", "wo"] {
-            add(&format!("layer{i}.attn.{nm}"), &[d, d], 0.12);
-        }
-        add(&format!("layer{i}.mlp.w1"), &[d, ff], 0.12);
-        add(&format!("layer{i}.mlp.w2"), &[ff, d], 0.08);
-        for nm in ["ln1.g", "ln2.g"] {
-            pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![1.0; d as usize]));
-        }
-        for nm in ["ln1.b", "ln2.b"] {
-            pct.insert(&format!("layer{i}.{nm}"), Entry::f32(&[d], vec![0.0; d as usize]));
-        }
-    }
-    pct.insert("final_ln.g", Entry::f32(&[d], vec![1.0; d as usize]));
-    pct.insert("final_ln.b", Entry::f32(&[d], vec![0.0; d as usize]));
-    add("head.w", &[d, vocab], 0.1);
-    for (k, v) in [
-        ("vocab", vocab),
-        ("d_model", d),
-        ("n_layer", 2),
-        ("n_head", 4),
-        ("d_ff", ff),
-        ("ctx", ctx),
-    ] {
-        pct.insert(&format!("meta.{k}"), Entry::u64(&[1], vec![v]));
-    }
-    pct.save(&path).unwrap();
-    GptModel::load(&path).unwrap()
+    pcdvq::proptest::synthetic_tinygpt("pcdvq_coord_tests", name, 11)
 }
 
 /// A small PCDVQ (a=8) built directly — no artifact cache involvement.
 fn small_pcdvq() -> pcdvq::quant::pcdvq::Pcdvq {
-    use pcdvq::codebook::{DirectionCodebook, MagnitudeCodebook};
-    use pcdvq::quant::pcdvq::{Pcdvq, PcdvqConfig};
-    use std::sync::Arc;
-    let dir = Arc::new(DirectionCodebook::build(DirectionMethod::GreedyE8, 8, 8, 0));
-    let mag = Arc::new(MagnitudeCodebook::build(
-        MagnitudeMethod::LloydMax,
-        2,
-        8,
-        1.0 - 1e-4,
-        0,
-    ));
-    Pcdvq::new(PcdvqConfig { dir_bits: 8, mag_bits: 2, k: 8, seed: 7 }, dir, mag)
+    pcdvq::proptest::tiny_pcdvq()
 }
 
 #[test]
@@ -136,6 +80,116 @@ fn host_codes_resident_server_serves_without_artifacts() {
         assert_eq!(resp.generated.len(), 4);
     }
     assert_eq!(server.metrics.requests, 3);
+}
+
+#[test]
+fn back_to_back_requests_match_fresh_servers() {
+    // Per-request state is explicit: the slot's KV cache resets and the
+    // sampling stream re-derives at every request boundary, so a server
+    // that already served traffic answers exactly like a fresh one — for
+    // greedy AND sampled decoding.
+    let model = synthetic_model("back_to_back");
+    let pcdvq_q = small_pcdvq();
+    let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 1);
+    let mk = || {
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap()
+    };
+    let run = |server: &mut Server, prompt: &[u8], temperature: f32| -> Vec<u8> {
+        let (rtx, rrx) = channel();
+        server
+            .process_batch(vec![GenRequest {
+                prompt: prompt.to_vec(),
+                max_new: 6,
+                temperature,
+                resp: rtx,
+                enqueued: Instant::now(),
+            }])
+            .unwrap();
+        rrx.recv().unwrap().generated
+    };
+    for temperature in [0.0f32, 0.9] {
+        let mut shared = mk();
+        let a1 = run(&mut shared, b"first prompt", temperature);
+        let a2 = run(&mut shared, b"and a second one", temperature);
+        let b1 = run(&mut mk(), b"first prompt", temperature);
+        let b2 = run(&mut mk(), b"and a second one", temperature);
+        assert_eq!(a1, b1, "t={temperature}: request 1 leaked state");
+        assert_eq!(a2, b2, "t={temperature}: request 2 leaked state");
+    }
+}
+
+#[test]
+fn empty_prompt_resolves_without_killing_the_batch() {
+    // A degenerate request must not abort the batch or wedge other clients:
+    // it resolves with zero tokens while its batchmates decode normally.
+    let model = synthetic_model("empty_prompt");
+    let (q, _) = quantize_model_compressed(&model, &small_pcdvq(), 1);
+    let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q))).unwrap();
+    let (rtx1, rrx1) = channel();
+    let (rtx2, rrx2) = channel();
+    server
+        .process_batch(vec![
+            GenRequest {
+                prompt: Vec::new(),
+                max_new: 3,
+                temperature: 0.0,
+                resp: rtx1,
+                enqueued: Instant::now(),
+            },
+            GenRequest {
+                prompt: b"a real one".to_vec(),
+                max_new: 3,
+                temperature: 0.0,
+                resp: rtx2,
+                enqueued: Instant::now(),
+            },
+        ])
+        .unwrap();
+    assert_eq!(rrx1.recv().unwrap().generated.len(), 0);
+    assert_eq!(rrx2.recv().unwrap().generated.len(), 3);
+}
+
+#[test]
+fn cached_and_reforward_policies_agree_on_greedy() {
+    // The KV-cached decode loop against its parity oracle, end to end
+    // through the server (prompt + generation within ctx).
+    use pcdvq::coordinator::DecodePolicy;
+    let model = synthetic_model("policy_parity");
+    let pcdvq_q = small_pcdvq();
+    let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 1);
+    let gen = |decode: DecodePolicy| -> Vec<Vec<u8>> {
+        let mut server =
+            Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+        server.decode = decode;
+        let (tx, rx) = channel::<GenRequest>();
+        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (rtx, rrx) = channel();
+            tx.send(GenRequest {
+                prompt: format!("parity check {i}").into_bytes(),
+                max_new: 5,
+                temperature: 0.0,
+                resp: rtx,
+                enqueued: Instant::now(),
+            })
+            .unwrap();
+            rxs.push(rrx);
+        }
+        drop(tx);
+        server.serve(&batcher).unwrap();
+        assert_eq!(
+            server.kv_cache_bits() > 0,
+            decode == DecodePolicy::KvCached,
+            "caches allocate only under the cached policy"
+        );
+        rxs.into_iter().map(|r| r.recv().unwrap().generated).collect()
+    };
+    assert_eq!(
+        gen(DecodePolicy::KvCached),
+        gen(DecodePolicy::Reforward),
+        "cached decode diverged from the re-forward oracle"
+    );
 }
 
 #[test]

@@ -1,0 +1,193 @@
+//! KV-cached incremental decode vs the windowed re-forward oracle.
+//!
+//! The contract (DESIGN.md §9): `HostForward::decode_step` logits equal the
+//! last row of a fresh full forward over `cache.tokens()` within 1e-5, at
+//! every prompt length — including past capacity, where the cache slides by
+//! its eviction stride and rebuilds. Plus: cache state is a pure function of
+//! the token stream (a reused-then-reset cache equals a fresh one), and the
+//! stateful eval paths (incremental ppl, session greedy decode) match their
+//! block-forward counterparts.
+
+use pcdvq::eval::{evaluate_ppl, greedy_decode, ForwardPass};
+use pcdvq::model::{GptModel, HostForward, KvCache, QuantizedGpt};
+use pcdvq::proptest::{for_cases, synthetic_tinygpt, tiny_pcdvq};
+use pcdvq::quant::pcdvq::Pcdvq;
+
+/// Synthetic tinygpt (d=64, 2 layers, ctx=64) — the decode-parity testbed.
+fn synthetic_model(name: &str) -> GptModel {
+    synthetic_tinygpt("pcdvq_decode_parity", name, 23)
+}
+
+/// A small PCDVQ (a=8) built directly — the codes-resident parity case.
+fn small_pcdvq() -> Pcdvq {
+    tiny_pcdvq()
+}
+
+fn tokens_of(n: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 37 + 11) % 251) as i32).collect()
+}
+
+/// Assert `logits` (from the cached path) equals the oracle: last-row logits
+/// of a full re-forward over the cache's current window.
+fn assert_oracle_parity(hf: &HostForward, cache: &KvCache, logits: &[f32], what: &str) {
+    let t = cache.len();
+    let v = hf.config.vocab;
+    let oracle = hf.forward(cache.tokens(), 1, t).unwrap();
+    let last = &oracle[(t - 1) * v..t * v];
+    assert_eq!(logits.len(), v, "{what}: logit width");
+    for (j, (a, b)) in logits.iter().zip(last).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5,
+            "{what}: logit {j} cached {a} vs oracle {b} (window {t})"
+        );
+    }
+}
+
+/// The headline parity matrix: prompt lengths 1, ctx-1, ctx and ctx+7 (the
+/// eviction path), each checked at the prefill boundary and across five
+/// greedy continuation steps, on both the dense and the codes-resident host
+/// backend.
+#[test]
+fn cached_decode_matches_reforward_oracle() {
+    let model = synthetic_model("oracle");
+    let ctx = model.config.ctx;
+    let q = QuantizedGpt::quantize(&model, &small_pcdvq());
+    let backends = [
+        ("dense", HostForward::from_dense(model.clone()).unwrap()),
+        ("codes", HostForward::from_quantized(q).unwrap()),
+    ];
+    for (label, hf) in &backends {
+        for plen in [1, ctx - 1, ctx, ctx + 7] {
+            let mut cache = KvCache::new(&model.config);
+            let prompt = tokens_of(plen);
+            let mut logits = hf.prefill(&prompt, &mut cache).unwrap();
+            if plen <= ctx {
+                assert_eq!(cache.tokens(), &prompt[..], "window below capacity is exact");
+            } else {
+                assert!(cache.evictions() >= 1, "{label}: prompt past ctx must slide");
+                assert!(cache.len() < ctx);
+            }
+            assert_oracle_parity(hf, &cache, &logits, &format!("{label} prefill({plen})"));
+            for step in 0..5 {
+                let next = pcdvq::tensor::argmax(&logits) as i32;
+                logits = hf.decode_step(next, &mut cache).unwrap();
+                assert_oracle_parity(
+                    hf,
+                    &cache,
+                    &logits,
+                    &format!("{label} prefill({plen}) step {step}"),
+                );
+            }
+        }
+    }
+}
+
+/// The slide is deterministic: feeding ctx+7 tokens through a stride-16
+/// cache leaves exactly the suffix the eviction arithmetic predicts.
+#[test]
+fn eviction_keeps_the_expected_suffix() {
+    let model = synthetic_model("evict");
+    let hf = HostForward::from_dense(model.clone()).unwrap();
+    let ctx = model.config.ctx;
+    let mut cache = KvCache::new(&model.config);
+    let stride = cache.evict_stride();
+    assert_eq!(stride, ctx / 4);
+    let input = tokens_of(ctx + 7);
+    hf.prefill(&input, &mut cache).unwrap();
+    // one slide at token ctx: window = input[stride..]
+    assert_eq!(cache.evictions(), 1);
+    assert_eq!(cache.len(), ctx - stride + 7);
+    assert_eq!(cache.tokens(), &input[stride..]);
+    // rebuild re-feeds the kept window, so total_fed counts it twice
+    assert_eq!(cache.total_fed() as usize, (ctx + 7) + (ctx - stride));
+}
+
+/// Property: cache state is a pure function of the token stream. A cache
+/// that served a previous request and was reset matches a fresh cache fed
+/// the same N tokens — bit-exact across tokens, K and V of every layer, and
+/// the final logits.
+#[test]
+fn prop_reset_cache_equals_fresh_cache() {
+    let model = synthetic_model("prop");
+    let hf = HostForward::from_dense(model.clone()).unwrap();
+    let ctx = model.config.ctx;
+    for_cases(6, 0xCAFE, |g| {
+        // previous "request": arbitrary traffic, then an explicit reset
+        let mut reused = KvCache::new(&model.config);
+        let garbage: Vec<i32> =
+            (0..g.usize_in(1, ctx + 20)).map(|_| g.rng.below(251) as i32).collect();
+        hf.prefill(&garbage, &mut reused).unwrap();
+        reused.reset();
+
+        let n = g.usize_in(1, ctx + 20);
+        let stream: Vec<i32> = (0..n).map(|_| g.rng.below(251) as i32).collect();
+        // reused cache: token-by-token decode_step
+        let mut last_a = Vec::new();
+        for &t in &stream {
+            last_a = hf.decode_step(t, &mut reused).unwrap();
+        }
+        // fresh cache: one prefill
+        let mut fresh = KvCache::new(&model.config);
+        let last_b = hf.prefill(&stream, &mut fresh).unwrap();
+
+        assert_eq!(reused.len(), fresh.len(), "case {}", g.case_seed);
+        assert_eq!(reused.tokens(), fresh.tokens(), "case {}", g.case_seed);
+        for layer in 0..model.config.n_layer {
+            let (ka, va) = reused.layer(layer);
+            let (kb, vb) = fresh.layer(layer);
+            for i in 0..reused.len() {
+                assert_eq!(ka.row(i), kb.row(i), "K layer {layer} row {i}");
+                assert_eq!(va.row(i), vb.row(i), "V layer {layer} row {i}");
+            }
+        }
+        assert_eq!(last_a, last_b, "case {}", g.case_seed);
+    });
+}
+
+/// Block-only view of a host backend: hides the decode session so the
+/// fallback paths (batched ppl, windowed greedy decode) can be pinned
+/// against the stateful ones.
+struct BlockOnly<'a>(&'a HostForward);
+
+impl ForwardPass for BlockOnly<'_> {
+    fn forward_block(
+        &self,
+        tokens: Vec<i32>,
+        b: usize,
+        t: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.0.forward(&tokens, b, t)
+    }
+}
+
+#[test]
+fn incremental_ppl_matches_block_ppl() {
+    let model = synthetic_model("ppl");
+    let hf = HostForward::from_dense(model.clone()).unwrap();
+    let ctx = model.config.ctx;
+    let tokens: Vec<u32> = (0..3 * ctx + 1).map(|i| ((i * 31) % 251) as u32).collect();
+    for temperature in [1.0f32, 1.2] {
+        let inc = evaluate_ppl(&hf, &model.config, &tokens, 1, 3, temperature).unwrap();
+        let blk =
+            evaluate_ppl(&BlockOnly(&hf), &model.config, &tokens, 1, 3, temperature).unwrap();
+        assert_eq!(inc.n_tokens, blk.n_tokens);
+        assert!(
+            (inc.nll - blk.nll).abs() < 1e-6,
+            "t={temperature}: incremental nll {} vs block {}",
+            inc.nll,
+            blk.nll
+        );
+    }
+}
+
+#[test]
+fn session_greedy_decode_matches_windowed() {
+    let model = synthetic_model("greedy");
+    let q = QuantizedGpt::quantize(&model, &small_pcdvq());
+    let hf = HostForward::from_quantized(q).unwrap();
+    let prompt: Vec<u8> = b"polar coordinate".to_vec();
+    let cached = greedy_decode(&hf, &model.config, &prompt, 12).unwrap();
+    let windowed = greedy_decode(&BlockOnly(&hf), &model.config, &prompt, 12).unwrap();
+    assert_eq!(cached.len(), 12);
+    assert_eq!(cached, windowed, "session and windowed greedy decode diverged");
+}
