@@ -66,25 +66,29 @@ fn main() -> Result<()> {
     // client side: one burst of requests through the batcher
     let eval_tokens = paths.eval_tokens()?;
     let (tx, rx) = channel::<GenRequest>();
-    let batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
     let mut rng = Rng::new(7);
     let mut responses = Vec::new();
     for i in 0..n_requests {
         let s = rng.below(eval_tokens.len() - 80);
         let prompt: Vec<u8> = eval_tokens[s..s + 56].iter().map(|&t| t as u8).collect();
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
+        tx.send(GenRequest::new(
             prompt,
-            max_new: 24,
-            temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
+            24,
+            if i % 2 == 0 { 0.0 } else { 0.7 },
+            rtx,
+        ))
         .unwrap();
         responses.push(rrx);
     }
     drop(tx);
-    server.serve(&batcher)?;
+    if server.is_codes_resident() {
+        // host backend: continuous batching + block prefill
+        server.serve_continuous(&mut batcher)?;
+    } else {
+        server.serve(&mut batcher)?;
+    }
 
     println!("\nserver metrics: {}", server.metrics.summary());
     for (i, rrx) in responses.iter().enumerate().take(3) {

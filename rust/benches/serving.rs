@@ -29,23 +29,34 @@ fn synthetic_model() -> GptModel {
 
 /// Push `prompts` through the server once (greedy) and wait for completion.
 fn drive(server: &mut Server, prompts: &[Vec<u8>], max_new: usize) {
+    let reqs: Vec<(Vec<u8>, usize)> =
+        prompts.iter().map(|p| (p.clone(), max_new)).collect();
+    drive_mixed(server, &reqs, BatcherConfig::default(), false);
+}
+
+/// Push a mixed-length workload through the server once (greedy) and wait.
+/// `continuous` selects the slot-pool loop; otherwise static batches of
+/// `cfg.max_batch`.
+fn drive_mixed(
+    server: &mut Server,
+    reqs: &[(Vec<u8>, usize)],
+    cfg: BatcherConfig,
+    continuous: bool,
+) {
     let (tx, rx) = channel::<GenRequest>();
-    let batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut batcher = Batcher::new(rx, cfg);
     let mut keep = Vec::new();
-    for p in prompts {
+    for (p, max_new) in reqs {
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt: p.clone(),
-            max_new,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(p.clone(), *max_new, 0.0, rtx)).unwrap();
         keep.push(rrx);
     }
     drop(tx);
-    server.serve(&batcher).unwrap();
+    if continuous {
+        server.serve_continuous(&mut batcher).unwrap();
+    } else {
+        server.serve(&mut batcher).unwrap();
+    }
     for rrx in keep {
         let _ = black_box(rrx.recv().unwrap().generated.len());
     }
@@ -93,7 +104,7 @@ fn main() {
 
     // steady-state single-step latency: decode into a nearly full cache,
     // sliding (and rebuilding) as it overflows — the amortized serving cost
-    let hf = pcdvq::model::HostForward::from_quantized(q).unwrap();
+    let hf = pcdvq::model::HostForward::from_quantized(q.clone()).unwrap();
     let mut cache = KvCache::new(&model.config);
     hf.prefill(&vec![7i32; ctx - 1], &mut cache).unwrap();
     let step = bench
@@ -114,6 +125,54 @@ fn main() {
         "steady-state decode_step: {:.1} µs/token ({} evictions amortized in)",
         step.median_ns / 1e3,
         cache.evictions()
+    );
+
+    // --- continuous batching + block prefill vs static batches ---
+    // Mixed-length traffic through 2 slots: static batching holds a
+    // finished request's slot until its batchmate completes and prefills
+    // token-at-a-time; the continuous loop admits the next request into the
+    // freed slot immediately and absorbs prompts in chunks (amortizing the
+    // per-token code-decode of `matmul_from_codes` across each block).
+    println!("== continuous vs static batching (2 slots, mixed lengths) ==");
+    let mixed: Vec<(Vec<u8>, usize)> = (0..8)
+        .map(|i| {
+            let plen = if i % 2 == 0 { 48 } else { 24 };
+            let p: Vec<u8> = (0..plen).map(|_| prng.below(256) as u8).collect();
+            (p, if i % 2 == 0 { 2 } else { 10 })
+        })
+        .collect();
+    let mixed_toks: u64 = mixed.iter().map(|(_, m)| *m as u64).sum();
+    let mk_host = |q: &QuantizedGpt| {
+        let mut s =
+            Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+        s.max_slots = 2;
+        s.prefill_chunk = 16;
+        s
+    };
+    let mut cont_server = mk_host(&q);
+    let continuous = bench
+        .run_elems("continuous_vs_static/continuous_tok", mixed_toks, || {
+            drive_mixed(&mut cont_server, &mixed, BatcherConfig::default(), true)
+        })
+        .clone();
+    let mut stat_server = mk_host(&q);
+    let static_cfg =
+        BatcherConfig { max_batch: 2, max_wait: std::time::Duration::from_millis(1) };
+    let static_m = bench
+        .run_elems("continuous_vs_static/static_tok", mixed_toks, || {
+            drive_mixed(&mut stat_server, &mixed, static_cfg, false)
+        })
+        .clone();
+    let cont_tps = tok_s(continuous.median_ns, mixed_toks as f64);
+    let stat_tps = tok_s(static_m.median_ns, mixed_toks as f64);
+    println!(
+        "continuous batching:{cont_tps:>10.1} tok/s   (occupancy {:.0}%, ttft p50 {:.2} ms)",
+        cont_server.metrics.slot_occupancy() * 100.0,
+        cont_server.metrics.ttft_ms(50.0)
+    );
+    println!(
+        "static batches:     {stat_tps:>10.1} tok/s   ({:.2}x continuous/static)",
+        cont_tps / stat_tps.max(1e-9)
     );
 
     bench.write_json("BENCH_serving.json").unwrap();

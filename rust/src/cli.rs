@@ -106,14 +106,20 @@ SUBCOMMANDS
              --model NAME (gpt-m) --method SPEC (pcdvq2) --workers N (1)
   eval       perplexity + zero-shot proxy suite for a (quantized) model
              --model NAME --method SPEC|fp16 --windows N (48) --items N (40)
-  serve      run the batched generation service on synthetic traffic
+  serve      run the generation service on synthetic traffic
              --model NAME --quantized --requests N (32) --max-new N (32)
              --host     serve on the host backend (codes-resident with
                         --quantized: packed codes + shared codebooks only,
                         no XLA artifacts, no dense weights); decodes
-                        incrementally with per-slot KV caches
+                        incrementally with per-slot KV caches and, by
+                        default, continuous batching + block prefill
+             --max-slots N (8)  slot-pool width for continuous batching
+             --prefill-chunk K  prompt tokens per block-prefill step
+                        (default ctx/4)
+             --static-batch  coalesce into fixed batches instead of
+                        continuous admission (the XLA path always does)
              --reforward  disable the KV cache: windowed re-forward every
-                        step (the parity oracle; slow)
+                        step (the parity oracle; slow; implies static)
   info       print artifact + model inventory
 
 Method SPECs: fp16, rtn2, rtn4, gptq2, kmeans16, quip16, pcdvq2, pcdvq2.125,

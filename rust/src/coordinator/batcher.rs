@@ -1,11 +1,33 @@
-//! Dynamic request batching.
+//! Request admission: the queue between clients and the serving loop.
 //!
-//! The serving executable has a fixed batch geometry (B=8 compiled in), so
-//! the batcher's job is the classic one: coalesce the request stream into
-//! batches, trading latency (`max_wait`) against utilization (`max_batch`),
-//! exactly the mechanism the paper's §4.4 throughput numbers rely on.
+//! Two consumers share this queue. The **static** path
+//! ([`crate::coordinator::Server::process_batch`], the only mode the
+//! fixed-geometry XLA executables support) coalesces requests into batches
+//! via [`Batcher::next_batch`], trading latency (`max_wait`) against
+//! utilization (`max_batch`). The **continuous** path
+//! ([`crate::coordinator::Server::serve_continuous`]) treats the batcher as
+//! an admission queue: [`Batcher::poll_admit`] hands over whatever has
+//! arrived — never blocking, never losing buffered arrivals — the moment a
+//! slot frees, and [`Batcher::wait_any`] parks the server only when every
+//! slot is idle.
+//!
+//! Admission is strictly FIFO in arrival order and stamps each request with
+//! a monotone sequence number ([`Admitted::seq`]) — the ordering the
+//! fairness tests pin. Requests carry an optional [`GenRequest::deadline`];
+//! a request whose deadline passed before admission is resolved immediately
+//! with [`GenResponse::timed_out`] instead of occupying a slot.
+//!
+//! Determinism under test: arrivals are drained into an internal buffer
+//! before every poll, so whether a request is visible to a poll depends
+//! only on whether it was sent before the poll — never on channel timing —
+//! and [`Batcher::push`] injects requests directly, so tests drive
+//! admission without sleeping. (The raw mpsc channel already never loses
+//! buffered sends; the buffer is about making admission *observable and
+//! injectable*, and about letting a timed-out poll hand over everything
+//! that arrived during its wait window in one batch.)
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// A generation request.
@@ -21,6 +43,29 @@ pub struct GenRequest {
     pub resp: Sender<GenResponse>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
+    /// Admission deadline: if no slot picked the request up by this instant,
+    /// it resolves immediately as [`GenResponse::timed_out`]. `None` waits
+    /// forever.
+    pub deadline: Option<Instant>,
+}
+
+impl GenRequest {
+    /// A request enqueued now, with no admission deadline.
+    pub fn new(
+        prompt: Vec<u8>,
+        max_new: usize,
+        temperature: f32,
+        resp: Sender<GenResponse>,
+    ) -> Self {
+        GenRequest {
+            prompt,
+            max_new,
+            temperature,
+            resp,
+            enqueued: Instant::now(),
+            deadline: None,
+        }
+    }
 }
 
 /// A finished generation.
@@ -29,8 +74,29 @@ pub struct GenResponse {
     pub generated: Vec<u8>,
     /// Queue + compute latency.
     pub latency: Duration,
-    /// Decode steps executed for this request's batch.
+    /// Scheduler steps this request consumed: per-request prefill-chunk +
+    /// decode steps under continuous batching; the batch's shared decode
+    /// steps on the static path.
     pub steps: usize,
+    /// Request placement marker. Under continuous batching (and for every
+    /// timed-out response) this is the queue's monotone admission sequence
+    /// number. Successful *static*-path responses instead carry their batch
+    /// slot index (those requests may bypass the queue entirely via
+    /// `process_batch`), so seq values are only globally orderable on the
+    /// continuous path.
+    pub seq: u64,
+    /// Time spent queued before a slot picked the request up.
+    pub queue_wait: Duration,
+    /// Time from enqueue to the first generated token (continuous path
+    /// only; `None` when no token was produced or on the static path).
+    pub ttft: Option<Duration>,
+    /// Per-step logits, oldest first — populated only when
+    /// [`crate::coordinator::Server::capture_logits`] is set (parity
+    /// harnesses); empty in normal serving.
+    pub logits: Vec<Vec<f32>>,
+    /// The request's [`GenRequest::deadline`] expired before admission; no
+    /// tokens were generated.
+    pub timed_out: bool,
 }
 
 /// Batching policy.
@@ -38,7 +104,8 @@ pub struct GenResponse {
 pub struct BatcherConfig {
     /// Maximum requests per batch (the executable's compiled B).
     pub max_batch: usize,
-    /// Maximum time the first request of a batch waits for company.
+    /// Maximum time the first request of a batch waits for company
+    /// (static path only — continuous admission never waits).
     pub max_wait: Duration,
 }
 
@@ -48,37 +115,181 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Pulls requests off a channel and groups them into batches.
+/// A request the queue has handed to the serving loop.
+#[derive(Debug)]
+pub struct Admitted {
+    pub req: GenRequest,
+    /// Monotone admission sequence number — FIFO in arrival order.
+    pub seq: u64,
+    /// When the queue handed the request over (queue wait =
+    /// `admitted - req.enqueued`).
+    pub admitted: Instant,
+}
+
+/// The admission queue: drains a request channel into an internal FIFO
+/// buffer and hands requests to the serving loop — batched
+/// ([`Self::next_batch`]) or continuously ([`Self::poll_admit`]).
 pub struct Batcher {
     rx: Receiver<GenRequest>,
     pub cfg: BatcherConfig,
+    /// Arrivals drained from the channel (or injected) but not yet admitted.
+    buf: VecDeque<GenRequest>,
+    /// The channel's sender side is gone; once `buf` drains too, the stream
+    /// is over.
+    closed: bool,
+    next_seq: u64,
+    timed_out: u64,
 }
 
 impl Batcher {
     pub fn new(rx: Receiver<GenRequest>, cfg: BatcherConfig) -> Self {
-        Batcher { rx, cfg }
+        Batcher { rx, cfg, buf: VecDeque::new(), closed: false, next_seq: 0, timed_out: 0 }
     }
 
-    /// Block for the next batch. Returns `None` when the request channel has
-    /// been closed and drained (shutdown).
-    pub fn next_batch(&self) -> Option<Vec<GenRequest>> {
-        // Block indefinitely for the first request…
-        let first = self.rx.recv().ok()?;
-        let mut batch = vec![first];
-        let deadline = Instant::now() + self.cfg.max_wait;
-        // …then fill the batch until the deadline or capacity.
-        while batch.len() < self.cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+    /// Move everything currently sitting in the channel into the buffer.
+    /// Never blocks; records channel disconnection.
+    fn drain_channel(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok(r) => self.buf.push_back(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.closed = true;
+                    break;
+                }
             }
         }
-        Some(batch)
+    }
+
+    /// Inject a request directly, bypassing the channel — deterministic
+    /// admission for tests and benches: the request is visible to the very
+    /// next poll, no channel timing involved. FIFO order with already
+    /// buffered requests is preserved.
+    pub fn push(&mut self, req: GenRequest) {
+        self.buf.push_back(req);
+    }
+
+    /// Requests buffered right now (drains the channel first).
+    pub fn poll_pending(&mut self) -> usize {
+        self.drain_channel();
+        self.buf.len()
+    }
+
+    /// True once the sender side is gone *and* the buffer has drained —
+    /// reflects the state as of the last poll.
+    pub fn is_closed(&self) -> bool {
+        self.closed && self.buf.is_empty()
+    }
+
+    /// Requests resolved as timed-out at admission so far.
+    pub fn timed_out(&self) -> u64 {
+        self.timed_out
+    }
+
+    /// Block until at least one request is buffered or the stream closes.
+    /// Returns `false` only when the channel is disconnected and fully
+    /// drained (shutdown). Never spins: parks on the channel when idle.
+    pub fn wait_any(&mut self) -> bool {
+        self.drain_channel();
+        while self.buf.is_empty() && !self.closed {
+            match self.rx.recv() {
+                Ok(r) => self.buf.push_back(r),
+                Err(_) => self.closed = true,
+            }
+        }
+        !self.buf.is_empty()
+    }
+
+    /// Consume an admission seq for `req`; if its deadline has passed as of
+    /// `now`, resolve it with [`GenResponse::timed_out`] and return `None`,
+    /// else hand the request back for a slot. Shared by both serving paths
+    /// so the deadline contract is admission-wide.
+    fn admit_or_expire(&mut self, req: GenRequest, now: Instant) -> Option<GenRequest> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        if req.deadline.is_some_and(|d| now >= d) {
+            self.timed_out += 1;
+            let wait = req.enqueued.elapsed();
+            req.resp
+                .send(GenResponse {
+                    generated: Vec::new(),
+                    latency: wait,
+                    steps: 0,
+                    seq,
+                    queue_wait: wait,
+                    ttft: None,
+                    logits: Vec::new(),
+                    timed_out: true,
+                })
+                .ok();
+            return None;
+        }
+        Some(req)
+    }
+
+    /// Admit up to `max` buffered requests, FIFO, without blocking.
+    /// Requests whose [`GenRequest::deadline`] has passed are resolved
+    /// immediately with [`GenResponse::timed_out`] (they still consume a
+    /// sequence number — admission order is arrival order, always).
+    pub fn poll_admit(&mut self, max: usize) -> Vec<Admitted> {
+        self.drain_channel();
+        let now = Instant::now();
+        let mut out = Vec::new();
+        while out.len() < max {
+            let Some(req) = self.buf.pop_front() else { break };
+            let seq = self.next_seq; // admit_or_expire consumes it
+            if let Some(req) = self.admit_or_expire(req, now) {
+                out.push(Admitted { req, seq, admitted: now });
+            }
+        }
+        out
+    }
+
+    /// Block for the next batch (static path). Returns `None` when the
+    /// request channel has been closed and drained (shutdown). Buffered
+    /// arrivals are never lost: a poll that times out still returns
+    /// whatever arrived during the wait window. Expired-deadline requests
+    /// resolve as [`GenResponse::timed_out`] here too, never reaching a
+    /// batch slot.
+    pub fn next_batch(&mut self) -> Option<Vec<GenRequest>> {
+        loop {
+            // Block indefinitely for the first request…
+            if !self.wait_any() {
+                return None;
+            }
+            // …then fill the batch until the deadline or capacity.
+            let deadline = Instant::now() + self.cfg.max_wait;
+            loop {
+                self.drain_channel();
+                if self.buf.len() >= self.cfg.max_batch || self.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.rx.recv_timeout(deadline - now) {
+                    Ok(req) => self.buf.push_back(req),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        self.closed = true;
+                        break;
+                    }
+                }
+            }
+            let now = Instant::now();
+            let mut batch = Vec::new();
+            while batch.len() < self.cfg.max_batch {
+                let Some(req) = self.buf.pop_front() else { break };
+                if let Some(req) = self.admit_or_expire(req, now) {
+                    batch.push(req);
+                }
+            }
+            if !batch.is_empty() {
+                return Some(batch);
+            }
+            // every buffered request had already expired — park again
+        }
     }
 }
 
@@ -89,22 +300,13 @@ mod tests {
 
     fn req(prompt: &[u8]) -> (GenRequest, Receiver<GenResponse>) {
         let (tx, rx) = channel();
-        (
-            GenRequest {
-                prompt: prompt.to_vec(),
-                max_new: 4,
-                temperature: 0.0,
-                resp: tx,
-                enqueued: Instant::now(),
-            },
-            rx,
-        )
+        (GenRequest::new(prompt.to_vec(), 4, 0.0, tx), rx)
     }
 
     #[test]
     fn batches_up_to_capacity() {
         let (tx, rx) = channel();
-        let batcher = Batcher::new(
+        let mut batcher = Batcher::new(
             rx,
             BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) },
         );
@@ -123,7 +325,7 @@ mod tests {
     #[test]
     fn respects_deadline_with_sparse_traffic() {
         let (tx, rx) = channel();
-        let batcher = Batcher::new(
+        let mut batcher = Batcher::new(
             rx,
             BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
         );
@@ -139,7 +341,101 @@ mod tests {
     fn shutdown_returns_none() {
         let (tx, rx) = channel::<GenRequest>();
         drop(tx);
-        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
         assert!(batcher.next_batch().is_none());
+    }
+
+    #[test]
+    fn buffered_arrivals_survive_sender_disconnect() {
+        // requests sitting in the channel when the sender goes away are
+        // admitted, not dropped as `None` — pins the drain-first contract
+        // (mpsc itself guarantees this; the buffer must preserve it)
+        let (tx, rx) = channel();
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut keep = Vec::new();
+        for _ in 0..3 {
+            let (r, rrx) = req(b"late");
+            tx.send(r).unwrap();
+            keep.push(rrx);
+        }
+        drop(tx);
+        let b = batcher.next_batch().expect("buffered requests must be admitted");
+        assert_eq!(b.len(), 3);
+        assert!(batcher.next_batch().is_none(), "then shutdown");
+    }
+
+    #[test]
+    fn poll_admit_is_fifo_and_never_blocks() {
+        let (tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        assert!(batcher.poll_admit(4).is_empty(), "empty poll returns nothing");
+        let mut keep = Vec::new();
+        for p in [b"a" as &[u8], b"b", b"c"] {
+            let (r, rrx) = req(p);
+            tx.send(r).unwrap();
+            keep.push(rrx);
+        }
+        // injected requests join the same FIFO
+        let (r, rrx) = req(b"d");
+        batcher.push(r);
+        keep.push(rrx);
+        assert_eq!(batcher.poll_pending(), 4);
+        let first = batcher.poll_admit(2);
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].req.prompt, b"a");
+        assert_eq!(first[1].req.prompt, b"b");
+        assert_eq!(first[0].seq, 0);
+        assert_eq!(first[1].seq, 1);
+        let rest = batcher.poll_admit(10);
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].req.prompt, b"c");
+        assert_eq!(rest[1].req.prompt, b"d");
+        assert_eq!(rest[1].seq, 3);
+        drop(tx);
+        assert_eq!(batcher.poll_pending(), 0);
+        assert!(batcher.is_closed());
+    }
+
+    #[test]
+    fn next_batch_filters_expired_deadlines() {
+        // the deadline contract is admission-wide: the static path resolves
+        // expired requests as timed_out instead of decoding them
+        let (tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let (mut dead, dead_rx) = req(b"late");
+        dead.deadline = Some(dead.enqueued); // already expired
+        batcher.push(dead);
+        let (live, _live_rx) = req(b"ok");
+        batcher.push(live);
+        let b = batcher.next_batch().unwrap();
+        assert_eq!(b.len(), 1, "expired request never reaches a batch slot");
+        assert_eq!(b[0].prompt, b"ok");
+        assert_eq!(batcher.timed_out(), 1);
+        let resp = dead_rx.recv().unwrap();
+        assert!(resp.timed_out && resp.generated.is_empty());
+        drop(tx);
+    }
+
+    #[test]
+    fn expired_deadline_resolves_as_timed_out() {
+        let (_tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let (mut r, rrx) = req(b"too late");
+        r.deadline = Some(r.enqueued); // already expired
+        batcher.push(r);
+        let (live, live_rx) = req(b"fresh");
+        batcher.push(live);
+        let admitted = batcher.poll_admit(8);
+        assert_eq!(admitted.len(), 1, "expired request never reaches a slot");
+        assert_eq!(admitted[0].req.prompt, b"fresh");
+        assert_eq!(admitted[0].seq, 1, "expiry still consumes its seq");
+        assert_eq!(batcher.timed_out(), 1);
+        let resp = rrx.recv().unwrap();
+        assert!(resp.timed_out);
+        assert!(resp.generated.is_empty());
+        drop(live_rx);
     }
 }

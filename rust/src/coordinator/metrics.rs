@@ -1,6 +1,25 @@
 //! Serving metrics: counters + latency percentiles (no external deps).
+//!
+//! Besides end-to-end latency, the continuous-batching server records the
+//! scheduler-level signals that matter for a slot-pool loop: **TTFT** (time
+//! from enqueue to the first generated token — what block prefill cuts),
+//! **queue wait** (enqueue → slot admission, recorded in admission order, so
+//! fairness tests can pin its monotonicity), and **slot occupancy** (busy
+//! slot-steps over offered slot-steps — what continuous admission raises
+//! over static batches).
 
 use std::time::Duration;
+
+/// Latency percentile in milliseconds over µs samples (p in [0,100]).
+fn percentile_ms(samples: &[u64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)] as f64 / 1000.0
+}
 
 /// Accumulates request/token counters and latency samples.
 #[derive(Clone, Debug, Default)]
@@ -11,6 +30,14 @@ pub struct Metrics {
     pub decode_steps: u64,
     latencies_us: Vec<u64>,
     pub wall_s: f64,
+    ttft_us: Vec<u64>,
+    queue_wait_us: Vec<u64>,
+    /// Requests resolved as timed-out at admission (deadline expired).
+    pub timeouts: u64,
+    /// Scheduler steps × slots that held an active request.
+    pub slot_steps_busy: u64,
+    /// Scheduler steps × slots offered (busy or idle).
+    pub slot_steps_total: u64,
 }
 
 impl Metrics {
@@ -29,15 +56,53 @@ impl Metrics {
         self.latencies_us.push(d.as_micros() as u64);
     }
 
+    /// Record one request's time-to-first-token.
+    pub fn record_ttft(&mut self, d: Duration) {
+        self.ttft_us.push(d.as_micros() as u64);
+    }
+
+    /// Record one request's enqueue→admission wait. Call in admission order:
+    /// the sample sequence doubles as the fairness audit trail.
+    pub fn record_queue_wait(&mut self, d: Duration) {
+        self.queue_wait_us.push(d.as_micros() as u64);
+    }
+
+    /// Record one scheduler step of a slot pool: `busy` active slots out of
+    /// `total` offered.
+    pub fn record_occupancy(&mut self, busy: usize, total: usize) {
+        self.slot_steps_busy += busy as u64;
+        self.slot_steps_total += total as u64;
+    }
+
     /// Latency percentile in milliseconds (p in [0,100]).
     pub fn latency_ms(&self, p: f64) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
+        percentile_ms(&self.latencies_us, p)
+    }
+
+    /// Time-to-first-token percentile in milliseconds.
+    pub fn ttft_ms(&self, p: f64) -> f64 {
+        percentile_ms(&self.ttft_us, p)
+    }
+
+    /// Queue-wait percentile in milliseconds.
+    pub fn queue_wait_ms(&self, p: f64) -> f64 {
+        percentile_ms(&self.queue_wait_us, p)
+    }
+
+    /// Queue-wait samples (µs) in admission order — the fairness tests
+    /// assert monotonicity over this sequence.
+    pub fn queue_waits_us(&self) -> &[u64] {
+        &self.queue_wait_us
+    }
+
+    /// Fraction of offered slot-steps that held an active request (0 until
+    /// the first continuous-serving step).
+    pub fn slot_occupancy(&self) -> f64 {
+        if self.slot_steps_total > 0 {
+            self.slot_steps_busy as f64 / self.slot_steps_total as f64
+        } else {
+            0.0
         }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)] as f64 / 1000.0
     }
 
     /// Tokens generated per wall-clock second.
@@ -49,7 +114,7 @@ impl Metrics {
         }
     }
 
-    /// Mean requests per batch (batching efficiency).
+    /// Mean requests per batch (batching efficiency, static path).
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches > 0 {
             self.requests as f64 / self.batches as f64
@@ -59,7 +124,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} tok/s={:.1} batches={} mean_bs={:.2} p50={:.1}ms p95={:.1}ms",
             self.requests,
             self.tokens_generated,
@@ -68,7 +133,19 @@ impl Metrics {
             self.mean_batch_size(),
             self.latency_ms(50.0),
             self.latency_ms(95.0),
-        )
+        );
+        if self.slot_steps_total > 0 {
+            s.push_str(&format!(
+                " ttft_p50={:.1}ms qwait_p50={:.1}ms occupancy={:.0}%",
+                self.ttft_ms(50.0),
+                self.queue_wait_ms(50.0),
+                self.slot_occupancy() * 100.0,
+            ));
+        }
+        if self.timeouts > 0 {
+            s.push_str(&format!(" timeouts={}", self.timeouts));
+        }
+        s
     }
 }
 
@@ -104,5 +181,24 @@ mod tests {
         assert_eq!(m.latency_ms(50.0), 0.0);
         assert_eq!(m.tokens_per_s(), 0.0);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.ttft_ms(50.0), 0.0);
+        assert_eq!(m.queue_wait_ms(50.0), 0.0);
+        assert_eq!(m.slot_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn continuous_serving_signals() {
+        let mut m = Metrics::new();
+        m.record_ttft(Duration::from_millis(4));
+        m.record_ttft(Duration::from_millis(8));
+        m.record_queue_wait(Duration::from_millis(1));
+        m.record_queue_wait(Duration::from_millis(3));
+        m.record_occupancy(2, 4);
+        m.record_occupancy(4, 4);
+        assert!((m.ttft_ms(100.0) - 8.0).abs() < 0.5);
+        assert_eq!(m.queue_waits_us(), &[1000, 3000]);
+        assert!((m.slot_occupancy() - 0.75).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("occupancy=75%"), "summary was: {s}");
     }
 }

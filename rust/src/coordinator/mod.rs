@@ -7,22 +7,28 @@
 //! * [`scheduler`] — layer-parallel quantization: weight matrices fan out to
 //!   worker threads, codebooks are shared read-only, results are merged in
 //!   deterministic order.
-//! * [`batcher`] — dynamic request batching for the serving loop (collect up
-//!   to `max_batch` requests or `max_wait`, whichever first).
-//! * [`server`] — the generation service: batched iterative decoding against
-//!   the AOT forward executable (fp *or* in-graph-dequant quantized) or the
-//!   host **codes-resident** backend (packed codes + shared codebooks only),
-//!   with throughput/latency metrics (§4.4). The host backend decodes
-//!   incrementally against per-slot KV caches
-//!   ([`server::DecodePolicy::KvCached`]); the windowed re-forward remains
-//!   as the parity oracle.
+//! * [`batcher`] — request admission for the serving loop: static batch
+//!   coalescing (collect up to `max_batch` requests or `max_wait`,
+//!   whichever first) for the fixed-geometry XLA path, and a drain-first
+//!   FIFO admission queue (deterministic, deadline-aware) feeding the
+//!   continuous loop.
+//! * [`server`] — the generation service: batched iterative decoding
+//!   against the AOT forward executable (fp *or* in-graph-dequant
+//!   quantized) or the host **codes-resident** backend (packed codes +
+//!   shared codebooks only), with throughput/latency metrics (§4.4). The
+//!   host backend decodes incrementally against per-slot KV caches
+//!   ([`server::DecodePolicy::KvCached`]) and serves with **continuous
+//!   batching + block prefill** ([`server::Server::serve_continuous`]):
+//!   slots admit new requests the moment a sequence finishes, prompts
+//!   enter the cache in chunks. The windowed re-forward remains as the
+//!   parity oracle.
 
 pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, GenRequest, GenResponse};
+pub use batcher::{Admitted, Batcher, BatcherConfig, GenRequest, GenResponse};
 pub use metrics::Metrics;
 pub use scheduler::{quantize_model_compressed, quantize_model_parallel, QuantStats};
 pub use server::{DecodePolicy, Server, ServingWeights};

@@ -1,6 +1,6 @@
-//! The generation server: batched iterative decoding.
+//! The generation server: batched and continuous iterative decoding.
 //!
-//! Three serving modes share every line of the decode loop:
+//! Three serving modes share the decode machinery:
 //!
 //! * **Fp** — dense weights bound to `fwd_fp_<model>_b8` (fp baseline, or
 //!   any fake-quant model for ablations);
@@ -15,17 +15,35 @@
 //!   is exactly codes + shared codebooks, which
 //!   [`crate::paper::verify_codes_resident`] checks against the §4.4 claim.
 //!
-//! The host backend decodes **incrementally** with one [`KvCache`] per batch
-//! slot (reset at every request boundary — per-request state is explicit);
-//! the windowed re-forward survives as [`DecodePolicy::Reforward`], both as
-//! the parity oracle and as the only option for the fixed-geometry XLA
-//! executables (DESIGN.md §9).
+//! Two serving loops run on top:
+//!
+//! * [`Server::serve`] — **static batches**: [`Batcher::next_batch`]
+//!   coalesces requests, [`Server::process_batch`] decodes the whole batch
+//!   to completion. The only loop the fixed-geometry XLA executables
+//!   support, and the baseline the `continuous_vs_static` bench compares
+//!   against.
+//! * [`Server::serve_continuous`] — **continuous batching with block
+//!   prefill** (host backend): a persistent pool of [`Server::max_slots`]
+//!   slots, each tracking its own phase
+//!   (`Prefill { remaining } → Decode → Done`). Slots admit new requests
+//!   the moment a sequence finishes — no batch barrier — and prompts enter
+//!   the per-slot [`KvCache`] in [`Server::prefill_chunk`]-sized blocks
+//!   ([`HostForward::prefill_extend`]), paying a single lazy head
+//!   projection at the final chunk boundary. Per-request outputs are
+//!   pinned token-for-token to single-request [`DecodePolicy::Reforward`]
+//!   oracle runs by `tests/continuous_batching.rs` (DESIGN.md §9).
+//!
+//! The host backend decodes **incrementally** with one [`KvCache`] per slot
+//! (reset at every request boundary — per-request state is explicit); the
+//! windowed re-forward survives as [`DecodePolicy::Reforward`], both as the
+//! parity oracle and as the only option for the fixed-geometry XLA
+//! executables.
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::batcher::{Batcher, GenRequest, GenResponse};
+use super::batcher::{Admitted, Batcher, GenRequest, GenResponse};
 use super::metrics::Metrics;
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
 use crate::eval::weight_inputs;
@@ -82,6 +100,58 @@ pub enum DecodePolicy {
     Reforward,
 }
 
+/// Lifecycle of one serving slot in the continuous loop. A slot is born in
+/// `Prefill` (unless the request is degenerate), emits its first token at
+/// the final prompt-chunk boundary, decodes one token per scheduler step,
+/// and frees the slot for the next admission the step after `Done`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotPhase {
+    /// `remaining` prompt tokens still to enter the KV cache.
+    Prefill { remaining: usize },
+    /// Prompt absorbed; one generated token per step.
+    Decode,
+    /// Response ready to send; the slot frees this step.
+    Done,
+}
+
+/// One active request in the slot pool.
+struct Slot {
+    req: GenRequest,
+    seq: u64,
+    queue_wait: std::time::Duration,
+    /// Prompt truncated to the last `ctx - 1` tokens (same truncation as
+    /// the static path).
+    prompt: Vec<i32>,
+    phase: SlotPhase,
+    rng: Rng,
+    generated: Vec<u8>,
+    /// Logits of the position about to be sampled (valid while `Decode`).
+    logits: Vec<f32>,
+    /// Per-step logits when [`Server::capture_logits`] is set.
+    captured: Vec<Vec<f32>>,
+    ttft: Option<std::time::Duration>,
+    /// Scheduler steps this request consumed (prefill chunks + decode).
+    steps: usize,
+}
+
+impl Slot {
+    /// Sample the next token from `self.logits`, record it, and flip to
+    /// `Done` once `max_new` tokens exist.
+    fn emit_token(&mut self, capture: bool) {
+        let next = next_token(&self.logits, self.req.temperature, &mut self.rng);
+        if capture {
+            self.captured.push(self.logits.clone());
+        }
+        if self.generated.is_empty() {
+            self.ttft = Some(self.req.enqueued.elapsed());
+        }
+        self.generated.push(next);
+        if self.generated.len() >= self.req.max_new {
+            self.phase = SlotPhase::Done;
+        }
+    }
+}
+
 /// A ready-to-serve model: backend + decode state.
 pub struct Server {
     backend: Backend,
@@ -93,13 +163,21 @@ pub struct Server {
     /// re-forwards regardless (its executable geometry is fixed).
     pub decode: DecodePolicy,
     /// Seed for the per-request sampling streams: every request draws from a
-    /// fresh `Rng` derived from this seed and its batch slot, so requests
-    /// never inherit sampler state from earlier traffic — a request replayed
-    /// in the same batch slot on a fresh server reproduces its output
-    /// exactly. (The stream does depend on slot placement, so co-batched
-    /// traffic can shift which stream a sampled request gets.)
+    /// fresh `Rng` derived from this seed and its placement — the batch slot
+    /// on the static path, the admission sequence number under continuous
+    /// batching (so a sampled request's stream is independent of which slot
+    /// happened to be free). Requests never inherit sampler state from
+    /// earlier traffic.
     pub sampler_seed: u64,
-    /// One KV cache per batch slot, built lazily on the host backend and
+    /// Slot-pool width for [`Self::serve_continuous`] (`serve --max-slots`).
+    pub max_slots: usize,
+    /// Prompt tokens per block-prefill step in the continuous loop
+    /// (`serve --prefill-chunk`); defaults to `ctx / 4`.
+    pub prefill_chunk: usize,
+    /// Capture per-step logits into [`GenResponse::logits`] (continuous
+    /// loop only) — parity harnesses; off in normal serving.
+    pub capture_logits: bool,
+    /// One KV cache per slot, built lazily on the host backend and
     /// **reset at every request boundary** — a new request always starts
     /// from an empty cache.
     slot_caches: Vec<KvCache>,
@@ -143,6 +221,9 @@ impl Server {
             metrics: Metrics::new(),
             decode: DecodePolicy::Reforward,
             sampler_seed: 0x5E84,
+            max_slots: batch,
+            prefill_chunk: (config.ctx / 4).max(1),
+            capture_logits: false,
             slot_caches: Vec::new(),
             resident_weight_bits,
             resident_codebook_bits,
@@ -175,6 +256,9 @@ impl Server {
             metrics: Metrics::new(),
             decode: DecodePolicy::KvCached,
             sampler_seed: 0x5E84,
+            max_slots: 8,
+            prefill_chunk: (config.ctx / 4).max(1),
+            capture_logits: false,
             slot_caches: Vec::new(),
             resident_weight_bits,
             resident_codebook_bits,
@@ -197,9 +281,9 @@ impl Server {
         }
     }
 
-    /// f32 bits of KV-cache state currently allocated across batch slots
+    /// f32 bits of KV-cache state currently allocated across slots
     /// (0 until the first cached batch; grows to
-    /// `batch · config.kv_cache_bits()`).
+    /// `slots · config.kv_cache_bits()`).
     pub fn kv_cache_bits(&self) -> u64 {
         self.slot_caches.iter().map(|c| c.memory_bits()).sum()
     }
@@ -238,15 +322,8 @@ impl Server {
         for (s, req) in batch.iter().enumerate() {
             let cache = &mut self.slot_caches[s];
             cache.reset(); // new request → fresh cache
-            let mut rng = request_rng(self.sampler_seed, s);
-            let prompt: Vec<i32> = req
-                .prompt
-                .iter()
-                .rev()
-                .take(ctx - 1) // leave room to generate
-                .rev()
-                .map(|&x| x as i32)
-                .collect();
+            let mut rng = request_rng(self.sampler_seed, s as u64);
+            let prompt = truncate_prompt(&req.prompt, ctx);
             if prompt.is_empty() {
                 // degenerate request: resolve with zero tokens rather than
                 // failing the whole batch (finish_batch still responds)
@@ -255,11 +332,7 @@ impl Server {
             let mut logits = hf.prefill(&prompt, cache).context("prefill")?;
             for step in 0..req.max_new {
                 debug_assert_eq!(logits.len(), v);
-                let next = if req.temperature <= 0.0 {
-                    crate::tensor::argmax(&logits) as u8
-                } else {
-                    sample(&logits, req.temperature, &mut rng)
-                };
+                let next = next_token(&logits, req.temperature, &mut rng);
                 generated[s].push(next);
                 if step + 1 < req.max_new {
                     logits = hf.decode_step(next as i32, cache).context("decode step")?;
@@ -284,21 +357,14 @@ impl Server {
         let mut bufs: Vec<Vec<i32>> = Vec::with_capacity(b);
         let mut lens: Vec<usize> = Vec::with_capacity(b);
         for req in &batch {
-            let p: Vec<i32> = req
-                .prompt
-                .iter()
-                .rev()
-                .take(ctx - 1) // leave room to generate
-                .rev()
-                .map(|&x| x as i32)
-                .collect();
+            let p = truncate_prompt(&req.prompt, ctx);
             lens.push(p.len());
             bufs.push(p);
         }
         let max_new = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
         let mut generated: Vec<Vec<u8>> = vec![Vec::new(); batch.len()];
         let mut rngs: Vec<Rng> = (0..batch.len())
-            .map(|s| request_rng(self.sampler_seed, s))
+            .map(|s| request_rng(self.sampler_seed, s as u64))
             .collect();
 
         let mut steps = 0usize;
@@ -322,11 +388,7 @@ impl Server {
                 }
                 let pos = (lens[s].min(ctx)) - 1;
                 let row = &logits[(s * ctx + pos) * v..(s * ctx + pos + 1) * v];
-                let next = if req.temperature <= 0.0 {
-                    crate::tensor::argmax(row) as u8
-                } else {
-                    sample(row, req.temperature, &mut rngs[s])
-                };
+                let next = next_token(row, req.temperature, &mut rngs[s]);
                 generated[s].push(next);
                 bufs[s].push(next as i32);
                 if bufs[s].len() > ctx {
@@ -351,12 +413,17 @@ impl Server {
         steps: usize,
     ) {
         let mut tokens = 0usize;
-        for (req, gen) in batch.iter().zip(generated.iter()) {
+        for (s, (req, gen)) in batch.iter().zip(generated.iter()).enumerate() {
             tokens += gen.len();
             let resp = GenResponse {
                 generated: gen.clone(),
                 latency: req.enqueued.elapsed(),
                 steps,
+                seq: s as u64,
+                queue_wait: t0.saturating_duration_since(req.enqueued),
+                ttft: None,
+                logits: Vec::new(),
+                timed_out: false,
             };
             self.metrics.record_latency(resp.latency);
             req.resp.send(resp).ok();
@@ -365,22 +432,208 @@ impl Server {
         self.metrics.wall_s += t0.elapsed().as_secs_f64();
     }
 
-    /// Serve until the request channel closes.
-    pub fn serve(&mut self, batcher: &Batcher) -> Result<()> {
+    /// Fold the batcher's admission-timeout count into metrics, returning
+    /// the new high-water mark. (The counter accumulates across serve calls
+    /// and across batchers.)
+    fn sync_timeouts(&mut self, batcher: &Batcher, seen: u64) -> u64 {
+        let t = batcher.timed_out();
+        self.metrics.timeouts += t - seen;
+        t
+    }
+
+    /// Serve static batches until the request channel closes.
+    pub fn serve(&mut self, batcher: &mut Batcher) -> Result<()> {
+        let mut seen = batcher.timed_out();
         while let Some(batch) = batcher.next_batch() {
+            seen = self.sync_timeouts(batcher, seen);
             self.process_batch(batch)?;
+        }
+        self.sync_timeouts(batcher, seen);
+        Ok(())
+    }
+
+    /// Serve with **continuous batching + block prefill** until the request
+    /// channel closes (host backend, [`DecodePolicy::KvCached`] only).
+    ///
+    /// The step loop: (1) admit queued requests into free slots — a slot
+    /// frees the moment its sequence completes, with no batch barrier;
+    /// (2) advance every active slot by one unit of work — one
+    /// [`Self::prefill_chunk`]-sized prompt block
+    /// ([`HostForward::prefill_extend`]; the final chunk pays the single
+    /// lazy head projection and emits the first token), or one cached
+    /// decode step; (3) complete finished slots (response + metrics) so
+    /// the next admission can reuse them. When every slot is idle the loop
+    /// parks on the queue instead of spinning.
+    ///
+    /// Per-request state is explicit, exactly as in the static cached path:
+    /// a reset [`KvCache`] and a fresh sampling stream per request (derived
+    /// from the admission `seq`, so streams are independent of slot
+    /// placement). Greedy outputs are therefore token-identical to
+    /// single-request oracle runs regardless of traffic interleaving.
+    pub fn serve_continuous(&mut self, batcher: &mut Batcher) -> Result<()> {
+        anyhow::ensure!(
+            matches!(&self.backend, Backend::Host(_)),
+            "continuous batching requires the host backend (per-slot KV caches)"
+        );
+        anyhow::ensure!(
+            self.decode == DecodePolicy::KvCached,
+            "continuous batching decodes incrementally — use \
+             DecodePolicy::KvCached (Reforward is the static-path oracle)"
+        );
+        let n = self.max_slots.max(1);
+        let chunk = self.prefill_chunk.max(1);
+        let ctx = self.config.ctx;
+        while self.slot_caches.len() < n {
+            self.slot_caches.push(KvCache::new(&self.config));
+        }
+        let Backend::Host(hf) = &self.backend else { unreachable!() };
+        let mut slots: Vec<Option<Slot>> = (0..n).map(|_| None).collect();
+        let mut seen_timeouts = batcher.timed_out();
+
+        loop {
+            // ---- admission: fill free slots from the queue ----
+            let mut active = slots.iter().filter(|s| s.is_some()).count();
+            if active == 0 && !batcher.wait_any() {
+                break; // stream closed and fully drained
+            }
+            if active < n {
+                for Admitted { req, seq, admitted } in batcher.poll_admit(n - active) {
+                    let queue_wait = admitted.saturating_duration_since(req.enqueued);
+                    self.metrics.record_queue_wait(queue_wait);
+                    let prompt = truncate_prompt(&req.prompt, ctx);
+                    // degenerate requests resolve with zero tokens without
+                    // occupying a scheduler step's worth of model work
+                    let phase = if prompt.is_empty() || req.max_new == 0 {
+                        SlotPhase::Done
+                    } else {
+                        SlotPhase::Prefill { remaining: prompt.len() }
+                    };
+                    let rng = request_rng(self.sampler_seed, seq);
+                    let idx = slots
+                        .iter()
+                        .position(|s| s.is_none())
+                        .expect("admission capped at free slots");
+                    self.slot_caches[idx].reset(); // new request → fresh cache
+                    slots[idx] = Some(Slot {
+                        req,
+                        seq,
+                        queue_wait,
+                        prompt,
+                        phase,
+                        rng,
+                        generated: Vec::new(),
+                        logits: Vec::new(),
+                        captured: Vec::new(),
+                        ttft: None,
+                        steps: 0,
+                    });
+                    active += 1;
+                }
+            }
+            let t = batcher.timed_out();
+            self.metrics.timeouts += t - seen_timeouts;
+            seen_timeouts = t;
+            if active == 0 {
+                continue; // everything admitted had expired — park again
+            }
+
+            // ---- one unit of work per active slot ----
+            let t0 = Instant::now();
+            let mut worked = 0usize; // slots that ran model work this step
+            for (idx, entry) in slots.iter_mut().enumerate() {
+                let Some(slot) = entry else { continue };
+                let cache = &mut self.slot_caches[idx];
+                match slot.phase {
+                    SlotPhase::Prefill { remaining } => {
+                        worked += 1;
+                        slot.steps += 1;
+                        let fed = slot.prompt.len() - remaining;
+                        let take = chunk.min(remaining);
+                        let block = &slot.prompt[fed..fed + take];
+                        if take == remaining {
+                            // final chunk: the one lazy head projection,
+                            // which immediately yields the first token
+                            slot.logits =
+                                hf.prefill_block(block, cache, chunk).context("prefill block")?;
+                            slot.phase = SlotPhase::Decode;
+                            slot.emit_token(self.capture_logits);
+                        } else {
+                            hf.prefill_extend(block, cache, chunk).context("prefill extend")?;
+                            slot.phase = SlotPhase::Prefill { remaining: remaining - take };
+                        }
+                    }
+                    SlotPhase::Decode => {
+                        worked += 1;
+                        slot.steps += 1;
+                        let last = *slot.generated.last().expect("decode implies a token") as i32;
+                        slot.logits = hf.decode_step(last, cache).context("decode step")?;
+                        self.metrics.decode_steps += 1;
+                        slot.emit_token(self.capture_logits);
+                    }
+                    SlotPhase::Done => {}
+                }
+            }
+            // occupancy counts slots that actually ran model work — a
+            // degenerate request parked in Done does not inflate it
+            self.metrics.record_occupancy(worked, n);
+            self.metrics.wall_s += t0.elapsed().as_secs_f64();
+
+            // ---- completions: respond and free slots ----
+            for entry in slots.iter_mut() {
+                let done = matches!(entry, Some(s) if s.phase == SlotPhase::Done);
+                if !done {
+                    continue;
+                }
+                let slot = entry.take().expect("checked above");
+                self.metrics.requests += 1;
+                self.metrics.tokens_generated += slot.generated.len() as u64;
+                if let Some(t) = slot.ttft {
+                    self.metrics.record_ttft(t);
+                }
+                let resp = GenResponse {
+                    generated: slot.generated,
+                    latency: slot.req.enqueued.elapsed(),
+                    steps: slot.steps,
+                    seq: slot.seq,
+                    queue_wait: slot.queue_wait,
+                    ttft: slot.ttft,
+                    logits: slot.captured,
+                    timed_out: false,
+                };
+                self.metrics.record_latency(resp.latency);
+                slot.req.resp.send(resp).ok();
+            }
         }
         Ok(())
     }
 }
 
-/// Per-request sampling stream, deterministic in (server seed, batch slot):
-/// a request's samples never depend on traffic served *before* it, so a
-/// request replayed in the same batch slot on a fresh server reproduces its
-/// output exactly. Slot placement itself still depends on how the batcher
-/// grouped concurrent traffic.
-fn request_rng(seed: u64, slot: usize) -> Rng {
-    Rng::new(seed ^ (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+/// Truncate a byte prompt to the last `ctx - 1` positions (leaving room to
+/// generate) as the token stream the model sees. Every serving path —
+/// static cached, static re-forward, continuous — MUST use this one helper:
+/// the decode-equivalence suites compare their outputs token-for-token.
+fn truncate_prompt(prompt: &[u8], ctx: usize) -> Vec<i32> {
+    prompt.iter().rev().take(ctx - 1).rev().map(|&x| x as i32).collect()
+}
+
+/// Pick the next token from a logit row: argmax at temperature 0 (greedy),
+/// temperature sampling otherwise. Shared by every serving path — see
+/// [`truncate_prompt`] for why there is exactly one copy.
+fn next_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> u8 {
+    if temperature <= 0.0 {
+        crate::tensor::argmax(logits) as u8
+    } else {
+        sample(logits, temperature, rng)
+    }
+}
+
+/// Per-request sampling stream, deterministic in (server seed, placement):
+/// a request's samples never depend on traffic served *before* it. On the
+/// static path `placement` is the batch slot; under continuous batching it
+/// is the admission sequence number, so the stream does not depend on which
+/// slot happened to be free.
+fn request_rng(seed: u64, placement: u64) -> Rng {
+    Rng::new(seed ^ placement.wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
 /// Temperature sampling over a logit row.
@@ -484,8 +737,8 @@ mod tests {
     }
 
     #[test]
-    fn request_rng_is_slot_stable_and_slot_distinct() {
-        // same (seed, slot) → identical stream; different slots → different
+    fn request_rng_is_placement_stable_and_placement_distinct() {
+        // same (seed, placement) → identical stream; different → different
         let mut a = request_rng(7, 3);
         let mut b = request_rng(7, 3);
         let mut c = request_rng(7, 4);

@@ -41,6 +41,20 @@ pub trait DecodeSession {
     /// Feed one token; returns the logits (`vocab` floats) at its position.
     fn step(&mut self, token: i32) -> anyhow::Result<Vec<f32>>;
 
+    /// Feed a whole prompt; returns the logits at the last position (the
+    /// row that predicts the first generated token). The default steps
+    /// token-at-a-time; backends with block prefill override this to fill
+    /// their cache in bulk with a single head projection at the end —
+    /// byte-identical results, lower time-to-first-token.
+    fn prefill(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let mut logits = Vec::new();
+        for &t in tokens {
+            logits = self.step(t)?;
+        }
+        Ok(logits)
+    }
+
     /// Tokens currently attended over (the window shrinks only when the
     /// backing cache slides past its capacity).
     fn window_len(&self) -> usize;
@@ -89,6 +103,12 @@ impl DecodeSession for HostSession<'_> {
         self.hf.decode_step(token, &mut self.cache)
     }
 
+    fn prefill(&mut self, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        // block prefill: whole-window chunks, one head projection at the end
+        let chunk = self.cache.capacity();
+        self.hf.prefill_block(tokens, &mut self.cache, chunk)
+    }
+
     fn window_len(&self) -> usize {
         self.cache.len()
     }
@@ -120,10 +140,7 @@ pub fn greedy_decode<F: ForwardPass + ?Sized>(
         .collect();
     let mut out = Vec::with_capacity(max_new);
     if let Some(mut sess) = backend.begin_session() {
-        let mut logits = Vec::new();
-        for &t in &buf {
-            logits = sess.step(t)?;
-        }
+        let mut logits = sess.prefill(&buf)?;
         for i in 0..max_new {
             let next = crate::tensor::argmax(&logits) as u8;
             out.push(next);

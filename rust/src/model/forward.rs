@@ -301,6 +301,10 @@ impl HostForward {
     /// token). Only the final position pays the head projection — earlier
     /// tokens advance K/V state only. Prompts longer than the cache
     /// capacity slide the window as generation would.
+    ///
+    /// This is the chunk-size-1 reference for [`Self::prefill_block`]: the
+    /// two leave the cache **byte-identical** for every chunk size (pinned
+    /// by `tests/continuous_batching.rs`).
     pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
         let (last, head) = tokens.split_last().unwrap();
@@ -310,60 +314,146 @@ impl HostForward {
         self.decode_step(*last, cache)
     }
 
+    /// Block prefill: bulk-fill the cache with `tokens`, processing up to
+    /// `chunk` tokens per pass — the linear projections run as one
+    /// `(chunk, d)` matmul instead of `chunk` single-row matmuls, and only
+    /// the final position pays the head projection. Returns the logits at
+    /// the last position.
+    ///
+    /// Eviction follows the exact slide+rebuild schedule of the
+    /// token-at-a-time path: every output row of every kernel depends only
+    /// on its own input row, so the resulting [`KvCache`] (tokens, K/V rows,
+    /// telemetry) and logits are **byte-identical** to [`Self::prefill`]
+    /// for any `chunk ≥ 1`.
+    pub fn prefill_block(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        chunk: usize,
+    ) -> Result<Vec<f32>> {
+        let x = self.feed_blocks(tokens, cache, chunk)?;
+        let d = self.config.d_model;
+        let last = Matrix::from_vec(x.row(x.rows() - 1).to_vec(), 1, d);
+        self.head_logits(&last)
+    }
+
+    /// Block prefill without the head projection: advances K/V state only.
+    /// The continuous-batching server feeds one prompt chunk per scheduler
+    /// step through this, and pays the single lazy head projection via
+    /// [`Self::prefill_block`] on the prompt's final chunk.
+    pub fn prefill_extend(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        chunk: usize,
+    ) -> Result<()> {
+        self.feed_blocks(tokens, cache, chunk).map(|_| ())
+    }
+
+    /// Drive `tokens` through the cache in blocks of at most `chunk`,
+    /// evicting on the same boundaries the token-at-a-time path would.
+    /// Returns the hidden states of the final block.
+    fn feed_blocks(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        chunk: usize,
+    ) -> Result<Matrix> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let chunk = chunk.max(1);
+        let mut rest = tokens;
+        let mut last = None;
+        while !rest.is_empty() {
+            if cache.len() == cache.capacity() {
+                // Slide + rebuild: surviving tokens re-embed at shifted
+                // positions, so their K/V must be recomputed (kv_cache.rs).
+                let keep = cache.begin_evict();
+                if !keep.is_empty() {
+                    self.advance_block(&keep, cache)?;
+                }
+            }
+            // a block never overruns capacity: the eviction boundary must
+            // fall exactly where the per-token schedule puts it
+            let take = chunk.min(rest.len()).min(cache.capacity() - cache.len());
+            let (head, tail) = rest.split_at(take);
+            last = Some(self.advance_block(head, cache)?);
+            rest = tail;
+        }
+        Ok(last.expect("non-empty token stream"))
+    }
+
     /// Evict if full, then advance one token (K/V appended, hidden state
     /// returned). The head projection is the caller's decision — prefill
     /// and eviction rebuilds never need logits, so they skip it.
     fn advance_token(&self, token: i32, cache: &mut KvCache) -> Result<Matrix> {
-        anyhow::ensure!(
-            cache.compatible_with(&self.config),
-            "KvCache geometry does not match this model"
-        );
         if cache.len() == cache.capacity() {
             // Slide + rebuild: surviving tokens re-embed at shifted
             // positions, so their K/V must be recomputed (kv_cache.rs).
             let keep = cache.begin_evict();
-            for &t in &keep {
-                self.advance_at_tail(t, cache)?;
+            if !keep.is_empty() {
+                self.advance_block(&keep, cache)?;
             }
         }
-        self.advance_at_tail(token, cache)
+        self.advance_block(&[token], cache)
     }
 
-    /// One token through every layer at the cache tail (`pos = cache.len()`,
-    /// which must be below capacity — eviction is the caller's job).
-    /// Returns the final hidden state `(1, d_model)` pre-head.
-    fn advance_at_tail(&self, token: i32, cache: &mut KvCache) -> Result<Matrix> {
+    /// One block of tokens through every layer at the cache tail (positions
+    /// `cache.len()..cache.len()+block`, which must fit below capacity —
+    /// eviction is the caller's job). Returns the final hidden states
+    /// `(block, d_model)` pre-head.
+    ///
+    /// This is the single kernel behind [`Self::decode_step`],
+    /// [`Self::prefill`] and [`Self::prefill_block`]: every per-row
+    /// computation (layer norm, linear projections, per-position attention,
+    /// GELU) is independent of the other rows in the block, so a block of
+    /// `n` tokens produces bit-for-bit the state of `n` single-token calls.
+    fn advance_block(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Matrix> {
         let cfg = &self.config;
         anyhow::ensure!(
-            token >= 0 && (token as usize) < cfg.vocab,
-            "token {token} out of vocab"
+            cache.compatible_with(cfg),
+            "KvCache geometry does not match this model"
         );
+        let m = tokens.len();
+        anyhow::ensure!(m > 0, "advance_block needs at least one token");
+        let base = cache.len();
+        anyhow::ensure!(
+            base + m <= cache.capacity(),
+            "block of {m} tokens overruns cache capacity ({base}+{m} > {})",
+            cache.capacity()
+        );
+        for &t in tokens {
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < cfg.vocab,
+                "token {t} out of vocab"
+            );
+        }
         let d = cfg.d_model;
         let n_head = cfg.n_head;
         let hd = d / n_head;
-        let pos = cache.len();
-        debug_assert!(pos < cache.capacity(), "step_at_tail on a full cache");
 
-        // embedding of the single new position
+        // embeddings of the new positions base..base+m
         let tok_emb = self.fp("embed.tok");
         let pos_emb = self.fp("embed.pos");
-        let mut x = Matrix::zeros(1, d);
-        for ((o, &e), &p) in x
-            .row_mut(0)
-            .iter_mut()
-            .zip(tok_emb.row(token as usize))
-            .zip(pos_emb.row(pos))
-        {
-            *o = e + p;
+        let mut x = Matrix::zeros(m, d);
+        for (j, &t) in tokens.iter().enumerate() {
+            for ((o, &e), &p) in x
+                .row_mut(j)
+                .iter_mut()
+                .zip(tok_emb.row(t as usize))
+                .zip(pos_emb.row(base + j))
+            {
+                *o = e + p;
+            }
         }
 
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut scores = vec![0.0f32; pos + 1];
+        let mut scores = vec![0.0f32; base + m];
         for layer in 0..cfg.n_layer {
             let nm = &self.names[layer];
-            // attention block: project the new token, append its K/V, attend
-            // over the whole cached window (causality is free — the cache
-            // only holds past positions)
+            // attention block: project the whole chunk in one matmul, write
+            // its K/V rows, then attend per position over the cached window
+            // plus the chunk's own prefix (causality: position base+j sees
+            // rows 0..=base+j, which are all already written)
             let ln1 = layer_norm(
                 &x,
                 self.fp(&nm.ln1_g).as_slice(),
@@ -372,24 +462,29 @@ impl HostForward {
             let q = self.linear(&nm.wq, &ln1)?;
             let k = self.linear(&nm.wk, &ln1)?;
             let v = self.linear(&nm.wv, &ln1)?;
-            cache.write_kv(layer, k.row(0), v.row(0));
+            for j in 0..m {
+                cache.write_kv_at(layer, base + j, k.row(j), v.row(j));
+            }
             let (kc, vc) = cache.layer(layer);
-            let mut y = Matrix::zeros(1, d);
-            for h in 0..n_head {
-                let c0 = h * hd;
-                let qrow = &q.row(0)[c0..c0 + hd];
-                for (tj, s) in scores.iter_mut().enumerate() {
-                    *s = crate::tensor::dot(qrow, &kc.row(tj)[c0..c0 + hd]) * scale;
-                }
-                softmax_inplace(&mut scores);
-                let yrow = &mut y.row_mut(0)[c0..c0 + hd];
-                for (tj, &a) in scores.iter().enumerate() {
-                    if a == 0.0 {
-                        continue;
+            let mut y = Matrix::zeros(m, d);
+            for j in 0..m {
+                let srow = &mut scores[..base + j + 1];
+                for h in 0..n_head {
+                    let c0 = h * hd;
+                    let qrow = &q.row(j)[c0..c0 + hd];
+                    for (tj, s) in srow.iter_mut().enumerate() {
+                        *s = crate::tensor::dot(qrow, &kc.row(tj)[c0..c0 + hd]) * scale;
                     }
-                    let vrow = &vc.row(tj)[c0..c0 + hd];
-                    for (o, &vv) in yrow.iter_mut().zip(vrow) {
-                        *o += a * vv;
+                    softmax_inplace(srow);
+                    let yrow = &mut y.row_mut(j)[c0..c0 + hd];
+                    for (tj, &a) in srow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let vrow = &vc.row(tj)[c0..c0 + hd];
+                        for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                            *o += a * vv;
+                        }
                     }
                 }
             }
@@ -409,7 +504,7 @@ impl HostForward {
             let h2 = self.linear(&nm.w2, &h1)?;
             add_inplace(&mut x, &h2);
         }
-        cache.commit(token);
+        cache.commit_block(tokens);
         Ok(x)
     }
 
@@ -562,6 +657,28 @@ mod tests {
         let last = &full[(t - 1) * v..t * v];
         for (a, b) in inc.iter().zip(last) {
             assert!((a - b).abs() <= 1e-5, "incremental {a} vs block {b}");
+        }
+    }
+
+    #[test]
+    fn prefill_block_bitwise_matches_token_at_a_time() {
+        // one advance_block kernel behind both paths → byte-identical cache
+        // state and logits for every chunk size
+        let m = tmp_model("block");
+        let hf = HostForward::from_dense(m.clone()).unwrap();
+        let t = 13usize;
+        let tokens: Vec<i32> = (0..t).map(|i| (i * 29 % 240) as i32).collect();
+        let mut c1 = KvCache::new(&m.config);
+        let a = hf.prefill(&tokens, &mut c1).unwrap();
+        for chunk in [1usize, 4, 16, 64] {
+            let mut c2 = KvCache::new(&m.config);
+            let b = hf.prefill_block(&tokens, &mut c2, chunk).unwrap();
+            assert_eq!(a, b, "chunk {chunk}: logits diverged");
+            assert_eq!(c1.tokens(), c2.tokens(), "chunk {chunk}: window diverged");
+            // prefill_extend advances the same state, minus the head logits
+            let mut c3 = KvCache::new(&m.config);
+            hf.prefill_extend(&tokens, &mut c3, chunk).unwrap();
+            assert_eq!(c1.tokens(), c3.tokens());
         }
     }
 

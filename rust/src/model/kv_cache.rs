@@ -166,20 +166,25 @@ impl KvCache {
         keep
     }
 
-    /// Write the K/V rows of the next position for one layer. All layers of
-    /// a step must be written before [`Self::commit`].
-    pub(crate) fn write_kv(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
-        let pos = self.tokens.len();
-        debug_assert!(pos < self.capacity, "write_kv past capacity");
+    /// Write the K/V rows of one (still uncommitted) position for one layer
+    /// — the block advance writes a whole chunk of positions
+    /// (`len()..len()+chunk`) before a single [`Self::commit_block`].
+    pub(crate) fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(pos < self.capacity, "write_kv_at past capacity");
         self.k[layer].row_mut(pos).copy_from_slice(k_row);
         self.v[layer].row_mut(pos).copy_from_slice(v_row);
     }
 
-    /// Finish a step: record the token whose K/V rows were just written.
-    pub(crate) fn commit(&mut self, token: i32) {
-        debug_assert!(self.tokens.len() < self.capacity, "commit past capacity");
-        self.tokens.push(token);
-        self.total_fed += 1;
+    /// Finish a block step: record `tokens`, whose K/V rows were written at
+    /// positions `len()..len()+tokens.len()` via [`Self::write_kv_at`].
+    /// Telemetry counts every token exactly once, whatever the block size.
+    pub(crate) fn commit_block(&mut self, tokens: &[i32]) {
+        debug_assert!(
+            self.tokens.len() + tokens.len() <= self.capacity,
+            "commit_block past capacity"
+        );
+        self.tokens.extend_from_slice(tokens);
+        self.total_fed += tokens.len() as u64;
     }
 }
 
@@ -221,9 +226,9 @@ mod tests {
         let d = cfg().d_model;
         for t in 0..3i32 {
             for l in 0..cfg().n_layer {
-                c.write_kv(l, &vec![t as f32; d], &vec![-t as f32; d]);
+                c.write_kv_at(l, t as usize, &vec![t as f32; d], &vec![-t as f32; d]);
             }
-            c.commit(t);
+            c.commit_block(&[t]);
         }
         assert_eq!(c.len(), 3);
         assert_eq!(c.tokens(), &[0, 1, 2]);
@@ -237,13 +242,43 @@ mod tests {
     }
 
     #[test]
+    fn block_commit_equals_per_token_commit() {
+        // the block-prefill write path must leave the cache in exactly the
+        // state the per-token path produces: same tokens, rows, telemetry
+        let d = cfg().d_model;
+        let mut per_tok = KvCache::with_capacity(&cfg(), 8);
+        let mut block = KvCache::with_capacity(&cfg(), 8);
+        let toks = [5i32, 9, 2];
+        for (j, &t) in toks.iter().enumerate() {
+            for l in 0..cfg().n_layer {
+                let kr = vec![t as f32 + l as f32; d];
+                let vr = vec![-(t as f32); d];
+                per_tok.write_kv_at(l, j, &kr, &vr);
+                block.write_kv_at(l, j, &kr, &vr);
+            }
+            per_tok.commit_block(&[t]);
+        }
+        block.commit_block(&toks);
+        assert_eq!(per_tok.tokens(), block.tokens());
+        assert_eq!(per_tok.total_fed(), block.total_fed());
+        for l in 0..cfg().n_layer {
+            let (ka, va) = per_tok.layer(l);
+            let (kb, vb) = block.layer(l);
+            for i in 0..toks.len() {
+                assert_eq!(ka.row(i), kb.row(i));
+                assert_eq!(va.row(i), vb.row(i));
+            }
+        }
+    }
+
+    #[test]
     fn begin_evict_slides_window() {
         let mut c = KvCache::with_stride(&cfg(), 8, 3);
         for t in 0..8i32 {
             for l in 0..cfg().n_layer {
-                c.write_kv(l, &[0.0; 32], &[0.0; 32]);
+                c.write_kv_at(l, t as usize, &[0.0; 32], &[0.0; 32]);
             }
-            c.commit(t);
+            c.commit_block(&[t]);
         }
         assert_eq!(c.len(), c.capacity());
         let keep = c.begin_evict();

@@ -20,7 +20,6 @@
 //! [`matmul_from_codes`]: crate::quant::QuantizedWeight::matmul_from_codes
 
 use std::sync::mpsc::channel;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -80,25 +79,18 @@ pub fn verify_codes_resident(q: &QuantizedGpt) -> Result<f64> {
 
 fn drive(server: &mut Server, ctx: &Ctx, n_requests: usize, max_new: usize) -> Result<f64> {
     let (tx, rx) = channel::<GenRequest>();
-    let batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
     let mut rng = Rng::new(321);
     let mut keep = Vec::new();
     for _ in 0..n_requests {
         let s = rng.below(ctx.eval_tokens.len() - 64);
         let prompt: Vec<u8> = ctx.eval_tokens[s..s + 48].iter().map(|&t| t as u8).collect();
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt,
-            max_new,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(prompt, max_new, 0.0, rtx)).unwrap();
         keep.push(rrx);
     }
     drop(tx);
-    server.serve(&batcher)?;
+    server.serve(&mut batcher)?;
     Ok(server.metrics.tokens_per_s())
 }
 

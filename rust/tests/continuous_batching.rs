@@ -1,0 +1,412 @@
+//! Continuous batching + block prefill vs the decode oracles.
+//!
+//! The contract (DESIGN.md §9): per-request outputs under
+//! `Server::serve_continuous` equal single-request oracle runs
+//! token-for-token (greedy) — `DecodePolicy::Reforward` while the window
+//! fits in ctx, the static KV-cached path across the eviction boundary —
+//! and the per-step logits match the re-forward oracle within 1e-5,
+//! regardless of slot count, prefill chunk size, or traffic interleaving.
+//! Plus: `prefill_block` leaves the cache **byte-identical** to
+//! token-at-a-time `prefill` for every chunk size (including across the
+//! slide+rebuild eviction boundary), admission is FIFO and starvation-free,
+//! and deadlines resolve as timeouts instead of occupying slots.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use pcdvq::coordinator::{
+    Batcher, BatcherConfig, DecodePolicy, GenRequest, GenResponse, Server, ServingWeights,
+};
+use pcdvq::model::{GptModel, HostForward, KvCache, QuantizedGpt};
+use pcdvq::proptest::{for_cases, synthetic_tinygpt, tiny_pcdvq};
+
+/// Synthetic tinygpt (d=64, 2 layers, ctx=64) — the continuous-batching
+/// testbed.
+fn synthetic_model(name: &str) -> GptModel {
+    synthetic_tinygpt("pcdvq_continuous_tests", name, 31)
+}
+
+fn quantize(model: &GptModel) -> QuantizedGpt {
+    QuantizedGpt::quantize(model, &tiny_pcdvq())
+}
+
+fn prompt_bytes(n: usize, salt: usize) -> Vec<u8> {
+    (0..n).map(|i| ((i * 7 + salt * 13 + 5) % 251) as u8).collect()
+}
+
+/// Serve `reqs` = (prompt, max_new, temperature) through the continuous
+/// loop — all requests pre-queued (deterministic admission, no sleeping).
+fn run_continuous(
+    q: &QuantizedGpt,
+    max_slots: usize,
+    prefill_chunk: usize,
+    capture_logits: bool,
+    reqs: &[(Vec<u8>, usize, f32)],
+) -> (Vec<GenResponse>, Server) {
+    let mut server =
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    server.max_slots = max_slots;
+    server.prefill_chunk = prefill_chunk;
+    server.capture_logits = capture_logits;
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rxs = Vec::new();
+    for (p, max_new, temp) in reqs {
+        let (rtx, rrx) = channel();
+        batcher.push(GenRequest::new(p.clone(), *max_new, *temp, rtx));
+        rxs.push(rrx);
+    }
+    server.serve_continuous(&mut batcher).unwrap();
+    let resps = rxs.iter().map(|r| r.recv().expect("response missing")).collect();
+    (resps, server)
+}
+
+/// Single-request oracle run through the server under `policy`.
+fn run_single(
+    q: &QuantizedGpt,
+    policy: DecodePolicy,
+    prompt: &[u8],
+    max_new: usize,
+) -> Vec<u8> {
+    let mut server =
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    server.decode = policy;
+    let (rtx, rrx) = channel();
+    server
+        .process_batch(vec![GenRequest::new(prompt.to_vec(), max_new, 0.0, rtx)])
+        .unwrap();
+    rrx.recv().unwrap().generated
+}
+
+/// The windowed re-forward oracle with per-step logits: greedy decode where
+/// every token re-forwards the whole window (slide-by-one past ctx),
+/// exactly the `DecodePolicy::Reforward` schedule.
+fn oracle_reforward(
+    hf: &HostForward,
+    prompt: &[u8],
+    max_new: usize,
+) -> (Vec<u8>, Vec<Vec<f32>>) {
+    let ctx = hf.config.ctx;
+    let v = hf.config.vocab;
+    let mut buf: Vec<i32> = prompt
+        .iter()
+        .rev()
+        .take(ctx - 1)
+        .rev()
+        .map(|&x| x as i32)
+        .collect();
+    assert!(!buf.is_empty(), "oracle needs a non-empty prompt");
+    let mut toks = Vec::new();
+    let mut logits_seq = Vec::new();
+    for _ in 0..max_new {
+        let start = buf.len().saturating_sub(ctx);
+        let window = buf[start..].to_vec();
+        let t = window.len();
+        let logits = hf.forward(&window, 1, t).unwrap();
+        let row = logits[(t - 1) * v..t * v].to_vec();
+        let next = pcdvq::tensor::argmax(&row) as u8;
+        toks.push(next);
+        buf.push(next as i32);
+        logits_seq.push(row);
+    }
+    (toks, logits_seq)
+}
+
+/// The headline equivalence matrix: mixed-length request sets through 3
+/// slots at ragged and aligned chunk sizes — every request's greedy tokens
+/// equal its single-request `Reforward` oracle run token-for-token, and the
+/// captured per-step logits match within 1e-5. Covers prompts of length 1,
+/// below/at/above ctx (prompt > ctx truncates to the last ctx−1 bytes in
+/// both paths).
+#[test]
+fn continuous_matches_single_request_reforward_oracle() {
+    let model = synthetic_model("oracle");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+    let hf = HostForward::from_quantized(q.clone()).unwrap();
+
+    // (prompt_len, max_new) with trunc_len + max_new ≤ ctx + 1 so the
+    // cached and re-forward window schedules coincide (DESIGN.md §9)
+    let cases: Vec<(usize, usize)> = vec![
+        (1, 6),
+        (5, 6),
+        (ctx / 2 - 1, 6),
+        (ctx - 1, 2),
+        (ctx, 2),
+        (ctx + 9, 2),
+    ];
+    let reqs: Vec<(Vec<u8>, usize, f32)> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, &(plen, max_new))| (prompt_bytes(plen, i), max_new, 0.0))
+        .collect();
+
+    for chunk in [1usize, 5, ctx / 4] {
+        let (resps, server) = run_continuous(&q, 3, chunk, true, &reqs);
+        assert_eq!(server.metrics.requests as usize, reqs.len());
+        for (i, (resp, (prompt, max_new, _))) in resps.iter().zip(&reqs).enumerate() {
+            let via_server = run_single(&q, DecodePolicy::Reforward, prompt, *max_new);
+            let (oracle_toks, oracle_logits) = oracle_reforward(&hf, prompt, *max_new);
+            assert_eq!(via_server, oracle_toks, "req {i}: oracle self-check");
+            assert_eq!(
+                resp.generated, oracle_toks,
+                "req {i} (chunk {chunk}): continuous diverged from re-forward oracle"
+            );
+            assert_eq!(resp.logits.len(), *max_new, "req {i}: captured logits");
+            for (step, (got, want)) in resp.logits.iter().zip(&oracle_logits).enumerate() {
+                for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-5,
+                        "req {i} step {step} logit {j}: continuous {a} vs oracle {b}"
+                    );
+                }
+            }
+            assert!(resp.ttft.is_some(), "req {i}: first token timed");
+            assert_eq!(resp.seq, i as u64, "admission follows arrival order");
+        }
+    }
+}
+
+/// Admission mid-decode + slot reuse: with 2 slots, a long request keeps
+/// decoding while its batchmates finish and their slot turns over to queued
+/// requests — every output still equals its solo oracle run.
+#[test]
+fn admission_mid_decode_and_slot_reuse_preserve_outputs() {
+    let model = synthetic_model("mid_decode");
+    let q = quantize(&model);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = vec![
+        (prompt_bytes(20, 0), 12, 0.0), // long: holds slot 0 throughout
+        (prompt_bytes(9, 1), 2, 0.0),
+        (prompt_bytes(11, 2), 2, 0.0), // admitted mid-decode of the long one
+        (prompt_bytes(7, 3), 2, 0.0),  // reuses the freed slot again
+    ];
+    let (resps, server) = run_continuous(&q, 2, 4, false, &reqs);
+    for (i, (resp, (prompt, max_new, _))) in resps.iter().zip(&reqs).enumerate() {
+        let solo = run_single(&q, DecodePolicy::KvCached, prompt, *max_new);
+        assert_eq!(resp.generated, solo, "req {i}: interleaving changed the output");
+        assert_eq!(resp.seq, i as u64, "req {i}: FIFO admission");
+    }
+    // the short requests rode the second slot while the long one decoded:
+    // they must all complete strictly before it
+    for short in &resps[1..] {
+        assert!(
+            short.latency < resps[0].latency,
+            "short request waited for the long one (no continuous admission?)"
+        );
+    }
+    assert_eq!(server.metrics.requests, 4);
+    assert!(server.metrics.slot_occupancy() > 0.5, "pool mostly busy");
+}
+
+/// Past the eviction boundary the cached slide policy takes over (stride
+/// ctx/4, not the re-forward's slide-by-one): continuous outputs must equal
+/// the static KV-cached path token-for-token there — same caches, same
+/// schedule, different serving loop.
+#[test]
+fn prompt_past_ctx_matches_static_cached_path() {
+    let model = synthetic_model("past_ctx");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = vec![
+        (prompt_bytes(ctx + 9, 0), 8, 0.0),     // evicts during generation
+        (prompt_bytes(2 * ctx, 1), 6, 0.0),     // heavy truncation first
+        (prompt_bytes(ctx - 1, 2), ctx / 2, 0.0), // long generation run
+    ];
+    for chunk in [1usize, ctx / 4, ctx + 5] {
+        let (resps, _) = run_continuous(&q, 2, chunk, false, &reqs);
+        for (i, (resp, (prompt, max_new, _))) in resps.iter().zip(&reqs).enumerate() {
+            let solo = run_single(&q, DecodePolicy::KvCached, prompt, *max_new);
+            assert_eq!(
+                resp.generated, solo,
+                "req {i} (chunk {chunk}): eviction schedule diverged"
+            );
+        }
+    }
+}
+
+/// Sampling streams derive from the admission seq, not the slot index:
+/// the same sampled traffic produces identical outputs whether it shares
+/// one slot or spreads over three.
+#[test]
+fn sampled_outputs_independent_of_slot_placement() {
+    let model = synthetic_model("sampled");
+    let q = quantize(&model);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = (0..4)
+        .map(|i| (prompt_bytes(10 + i, i), 5, 0.9))
+        .collect();
+    let (one_slot, _) = run_continuous(&q, 1, 8, false, &reqs);
+    let (three_slots, _) = run_continuous(&q, 3, 8, false, &reqs);
+    for (i, (a, b)) in one_slot.iter().zip(&three_slots).enumerate() {
+        assert_eq!(
+            a.generated, b.generated,
+            "req {i}: sampled stream depended on slot placement"
+        );
+    }
+}
+
+/// Property (satellite): `prefill_block(chunk=k)` leaves the cache
+/// **byte-identical** to token-at-a-time `prefill` — tokens, K/V rows,
+/// telemetry counters, and the final logits — for k in
+/// {1, 3, ctx/4, ctx, ctx+5}, across random prompt lengths including the
+/// slide+rebuild eviction boundary.
+#[test]
+fn prop_prefill_block_byte_identical_to_token_at_a_time() {
+    let model = synthetic_model("prop_block");
+    let ctx = model.config.ctx;
+    let hf = HostForward::from_dense(model.clone()).unwrap();
+    for_cases(5, 0xB10C, |g| {
+        let n = g.usize_in(1, ctx + 20);
+        let stream: Vec<i32> = (0..n).map(|_| g.rng.below(251) as i32).collect();
+        let mut ref_cache = KvCache::new(&model.config);
+        let ref_logits = hf.prefill(&stream, &mut ref_cache).unwrap();
+        for k in [1usize, 3, ctx / 4, ctx, ctx + 5] {
+            let mut cache = KvCache::new(&model.config);
+            let logits = hf.prefill_block(&stream, &mut cache, k).unwrap();
+            let tag = format!("case {} chunk {k} len {n}", g.case_seed);
+            assert_eq!(cache.tokens(), ref_cache.tokens(), "{tag}: token window");
+            assert_eq!(cache.len(), ref_cache.len(), "{tag}: len");
+            assert_eq!(cache.total_fed(), ref_cache.total_fed(), "{tag}: total_fed");
+            assert_eq!(cache.evictions(), ref_cache.evictions(), "{tag}: evictions");
+            for layer in 0..model.config.n_layer {
+                let (ka, va) = ref_cache.layer(layer);
+                let (kb, vb) = cache.layer(layer);
+                for i in 0..ref_cache.len() {
+                    assert_eq!(ka.row(i), kb.row(i), "{tag}: K layer {layer} row {i}");
+                    assert_eq!(va.row(i), vb.row(i), "{tag}: V layer {layer} row {i}");
+                }
+            }
+            assert_eq!(logits, ref_logits, "{tag}: logits");
+        }
+    });
+}
+
+/// The eviction boundary, explicitly, on the codes-resident backend: the
+/// whole byte-identity property holds when the matmuls run from packed
+/// codes too.
+#[test]
+fn prefill_block_byte_identical_across_eviction_codes_resident() {
+    let model = synthetic_model("codes_block");
+    let ctx = model.config.ctx;
+    let hf = HostForward::from_quantized(quantize(&model)).unwrap();
+    let stream: Vec<i32> = (0..ctx + 5).map(|i| ((i * 37 + 3) % 251) as i32).collect();
+    let mut ref_cache = KvCache::new(&model.config);
+    let ref_logits = hf.prefill(&stream, &mut ref_cache).unwrap();
+    assert!(ref_cache.evictions() >= 1, "stream must cross the boundary");
+    for k in [3usize, ctx / 4, ctx + 5] {
+        let mut cache = KvCache::new(&model.config);
+        let logits = hf.prefill_block(&stream, &mut cache, k).unwrap();
+        assert_eq!(cache.tokens(), ref_cache.tokens(), "chunk {k}");
+        assert_eq!(cache.evictions(), ref_cache.evictions(), "chunk {k}");
+        assert_eq!(logits, ref_logits, "chunk {k}");
+    }
+}
+
+/// Fairness/starvation regression: with 2 slots and one long-running
+/// request, later short requests still complete (strictly before the long
+/// one), admission stays FIFO, and queue waits are monotone in arrival
+/// order. Enqueue times are pinned to one instant — the injectable-clock
+/// trick that makes the wait ordering deterministic without sleeping.
+#[test]
+fn short_requests_never_starve_behind_a_long_one() {
+    let model = synthetic_model("fairness");
+    let q = quantize(&model);
+    let mut server =
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    server.max_slots = 2;
+    server.prefill_chunk = 16;
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    let mut push = |prompt: Vec<u8>, max_new: usize| {
+        let (rtx, rrx) = channel();
+        batcher.push(GenRequest {
+            prompt,
+            max_new,
+            temperature: 0.0,
+            resp: rtx,
+            enqueued: t0, // pinned: queue waits comparable across requests
+            deadline: None,
+        });
+        rxs.push(rrx);
+    };
+    push(prompt_bytes(12, 0), 40); // the long-running request
+    for i in 1..=4 {
+        push(prompt_bytes(8, i), 2); // later, short requests
+    }
+    server.serve_continuous(&mut batcher).unwrap();
+    let resps: Vec<GenResponse> = rxs.iter().map(|r| r.recv().unwrap()).collect();
+
+    assert_eq!(resps[0].generated.len(), 40);
+    for (i, short) in resps[1..].iter().enumerate() {
+        assert_eq!(short.generated.len(), 2, "short {i} completed fully");
+        assert!(
+            short.latency < resps[0].latency,
+            "short {i} starved behind the long request"
+        );
+        // a short request consumes only its own steps (1 prefill chunk that
+        // emits the first token + 1 decode step), not the long one's 40
+        assert!(short.steps <= 3, "short {i} took {} steps", short.steps);
+    }
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.seq, i as u64, "admission order == arrival order");
+    }
+    let waits = server.metrics.queue_waits_us();
+    assert_eq!(waits.len(), 5);
+    for w in waits.windows(2) {
+        assert!(w[1] >= w[0], "queue waits not monotone in arrival order: {waits:?}");
+    }
+    assert_eq!(server.metrics.timeouts, 0);
+}
+
+/// A request whose deadline expired before a slot freed resolves as
+/// `timed_out` without occupying the pool; its batchmates are unaffected.
+#[test]
+fn expired_deadline_times_out_in_the_serving_loop() {
+    let model = synthetic_model("deadline");
+    let q = quantize(&model);
+    let mut server =
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    server.max_slots = 1;
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let (rtx1, rrx1) = channel();
+    batcher.push(GenRequest::new(prompt_bytes(6, 0), 3, 0.0, rtx1));
+    let (rtx2, rrx2) = channel();
+    let mut expired = GenRequest::new(prompt_bytes(6, 1), 3, 0.0, rtx2);
+    expired.deadline = Some(expired.enqueued); // already past
+    batcher.push(expired);
+    let (rtx3, rrx3) = channel();
+    batcher.push(GenRequest::new(prompt_bytes(6, 2), 3, 0.0, rtx3));
+    server.serve_continuous(&mut batcher).unwrap();
+
+    assert_eq!(rrx1.recv().unwrap().generated.len(), 3);
+    let dead = rrx2.recv().unwrap();
+    assert!(dead.timed_out);
+    assert!(dead.generated.is_empty());
+    let live = rrx3.recv().unwrap();
+    assert!(!live.timed_out);
+    assert_eq!(live.generated.len(), 3);
+    assert_eq!(server.metrics.timeouts, 1);
+    assert_eq!(server.metrics.requests, 2, "timed-out request never held a slot");
+}
+
+/// Degenerate requests resolve with zero tokens without wedging the pool.
+#[test]
+fn degenerate_requests_resolve_cleanly() {
+    let model = synthetic_model("degenerate");
+    let q = quantize(&model);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = vec![
+        (Vec::new(), 3, 0.0),          // empty prompt
+        (prompt_bytes(5, 1), 0, 0.0),  // nothing to generate
+        (prompt_bytes(5, 2), 4, 0.0),  // a real one
+    ];
+    let (resps, server) = run_continuous(&q, 2, 8, false, &reqs);
+    assert_eq!(resps[0].generated.len(), 0);
+    assert_eq!(resps[1].generated.len(), 0);
+    assert_eq!(resps[2].generated.len(), 4);
+    assert_eq!(server.metrics.requests, 3);
+}

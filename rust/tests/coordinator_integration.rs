@@ -4,7 +4,7 @@
 //! all — packed codes + shared codebooks are the only resident weights).
 
 use std::sync::mpsc::channel;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
 use pcdvq::config::{build_pcdvq_with, Paths};
@@ -56,25 +56,19 @@ fn host_codes_resident_server_serves_without_artifacts() {
     assert_eq!(server.resident_weight_bits, payload);
 
     let (tx, rx) = channel::<GenRequest>();
-    let batcher = Batcher::new(
+    let mut batcher = Batcher::new(
         rx,
         BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
     );
     let mut rxs = Vec::new();
     for i in 0..3 {
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt: format!("hello {i}").into_bytes(),
-            max_new: 4,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(format!("hello {i}").into_bytes(), 4, 0.0, rtx))
+            .unwrap();
         rxs.push(rrx);
     }
     drop(tx);
-    server.serve(&batcher).unwrap();
+    server.serve(&mut batcher).unwrap();
     for rrx in rxs {
         let resp = rrx.recv().expect("response missing");
         assert_eq!(resp.generated.len(), 4);
@@ -97,13 +91,7 @@ fn back_to_back_requests_match_fresh_servers() {
     let run = |server: &mut Server, prompt: &[u8], temperature: f32| -> Vec<u8> {
         let (rtx, rrx) = channel();
         server
-            .process_batch(vec![GenRequest {
-                prompt: prompt.to_vec(),
-                max_new: 6,
-                temperature,
-                resp: rtx,
-                enqueued: Instant::now(),
-            }])
+            .process_batch(vec![GenRequest::new(prompt.to_vec(), 6, temperature, rtx)])
             .unwrap();
         rrx.recv().unwrap().generated
     };
@@ -129,20 +117,8 @@ fn empty_prompt_resolves_without_killing_the_batch() {
     let (rtx2, rrx2) = channel();
     server
         .process_batch(vec![
-            GenRequest {
-                prompt: Vec::new(),
-                max_new: 3,
-                temperature: 0.0,
-                resp: rtx1,
-                enqueued: Instant::now(),
-            },
-            GenRequest {
-                prompt: b"a real one".to_vec(),
-                max_new: 3,
-                temperature: 0.0,
-                resp: rtx2,
-                enqueued: Instant::now(),
-            },
+            GenRequest::new(Vec::new(), 3, 0.0, rtx1),
+            GenRequest::new(b"a real one".to_vec(), 3, 0.0, rtx2),
         ])
         .unwrap();
     assert_eq!(rrx1.recv().unwrap().generated.len(), 0);
@@ -162,22 +138,21 @@ fn cached_and_reforward_policies_agree_on_greedy() {
             Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
         server.decode = decode;
         let (tx, rx) = channel::<GenRequest>();
-        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let mut rxs = Vec::new();
         for i in 0..2 {
             let (rtx, rrx) = channel();
-            tx.send(GenRequest {
-                prompt: format!("parity check {i}").into_bytes(),
-                max_new: 5,
-                temperature: 0.0,
-                resp: rtx,
-                enqueued: Instant::now(),
-            })
+            tx.send(GenRequest::new(
+                format!("parity check {i}").into_bytes(),
+                5,
+                0.0,
+                rtx,
+            ))
             .unwrap();
             rxs.push(rrx);
         }
         drop(tx);
-        server.serve(&batcher).unwrap();
+        server.serve(&mut batcher).unwrap();
         assert_eq!(
             server.kv_cache_bits() > 0,
             decode == DecodePolicy::KvCached,
@@ -204,18 +179,12 @@ fn host_codes_resident_matches_dense_host_serving() {
     let gen = |weights: ServingWeights| -> Vec<u8> {
         let mut server = Server::new_host(weights).unwrap();
         let (tx, rx) = channel::<GenRequest>();
-        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt: b"the quantization".to_vec(),
-            max_new: 6,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(b"the quantization".to_vec(), 6, 0.0, rtx))
+            .unwrap();
         drop(tx);
-        server.serve(&batcher).unwrap();
+        server.serve(&mut batcher).unwrap();
         rrx.recv().unwrap().generated
     };
     let from_codes = gen(ServingWeights::CodesResident(Box::new(q)));
@@ -257,18 +226,11 @@ fn packed_persistence_round_trips_into_serving() {
         let mut server =
             Server::new_host(ServingWeights::CodesResident(Box::new(qm))).unwrap();
         let (tx, rx) = channel::<GenRequest>();
-        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt: b"roundtrip".to_vec(),
-            max_new: 5,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(b"roundtrip".to_vec(), 5, 0.0, rtx)).unwrap();
         drop(tx);
-        server.serve(&batcher).unwrap();
+        server.serve(&mut batcher).unwrap();
         rrx.recv().unwrap().generated
     };
     assert_eq!(gen(q), gen(loaded), "loaded artifact decodes differently");
@@ -353,25 +315,24 @@ fn server_round_trip_with_batcher() {
         Server::new(&engine, &paths.artifacts, ServingWeights::Fp(model)).unwrap();
 
     let (tx, rx) = channel::<GenRequest>();
-    let batcher = Batcher::new(
+    let mut batcher = Batcher::new(
         rx,
         BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
     );
     let mut rxs = Vec::new();
     for i in 0..5 {
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt: format!("fn main{i}() {{").into_bytes(),
-            max_new: 6,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
+        tx.send(GenRequest::new(
+            format!("fn main{i}() {{").into_bytes(),
+            6,
+            0.0,
+            rtx,
+        ))
         .unwrap();
         rxs.push(rrx);
     }
     drop(tx);
-    server.serve(&batcher).unwrap();
+    server.serve(&mut batcher).unwrap();
     for rrx in rxs {
         let resp = rrx.recv().expect("response missing");
         assert_eq!(resp.generated.len(), 6);
@@ -395,18 +356,12 @@ fn greedy_generation_deterministic() {
         )
         .unwrap();
         let (tx, rx) = channel::<GenRequest>();
-        let batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let (rtx, rrx) = channel();
-        tx.send(GenRequest {
-            prompt: b"the quantization".to_vec(),
-            max_new: 8,
-            temperature: 0.0,
-            resp: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(b"the quantization".to_vec(), 8, 0.0, rtx))
+            .unwrap();
         drop(tx);
-        server.serve(&batcher).unwrap();
+        server.serve(&mut batcher).unwrap();
         outs.push(rrx.recv().unwrap().generated);
     }
     assert_eq!(outs[0], outs[1], "greedy decode must be reproducible");
