@@ -2,7 +2,10 @@
 //!
 //! Melem/s counts weights quantized per second (a 13B-analog layer is
 //! 128x512). Includes the compressed-artifact round trip: quantize → codes,
-//! explicit dequantize, and the fused `matmul_from_codes` serving kernel.
+//! explicit dequantize, and the fused `matmul_from_codes` serving kernel —
+//! plus the `matmul_kernels/*` scenario pitting the scalar reference kernel
+//! against the blocked and blocked+LUT variants on the serving shapes
+//! (DESIGN.md §11; blocked+lut is what `matmul_from_codes` runs).
 //! Measurements land in `BENCH_quant.json` for the perf trajectory (set
 //! `PCDVQ_BENCH_OUT_DIR` to redirect).
 
@@ -45,9 +48,41 @@ fn main() {
         black_box(qw.matmul_from_codes(black_box(&x)));
     });
 
+    // matmul_kernels scenario: scalar reference vs blocked vs blocked+LUT on
+    // the serving shapes (b1 = single-token decode matvec, b8 = batch/chunk
+    // matmul), for both the PCDVQ two-stream artifact and a scalar-grid
+    // artifact. New keys ride BENCH_quant.json into the bench_gate
+    // regression job (records-only until baselined; baselines/README.md).
+    println!("\n== matmul_kernels: scalar vs blocked vs blocked+LUT ==");
+    let x1 = Matrix::from_vec(rng.normal_vec(128), 1, 128);
+    let block = qw.default_block_vecs();
+    for (batch, xb) in [("b1", &x1), ("b8", &x)] {
+        bench.run_elems(&format!("matmul_kernels/pcdvq14 scalar 128x512 {batch}"), elems, || {
+            black_box(qw.matmul_from_codes_scalar(black_box(xb)));
+        });
+        bench.run_elems(&format!("matmul_kernels/pcdvq14 blocked 128x512 {batch}"), elems, || {
+            black_box(qw.matmul_from_codes_blocked(black_box(xb), block, false));
+        });
+        bench.run_elems(
+            &format!("matmul_kernels/pcdvq14 blocked+lut 128x512 {batch}"),
+            elems,
+            || {
+                black_box(qw.matmul_from_codes_blocked(black_box(xb), block, true));
+            },
+        );
+    }
+
     let rtn = Rtn::with_clip_search(2);
     bench.run_elems("rtn2+clip quantize", elems, || {
         black_box(rtn.quantize(black_box(&w)));
+    });
+    let qw_rtn = rtn.quantize(&w);
+    let rtn_block = qw_rtn.default_block_vecs();
+    bench.run_elems("matmul_kernels/rtn2 scalar 128x512 b8", elems, || {
+        black_box(qw_rtn.matmul_from_codes_scalar(black_box(&x)));
+    });
+    bench.run_elems("matmul_kernels/rtn2 blocked+lut 128x512 b8", elems, || {
+        black_box(qw_rtn.matmul_from_codes_blocked(black_box(&x), rtn_block, true));
     });
 
     let quip = QuipLike::build(14, 1);

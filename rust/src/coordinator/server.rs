@@ -10,10 +10,15 @@
 //!   which is what shrinks the per-request weight traffic 8-16x (§4.4);
 //! * **CodesResident** — the host backend ([`HostForward`]): every
 //!   quantizable linear is served straight from its packed code streams via
-//!   [`crate::quant::QuantizedWeight::matmul_from_codes`]. No XLA artifact
-//!   (and no dense weight) is involved at any point; resident weight state
-//!   is exactly codes + shared codebooks, which
-//!   [`crate::paper::verify_codes_resident`] checks against the §4.4 claim.
+//!   the blocked, LUT-driven kernel
+//!   [`crate::quant::QuantizedWeight::matmul_from_codes`] (both decode/
+//!   prefill paths — [`HostForward::decode_step`] matvecs and the
+//!   `(chunk, d)` block-prefill matmuls — run the same kernel; DESIGN.md
+//!   §11). No XLA artifact (and no dense weight) is involved at any point;
+//!   resident weight state is exactly codes + shared codebooks plus their
+//!   rebuildable decode LUTs, which
+//!   [`crate::paper::verify_codes_resident`] checks against the §4.4 claim
+//!   (LUTs counted as derived state, zero artifact bits).
 //!
 //! Two serving loops run on top:
 //!

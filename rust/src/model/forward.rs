@@ -5,9 +5,10 @@
 //! path compute the same function. The point of the host path is the weight
 //! representation: every quantizable linear is either a dense matrix (fp
 //! baseline) or a compressed [`QuantizedWeight`] whose matmul runs straight
-//! off the packed codes ([`QuantizedWeight::matmul_from_codes`]) — the dense
+//! off the packed codes via the blocked, LUT-driven kernel
+//! ([`QuantizedWeight::matmul_from_codes`], DESIGN.md §11) — the dense
 //! weight is **never** materialized, so serving keeps only codes + shared
-//! codebooks resident (DESIGN.md §7).
+//! codebooks (plus their derived decode LUTs) resident (DESIGN.md §7).
 
 use std::collections::BTreeMap;
 
@@ -407,6 +408,13 @@ impl HostForward {
     /// computation (layer norm, linear projections, per-position attention,
     /// GELU) is independent of the other rows in the block, so a block of
     /// `n` tokens produces bit-for-bit the state of `n` single-token calls.
+    ///
+    /// For codes-resident linears each `(block, d)` projection is one
+    /// [`QuantizedWeight::matmul_from_codes`] call, and the blocked kernel
+    /// decodes each code block into its L1 tile **once per chunk** — every
+    /// activation row of the chunk reuses the decoded tile, rather than
+    /// paying a full code-stream decode per row (the dominant block-prefill
+    /// saving; DESIGN.md §11).
     fn advance_block(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Matrix> {
         let cfg = &self.config;
         anyhow::ensure!(

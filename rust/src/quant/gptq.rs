@@ -11,7 +11,9 @@
 //!
 //! Like [`crate::quant::sq`], the artifact is a packed stream of offset
 //! codes + per-column scales (the error feedback happens at quantization
-//! time; the stored representation is plain uniform SQ).
+//! time; the stored representation is plain uniform SQ) — so it serves
+//! through the same [`ScalarDecoder`] grid LUT in the blocked host kernel
+//! ([`crate::quant::QuantizedWeight::matmul_from_codes`]).
 
 use std::sync::Arc;
 

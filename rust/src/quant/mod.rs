@@ -32,9 +32,15 @@
 //!
 //! Dense weights exist only when a caller explicitly asks
 //! ([`QuantizedWeight::dequantize_into`]); serving and eval can instead run
-//! the fused gather → scale → inverse-FWHT kernel
-//! ([`QuantizedWeight::matmul_from_codes`]) so only codes + codebooks stay
-//! resident.
+//! the fused kernel ([`QuantizedWeight::matmul_from_codes`]) so only codes +
+//! codebooks stay resident. Since PR 4 the fused kernel is a **blocked,
+//! LUT-driven GEMM** (DESIGN.md §11): code blocks bulk-unpack
+//! ([`packing::PackedIndices::unpack_range_into`]) and decode once into an
+//! L1-resident tile via a pre-expanded [`DecodeLut`], then FMA against every
+//! activation row as contiguous autovectorized segments — with the original
+//! scalar kernel kept as the bit-identical reference
+//! ([`QuantizedWeight::matmul_from_codes_scalar`],
+//! `tests/kernel_equivalence.rs`).
 
 pub mod assign;
 pub mod error;
@@ -46,7 +52,7 @@ pub mod sq;
 pub mod tune;
 pub mod vq_kmeans;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::hadamard::RandomizedHadamard;
 use crate::quant::packing::PackedStreams;
@@ -78,6 +84,22 @@ pub trait CodeDecoder: Send + Sync {
     /// `out` (length [`Self::k`]), in the code domain (pre-scale, pre-RHT).
     fn decode_into(&self, records: &[u64], out: &mut [f32]);
 
+    /// Pre-expanded decode table for the blocked kernel
+    /// ([`QuantizedWeight::matmul_from_codes`]), or `None` when the joint
+    /// index space is too large to expand (the kernel then falls back to
+    /// per-record [`Self::decode_into`] calls).
+    ///
+    /// Contract: for every record tuple this decoder accepts,
+    /// `lut.row(lut.index(records))` must be **bit-identical** to what
+    /// [`Self::decode_into`] writes for the same tuple — the kernel
+    /// equivalence proptest (`tests/kernel_equivalence.rs`) relies on it.
+    /// The LUT is *derived* state: rebuildable from the shared codebooks,
+    /// never persisted, and counted by neither [`Self::codebook_bits`] nor
+    /// any artifact's payload (see [`dedup_lut_bits`]).
+    fn decode_lut(&self) -> Option<Arc<DecodeLut>> {
+        None
+    }
+
     /// Bits of the shared codebook state behind this decoder (amortized
     /// across all artifacts that reference it).
     fn codebook_bits(&self) -> u64;
@@ -105,6 +127,79 @@ pub enum DecoderPersist<'a> {
     Scalar { bits: u32 },
 }
 
+/// A pre-expanded decode lookup table: one `k`-wide row per joint codebook
+/// entry, addressed by `index(records) = Σ_s records[s] · stride(s)`. The
+/// blocked matmul kernel ([`QuantizedWeight::matmul_from_codes`]) gathers
+/// LUT rows instead of dispatching [`CodeDecoder::decode_into`] per record
+/// — for PCDVQ this folds the magnitude scale into the direction rows once
+/// (`lut[m·2^a + d] = level_m · dir_d`), so the per-record decode is a
+/// single contiguous `k`-float copy.
+///
+/// A `DecodeLut` is **derived state**: it is rebuilt from the shared
+/// codebooks on demand, is never persisted, and contributes zero bits to
+/// both payload and codebook accounting ([`dedup_lut_bits`] reports it
+/// separately; `paper::efficiency` asserts it never leaks into either).
+pub struct DecodeLut {
+    /// `n_entries × k`, row-major — for single-stream table decoders this is
+    /// literally the shared reconstruction table (`Arc`-shared, zero copy).
+    table: Arc<Matrix>,
+    /// Per-stream index multipliers (`index = Σ records[s] · strides[s]`).
+    strides: Vec<usize>,
+}
+
+impl DecodeLut {
+    pub fn new(table: Arc<Matrix>, strides: Vec<usize>) -> Self {
+        assert!(!strides.is_empty(), "decode LUT needs at least one stream stride");
+        DecodeLut { table, strides }
+    }
+
+    /// Vector dimension per row (= the decoder's [`CodeDecoder::k`]).
+    pub fn k(&self) -> usize {
+        self.table.cols()
+    }
+
+    /// Rows in the expanded table (the joint index space).
+    pub fn n_entries(&self) -> usize {
+        self.table.rows()
+    }
+
+    /// Streams this LUT indexes over (= the artifact's stream count).
+    pub fn n_strides(&self) -> usize {
+        self.strides.len()
+    }
+
+    /// Index multiplier of stream `s`.
+    #[inline]
+    pub fn stride(&self, s: usize) -> usize {
+        self.strides[s]
+    }
+
+    /// Joint row index of one record tuple.
+    #[inline]
+    pub fn index(&self, records: &[u64]) -> usize {
+        debug_assert_eq!(records.len(), self.strides.len());
+        records
+            .iter()
+            .zip(&self.strides)
+            .map(|(&r, &st)| r as usize * st)
+            .sum()
+    }
+
+    /// The decoded `k`-vector of joint entry `idx` — bit-identical to what
+    /// [`CodeDecoder::decode_into`] produces for the corresponding records.
+    #[inline]
+    pub fn row(&self, idx: usize) -> &[f32] {
+        self.table.row(idx)
+    }
+
+    /// Bits of this derived table. Reported separately from artifact payload
+    /// and shared-codebook bits — rebuilding the LUT costs compute, not
+    /// stored state.
+    pub fn bits(&self) -> u64 {
+        self.table.len() as u64 * 32
+    }
+}
+
 /// Decoder over a dense reconstruction table: record → table row. Used by
 /// the coupled-VQ baselines (k-means centroids, scaled E8-ball points).
 pub struct TableDecoder {
@@ -114,12 +209,15 @@ pub struct TableDecoder {
     /// two *differently fitted* tables never dedup as one in the measured
     /// codebook accounting even when their label/shape coincide.
     fingerprint: u64,
+    /// Lazily built decode LUT (here just an `Arc` re-share of `table` —
+    /// the table already is its own expansion).
+    lut: OnceLock<Arc<DecodeLut>>,
 }
 
 impl TableDecoder {
     pub fn new(table: Arc<Matrix>, label: impl Into<String>) -> Self {
         let fingerprint = fnv1a_f32(FNV_OFFSET, table.as_slice());
-        TableDecoder { table, label: label.into(), fingerprint }
+        TableDecoder { table, label: label.into(), fingerprint, lut: OnceLock::new() }
     }
 
     pub fn table(&self) -> &Arc<Matrix> {
@@ -147,6 +245,12 @@ impl CodeDecoder for TableDecoder {
     #[inline]
     fn decode_into(&self, records: &[u64], out: &mut [f32]) {
         out.copy_from_slice(self.table.row(records[0] as usize));
+    }
+
+    fn decode_lut(&self) -> Option<Arc<DecodeLut>> {
+        Some(Arc::clone(self.lut.get_or_init(|| {
+            Arc::new(DecodeLut::new(Arc::clone(&self.table), vec![1]))
+        })))
     }
 
     fn codebook_bits(&self) -> u64 {
@@ -347,10 +451,41 @@ impl QuantizedWeight {
     /// returns `(n, cols)`) — the host serving kernel. The dense weight is
     /// never materialized: for RHT artifacts the input is transformed once
     /// per row (`t = (H/√p)·D·x`, one FWHT), then the packed records are
-    /// streamed through the decoder and accumulated (gather → FMA), and
-    /// per-column scales fold in at the end. Bit-equivalent to
-    /// `x · dequantize()` up to f32 rounding.
+    /// decoded and accumulated, and per-column scales fold in at the end.
+    ///
+    /// ## Numerical contract
+    ///
+    /// This is the blocked, LUT-driven kernel
+    /// ([`Self::matmul_from_codes_blocked`] at [`Self::default_block_vecs`],
+    /// LUT on). Its output is **bit-identical** to the scalar reference
+    /// kernel ([`Self::matmul_from_codes_scalar`]) for every block size and
+    /// LUT mode — both walk each output element's contributions in the same
+    /// flat (row-major) order with the same unfused mul-then-add sequence,
+    /// and every [`CodeDecoder::decode_lut`] row is bit-identical to
+    /// [`CodeDecoder::decode_into`]. `tests/kernel_equivalence.rs` pins this
+    /// across the block-size grid {1, 7, default, default+1, n_vectors}.
+    /// Relative to `x · dequantize()` the result agrees to f32 rounding
+    /// (≤ 1e-5 relative — the dense path sums in a different association).
     pub fn matmul_from_codes(&self, x: &Matrix) -> Matrix {
+        self.matmul_from_codes_blocked(x, self.default_block_vecs(), true)
+    }
+
+    /// Default column-block size (in k-vector records) for the blocked
+    /// kernel: chosen so one decoded tile (`block · k` f32) fits in half a
+    /// conventional 32-KiB L1d, leaving the other half for the activation
+    /// row and output segment streaming through it (DESIGN.md §11 records
+    /// the tuning contract).
+    pub fn default_block_vecs(&self) -> usize {
+        const TILE_F32: usize = 4096; // 16 KiB decoded tile
+        (TILE_F32 / self.decoder.k().max(1)).max(1)
+    }
+
+    /// The scalar reference kernel: per-record random access
+    /// ([`PackedStreams::records_into`]) → [`CodeDecoder::decode_into`] →
+    /// element-at-a-time FMA. Kept as the equivalence oracle for
+    /// [`Self::matmul_from_codes_blocked`] (and as the before-side of the
+    /// `matmul_kernels` bench scenario); serving uses the blocked kernel.
+    pub fn matmul_from_codes_scalar(&self, x: &Matrix) -> Matrix {
         assert_eq!(
             x.cols(),
             self.rows,
@@ -359,17 +494,7 @@ impl QuantizedWeight {
             self.rows
         );
         let n = x.rows();
-        // Transform the activations once (the transpose trick: x·D·(H/√p)
-        // per row equals applying the forward RHT to each row vector);
-        // without an RHT the input is used in place — no copy.
-        let transformed = self.rht_seed.map(|seed| {
-            let rht = RandomizedHadamard::new(self.rows, seed);
-            let mut t = x.clone();
-            for i in 0..n {
-                rht.forward_col(t.row_mut(i));
-            }
-            t
-        });
+        let transformed = self.rht_transformed(x);
         let t: &Matrix = transformed.as_ref().unwrap_or(x);
         let k = self.decoder.k();
         let cols = self.cols;
@@ -394,14 +519,140 @@ impl QuantizedWeight {
                 }
             }
         }
-        if !self.scales.is_empty() {
-            for b in 0..n {
-                for (yv, &s) in y.row_mut(b).iter_mut().zip(&self.scales) {
-                    *yv *= s;
+        self.apply_col_scales(&mut y);
+        y
+    }
+
+    /// The blocked kernel core: decode `block_vecs` records at a time into
+    /// an L1-resident tile, then FMA the tile against every activation row
+    /// as contiguous per-weight-row segments.
+    ///
+    /// Per block of records `[i0, i1)`:
+    ///
+    /// 1. **bulk-unpack** each stream's records with one sequential bit
+    ///    cursor ([`packing::PackedIndices::unpack_range_into`]);
+    /// 2. **decode once per block** — gather LUT rows
+    ///    ([`CodeDecoder::decode_lut`], `use_lut = true`) or fall back to
+    ///    per-record [`CodeDecoder::decode_into`] — into a `block·k` tile;
+    ///    a batch of `n` activation rows reuses the tile `n` times, so a
+    ///    block-prefill `(chunk, d)` matmul decodes each code block once
+    ///    per chunk, not once per row;
+    /// 3. **FMA by segments**: the tile covers flat elements
+    ///    `[i0·k, i1·k)` of the row-major weight, i.e. runs of contiguous
+    ///    columns at fixed weight row `r` — each run is one
+    ///    `y[c0..c1] += t[r] · tile[..]` axpy over chunked slices that LLVM
+    ///    autovectorizes (same shape as `assign`'s k = 8 distance kernel;
+    ///    no `unsafe`).
+    ///
+    /// Output is bit-identical to [`Self::matmul_from_codes_scalar`] for
+    /// any `block_vecs ≥ 1` and either LUT mode (see the contract on
+    /// [`Self::matmul_from_codes`]).
+    pub fn matmul_from_codes_blocked(
+        &self,
+        x: &Matrix,
+        block_vecs: usize,
+        use_lut: bool,
+    ) -> Matrix {
+        assert_eq!(
+            x.cols(),
+            self.rows,
+            "matmul_from_codes: x has {} cols, weight has {} rows",
+            x.cols(),
+            self.rows
+        );
+        let n = x.rows();
+        let transformed = self.rht_transformed(x);
+        let t: &Matrix = transformed.as_ref().unwrap_or(x);
+        let k = self.decoder.k();
+        let cols = self.cols;
+        let n_vec = self.codes.len();
+        let n_streams = self.codes.n_streams();
+        let mut y = Matrix::zeros(n, cols);
+        let lut = if use_lut { self.decoder.decode_lut() } else { None };
+        if let Some(l) = &lut {
+            assert_eq!(l.k(), k, "decode LUT width disagrees with decoder k");
+            assert_eq!(
+                l.n_strides(),
+                n_streams,
+                "decode LUT stride count disagrees with stream count"
+            );
+        }
+        let block = block_vecs.clamp(1, n_vec.max(1));
+        let mut tile = vec![0.0f32; block * k];
+        let mut unpacked = vec![vec![0u64; block]; n_streams];
+        let mut rec = vec![0u64; n_streams];
+        let mut i0 = 0usize;
+        while i0 < n_vec {
+            let i1 = (i0 + block).min(n_vec);
+            let bn = i1 - i0;
+            for (s, buf) in unpacked.iter_mut().enumerate() {
+                self.codes.stream(s).unpack_range_into(i0, &mut buf[..bn]);
+            }
+            match &lut {
+                Some(l) => {
+                    for j in 0..bn {
+                        let mut idx = 0usize;
+                        for (s, buf) in unpacked.iter().enumerate() {
+                            idx += buf[j] as usize * l.stride(s);
+                        }
+                        tile[j * k..(j + 1) * k].copy_from_slice(l.row(idx));
+                    }
+                }
+                None => {
+                    for j in 0..bn {
+                        for (r, buf) in rec.iter_mut().zip(&unpacked) {
+                            *r = buf[j];
+                        }
+                        self.decoder.decode_into(&rec, &mut tile[j * k..(j + 1) * k]);
+                    }
                 }
             }
+            // FMA the tile: flat range [i0·k, i1·k) splits into contiguous
+            // column segments at fixed weight row r
+            let f0 = i0 * k;
+            let f1 = i1 * k;
+            for b in 0..n {
+                let trow = t.row(b);
+                let yrow = y.row_mut(b);
+                let mut f = f0;
+                while f < f1 {
+                    let (r, c) = (f / cols, f % cols);
+                    let seg = (cols - c).min(f1 - f);
+                    axpy(&mut yrow[c..c + seg], &tile[f - f0..f - f0 + seg], trow[r]);
+                    f += seg;
+                }
+            }
+            i0 = i1;
         }
+        self.apply_col_scales(&mut y);
         y
+    }
+
+    /// RHT prelude shared by both kernels: transform the activations once
+    /// (the transpose trick — `x·D·(H/√p)` per row equals applying the
+    /// forward RHT to each row vector). `None` for non-RHT artifacts, whose
+    /// input is used in place with no copy.
+    fn rht_transformed(&self, x: &Matrix) -> Option<Matrix> {
+        self.rht_seed.map(|seed| {
+            let rht = RandomizedHadamard::new(self.rows, seed);
+            let mut t = x.clone();
+            for i in 0..t.rows() {
+                rht.forward_col(t.row_mut(i));
+            }
+            t
+        })
+    }
+
+    /// Shared epilogue: fold the per-column code-domain scales into `y`.
+    fn apply_col_scales(&self, y: &mut Matrix) {
+        if self.scales.is_empty() {
+            return;
+        }
+        for b in 0..y.rows() {
+            for (yv, &s) in y.row_mut(b).iter_mut().zip(&self.scales) {
+                *yv *= s;
+            }
+        }
     }
 
     /// Fused matvec: `y = xᵀ · Ŵ` for a single activation vector.
@@ -409,6 +660,27 @@ impl QuantizedWeight {
         assert_eq!(x.len(), self.rows);
         let xm = Matrix::from_vec(x.to_vec(), 1, self.rows);
         self.matmul_from_codes(&xm).into_vec()
+    }
+}
+
+/// `y += a · x` over equal-length slices, in 8-wide chunks with a scalar
+/// tail — the blocked kernel's inner gather-FMA, shaped like
+/// [`assign`]'s k = 8 distance loop so LLVM lowers the chunk body to packed
+/// FMAs without explicit SIMD or `unsafe`. Per element this is exactly one
+/// `mul` then one `add` (no reassociation), which is what keeps the blocked
+/// kernel bit-identical to the scalar reference.
+#[inline]
+fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (yy, xx) in (&mut yc).zip(&mut xc) {
+        for i in 0..8 {
+            yy[i] += a * xx[i];
+        }
+    }
+    for (yy, &xv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yy += a * xv;
     }
 }
 
@@ -425,6 +697,26 @@ where
     for w in weights {
         if seen.insert(w.decoder().spec()) {
             bits += w.codebook_bits();
+        }
+    }
+    bits
+}
+
+/// Sum the **derived** decode-LUT bits behind a set of artifacts,
+/// deduplicated by decoder spec — the mirror of [`dedup_codebook_bits`] for
+/// rebuildable LUT state. Reported separately in the §4.4 accounting
+/// (`paper::efficiency`): a LUT is reconstructed from the shared codebooks
+/// at serve time, so it contributes zero artifact bits and must never be
+/// folded into payload or codebook totals.
+pub fn dedup_lut_bits<'a, I>(weights: I) -> u64
+where
+    I: IntoIterator<Item = &'a QuantizedWeight>,
+{
+    let mut seen = std::collections::BTreeSet::new();
+    let mut bits = 0u64;
+    for w in weights {
+        if seen.insert(w.decoder().spec()) {
+            bits += w.decoder().decode_lut().map_or(0, |l| l.bits());
         }
     }
     bits
@@ -491,6 +783,117 @@ mod tests {
                 "fused {b} vs dense {a}"
             );
         }
+    }
+
+    /// Bit-pattern view for bit-identity assertions (NaN-safe, unlike f32 ==).
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.as_slice().iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn blocked_kernel_bit_identical_to_scalar() {
+        let qw = table_artifact(32, 16, 7, 21);
+        let mut rng = Rng::new(22);
+        let x = Matrix::from_vec(rng.normal_vec(5 * 32), 5, 32);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        let n_vec = qw.n_vectors();
+        for block in [1usize, 7, qw.default_block_vecs(), n_vec] {
+            for lut in [false, true] {
+                let blocked = qw.matmul_from_codes_blocked(&x, block, lut);
+                assert_eq!(bits(&scalar), bits(&blocked), "block={block} lut={lut}");
+            }
+        }
+        // the default entry point is the blocked+LUT kernel
+        assert_eq!(bits(&scalar), bits(&qw.matmul_from_codes(&x)));
+    }
+
+    #[test]
+    fn blocked_kernel_handles_vectors_straddling_rows() {
+        // cols=6, k=4: every second k-vector crosses a weight-row boundary,
+        // so the tile→segment walk must split mid-vector
+        let qw = table_artifact(8, 6, 5, 23);
+        assert_ne!(qw.cols() % qw.decoder().k(), 0);
+        let mut rng = Rng::new(24);
+        let x = Matrix::from_vec(rng.normal_vec(3 * 8), 3, 8);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        for block in [1usize, 2, 3, 12] {
+            for lut in [false, true] {
+                let blocked = qw.matmul_from_codes_blocked(&x, block, lut);
+                assert_eq!(bits(&scalar), bits(&blocked), "block={block} lut={lut}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_decoder_lut_is_the_shared_table() {
+        // the reconstruction table is its own expansion: zero-copy Arc
+        // re-share, rows bit-identical to decode_into, one stride
+        let qw = table_artifact(16, 8, 6, 25);
+        let lut = qw.decoder().decode_lut().expect("table decoders always have a LUT");
+        assert_eq!(lut.n_strides(), 1);
+        assert_eq!(lut.stride(0), 1);
+        assert_eq!(lut.k(), qw.decoder().k());
+        let mut out = vec![0.0f32; lut.k()];
+        for i in 0..lut.n_entries() {
+            qw.decoder().decode_into(&[i as u64], &mut out);
+            assert_eq!(lut.index(&[i as u64]), i);
+            let row: Vec<u32> = lut.row(i).iter().map(|v| v.to_bits()).collect();
+            let exp: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(row, exp, "entry {i}");
+        }
+        // derived state: building the LUT changes no artifact accounting
+        assert_eq!(lut.bits(), qw.codebook_bits(), "table LUT re-shares the codebook");
+        assert_eq!(qw.payload_bits(), qw.codes().payload_bits());
+    }
+
+    #[test]
+    fn one_entry_codebook_degenerate_lut() {
+        // 1-row table: every record decodes to the same vector, LUT has a
+        // single entry, kernels stay bit-identical
+        let k = 4usize;
+        let table = Arc::new(Matrix::from_vec(vec![0.5, -1.0, 2.0, 0.25], 1, k));
+        let codes = PackedStreams::single(PackedIndices::pack(&[0u64; 8], 1));
+        let qw = QuantizedWeight::new(
+            "one-entry",
+            4,
+            8,
+            codes,
+            Arc::new(TableDecoder::new(table, "degenerate")),
+            Vec::new(),
+            None,
+        );
+        let lut = qw.decoder().decode_lut().unwrap();
+        assert_eq!(lut.n_entries(), 1);
+        let mut rng = Rng::new(26);
+        let x = Matrix::from_vec(rng.normal_vec(2 * 4), 2, 4);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        for block in [1usize, 3, 8, 100] {
+            let blocked = qw.matmul_from_codes_blocked(&x, block, true);
+            assert_eq!(bits(&scalar), bits(&blocked), "block={block}");
+        }
+    }
+
+    #[test]
+    fn dedup_lut_bits_counts_shared_decoders_once() {
+        let table = Arc::new(Matrix::from_vec(vec![1.0; 4 * 4], 4, 4));
+        let dec: Arc<dyn CodeDecoder> = Arc::new(TableDecoder::new(table, "shared"));
+        let mk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let records: Vec<u64> = (0..8).map(|_| rng.below(4) as u64).collect();
+            QuantizedWeight::new(
+                "t",
+                4,
+                8,
+                PackedStreams::single(PackedIndices::pack(&records, 2)),
+                Arc::clone(&dec),
+                Vec::new(),
+                None,
+            )
+        };
+        let (a, b) = (mk(1), mk(2));
+        let solo = dedup_lut_bits([&a]);
+        assert_eq!(solo, 4 * 4 * 32);
+        assert_eq!(dedup_lut_bits([&a, &b]), solo, "shared decoder counts once");
     }
 
     #[test]

@@ -3,7 +3,37 @@
 //! Paper §A.3: a quantized vector is "a index of direction and a index of
 //! magnitude" — `a` bits and `b` bits spliced together (Eq. 8). We pack the
 //! `(a+b)`-bit records contiguously into a `u64` stream, LSB-first, which is
-//! also the layout the fused dequant kernel (L1) consumes.
+//! also the layout the fused dequant kernels consume: the Pallas kernel (L1)
+//! and the host blocked kernel
+//! ([`crate::quant::QuantizedWeight::matmul_from_codes`]).
+//!
+//! ## Bit layout
+//!
+//! Record `i` of a `w`-bit stream occupies the bit range `[i·w, (i+1)·w)` of
+//! the stream, counted LSB-first inside each `u64` word; records may
+//! straddle a word boundary (low part in the high bits of `words[j]`, high
+//! part in the low bits of `words[j+1]`):
+//!
+//! ```text
+//! stream bit   0         w         2w        3w        ...        64 | 64+…
+//!              ├─ rec 0 ─┼─ rec 1 ─┼─ rec 2 ─┼─   ...   ──┬─ rec j ─┼────
+//! words[0]     [ lsb ──────────────────────────────────── │ lo bits ] msb
+//! words[1]                                  msb … [ hi bits of rec j ] lsb
+//! ```
+//!
+//! Supported widths are `1..=63`; the tail of the last word is zero padding
+//! (at most 63 bits — the source of the ≤ 8-byte per-stream slack that
+//! [`crate::paper::verify_codes_resident`] allows when it checks resident
+//! bytes against [`PackedStreams::payload_bits`]).
+//!
+//! Access paths, fastest first:
+//!
+//! * [`PackedIndices::unpack_range_into`] — sequential bulk unpack of a
+//!   record range (one running bit cursor); the blocked matmul kernel
+//!   decodes a whole column block per call.
+//! * [`PackedIndices::get`] / [`PackedStreams::records_into`] — random
+//!   access to a single record (tuple); the scalar reference kernel and the
+//!   persistence layer use these.
 
 /// A packed stream of fixed-width bit records.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,6 +88,41 @@ impl PackedIndices {
         v & mask
     }
 
+    /// Unpack records `start .. start + out.len()` into `out`.
+    ///
+    /// Equivalent to `out[j] = self.get(start + j)` but runs a single
+    /// sequential bit cursor over the word array — the bulk-decode path of
+    /// the blocked matmul kernel
+    /// ([`crate::quant::QuantizedWeight::matmul_from_codes`]), which unpacks
+    /// one column block of records per call instead of re-deriving the
+    /// word/offset split per record.
+    pub fn unpack_range_into(&self, start: usize, out: &mut [u64]) {
+        assert!(
+            start + out.len() <= self.len,
+            "unpack_range_into: range {}..{} exceeds {} records",
+            start,
+            start + out.len(),
+            self.len
+        );
+        let width = self.width;
+        let mask = if width == 63 {
+            (1u64 << 63) - 1
+        } else {
+            (1u64 << width) - 1
+        };
+        let mut bitpos = start as u64 * width as u64;
+        for o in out.iter_mut() {
+            let word = (bitpos >> 6) as usize;
+            let off = (bitpos & 63) as u32;
+            let mut v = self.words[word] >> off;
+            if off + width > 64 {
+                v |= self.words[word + 1] << (64 - off);
+            }
+            *o = v & mask;
+            bitpos += width as u64;
+        }
+    }
+
     /// Unpack the whole stream.
     pub fn unpack(&self) -> Vec<u64> {
         (0..self.len).map(|i| self.get(i)).collect()
@@ -87,6 +152,18 @@ impl PackedIndices {
 /// Splitting by stream keeps each index kind contiguously packed, which is
 /// what both the serving artifact (`fwd_q` wants separate `dir_idx`/`mag_idx`
 /// gathers) and the host fused kernel consume.
+///
+/// ## Invariants
+///
+/// * at least one stream, and every stream has the **same record count**
+///   (checked at construction — record `i` of every stream together forms
+///   one decodable tuple for [`crate::quant::CodeDecoder::decode_into`]);
+/// * stream widths are independent (each in `1..=63` per
+///   [`PackedIndices::pack`]);
+/// * record order is the row-major flattening of the weight into
+///   `k`-vectors: record `i` covers flat elements `[i·k, (i+1)·k)` of the
+///   `rows×cols` matrix — the layout contract the blocked kernel's
+///   tile→segment mapping relies on (see `DESIGN.md` §11).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedStreams {
     streams: Vec<PackedIndices>,
@@ -181,6 +258,30 @@ mod tests {
             assert_eq!(packed.unpack(), values, "width={width}");
             assert_eq!(packed.payload_bits(), 1000 * width as u64);
         }
+    }
+
+    #[test]
+    fn unpack_range_matches_random_access() {
+        let mut rng = Rng::new(11);
+        for width in [1u32, 3, 13, 17, 31, 63] {
+            let mask = if width == 63 { (1u64 << 63) - 1 } else { (1u64 << width) - 1 };
+            let values: Vec<u64> = (0..513).map(|_| rng.next_u64() & mask).collect();
+            let packed = PackedIndices::pack(&values, width);
+            // ranges that start mid-word, straddle words, and hit the tail
+            for (start, len) in [(0usize, 513usize), (1, 64), (7, 100), (500, 13), (513, 0)] {
+                let mut out = vec![0u64; len];
+                packed.unpack_range_into(start, &mut out);
+                assert_eq!(out, values[start..start + len], "width={width} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unpack_range_rejects_overrun() {
+        let packed = PackedIndices::pack(&[1, 2, 3], 4);
+        let mut out = vec![0u64; 2];
+        packed.unpack_range_into(2, &mut out);
     }
 
     #[test]

@@ -19,14 +19,23 @@
 //! the two shared DACC codebooks) — storage accounting and the serving
 //! artifact are honest, and dequantization is an explicit, lazy operation.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
 use crate::hadamard::{regularize, RandomizedHadamard};
 use crate::quant::assign::assign_into;
 use crate::quant::packing::{PackedIndices, PackedStreams};
-use crate::quant::{CodeDecoder, QuantizedWeight, Quantizer};
+use crate::quant::{CodeDecoder, DecodeLut, QuantizedWeight, Quantizer};
 use crate::tensor::Matrix;
+
+/// Joint-index cap for the pre-expanded decode LUT: past this many
+/// `(direction, magnitude)` entries the expansion (`entries · k` f32) stops
+/// being cache-friendly and the [`DaccDecoder`]'s
+/// [`CodeDecoder::decode_lut`] declines, sending the blocked kernel to its
+/// per-record fallback. `2^18` covers the paper's largest setting (a = 15,
+/// b = 2 → `2^17` joint entries, a 4-MiB table shared model-wide) with
+/// headroom.
+const MAX_LUT_ENTRIES: usize = 1 << 18;
 
 /// Configuration of the PCDVQ quantizer.
 #[derive(Clone, Debug)]
@@ -64,7 +73,11 @@ impl PcdvqConfig {
 
 /// The DACC decoder: stream 0 gathers a unit direction, stream 1 a
 /// Lloyd-Max magnitude level; the decoded vector is their product. One
-/// decoder instance (and its two codebooks) serves the entire model.
+/// decoder instance (and its two codebooks) serves the entire model — and
+/// so does its lazily expanded direction×magnitude decode LUT
+/// ([`CodeDecoder::decode_lut`]), which the blocked host kernel
+/// ([`QuantizedWeight::matmul_from_codes`]) gathers from instead of
+/// multiplying per record.
 pub struct DaccDecoder {
     pub dir: Arc<DirectionCodebook>,
     pub mag: Arc<MagnitudeCodebook>,
@@ -72,13 +85,18 @@ pub struct DaccDecoder {
     /// [`CodeDecoder::spec`], so differently-built codebook pairs (e.g.
     /// different seeds) never dedup as one in the measured accounting.
     fingerprint: u64,
+    /// Lazily pre-expanded direction×magnitude product table for the
+    /// blocked kernel — derived state, built at most once per decoder (and
+    /// the decoder is shared model-wide, so once per model). See
+    /// [`CodeDecoder::decode_lut`].
+    lut: OnceLock<Arc<DecodeLut>>,
 }
 
 impl DaccDecoder {
     pub fn new(dir: Arc<DirectionCodebook>, mag: Arc<MagnitudeCodebook>) -> Self {
         let h = crate::quant::fnv1a_f32(crate::quant::FNV_OFFSET, dir.vectors.as_slice());
         let h = crate::quant::fnv1a_f32(h, &mag.levels);
-        DaccDecoder { dir, mag, fingerprint: h }
+        DaccDecoder { dir, mag, fingerprint: h, lut: OnceLock::new() }
     }
 }
 
@@ -94,6 +112,38 @@ impl CodeDecoder for DaccDecoder {
         for (o, &dj) in out.iter_mut().zip(self.dir.vectors.row(d)) {
             *o = r * dj;
         }
+    }
+
+    /// The direction×magnitude product expanded once, magnitude scale
+    /// folded in: `lut[m · 2^a + d] = level_m · dir_d`, so the blocked
+    /// kernel's per-record decode is one contiguous k-float gather instead
+    /// of a dispatch + scalar multiply. Each entry uses the same
+    /// `level * dir_j` f32 multiply as [`CodeDecoder::decode_into`], so LUT
+    /// rows are bit-identical to the scalar decode.
+    fn decode_lut(&self) -> Option<Arc<DecodeLut>> {
+        let nd = self.dir.len();
+        let nm = self.mag.len();
+        match nd.checked_mul(nm) {
+            Some(n) if n <= MAX_LUT_ENTRIES => {}
+            _ => return None,
+        }
+        Some(Arc::clone(self.lut.get_or_init(|| {
+            let k = self.dir.dim();
+            let mut data = vec![0.0f32; nd * nm * k];
+            for m in 0..nm {
+                let level = self.mag.level(m as u32);
+                for d in 0..nd {
+                    let dst = &mut data[(m * nd + d) * k..(m * nd + d + 1) * k];
+                    for (o, &dj) in dst.iter_mut().zip(self.dir.vectors.row(d)) {
+                        *o = level * dj;
+                    }
+                }
+            }
+            Arc::new(DecodeLut::new(
+                Arc::new(Matrix::from_vec(data, nd * nm, k)),
+                vec![1, nd],
+            ))
+        })))
     }
 
     fn codebook_bits(&self) -> u64 {
@@ -386,6 +436,66 @@ mod tests {
                 (a - b).abs() <= 1e-5 * (1.0 + a.abs().max(b.abs())),
                 "fused {b} vs dense {a}"
             );
+        }
+    }
+
+    #[test]
+    fn dacc_lut_rows_bit_identical_to_decode_into() {
+        let q = small_pcdvq(6, 2);
+        let dec = q.decoder();
+        let lut = dec.decode_lut().expect("small DACC books expand");
+        let (nd, nm, k) = (q.dir.len(), q.mag.len(), q.cfg.k);
+        assert_eq!(lut.n_entries(), nd * nm);
+        assert_eq!((lut.k(), lut.n_strides()), (k, 2));
+        assert_eq!((lut.stride(0), lut.stride(1)), (1, nd));
+        let mut out = vec![0.0f32; k];
+        for m in 0..nm as u64 {
+            for d in 0..nd as u64 {
+                let rec = [d, m];
+                dec.decode_into(&rec, &mut out);
+                let row: Vec<u32> = lut.row(lut.index(&rec)).iter().map(|v| v.to_bits()).collect();
+                let exp: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(row, exp, "d={d} m={m}");
+            }
+        }
+        // the LUT is derived: shared-codebook accounting is unchanged by it
+        assert_eq!(
+            dec.codebook_bits(),
+            (nd * k * 32 + nm * 32) as u64,
+            "codebook bits must not absorb the LUT"
+        );
+    }
+
+    #[test]
+    fn dacc_lut_declines_oversized_joint_space() {
+        // a=14, b=2 expands (2^16 entries); only past MAX_LUT_ENTRIES does
+        // the decoder decline — pin the boundary arithmetic
+        let (nd, nm) = (1usize << 14, 1usize << 2);
+        assert!(nd * nm <= MAX_LUT_ENTRIES, "the paper's a=14 setting must expand");
+        let nd_big = 1usize << 17;
+        assert!(nd_big * nm > MAX_LUT_ENTRIES, "past the cap the decoder declines");
+    }
+
+    #[test]
+    fn blocked_kernel_bit_identical_on_rht_path() {
+        // PCDVQ artifacts carry an RHT seed: both kernels share the same
+        // activation transform, so outputs stay bit-identical
+        let w = gaussian_weight(64, 32, 14);
+        let q = small_pcdvq(7, 2);
+        let qw = q.quantize_full(&w);
+        assert!(qw.rht_seed().is_some());
+        let mut rng = Rng::new(15);
+        for n in [1usize, 3] {
+            let x = Matrix::from_vec(rng.normal_vec(n * 64), n, 64);
+            let scalar = qw.matmul_from_codes_scalar(&x);
+            for block in [1usize, 7, qw.default_block_vecs(), qw.n_vectors()] {
+                for lut in [false, true] {
+                    let blocked = qw.matmul_from_codes_blocked(&x, block, lut);
+                    let a: Vec<u32> = scalar.as_slice().iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> = blocked.as_slice().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, b, "n={n} block={block} lut={lut}");
+                }
+            }
         }
     }
 }

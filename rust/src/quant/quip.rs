@@ -17,6 +17,11 @@
 //!   — QuIP#'s E8P ball construction plays the same role). Out-of-codebook
 //!   decodes fall back to the most-probable in-codebook neighbour by local
 //!   search over sign flips, then a linear scan (rare, tails only).
+//! * Serving: artifacts decode through a [`TableDecoder`] over the
+//!   materialized ball, so the blocked host kernel
+//!   ([`crate::quant::QuantizedWeight::matmul_from_codes`]) gathers straight
+//!   from the shared table as its decode LUT
+//!   ([`crate::quant::CodeDecoder::decode_lut`]) — zero extra derived state.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -9,30 +9,40 @@
 //! of `bits`-wide offset codes (`code = q − qmin`, one per weight, k = 1)
 //! plus one f32 scale per column; dequantization is `(code + qmin) · s_j`.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::quant::packing::{PackedIndices, PackedStreams};
-use crate::quant::{CodeDecoder, QuantizedWeight, Quantizer};
+use crate::quant::{CodeDecoder, DecodeLut, QuantizedWeight, Quantizer};
 use crate::tensor::Matrix;
 
 /// Decoder for symmetric uniform scalar codes: record → signed level
 /// `record + qmin` (per-column scales fold in via the artifact's scale
-/// vector). Stateless — the "codebook" is the integer grid.
+/// vector). Stateless — the "codebook" is the integer grid (so its decode
+/// LUT for the blocked kernel
+/// ([`crate::quant::QuantizedWeight::matmul_from_codes`]) is just the grid
+/// materialized, `2^bits` f32 levels).
 pub struct ScalarDecoder {
     bits: u32,
     qmin: i64,
+    /// Lazily materialized integer grid for [`CodeDecoder::decode_lut`] —
+    /// derived state, zero artifact bits.
+    lut: OnceLock<Arc<DecodeLut>>,
 }
 
 impl ScalarDecoder {
     pub fn new(bits: u32) -> Self {
         assert!(bits >= 1 && bits < 32);
-        ScalarDecoder { bits, qmin: -(1i64 << (bits - 1)) }
+        ScalarDecoder { bits, qmin: -(1i64 << (bits - 1)), lut: OnceLock::new() }
     }
 
     pub fn bits(&self) -> u32 {
         self.bits
     }
 }
+
+/// Widest scalar grid worth materializing as a LUT (`2^16` f32 = 256 KiB);
+/// wider grids fall back to per-record decode in the blocked kernel.
+const MAX_LUT_BITS: u32 = 16;
 
 impl CodeDecoder for ScalarDecoder {
     fn k(&self) -> usize {
@@ -42,6 +52,19 @@ impl CodeDecoder for ScalarDecoder {
     #[inline]
     fn decode_into(&self, records: &[u64], out: &mut [f32]) {
         out[0] = (records[0] as i64 + self.qmin) as f32;
+    }
+
+    fn decode_lut(&self) -> Option<Arc<DecodeLut>> {
+        if self.bits > MAX_LUT_BITS {
+            return None;
+        }
+        Some(Arc::clone(self.lut.get_or_init(|| {
+            let n = 1usize << self.bits;
+            // the same `record + qmin → f32` conversion as decode_into, so
+            // LUT entries are bit-identical to the scalar decode
+            let data: Vec<f32> = (0..n).map(|i| (i as i64 + self.qmin) as f32).collect();
+            Arc::new(DecodeLut::new(Arc::new(Matrix::from_vec(data, n, 1)), vec![1]))
+        })))
     }
 
     fn codebook_bits(&self) -> u64 {
@@ -208,6 +231,48 @@ mod tests {
         assert_eq!(q.payload_bits(), 64 * 8 * 2 + 8 * 32);
         // scalar methods reference no shared codebook
         assert_eq!(q.codebook_bits(), 0);
+    }
+
+    #[test]
+    fn scalar_lut_bit_identical_to_decode_into() {
+        for bits in [1u32, 2, 3, 8] {
+            let dec = ScalarDecoder::new(bits);
+            let lut = dec.decode_lut().expect("narrow grids expand");
+            assert_eq!(lut.n_entries(), 1 << bits);
+            assert_eq!((lut.k(), lut.n_strides()), (1, 1));
+            let mut out = [0.0f32];
+            for r in 0..(1u64 << bits) {
+                dec.decode_into(&[r], &mut out);
+                assert_eq!(
+                    lut.row(lut.index(&[r]))[0].to_bits(),
+                    out[0].to_bits(),
+                    "bits={bits} rec={r}"
+                );
+            }
+            // the grid is stateless: LUT stays derived, codebook bits stay 0
+            assert_eq!(dec.codebook_bits(), 0);
+        }
+        // past the cap the decoder declines and the kernel falls back
+        assert!(ScalarDecoder::new(MAX_LUT_BITS + 1).decode_lut().is_none());
+    }
+
+    #[test]
+    fn blocked_kernel_bit_identical_for_scalar_codes() {
+        // k = 1: every "vector" is a single element, the hardest shape for
+        // the tile→segment walk (segments of length cols)
+        let w = gaussian(32, 12, 7);
+        let qw = Rtn::new(3).quantize(&w);
+        let mut rng = Rng::new(8);
+        let x = Matrix::from_vec(rng.normal_vec(2 * 32), 2, 32);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        for block in [1usize, 7, qw.default_block_vecs(), qw.n_vectors()] {
+            for lut in [false, true] {
+                let blocked = qw.matmul_from_codes_blocked(&x, block, lut);
+                let a: Vec<u32> = scalar.as_slice().iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = blocked.as_slice().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "block={block} lut={lut}");
+            }
+        }
     }
 
     #[test]

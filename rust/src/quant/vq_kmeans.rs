@@ -9,7 +9,10 @@
 //! Centroids are trained per-quantizer on a subsample of the model's vectors
 //! (mini-batch Lloyd iterations), then shared across all matrices quantized
 //! by this instance — mirroring VPTQ's per-model codebooks while staying
-//! tractable on one core.
+//! tractable on one core. Serving gathers straight from the shared centroid
+//! table: it doubles as the decode LUT of the blocked host kernel
+//! ([`crate::quant::QuantizedWeight::matmul_from_codes`], via
+//! [`crate::quant::CodeDecoder::decode_lut`]).
 
 use std::sync::Arc;
 

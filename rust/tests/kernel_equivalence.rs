@@ -1,0 +1,163 @@
+//! Kernel-equivalence suite (its own named CI step): the blocked,
+//! LUT-driven `matmul_from_codes` must be **bit-identical** to the scalar
+//! reference kernel (`matmul_from_codes_scalar`) for every decoder family,
+//! every block size in the grid {1, 7, default, default+1, n_vectors}, and
+//! both LUT modes — the equivalence guarantee DESIGN.md §11 documents.
+//!
+//! Every failure prints a `PCDVQ_PROP_SEED` that reproduces the exact case.
+
+use std::sync::Arc;
+
+use pcdvq::proptest::{for_cases, tiny_pcdvq};
+use pcdvq::quant::packing::{PackedIndices, PackedStreams};
+use pcdvq::quant::sq::Rtn;
+use pcdvq::quant::vq_kmeans::KMeansVq;
+use pcdvq::quant::{QuantizedWeight, Quantizer, TableDecoder};
+use pcdvq::rng::Rng;
+use pcdvq::tensor::Matrix;
+
+/// Bit-pattern view of a matrix, for exact (NaN-safe) equality.
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Assert blocked ≡ scalar across the block-size grid, with and without the
+/// decode LUT, plus the default entry point.
+fn assert_kernels_equal(qw: &QuantizedWeight, x: &Matrix, ctx: &str) {
+    let scalar = qw.matmul_from_codes_scalar(x);
+    let reference = bits(&scalar);
+    let default_block = qw.default_block_vecs();
+    let n_vec = qw.n_vectors().max(1);
+    for block in [1usize, 7, default_block, default_block + 1, n_vec] {
+        for lut in [false, true] {
+            let blocked = qw.matmul_from_codes_blocked(x, block, lut);
+            assert_eq!(
+                reference,
+                bits(&blocked),
+                "{ctx}: block={block} lut={lut} diverged from scalar kernel"
+            );
+        }
+    }
+    assert_eq!(
+        reference,
+        bits(&qw.matmul_from_codes(x)),
+        "{ctx}: default kernel diverged from scalar kernel"
+    );
+}
+
+/// Random table-decoder artifact with arbitrary `k` / shape (the generic
+/// coupled-VQ shape).
+fn table_artifact(rows: usize, cols: usize, k: usize, bits_w: u32, seed: u64) -> QuantizedWeight {
+    assert_eq!(rows * cols % k, 0);
+    let n_entries = 1usize << bits_w;
+    let mut rng = Rng::new(seed);
+    let table = Arc::new(Matrix::from_vec(rng.normal_vec(n_entries * k), n_entries, k));
+    let n_vec = rows * cols / k;
+    let records: Vec<u64> = (0..n_vec).map(|_| rng.below(n_entries) as u64).collect();
+    QuantizedWeight::new(
+        "test-table",
+        rows,
+        cols,
+        PackedStreams::single(PackedIndices::pack(&records, bits_w)),
+        Arc::new(TableDecoder::new(table, "equiv")),
+        Vec::new(),
+        None,
+    )
+}
+
+#[test]
+fn pcdvq_rht_seeded_artifact() {
+    // the RHT-seeded two-stream path: both kernels share the activation
+    // transform, the DACC LUT folds magnitude into direction rows
+    let q = tiny_pcdvq();
+    let mut rng = Rng::new(0xE0);
+    let w = Matrix::from_vec(rng.normal_vec(64 * 32), 64, 32);
+    let qw = q.quantize_full(&w);
+    assert!(qw.rht_seed().is_some(), "PCDVQ artifacts are RHT-seeded");
+    for n in [1usize, 2, 8] {
+        let x = Matrix::from_vec(rng.normal_vec(n * 64), n, 64);
+        assert_kernels_equal(&qw, &x, &format!("pcdvq rht n={n}"));
+    }
+}
+
+#[test]
+fn scalar_grid_artifact() {
+    // k = 1 offset codes with per-column scales (rtn/gptq family)
+    let mut rng = Rng::new(0xE1);
+    let w = Matrix::from_vec(rng.normal_vec(32 * 24), 32, 24);
+    let qw = Rtn::with_clip_search(2).quantize(&w);
+    let x = Matrix::from_vec(rng.normal_vec(4 * 32), 4, 32);
+    assert_kernels_equal(&qw, &x, "rtn2");
+}
+
+#[test]
+fn kmeans_table_artifact() {
+    // coupled-VQ centroid table doubling as the decode LUT
+    let mut rng = Rng::new(0xE2);
+    let w = Matrix::from_vec(rng.normal_vec(32 * 32), 32, 32);
+    let mut km = KMeansVq::new(8, 6);
+    km.fit_on_weight(&w);
+    let qw = km.quantize(&w);
+    let x = Matrix::from_vec(rng.normal_vec(3 * 32), 3, 32);
+    assert_kernels_equal(&qw, &x, "kmeans");
+}
+
+#[test]
+fn vectors_straddle_weight_rows() {
+    // cols not divisible by k: the tile→segment walk must split a decoded
+    // vector across two weight rows exactly as the scalar div/mod does
+    let mut rng = Rng::new(0xE3);
+    for (rows, cols, k) in [(8usize, 6usize, 4usize), (16, 10, 4), (6, 9, 6)] {
+        assert_ne!(cols % k, 0, "shape must straddle");
+        let qw = table_artifact(rows, cols, k, 5, 0xE30 + rows as u64);
+        let x = Matrix::from_vec(rng.normal_vec(2 * rows), 2, rows);
+        assert_kernels_equal(&qw, &x, &format!("straddle {rows}x{cols} k={k}"));
+    }
+}
+
+#[test]
+fn one_entry_codebook() {
+    // degenerate 1-entry LUT: every record decodes identically
+    let k = 4usize;
+    let table = Arc::new(Matrix::from_vec(vec![1.5, -0.5, 0.0, 2.0], 1, k));
+    let qw = QuantizedWeight::new(
+        "one-entry",
+        4,
+        8,
+        PackedStreams::single(PackedIndices::pack(&[0u64; 8], 1)),
+        Arc::new(TableDecoder::new(table, "one")),
+        vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0],
+        None,
+    );
+    let mut rng = Rng::new(0xE4);
+    let x = Matrix::from_vec(rng.normal_vec(3 * 4), 3, 4);
+    assert_kernels_equal(&qw, &x, "one-entry");
+}
+
+#[test]
+fn prop_blocked_equals_scalar_random_shapes() {
+    // random shapes, batch sizes, widths and block sizes — the full grid,
+    // seeded + reproducible
+    for_cases(12, 0xE5, |g| {
+        let k = [1usize, 2, 4, 8][g.usize_in(0, 3)];
+        let rows = g.usize_in(1, 6) * k;
+        let cols = g.usize_in(1, 24);
+        let bits_w = g.usize_in(1, 9) as u32;
+        // rows*cols must divide by k: rows already does
+        let qw = table_artifact(rows, cols, k, bits_w, g.case_seed);
+        let n = g.usize_in(1, 5);
+        let x = g.matrix(n, rows, 0.02);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        let reference = bits(&scalar);
+        let block = g.usize_in(1, qw.n_vectors().max(1) + 3);
+        for lut in [false, true] {
+            let blocked = qw.matmul_from_codes_blocked(&x, block, lut);
+            assert_eq!(
+                reference,
+                bits(&blocked),
+                "case={} {rows}x{cols} k={k} n={n} block={block} lut={lut}",
+                g.case_seed
+            );
+        }
+    });
+}
