@@ -25,9 +25,12 @@ fn unit_rows(n: usize, k: usize, seed: u64) -> Matrix {
 
 fn main() {
     let mut bench = Bench::new();
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // PALLAS_THREADS (exec::default_threads) rather than raw hw threads, so
+    // CI's pinned thread count makes the "parallel" keys comparable across
+    // runner generations with different core counts
+    let threads = pcdvq::exec::default_threads();
     println!("== assignment (cosine argmax over the direction codebook) ==");
-    println!("== serial vs parallel ({threads} hw threads) ==");
+    println!("== serial vs parallel ({threads} pool threads) ==");
 
     for &(n_vec, cb_bits) in &[(16384usize, 10u32), (16384, 14), (4096, 15)] {
         let n_cb = 1usize << cb_bits;

@@ -72,6 +72,22 @@ fn main() {
         );
     }
 
+    // thread-scaling keys: the parallel column-strip fan-out of the same
+    // kernel at explicit worker counts (t1 = the single-thread kernel).
+    // Output is bit-identical at every count; median_ns should fall as
+    // threads rise on a multi-core runner (records-only until baselined —
+    // see baselines/README.md for the capture sanity checks).
+    println!("\n== matmul_kernels: thread scaling (blocked+LUT, b8) ==");
+    for threads in [1usize, 2, 4] {
+        bench.run_elems(
+            &format!("matmul_kernels/pcdvq14 blocked+lut 128x512 b8 t{threads}"),
+            elems,
+            || {
+                black_box(qw.matmul_from_codes_threaded(black_box(&x), block, true, threads));
+            },
+        );
+    }
+
     let rtn = Rtn::with_clip_search(2);
     bench.run_elems("rtn2+clip quantize", elems, || {
         black_box(rtn.quantize(black_box(&w)));

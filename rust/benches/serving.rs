@@ -1,11 +1,18 @@
 //! Bench: end-to-end serving throughput — KV-cached incremental decode vs
-//! windowed re-forward on the host codes-resident backend, plus the §4.4
-//! XLA comparison when `make artifacts` has run.
+//! windowed re-forward on the host codes-resident backend, continuous vs
+//! static batching, the layer-sharded pipeline vs a single node, plus the
+//! §4.4 XLA comparison when `make artifacts` has run.
 //!
 //! Needs **no** artifacts: without `gpt-m.pct` it builds a synthetic tinygpt
 //! (the same shape the coordinator integration tests use), so CI gets real
 //! numbers. Writes `BENCH_serving.json` for the perf trajectory — the
 //! `bench-regression` CI job gates on it against `baselines/`.
+//!
+//! Bench hygiene: every scenario runs one explicitly **discarded warm-up
+//! iteration** before measurement, so first-touch allocation (slot caches,
+//! decode LUTs, pipeline channels) lands outside the timed region and
+//! thread-scaling comparisons aren't skewed by whichever scenario ran
+//! first.
 
 use std::sync::mpsc::channel;
 use std::time::Instant;
@@ -89,6 +96,7 @@ fn main() {
     let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
 
     server.decode = DecodePolicy::KvCached;
+    drive(&mut server, &prompts, max_new); // discarded warm-up iteration
     let cached = bench
         .run_elems("serve_host_kv_cached_tok", toks_per_drive, || {
             drive(&mut server, &prompts, max_new)
@@ -96,6 +104,7 @@ fn main() {
         .clone();
 
     server.decode = DecodePolicy::Reforward;
+    drive(&mut server, &prompts, max_new); // discarded warm-up iteration
     let reforward = bench
         .run_elems("serve_host_reforward_tok", toks_per_drive, || {
             drive(&mut server, &prompts, max_new)
@@ -107,6 +116,7 @@ fn main() {
     let hf = pcdvq::model::HostForward::from_quantized(q.clone()).unwrap();
     let mut cache = KvCache::new(&model.config);
     hf.prefill(&vec![7i32; ctx - 1], &mut cache).unwrap();
+    let _ = black_box(hf.decode_step(11, &mut cache).unwrap()); // warm-up
     let step = bench
         .run("decode_step_steady_state", || {
             let _ = black_box(hf.decode_step(11, &mut cache).unwrap());
@@ -150,6 +160,7 @@ fn main() {
         s
     };
     let mut cont_server = mk_host(&q);
+    drive_mixed(&mut cont_server, &mixed, BatcherConfig::default(), true); // warm-up
     let continuous = bench
         .run_elems("continuous_vs_static/continuous_tok", mixed_toks, || {
             drive_mixed(&mut cont_server, &mixed, BatcherConfig::default(), true)
@@ -158,6 +169,7 @@ fn main() {
     let mut stat_server = mk_host(&q);
     let static_cfg =
         BatcherConfig { max_batch: 2, max_wait: std::time::Duration::from_millis(1) };
+    drive_mixed(&mut stat_server, &mixed, static_cfg, false); // warm-up
     let static_m = bench
         .run_elems("continuous_vs_static/static_tok", mixed_toks, || {
             drive_mixed(&mut stat_server, &mixed, static_cfg, false)
@@ -173,6 +185,54 @@ fn main() {
     println!(
         "static batches:     {stat_tps:>10.1} tok/s   ({:.2}x continuous/static)",
         cont_tps / stat_tps.max(1e-9)
+    );
+
+    // --- layer-sharded pipeline vs single node ---
+    // Independent block-forward jobs stream through a 2-node shard chain
+    // (node 1 runs job j while node 2 finishes j-1) vs the same jobs
+    // sequentially on one HostForward. Outputs are bit-identical; the
+    // pipeline's win is wall-clock overlap across cores.
+    println!("== sharded vs single-node block forwards (2 nodes, pipelined) ==");
+    let sharded = pcdvq::coordinator::ShardedForward::new(&q, 2).unwrap();
+    for (i, nb) in sharded.node_bits().iter().enumerate() {
+        println!(
+            "node {i} (layers {:?}): payload {:.1} KiB + codebooks {:.1} KiB",
+            nb.layers,
+            nb.payload_bits as f64 / 8.0 / 1024.0,
+            nb.codebook_bits as f64 / 8.0 / 1024.0
+        );
+    }
+    let job_t = (ctx / 2).max(1);
+    let jobs: Vec<(Vec<i32>, usize, usize)> = (0..6)
+        .map(|j| {
+            let toks: Vec<i32> =
+                (0..job_t).map(|i| ((i * 7 + j * 31 + 1) % 251) as i32).collect();
+            (toks, 1usize, job_t)
+        })
+        .collect();
+    let job_toks = (jobs.len() * job_t) as u64;
+    black_box(sharded.forward_pipelined(&jobs).unwrap()); // warm-up
+    let piped = bench
+        .run_elems("sharded_vs_single/sharded_pipelined_2n_tok", job_toks, || {
+            black_box(sharded.forward_pipelined(&jobs).unwrap());
+        })
+        .clone();
+    for (toks, b, t) in &jobs {
+        black_box(hf.forward(toks, *b, *t).unwrap()); // warm-up
+    }
+    let single = bench
+        .run_elems("sharded_vs_single/single_node_tok", job_toks, || {
+            for (toks, b, t) in &jobs {
+                black_box(hf.forward(toks, *b, *t).unwrap());
+            }
+        })
+        .clone();
+    let piped_tps = tok_s(piped.median_ns, job_toks as f64);
+    let single_tps = tok_s(single.median_ns, job_toks as f64);
+    println!(
+        "sharded pipeline:   {piped_tps:>10.1} tok/s\nsingle node:        \
+         {single_tps:>10.1} tok/s   ({:.2}x sharded/single)",
+        piped_tps / single_tps.max(1e-9)
     );
 
     bench.write_json("BENCH_serving.json").unwrap();

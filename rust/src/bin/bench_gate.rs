@@ -9,12 +9,18 @@
 //! ```text
 //! bench_gate --files BENCH_assign.json,BENCH_quant.json,BENCH_serving.json \
 //!            [--baseline-dir ../baselines] [--current-dir .] \
-//!            [--tolerance 1.3] [--summary out.md]
+//!            [--tolerance 1.3] [--summary out.md] [--capture]
 //! ```
 //!
 //! Baseline files that are absent or empty (`[]`) record the trend without
 //! gating — the bootstrap state until a toolchain-equipped runner populates
-//! `baselines/` (procedure: DESIGN.md §10).
+//! `baselines/` (procedure: `baselines/README.md`).
+//!
+//! `--capture` arms the gate instead of running it: every current
+//! `BENCH_*.json` is validated (parseable, non-empty) and, only if all
+//! pass, copied over its baseline — a bad file aborts before any baseline
+//! is touched. A CI runner can thus rewrite `baselines/` from a fresh run
+//! in one step and the diff lands in the PR that refreshes them.
 
 use std::path::{Path, PathBuf};
 use std::process::exit;
@@ -27,6 +33,7 @@ struct Opts {
     current_dir: PathBuf,
     tolerance: f64,
     summary: Option<PathBuf>,
+    capture: bool,
 }
 
 fn parse_opts() -> Result<Opts, String> {
@@ -36,6 +43,7 @@ fn parse_opts() -> Result<Opts, String> {
         current_dir: PathBuf::from("."),
         tolerance: 1.3,
         summary: None,
+        capture: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -53,6 +61,7 @@ fn parse_opts() -> Result<Opts, String> {
                     .map_err(|e| format!("--tolerance: {e}"))?
             }
             "--summary" => opts.summary = Some(PathBuf::from(val("summary")?)),
+            "--capture" => opts.capture = true,
             other => return Err(format!("unknown flag '{other}'")),
         }
     }
@@ -60,6 +69,48 @@ fn parse_opts() -> Result<Opts, String> {
         return Err("--files is required (comma-separated BENCH_*.json names)".into());
     }
     Ok(opts)
+}
+
+/// `--capture`: validate **every** current trajectory first (parseable and
+/// non-empty — an empty capture would silently disarm the gate it is meant
+/// to arm), and only if all pass copy them over their baselines. Any bad
+/// file aborts before a single baseline is touched, so a failed capture
+/// never leaves `baselines/` half-refreshed.
+fn capture(opts: &Opts) -> i32 {
+    let mut validated = Vec::with_capacity(opts.files.len());
+    let mut code = 0;
+    for file in &opts.files {
+        let src = opts.current_dir.join(file);
+        match load(&src) {
+            Ok(entries) if !entries.is_empty() => validated.push((file, src, entries.len())),
+            Ok(_) => {
+                eprintln!(
+                    "bench_gate --capture: {} is empty — run the bench first",
+                    src.display()
+                );
+                code = 1;
+            }
+            Err(e) => {
+                eprintln!("bench_gate --capture: {e}");
+                code = 1;
+            }
+        }
+    }
+    if code != 0 {
+        eprintln!("bench_gate --capture: nothing captured (baselines unchanged)");
+        return code;
+    }
+    for (file, src, n) in validated {
+        let dst = opts.baseline_dir.join(file);
+        match std::fs::copy(&src, &dst) {
+            Ok(_) => println!("captured {file}: {n} benchmarks -> {}", dst.display()),
+            Err(e) => {
+                eprintln!("bench_gate --capture: copying {file}: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
 }
 
 fn load(path: &Path) -> Result<Vec<pcdvq::bench::BenchEntry>, String> {
@@ -76,6 +127,9 @@ fn main() {
             exit(2);
         }
     };
+    if opts.capture {
+        exit(capture(&opts));
+    }
 
     let mut report = String::from("## Bench regression gate\n\n");
     let mut failed = false;
@@ -110,7 +164,7 @@ fn main() {
         if base.is_empty() {
             report.push_str(
                 "baseline unpopulated — recording trend only \
-                 (refresh procedure: DESIGN.md §10)\n\n",
+                 (arm with `bench_gate --capture`; baselines/README.md)\n\n",
             );
         }
         let cmp: BenchComparison = compare_benches(&base, &cur);

@@ -116,6 +116,13 @@ SUBCOMMANDS
              --max-slots N (8)  slot-pool width for continuous batching
              --prefill-chunk K  prompt tokens per block-prefill step
                         (default ctx/4)
+             --threads N  worker threads for the per-slot fan-out
+                        (default: PALLAS_THREADS or the core count;
+                        outputs are identical at every setting)
+             --shards N  layer-shard the codes-resident model across N
+                        worker nodes (host + --quantized only; codebooks
+                        resident once per node; decodes via re-forward
+                        through the shard chain)
              --static-batch  coalesce into fixed batches instead of
                         continuous admission (the XLA path always does)
              --reforward  disable the KV cache: windowed re-forward every

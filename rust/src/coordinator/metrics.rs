@@ -186,6 +186,76 @@ mod tests {
         assert_eq!(m.slot_occupancy(), 0.0);
     }
 
+    /// Slots advancing from multiple pool workers must leave TTFT /
+    /// queue-wait / occupancy counters race-free and monotone. The serving
+    /// loop's rule is: workers only *produce* per-slot outcomes (they never
+    /// touch `Metrics`), and the coordinator folds outcomes in in slot
+    /// order after the join — so the counters are identical at every thread
+    /// count by construction. This test forces true overlap with a
+    /// [`Barrier`] across the pool's strips (loom-free) and asserts the
+    /// invariants hold and the serialized metrics match the 1-thread run.
+    #[test]
+    fn counters_deterministic_under_parallel_slot_workers() {
+        use std::sync::Barrier;
+
+        let n_slots = 8usize;
+        let steps = 4u64;
+        let run = |threads: usize| -> Metrics {
+            let mut m = Metrics::new();
+            let pool = crate::exec::Pool::new(threads);
+            for step in 0..steps {
+                // every worker strip parks at the barrier before producing
+                // its outcomes: all workers are live simultaneously
+                let strips = crate::exec::partition(n_slots, threads.clamp(1, n_slots));
+                let barrier = Barrier::new(strips.len());
+                let outcomes: Vec<Vec<(u64, u64)>> =
+                    pool.run_strips(n_slots, 1, |_, range| {
+                        barrier.wait();
+                        range
+                            .map(|s| {
+                                let s = s as u64;
+                                // (queue-wait µs, ttft µs) for slot s: waits
+                                // grow with slot index = admission order
+                                (s * 100 + step, s * 1000 + step * 10)
+                            })
+                            .collect()
+                    });
+                // fold on the coordinator thread, in slot order
+                let mut busy = 0usize;
+                for (wait_us, ttft_us) in outcomes.into_iter().flatten() {
+                    m.record_queue_wait(Duration::from_micros(wait_us));
+                    m.record_ttft(Duration::from_micros(ttft_us));
+                    busy += 1;
+                }
+                m.record_occupancy(busy, n_slots);
+            }
+            m
+        };
+
+        let serial = run(1);
+        for threads in [2usize, 4, 7] {
+            let par = run(threads);
+            assert_eq!(
+                par.queue_waits_us(),
+                serial.queue_waits_us(),
+                "threads={threads}: queue-wait sequence diverged"
+            );
+            assert_eq!(par.ttft_ms(50.0), serial.ttft_ms(50.0), "threads={threads}");
+            assert_eq!(par.ttft_ms(95.0), serial.ttft_ms(95.0), "threads={threads}");
+            assert_eq!(par.slot_steps_busy, serial.slot_steps_busy);
+            assert_eq!(par.slot_steps_total, serial.slot_steps_total);
+            assert_eq!(par.summary(), serial.summary(), "threads={threads}");
+            // within each step the waits are monotone in slot (= admission)
+            // order — the fairness audit trail survives the fan-out
+            for chunk in par.queue_waits_us().chunks(n_slots) {
+                for w in chunk.windows(2) {
+                    assert!(w[1] >= w[0], "waits not monotone: {chunk:?}");
+                }
+            }
+            assert_eq!(par.slot_occupancy(), 1.0);
+        }
+    }
+
     #[test]
     fn continuous_serving_signals() {
         let mut m = Metrics::new();

@@ -22,13 +22,23 @@
 //!   slots admit new requests the moment a sequence finishes, prompts
 //!   enter the cache in chunks. The windowed re-forward remains as the
 //!   parity oracle.
+//! * [`shard`] — the layer-sharded multi-worker topology: the artifact
+//!   collection partitions by layer across N worker nodes
+//!   ([`ShardedForward`]), activations pipeline through the shard chain,
+//!   and compression accounting extends to **codebook-once-per-node** bits
+//!   ([`sharded_codebook_bits`]). Bit-identical to the single-node host
+//!   forward at any shard count (DESIGN.md §12).
 
 pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use batcher::{Admitted, Batcher, BatcherConfig, GenRequest, GenResponse};
 pub use metrics::Metrics;
-pub use scheduler::{quantize_model_compressed, quantize_model_parallel, QuantStats};
+pub use scheduler::{
+    quantize_model_compressed, quantize_model_parallel, sharded_codebook_bits, QuantStats,
+};
 pub use server::{DecodePolicy, Server, ServingWeights};
+pub use shard::{shard_layers, ShardBits, ShardedForward};

@@ -112,6 +112,18 @@ pub fn quantize_model_compressed<Q: Quantizer + Sync + ?Sized>(
     (q, stats)
 }
 
+/// Compression accounting for a **layer-sharded** deployment of the merged
+/// artifacts: per node, the dedup of the shared codebooks that node's layer
+/// range references (the codebook-once-per-node rule — a codebook used by
+/// layers on two nodes is resident on both). The single-node
+/// [`QuantStats::codebook_bits`] is the `n_shards = 1` case; the sum over
+/// nodes is what a [`crate::coordinator::ShardedForward`] deployment
+/// actually keeps resident, and `paper::verify_codes_resident` asserts the
+/// two accountings agree on every quantized model it checks.
+pub fn sharded_codebook_bits(q: &QuantizedGpt, n_shards: usize) -> Vec<u64> {
+    super::shard::codebook_bits_per_node(q, n_shards)
+}
+
 /// [`quantize_model_compressed`] + explicit dense materialization: returns
 /// the fake-quant [`GptModel`] for consumers (eval ablations, the `fwd_fp`
 /// executable) that need dense weights.
@@ -194,6 +206,20 @@ mod tests {
         // 2-bit indices + per-column scale overhead
         assert!(stats.achieved_bpw >= 2.0 && stats.achieved_bpw < 3.5, "{}", stats.achieved_bpw);
         assert!(stats.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn sharded_accounting_extends_single_node_stats() {
+        let model = tiny_model();
+        let (q, stats) = quantize_model_compressed(&model, &Rtn::new(3), 2);
+        // one node == the classic accounting
+        assert_eq!(sharded_codebook_bits(&q, 1), vec![stats.codebook_bits]);
+        // more nodes: each node dedups independently; totals bracket
+        let per_node = sharded_codebook_bits(&q, 2);
+        assert_eq!(per_node.len(), 2);
+        let total: u64 = per_node.iter().sum();
+        assert!(total >= stats.codebook_bits);
+        assert!(total <= stats.codebook_bits * 2);
     }
 
     #[test]

@@ -87,10 +87,12 @@ impl ServingWeights {
     }
 }
 
-/// The decode backend: a bound XLA executable or the host forward.
+/// The decode backend: a bound XLA executable, the host forward, or the
+/// layer-sharded host chain.
 enum Backend {
     Xla(BoundExecutable),
     Host(HostForward),
+    Sharded(super::shard::ShardedForward),
 }
 
 /// How the server advances a decode step.
@@ -157,6 +159,63 @@ impl Slot {
     }
 }
 
+/// What kind of model work one scheduler step ran on a slot (folded into
+/// metrics on the coordinator thread after the parallel fan-out joins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum StepKind {
+    Prefill,
+    Decode,
+}
+
+/// One slot + its KV cache, owned exclusively by one pool worker for the
+/// duration of a scheduler step.
+struct SlotWork<'a> {
+    slot: &'a mut Slot,
+    cache: &'a mut KvCache,
+}
+
+/// Advance one active slot by one unit of work — one prompt chunk
+/// ([`HostForward::prefill_extend`]; the final chunk pays the lazy head
+/// projection and emits the first token) or one cached decode step. This is
+/// the per-worker body of the continuous loop's slot fan-out: it touches
+/// nothing but its own slot and cache, so any number of slots can step
+/// concurrently with outputs identical to the serial walk.
+fn step_slot(
+    hf: &HostForward,
+    slot: &mut Slot,
+    cache: &mut KvCache,
+    chunk: usize,
+    capture: bool,
+) -> Result<StepKind> {
+    match slot.phase {
+        SlotPhase::Prefill { remaining } => {
+            slot.steps += 1;
+            let fed = slot.prompt.len() - remaining;
+            let take = chunk.min(remaining);
+            let block = &slot.prompt[fed..fed + take];
+            if take == remaining {
+                // final chunk: the one lazy head projection, which
+                // immediately yields the first token
+                slot.logits = hf.prefill_block(block, cache, chunk).context("prefill block")?;
+                slot.phase = SlotPhase::Decode;
+                slot.emit_token(capture);
+            } else {
+                hf.prefill_extend(block, cache, chunk).context("prefill extend")?;
+                slot.phase = SlotPhase::Prefill { remaining: remaining - take };
+            }
+            Ok(StepKind::Prefill)
+        }
+        SlotPhase::Decode => {
+            slot.steps += 1;
+            let last = *slot.generated.last().expect("decode implies a token") as i32;
+            slot.logits = hf.decode_step(last, cache).context("decode step")?;
+            slot.emit_token(capture);
+            Ok(StepKind::Decode)
+        }
+        SlotPhase::Done => unreachable!("Done slots are filtered before stepping"),
+    }
+}
+
 /// A ready-to-serve model: backend + decode state.
 pub struct Server {
     backend: Backend,
@@ -179,6 +238,15 @@ pub struct Server {
     /// Prompt tokens per block-prefill step in the continuous loop
     /// (`serve --prefill-chunk`); defaults to `ctx / 4`.
     pub prefill_chunk: usize,
+    /// Worker threads for the per-slot fan-out of the serving loops
+    /// (`serve --threads`; defaults to [`crate::exec::default_threads`],
+    /// i.e. `PALLAS_THREADS` or the available parallelism). When the slot
+    /// pool runs more than one worker, each worker's *inner* kernels are
+    /// pinned to one thread so the machine is not oversubscribed; at
+    /// `threads = 1` the slots step serially and the fused matmul keeps its
+    /// own column-strip parallelism. Outputs and metrics are identical at
+    /// every setting (DESIGN.md §12).
+    pub threads: usize,
     /// Capture per-step logits into [`GenResponse::logits`] (continuous
     /// loop only) — parity harnesses; off in normal serving.
     pub capture_logits: bool,
@@ -195,6 +263,34 @@ pub struct Server {
 }
 
 impl Server {
+    /// Shared constructor core: backend + measured resident bits; every
+    /// other serving default (batch/slot geometry, sampler seed, thread
+    /// budget, prefill chunk) lives here once, so the XLA, host and
+    /// sharded constructors can never drift apart.
+    fn with_backend(
+        backend: Backend,
+        config: crate::model::GptConfig,
+        decode: DecodePolicy,
+        resident_weight_bits: u64,
+        resident_codebook_bits: u64,
+    ) -> Self {
+        Server {
+            backend,
+            config,
+            batch: 8,
+            metrics: Metrics::new(),
+            decode,
+            sampler_seed: 0x5E84,
+            max_slots: 8,
+            prefill_chunk: (config.ctx / 4).max(1),
+            threads: crate::exec::default_threads(),
+            capture_logits: false,
+            slot_caches: Vec::new(),
+            resident_weight_bits,
+            resident_codebook_bits,
+        }
+    }
+
     /// Bind a serving model against its AOT artifact (XLA backend).
     pub fn new(engine: &Engine, artifacts_dir: &std::path::Path, weights: ServingWeights) -> Result<Self> {
         let config = weights.config();
@@ -219,20 +315,14 @@ impl Server {
                 "codes-resident serving runs on the host — use Server::new_host"
             ),
         };
-        Ok(Server {
-            backend: Backend::Xla(bound),
+        debug_assert_eq!(batch, 8, "XLA executables are lowered at batch 8");
+        Ok(Server::with_backend(
+            Backend::Xla(bound),
             config,
-            batch,
-            metrics: Metrics::new(),
-            decode: DecodePolicy::Reforward,
-            sampler_seed: 0x5E84,
-            max_slots: batch,
-            prefill_chunk: (config.ctx / 4).max(1),
-            capture_logits: false,
-            slot_caches: Vec::new(),
+            DecodePolicy::Reforward,
             resident_weight_bits,
             resident_codebook_bits,
-        })
+        ))
     }
 
     /// Build a host-backed server (no XLA artifacts required). `Fp` serves
@@ -254,20 +344,42 @@ impl Server {
                  use ServingWeights::CodesResident for host serving"
             ),
         };
-        Ok(Server {
-            backend: Backend::Host(hf),
+        Ok(Server::with_backend(
+            Backend::Host(hf),
             config,
-            batch: 8,
-            metrics: Metrics::new(),
-            decode: DecodePolicy::KvCached,
-            sampler_seed: 0x5E84,
-            max_slots: 8,
-            prefill_chunk: (config.ctx / 4).max(1),
-            capture_logits: false,
-            slot_caches: Vec::new(),
+            DecodePolicy::KvCached,
             resident_weight_bits,
             resident_codebook_bits,
-        })
+        ))
+    }
+
+    /// Build a **layer-sharded** host server: the artifact collection is
+    /// partitioned across `n_shards` worker nodes
+    /// ([`super::shard::ShardedForward`]), each resident with only its layer
+    /// range's packed codes plus one copy of every codebook those codes
+    /// reference (codebook-once-per-node accounting — the reported
+    /// `resident_codebook_bits` is the per-node dedup summed over nodes).
+    /// Sharded serving decodes by windowed re-forward
+    /// ([`DecodePolicy::Reforward`]) through the chain; per-slot KV caches
+    /// stay a single-node feature for now.
+    pub fn new_host_sharded(weights: ServingWeights, n_shards: usize) -> Result<Self> {
+        let config = weights.config();
+        let ServingWeights::CodesResident(q) = weights else {
+            anyhow::bail!(
+                "layer-sharded serving partitions compressed artifacts — \
+                 use ServingWeights::CodesResident"
+            )
+        };
+        let sf = super::shard::ShardedForward::new(&q, n_shards)?;
+        let payload = sf.payload_bits();
+        let cb_bits = sf.codebook_bits();
+        Ok(Server::with_backend(
+            Backend::Sharded(sf),
+            config,
+            DecodePolicy::Reforward,
+            payload,
+            cb_bits,
+        ))
     }
 
     /// One forward of a `(b, t)` token block through whichever backend.
@@ -275,6 +387,7 @@ impl Server {
         match &self.backend {
             Backend::Xla(bound) => bound.run_f32(&[Input::I32(block, vec![b, t])]),
             Backend::Host(hf) => hf.forward(&block, b, t),
+            Backend::Sharded(sf) => sf.forward(&block, b, t),
         }
     }
 
@@ -282,6 +395,7 @@ impl Server {
     pub fn is_codes_resident(&self) -> bool {
         match &self.backend {
             Backend::Host(hf) => hf.is_codes_resident(),
+            Backend::Sharded(sf) => sf.is_codes_resident(),
             Backend::Xla(_) => false,
         }
     }
@@ -311,11 +425,15 @@ impl Server {
 
     /// Incremental decode: per-slot KV caches, one token of model work per
     /// step. Each request starts from an explicitly reset cache and a fresh
-    /// sampling stream — no state crosses request boundaries.
+    /// sampling stream — no state crosses request boundaries, so the slots
+    /// fan out across [`Self::threads`] pool workers (each owning its slot's
+    /// cache and sampler exclusively) with outputs bit-identical to the
+    /// serial walk.
     fn process_batch_cached(&mut self, batch: Vec<GenRequest>) -> Result<()> {
         let t0 = Instant::now();
         let ctx = self.config.ctx;
         let v = self.config.vocab;
+        let seed = self.sampler_seed;
         let Backend::Host(hf) = &self.backend else {
             anyhow::bail!("cached decode needs the host backend")
         };
@@ -323,26 +441,58 @@ impl Server {
             self.slot_caches.push(KvCache::new(&self.config));
         }
 
-        let mut generated: Vec<Vec<u8>> = vec![Vec::new(); batch.len()];
-        for (s, req) in batch.iter().enumerate() {
-            let cache = &mut self.slot_caches[s];
-            cache.reset(); // new request → fresh cache
-            let mut rng = request_rng(self.sampler_seed, s as u64);
-            let prompt = truncate_prompt(&req.prompt, ctx);
-            if prompt.is_empty() {
-                // degenerate request: resolve with zero tokens rather than
-                // failing the whole batch (finish_batch still responds)
-                continue;
-            }
-            let mut logits = hf.prefill(&prompt, cache).context("prefill")?;
-            for step in 0..req.max_new {
-                debug_assert_eq!(logits.len(), v);
-                let next = next_token(&logits, req.temperature, &mut rng);
-                generated[s].push(next);
-                if step + 1 < req.max_new {
-                    logits = hf.decode_step(next as i32, cache).context("decode step")?;
+        /// One batch slot's work unit: shareable request fields + exclusive
+        /// cache ownership (the response `Sender` stays on the coordinator).
+        struct CachedWork<'a> {
+            slot: usize,
+            prompt: &'a [u8],
+            max_new: usize,
+            temperature: f32,
+            cache: &'a mut KvCache,
+        }
+        let mut work: Vec<CachedWork> = batch
+            .iter()
+            .enumerate()
+            .zip(self.slot_caches.iter_mut())
+            .map(|((slot, req), cache)| CachedWork {
+                slot,
+                prompt: &req.prompt,
+                max_new: req.max_new,
+                temperature: req.temperature,
+                cache,
+            })
+            .collect();
+        let pool = crate::exec::Pool::new(self.threads.max(1));
+        // the shared nesting policy: pin inner kernels only when the
+        // request fan-out is real (exec::Pool::inner_threads)
+        let inner = pool.inner_threads(work.len());
+        let results = pool.map_mut(&mut work, |_, w| -> Result<Vec<u8>> {
+            crate::exec::with_threads(inner, || {
+                w.cache.reset(); // new request → fresh cache
+                let mut rng = request_rng(seed, w.slot as u64);
+                let prompt = truncate_prompt(w.prompt, ctx);
+                let mut gen = Vec::new();
+                if prompt.is_empty() {
+                    // degenerate request: resolve with zero tokens rather
+                    // than failing the whole batch (finish_batch responds)
+                    return Ok(gen);
                 }
-            }
+                let mut logits = hf.prefill(&prompt, w.cache).context("prefill")?;
+                for step in 0..w.max_new {
+                    debug_assert_eq!(logits.len(), v);
+                    let next = next_token(&logits, w.temperature, &mut rng);
+                    gen.push(next);
+                    if step + 1 < w.max_new {
+                        logits =
+                            hf.decode_step(next as i32, w.cache).context("decode step")?;
+                    }
+                }
+                Ok(gen)
+            })
+        });
+        let mut generated: Vec<Vec<u8>> = Vec::with_capacity(batch.len());
+        for r in results {
+            generated.push(r?);
         }
 
         let steps = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
@@ -470,6 +620,16 @@ impl Server {
     /// the next admission can reuse them. When every slot is idle the loop
     /// parks on the queue instead of spinning.
     ///
+    /// Step (2) fans the active slots out across [`Self::threads`] workers
+    /// on the shared pool ([`crate::exec::Pool`]): each worker owns its
+    /// slot + [`KvCache`] exclusively (no locks), inner kernels are pinned
+    /// to one thread while the pool is wider than one, and every counter
+    /// folds into [`Self::metrics`] on the coordinator thread in slot order
+    /// after the join — batched decode across independent slots is where
+    /// continuous batching earns multi-core throughput, and outputs stay
+    /// bit-identical to the serial walk at every thread count (DESIGN.md
+    /// §12).
+    ///
     /// Per-request state is explicit, exactly as in the static cached path:
     /// a reset [`KvCache`] and a fresh sampling stream per request (derived
     /// from the admission `seq`, so streams are independent of slot
@@ -542,40 +702,38 @@ impl Server {
                 continue; // everything admitted had expired — park again
             }
 
-            // ---- one unit of work per active slot ----
+            // ---- one unit of work per active slot, fanned out on the pool ----
+            // Each worker owns its slot + KV cache exclusively; counters
+            // fold into metrics on this thread, in slot order, after the
+            // join — so outputs AND metrics are identical at every thread
+            // count (the §12 determinism contract).
             let t0 = Instant::now();
-            let mut worked = 0usize; // slots that ran model work this step
-            for (idx, entry) in slots.iter_mut().enumerate() {
-                let Some(slot) = entry else { continue };
-                let cache = &mut self.slot_caches[idx];
-                match slot.phase {
-                    SlotPhase::Prefill { remaining } => {
-                        worked += 1;
-                        slot.steps += 1;
-                        let fed = slot.prompt.len() - remaining;
-                        let take = chunk.min(remaining);
-                        let block = &slot.prompt[fed..fed + take];
-                        if take == remaining {
-                            // final chunk: the one lazy head projection,
-                            // which immediately yields the first token
-                            slot.logits =
-                                hf.prefill_block(block, cache, chunk).context("prefill block")?;
-                            slot.phase = SlotPhase::Decode;
-                            slot.emit_token(self.capture_logits);
-                        } else {
-                            hf.prefill_extend(block, cache, chunk).context("prefill extend")?;
-                            slot.phase = SlotPhase::Prefill { remaining: remaining - take };
-                        }
+            let capture = self.capture_logits;
+            let pool = crate::exec::Pool::new(self.threads.max(1));
+            let mut work: Vec<SlotWork> = slots
+                .iter_mut()
+                .zip(self.slot_caches.iter_mut())
+                .filter_map(|(entry, cache)| match entry {
+                    Some(slot) if slot.phase != SlotPhase::Done => {
+                        Some(SlotWork { slot, cache })
                     }
-                    SlotPhase::Decode => {
-                        worked += 1;
-                        slot.steps += 1;
-                        let last = *slot.generated.last().expect("decode implies a token") as i32;
-                        slot.logits = hf.decode_step(last, cache).context("decode step")?;
-                        self.metrics.decode_steps += 1;
-                        slot.emit_token(self.capture_logits);
-                    }
-                    SlotPhase::Done => {}
+                    _ => None,
+                })
+                .collect();
+            let worked = work.len(); // slots that ran model work this step
+            // the shared nesting policy: pin inner kernels to one thread
+            // only when the slot fan-out is real — a lone active slot (or
+            // a 1-thread pool) keeps the matmul's column-strip /
+            // attention-row parallelism (exec::Pool::inner_threads)
+            let inner = pool.inner_threads(worked);
+            let outcomes = pool.map_mut(&mut work, |_, w| {
+                crate::exec::with_threads(inner, || {
+                    step_slot(hf, w.slot, w.cache, chunk, capture)
+                })
+            });
+            for outcome in outcomes {
+                if outcome? == StepKind::Decode {
+                    self.metrics.decode_steps += 1;
                 }
             }
             // occupancy counts slots that actually ran model work — a

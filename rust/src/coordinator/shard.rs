@@ -1,0 +1,503 @@
+//! Layer-sharded multi-worker serving topology (DESIGN.md §12).
+//!
+//! The compressed-artifact collection is cheap to partition by layer: each
+//! **shard node** owns the packed codes (+ referenced codebooks) of a
+//! contiguous layer range — node 0 additionally owns the embeddings, the
+//! last node the final norm and the head — and activations pipeline through
+//! the shard chain. The per-layer math is the exact
+//! [`block_layer_forward`] unit the single-node host forward runs, so a
+//! sharded forward is **bit-identical** to [`crate::model::HostForward::forward`] for any
+//! shard count; the pipeline ([`ShardedForward::forward_pipelined`]) runs
+//! one worker thread per node with node `i` processing job `j` while node
+//! `i+1` still works on job `j−1`, which is where the multi-core throughput
+//! comes from on independent block-forward traffic.
+//!
+//! ## Codebook-once-per-node accounting
+//!
+//! A shared codebook referenced by layers on two nodes is resident on
+//! **both** — sharding deduplicates codebooks per node, not globally.
+//! [`ShardedForward::node_bits`] (and the scheduler-side
+//! [`codebook_bits_per_node`]) report exactly that: per node, payload bits
+//! of the owned artifacts plus the dedup of the codebooks those artifacts
+//! reference. Summed over nodes this is ≥ the single-node dedup and ≤
+//! `n_nodes ×` it; `paper::verify_codes_resident` asserts the identity on
+//! every quantized model it checks.
+//!
+//! The layer partition itself is [`crate::exec::partition`] — the same
+//! deterministic fixed-strip contract every pool fan-out in this crate
+//! uses, so "which node owns which layers" is one formula
+//! ([`shard_layers`]).
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::mpsc;
+
+use anyhow::{Context, Result};
+
+use crate::model::{
+    block_layer_forward, embed_block, layer_names, layer_norm, GptConfig, LayerNames,
+    LayerParams, LinearW, QuantizedGpt,
+};
+use crate::tensor::Matrix;
+
+/// Deterministic layer partition: `n_layer` layers into (at most)
+/// `n_shards` contiguous ranges via the [`crate::exec::partition`]
+/// contract. Always at least one range (a zero-layer model still gets one
+/// node for embeddings + head).
+pub fn shard_layers(cfg: &GptConfig, n_shards: usize) -> Vec<Range<usize>> {
+    if cfg.n_layer == 0 {
+        return vec![0..0];
+    }
+    crate::exec::partition(cfg.n_layer, n_shards.max(1))
+}
+
+/// Layer index a quantizable-weight name belongs to (`layer{i}.…`), or
+/// `None` for per-model weights (currently only `head.w`).
+fn weight_layer(name: &str) -> Option<usize> {
+    name.strip_prefix("layer")?.split('.').next()?.parse().ok()
+}
+
+/// Quantizable-weight names a node owns: filtered straight from
+/// [`GptConfig::quantizable_names`] (the single naming source of truth, so
+/// a new quantizable matrix automatically lands on the right node) — the
+/// layers in `layers`, plus every per-model weight (`head.w`) on the last
+/// node.
+fn node_weight_names(cfg: &GptConfig, layers: &Range<usize>, last: bool) -> Vec<String> {
+    cfg.quantizable_names()
+        .into_iter()
+        .filter(|name| match weight_layer(name) {
+            Some(l) => layers.contains(&l),
+            None => last,
+        })
+        .collect()
+}
+
+/// Codebook-once-per-node bits of a layer-sharded deployment of `q`:
+/// partition the artifact collection with [`shard_layers`], then dedup each
+/// node's shared codebooks independently (a codebook referenced from two
+/// nodes is resident on both — that is what the topology actually
+/// allocates). The scheduler-side accounting hook
+/// ([`crate::coordinator::scheduler`]) and `paper::verify_codes_resident`
+/// both go through here.
+pub fn codebook_bits_per_node(q: &QuantizedGpt, n_shards: usize) -> Vec<u64> {
+    let plan = shard_layers(&q.config, n_shards);
+    let n_nodes = plan.len();
+    plan.iter()
+        .enumerate()
+        .map(|(i, layers)| {
+            let names = node_weight_names(&q.config, layers, i + 1 == n_nodes);
+            crate::quant::dedup_codebook_bits(
+                names.iter().filter_map(|n| q.weights.get(n)),
+            )
+        })
+        .collect()
+}
+
+/// Per-node resident-bits accounting of a [`ShardedForward`].
+#[derive(Clone, Debug)]
+pub struct ShardBits {
+    /// Layer range this node owns.
+    pub layers: Range<usize>,
+    /// Packed-code payload bits of the owned artifacts.
+    pub payload_bits: u64,
+    /// Shared-codebook bits resident on this node (deduplicated **per
+    /// node** — the codebook-once-per-node rule).
+    pub codebook_bits: u64,
+}
+
+/// One worker node of the shard chain: the compressed linears + fp tensors
+/// of a contiguous layer range (plus embeddings on the first node, final
+/// norm + head on the last).
+struct ShardNode {
+    layers: Range<usize>,
+    linears: BTreeMap<String, LinearW>,
+    fp: BTreeMap<String, Matrix>,
+    /// Pre-resolved tensor names, indexed by **absolute** layer — built
+    /// once so the per-block walk never `format!`s in the decode hot path
+    /// (same hoist as `HostForward::names`).
+    names: std::sync::Arc<Vec<LayerNames>>,
+    first: bool,
+    last: bool,
+}
+
+impl ShardNode {
+    fn fp(&self, name: &str) -> Result<&Matrix> {
+        self.fp
+            .get(name)
+            .with_context(|| format!("shard node missing fp tensor '{name}'"))
+    }
+
+    fn linear(&self, name: &str) -> Result<&LinearW> {
+        self.linears
+            .get(name)
+            .with_context(|| format!("shard node missing linear '{name}'"))
+    }
+
+    /// Token + position embeddings (first node only).
+    fn embed(&self, tokens: &[i32], b: usize, t: usize, cfg: &GptConfig) -> Result<Matrix> {
+        anyhow::ensure!(self.first, "only the first shard node embeds");
+        embed_block(
+            self.fp("embed.tok")?,
+            self.fp("embed.pos")?,
+            tokens,
+            b,
+            t,
+            cfg.vocab,
+        )
+    }
+
+    /// Run the owned layer range over a hidden block; the last node
+    /// additionally applies the final norm + head, returning logits
+    /// `(b·t, vocab)` instead of hidden states.
+    fn process(&self, mut x: Matrix, b: usize, t: usize, cfg: &GptConfig) -> Result<Matrix> {
+        for l in self.layers.clone() {
+            let nm = &self.names[l];
+            let p = LayerParams {
+                ln1_g: self.fp(&nm.ln1_g)?,
+                ln1_b: self.fp(&nm.ln1_b)?,
+                wq: self.linear(&nm.wq)?,
+                wk: self.linear(&nm.wk)?,
+                wv: self.linear(&nm.wv)?,
+                wo: self.linear(&nm.wo)?,
+                ln2_g: self.fp(&nm.ln2_g)?,
+                ln2_b: self.fp(&nm.ln2_b)?,
+                w1: self.linear(&nm.w1)?,
+                w2: self.linear(&nm.w2)?,
+            };
+            block_layer_forward(&mut x, &p, b, t, cfg.n_head, cfg.head_dim());
+        }
+        if self.last {
+            let xf = layer_norm(&x, self.fp("final_ln.g")?.as_slice(), self.fp("final_ln.b")?.as_slice());
+            return Ok(self.linear("head.w")?.matmul(&xf));
+        }
+        Ok(x)
+    }
+}
+
+/// A layer-sharded, codes-resident forward chain: `N` worker nodes, each
+/// holding only its layer range's packed codes + referenced codebooks.
+/// [`Self::forward`] runs the chain sequentially (the oracle);
+/// [`Self::forward_pipelined`] streams a list of independent block-forward
+/// jobs through one thread per node. Both are bit-identical to the
+/// single-node [`crate::model::HostForward::forward`] — same [`block_layer_forward`]
+/// units in the same order.
+pub struct ShardedForward {
+    pub config: GptConfig,
+    pub name: String,
+    nodes: Vec<ShardNode>,
+}
+
+impl ShardedForward {
+    /// Partition `q` into (at most) `n_shards` layer-contiguous nodes.
+    /// Artifacts are cloned per node (cheap: packed codes copy, codebooks
+    /// stay `Arc`-shared in memory — the *accounting* still charges every
+    /// node its own copy of each referenced codebook, because a real
+    /// deployment ships one per machine).
+    pub fn new(q: &QuantizedGpt, n_shards: usize) -> Result<Self> {
+        let plan = shard_layers(&q.config, n_shards);
+        let n_nodes = plan.len();
+        let names = std::sync::Arc::new(layer_names(q.config.n_layer));
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for (i, layers) in plan.into_iter().enumerate() {
+            let (first, last) = (i == 0, i + 1 == n_nodes);
+            let mut linears = BTreeMap::new();
+            for name in node_weight_names(&q.config, &layers, last) {
+                let w = q
+                    .weights
+                    .get(&name)
+                    .with_context(|| format!("missing codes for '{name}'"))?;
+                linears.insert(name, LinearW::Codes(w.clone()));
+            }
+            let mut fp = BTreeMap::new();
+            let mut fp_needed: Vec<String> = Vec::new();
+            if first {
+                fp_needed.extend(["embed.tok".into(), "embed.pos".into()]);
+            }
+            if last {
+                fp_needed.extend(["final_ln.g".into(), "final_ln.b".into()]);
+            }
+            for l in layers.clone() {
+                for nm in ["ln1.g", "ln1.b", "ln2.g", "ln2.b"] {
+                    fp_needed.push(format!("layer{l}.{nm}"));
+                }
+            }
+            for name in fp_needed {
+                let t = q
+                    .fp_tensors
+                    .get(&name)
+                    .with_context(|| format!("missing fp tensor '{name}'"))?;
+                fp.insert(name, t.clone());
+            }
+            nodes.push(ShardNode {
+                layers,
+                linears,
+                fp,
+                names: std::sync::Arc::clone(&names),
+                first,
+                last,
+            });
+        }
+        Ok(ShardedForward { config: q.config, name: q.name.clone(), nodes })
+    }
+
+    /// Number of worker nodes in the chain.
+    pub fn n_shards(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Layer range of node `i`.
+    pub fn node_layers(&self, i: usize) -> Range<usize> {
+        self.nodes[i].layers.clone()
+    }
+
+    /// True when every linear on every node is served from packed codes
+    /// (always the case for a chain built from a [`QuantizedGpt`]).
+    pub fn is_codes_resident(&self) -> bool {
+        self.nodes
+            .iter()
+            .all(|n| n.linears.values().all(|l| l.codes().is_some()))
+    }
+
+    /// Per-node resident bits: payload + codebook-once-per-node.
+    pub fn node_bits(&self) -> Vec<ShardBits> {
+        self.nodes
+            .iter()
+            .map(|n| ShardBits {
+                layers: n.layers.clone(),
+                payload_bits: n.linears.values().map(|l| l.resident_bits()).sum(),
+                codebook_bits: crate::quant::dedup_codebook_bits(
+                    n.linears.values().filter_map(|l| l.codes()),
+                ),
+            })
+            .collect()
+    }
+
+    /// Payload bits summed over nodes (equals the unsharded payload — codes
+    /// are partitioned, never duplicated).
+    pub fn payload_bits(&self) -> u64 {
+        self.node_bits().iter().map(|b| b.payload_bits).sum()
+    }
+
+    /// Codebook bits summed over nodes (≥ the single-node dedup: shared
+    /// codebooks are resident once **per node** that references them).
+    pub fn codebook_bits(&self) -> u64 {
+        self.node_bits().iter().map(|b| b.codebook_bits).sum()
+    }
+
+    /// Total bits resident across the deployment.
+    pub fn resident_bits(&self) -> u64 {
+        self.payload_bits() + self.codebook_bits()
+    }
+
+    /// One `(b, t)` token block through the whole chain, sequentially on
+    /// the calling thread — the parity oracle for the pipeline, and the
+    /// `run_block` backend of a sharded [`super::Server`].
+    pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == b * t, "token block shape mismatch");
+        anyhow::ensure!(t <= self.config.ctx, "sequence longer than ctx");
+        let mut x = self.nodes[0].embed(tokens, b, t, &self.config)?;
+        for node in &self.nodes {
+            x = node.process(x, b, t, &self.config)?;
+        }
+        Ok(x.into_vec())
+    }
+
+    /// Stream independent block-forward jobs through the shard chain, one
+    /// worker thread per node, activations flowing over channels: node `i`
+    /// works on job `j` while node `i+1` still runs job `j−1` (pipeline
+    /// parallelism — the `sharded_vs_single` bench scenario measures the
+    /// resulting throughput multiple). Results return in job order and are
+    /// bit-identical to [`Self::forward`] per job.
+    pub fn forward_pipelined(
+        &self,
+        jobs: &[(Vec<i32>, usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n_nodes = self.nodes.len();
+        if n_nodes == 1 || jobs.len() <= 1 {
+            return jobs.iter().map(|(toks, b, t)| self.forward(toks, *b, *t)).collect();
+        }
+        for (toks, b, t) in jobs {
+            anyhow::ensure!(toks.len() == b * t, "token block shape mismatch");
+            anyhow::ensure!(*t <= self.config.ctx, "sequence longer than ctx");
+        }
+        let cfg = &self.config;
+        // split the caller's thread budget across the stage threads (the
+        // exec nesting contract: coarse-grain sections cap their workers'
+        // inner parallelism so N stages never contend for the same cores)
+        let inner = (crate::exec::current_threads() / n_nodes).max(1);
+        let collected = std::thread::scope(|scope| -> Result<Vec<(usize, Vec<f32>)>> {
+            // one channel per chain hop; stage i sends on txs[i], receives
+            // on the channel before it
+            let mut txs = Vec::with_capacity(n_nodes - 1);
+            let mut rxs = Vec::with_capacity(n_nodes - 1);
+            for _ in 0..n_nodes - 1 {
+                let (tx, rx) = mpsc::channel::<(usize, Matrix, usize, usize)>();
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            let mut tx_iter = txs.into_iter();
+            let mut rx_iter = rxs.into_iter();
+
+            let first = &self.nodes[0];
+            let tx0 = tx_iter.next().expect("n_nodes >= 2");
+            let h0 = scope.spawn(move || -> Result<()> {
+                crate::exec::with_threads(inner, || -> Result<()> {
+                    for (idx, (toks, b, t)) in jobs.iter().enumerate() {
+                        let x = first.embed(toks, *b, *t, cfg)?;
+                        let x = first.process(x, *b, *t, cfg)?;
+                        if tx0.send((idx, x, *b, *t)).is_err() {
+                            break; // downstream failed; its error surfaces below
+                        }
+                    }
+                    Ok(())
+                })
+            });
+            let mut mids = Vec::new();
+            for node in &self.nodes[1..n_nodes - 1] {
+                let rx = rx_iter.next().expect("one rx per mid stage");
+                let tx = tx_iter.next().expect("one tx per mid stage");
+                mids.push(scope.spawn(move || -> Result<()> {
+                    crate::exec::with_threads(inner, || -> Result<()> {
+                        for (idx, x, b, t) in rx {
+                            let x = node.process(x, b, t, cfg)?;
+                            if tx.send((idx, x, b, t)).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(())
+                    })
+                }));
+            }
+            let last = &self.nodes[n_nodes - 1];
+            let rx_last = rx_iter.next().expect("final stage rx");
+            let h_last = scope.spawn(move || -> Result<Vec<(usize, Vec<f32>)>> {
+                crate::exec::with_threads(inner, || -> Result<Vec<(usize, Vec<f32>)>> {
+                    let mut out = Vec::new();
+                    for (idx, x, b, t) in rx_last {
+                        let y = last.process(x, b, t, cfg)?;
+                        out.push((idx, y.into_vec()));
+                    }
+                    Ok(out)
+                })
+            });
+            h0.join().expect("shard stage 0 panicked")?;
+            for h in mids {
+                h.join().expect("shard mid stage panicked")?;
+            }
+            h_last.join().expect("final shard stage panicked")
+        })?;
+        let mut results: Vec<Vec<f32>> = vec![Vec::new(); jobs.len()];
+        for (idx, r) in collected {
+            results[idx] = r;
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantizedGpt;
+    use crate::proptest::{synthetic_tinygpt, tiny_pcdvq};
+
+    fn fixture() -> (crate::model::GptModel, QuantizedGpt) {
+        let model = synthetic_tinygpt("pcdvq_shard_tests", "shard", 17);
+        let q = QuantizedGpt::quantize(&model, &tiny_pcdvq());
+        (model, q)
+    }
+
+    #[test]
+    fn shard_plan_is_deterministic_and_covers_layers() {
+        let (model, _) = fixture();
+        for n in [1usize, 2, 3, 8] {
+            let plan = shard_layers(&model.config, n);
+            assert!(!plan.is_empty());
+            assert!(plan.len() <= n.max(1));
+            assert_eq!(plan[0].start, 0);
+            assert_eq!(plan.last().unwrap().end, model.config.n_layer);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous, in order");
+            }
+            assert_eq!(plan, shard_layers(&model.config, n), "pure function");
+        }
+    }
+
+    #[test]
+    fn sharded_forward_bit_identical_to_single_node() {
+        let (model, q) = fixture();
+        let hf = crate::model::HostForward::from_quantized(q.clone()).unwrap();
+        let (b, t) = (2usize, 12usize);
+        let tokens: Vec<i32> = (0..b * t).map(|i| ((i * 13 + 1) % 251) as i32).collect();
+        let want = hf.forward(&tokens, b, t).unwrap();
+        for n in [1usize, 2, 4] {
+            let sf = ShardedForward::new(&q, n).unwrap();
+            assert!(sf.is_codes_resident());
+            let got = sf.forward(&tokens, b, t).unwrap();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "n_shards={n}: sharded chain diverged");
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_sequential_chain() {
+        let (_, q) = fixture();
+        let sf = ShardedForward::new(&q, 2).unwrap();
+        assert_eq!(sf.n_shards(), 2);
+        let jobs: Vec<(Vec<i32>, usize, usize)> = (0..5)
+            .map(|j| {
+                let t = 8 + j;
+                ((0..t).map(|i| ((i * 7 + j * 31 + 2) % 251) as i32).collect(), 1, t)
+            })
+            .collect();
+        let piped = sf.forward_pipelined(&jobs).unwrap();
+        assert_eq!(piped.len(), jobs.len());
+        for (i, (toks, b, t)) in jobs.iter().enumerate() {
+            let solo = sf.forward(toks, *b, *t).unwrap();
+            assert_eq!(solo, piped[i], "job {i}: pipeline diverged");
+        }
+    }
+
+    #[test]
+    fn pipeline_surfaces_stage_errors() {
+        let (_, q) = fixture();
+        let sf = ShardedForward::new(&q, 2).unwrap();
+        // an out-of-vocab token fails at the embed stage without hanging
+        // the chain
+        let jobs = vec![(vec![5i32, -1, 3, 2], 1usize, 4usize), (vec![1i32; 4], 1, 4)];
+        assert!(sf.forward_pipelined(&jobs).is_err());
+    }
+
+    #[test]
+    fn codebook_once_per_node_accounting() {
+        let (_, q) = fixture();
+        let global = q.codebook_bits();
+        let payload = q.payload_bits();
+        for n in [1usize, 2] {
+            let sf = ShardedForward::new(&q, n).unwrap();
+            let bits = sf.node_bits();
+            assert_eq!(bits.len(), sf.n_shards());
+            // codes partition exactly; codebooks duplicate per node
+            assert_eq!(sf.payload_bits(), payload, "n={n}");
+            let per_node = codebook_bits_per_node(&q, n);
+            assert_eq!(
+                per_node,
+                bits.iter().map(|b| b.codebook_bits).collect::<Vec<_>>(),
+                "standalone accounting must match the built chain"
+            );
+            let total = sf.codebook_bits();
+            assert!(total >= global, "n={n}: a node lost its codebooks");
+            assert!(
+                total <= global * sf.n_shards() as u64,
+                "n={n}: more than one codebook copy per node"
+            );
+            if n == 1 {
+                assert_eq!(total, global);
+            }
+        }
+        // PCDVQ shares one DACC pair across all layers: every node holds
+        // one full copy, so 2 nodes hold exactly 2x the global dedup
+        let two = codebook_bits_per_node(&q, 2);
+        assert_eq!(two.iter().sum::<u64>(), 2 * global);
+    }
+}

@@ -1,0 +1,347 @@
+//! Shared execution layer: a reusable scoped-thread worker pool with a
+//! deterministic partitioning contract (DESIGN.md §12).
+//!
+//! Every multi-core path in the crate — the parallel fused matmul
+//! ([`crate::quant::QuantizedWeight::matmul_from_codes`]), the per-position
+//! attention fan-out in the host forward, the per-slot stepping of
+//! [`crate::coordinator::Server::serve_continuous`], the nearest-codeword
+//! scan ([`crate::quant::assign::assign_into`]) and the layer-shard chain
+//! ([`crate::coordinator::ShardedForward`]) — runs through this module, so
+//! there is exactly one thread-count default ([`default_threads`],
+//! `PALLAS_THREADS`-overridable) and one partitioning rule ([`partition`]).
+//!
+//! ## The determinism contract
+//!
+//! Work is split into **fixed contiguous strips in index order**
+//! ([`partition`]): strip boundaries depend only on `(n, parts)`, never on
+//! scheduling. Each worker owns a disjoint strip of the input/output, and
+//! results are combined on the calling thread in strip order after the
+//! join. Consequently every parallel path in this crate is **bit-identical
+//! to its serial execution at any thread count** — the kernel-equivalence
+//! and continuous-batching suites pin this across a thread grid in CI
+//! (`PALLAS_THREADS=1` and `=4` named steps).
+//!
+//! Pools are plain scoped-thread fan-outs (no persistent worker threads,
+//! no channels, no dependencies): a [`Pool`] is just a thread-count, and
+//! each call spawns its strips under [`std::thread::scope`] so borrowed
+//! data flows in without `'static` bounds.
+//!
+//! ## Nesting
+//!
+//! Coarse-grain parallel sections (e.g. the slot pool) pin their workers'
+//! *inner* parallelism to one thread via [`with_threads`] so the machine is
+//! not oversubscribed — the same coordination hook the layer-parallel
+//! quantization scheduler always used for the assignment scan.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+std::thread_local! {
+    /// Per-thread override of the worker count (see [`with_threads`]).
+    static THREAD_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Process-wide default worker count: `PALLAS_THREADS` if set (read once per
+/// process — repeated `getenv` from concurrent threads is not safe on every
+/// libc; `PCDVQ_ASSIGN_THREADS` is honored as the legacy alias), else the
+/// available parallelism. This is the single thread-count default behind
+/// every parallel path — set `PALLAS_THREADS=1` to make any run serial and
+/// `PALLAS_THREADS=n` to make benches reproducible on any core count.
+pub fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        for key in ["PALLAS_THREADS", "PCDVQ_ASSIGN_THREADS"] {
+            if let Some(n) = std::env::var(key).ok().and_then(|s| s.parse::<usize>().ok()) {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Run `f` with [`current_threads`] capped at `threads` on this thread —
+/// the coordination hook for callers that already parallelize at a coarser
+/// grain (the slot pool pins its workers' inner kernels to 1 thread; the
+/// layer-parallel scheduler does the same for within-layer assignment).
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_OVERRIDE.with(|c| c.replace(Some(threads.max(1))));
+    let out = f();
+    THREAD_OVERRIDE.with(|c| c.set(prev));
+    out
+}
+
+/// The worker count in effect on this thread: an enclosing [`with_threads`]
+/// override, else [`default_threads`].
+pub fn current_threads() -> usize {
+    THREAD_OVERRIDE.with(|c| c.get()).unwrap_or_else(default_threads)
+}
+
+/// The deterministic partitioning contract: split `n` items into **at most**
+/// `parts` contiguous strips of `ceil(n / parts')` items each (in index
+/// order, where `parts' = parts.clamp(1, n)`). Strip boundaries are a pure
+/// function of `(n, parts)` — never of scheduling — which is what makes
+/// every pool fan-out in this crate bit-identical to its serial execution.
+/// The layer-shard planner ([`crate::coordinator::shard_layers`]) uses the
+/// same rule, so "which worker owns what" is one formula everywhere.
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let chunk = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// A scoped-thread worker pool: a thread-count plus the partitioning
+/// contract. Construction is free — spawning happens per call, inside a
+/// [`std::thread::scope`], so borrowed inputs and outputs need no `'static`
+/// lifetime and panics propagate to the caller.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool at the thread count in effect on this thread
+    /// ([`current_threads`]).
+    pub fn current() -> Self {
+        Pool::new(current_threads())
+    }
+
+    /// Worker count of this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The §12 nesting policy in one place: the thread cap a worker's
+    /// *inner* kernels should run under when this pool fans `work_len`
+    /// items out. Pin to 1 only when the fan-out is real (≥ 2 items on a
+    /// ≥ 2-thread pool — no oversubscription); otherwise keep the caller's
+    /// current budget, so a lone work item still gets the kernels' own
+    /// parallelism instead of idling the other cores. Callers apply it as
+    /// `with_threads(pool.inner_threads(n), …)` inside the worker body.
+    pub fn inner_threads(&self, work_len: usize) -> usize {
+        if self.threads > 1 && work_len > 1 {
+            1
+        } else {
+            current_threads()
+        }
+    }
+
+    /// The strips [`Self::run_strips`] would use for `n` items: the
+    /// [`partition`] of `n` into `threads` parts, capped so each strip
+    /// keeps at least `min_per_strip` items (strips shorter than that are
+    /// not worth a thread).
+    pub fn strip_ranges(&self, n: usize, min_per_strip: usize) -> Vec<Range<usize>> {
+        let parts = self.threads.clamp(1, (n / min_per_strip.max(1)).max(1));
+        partition(n, parts)
+    }
+
+    /// Fan `n` items out as contiguous strips, one scoped worker per strip,
+    /// and return each strip's result **in strip order** (deterministic
+    /// regardless of which worker finished first). `f(strip_idx, range)`
+    /// must be pure per strip; with one strip it runs inline on the caller.
+    pub fn run_strips<R, F>(&self, n: usize, min_per_strip: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        let ranges = self.strip_ranges(n, min_per_strip);
+        if ranges.len() <= 1 {
+            return ranges.into_iter().enumerate().map(|(i, r)| f(i, r)).collect();
+        }
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let f = &f;
+                    scope.spawn(move || f(i, r))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("exec worker panicked"))
+                .collect()
+        })
+    }
+
+    /// Split `data` (whose length must be a multiple of `group`) into
+    /// contiguous strips on group boundaries and hand each worker exclusive
+    /// ownership of its strip: `f(first_group_index, strip)`. Strips keep at
+    /// least `min_groups` groups each. The split is [`partition`] over the
+    /// group count, so writes land exactly where the serial loop would put
+    /// them — used by the assignment scan (`group = 1`) and the attention
+    /// fan-out (`group = d_model`, one group per activation row).
+    pub fn scope_groups_mut<T, F>(&self, data: &mut [T], group: usize, min_groups: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(group > 0, "group size must be positive");
+        assert_eq!(data.len() % group, 0, "data length must be a multiple of group");
+        let n_groups = data.len() / group;
+        if n_groups == 0 {
+            return;
+        }
+        let parts = self.threads.clamp(1, (n_groups / min_groups.max(1)).max(1));
+        if parts <= 1 {
+            f(0, data);
+            return;
+        }
+        let chunk_groups = n_groups.div_ceil(parts);
+        std::thread::scope(|scope| {
+            for (i, chunk) in data.chunks_mut(chunk_groups * group).enumerate() {
+                let f = &f;
+                scope.spawn(move || f(i * chunk_groups, chunk));
+            }
+        });
+    }
+
+    /// Run `f(index, &mut item)` over every item, fanning contiguous strips
+    /// of items out to workers, and return the results **in item order**.
+    /// Each worker owns its items exclusively (`&mut`), so per-item state
+    /// (a serving slot + its KV cache) advances with no locks and no
+    /// cross-item interference — the slot-pool step of
+    /// [`crate::coordinator::Server::serve_continuous`] rides this.
+    pub fn map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        let parts = self.threads.clamp(1, n.max(1));
+        if parts <= 1 {
+            return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        let chunk = n.div_ceil(parts);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = items
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(w, ch)| {
+                    let f = &f;
+                    scope.spawn(move || {
+                        ch.iter_mut()
+                            .enumerate()
+                            .map(|(j, it)| f(w * chunk + j, it))
+                            .collect::<Vec<R>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("exec worker panicked"))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_contract() {
+        assert!(partition(0, 4).is_empty());
+        assert_eq!(partition(10, 1), vec![0..10]);
+        assert_eq!(partition(10, 4), vec![0..3, 3..6, 6..9, 9..10]);
+        // parts > n clamps to n one-item strips
+        assert_eq!(partition(3, 8), vec![0..1, 1..2, 2..3]);
+        // boundaries are a pure function of (n, parts): re-evaluation agrees
+        assert_eq!(partition(1000, 7), partition(1000, 7));
+        // strips cover [0, n) exactly, in order, without overlap
+        let ranges = partition(97, 5);
+        let mut next = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, next);
+            assert!(r.end > r.start);
+            next = r.end;
+        }
+        assert_eq!(next, 97);
+    }
+
+    #[test]
+    fn run_strips_returns_in_strip_order() {
+        let pool = Pool::new(4);
+        let out = pool.run_strips(10, 1, |i, r| (i, r.start, r.end));
+        assert_eq!(out, vec![(0, 0, 3), (1, 3, 6), (2, 6, 9), (3, 9, 10)]);
+        // single strip runs inline
+        let calls = AtomicUsize::new(0);
+        let out = Pool::new(1).run_strips(5, 1, |_, r| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            r.len()
+        });
+        assert_eq!(out, vec![5]);
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        // empty input: no strips, no calls
+        assert!(pool.run_strips(0, 1, |_, _| 0usize).is_empty());
+    }
+
+    #[test]
+    fn strip_ranges_respect_min_per_strip() {
+        let pool = Pool::new(8);
+        // 10 items at min 4 per strip: at most 2 strips
+        assert_eq!(pool.strip_ranges(10, 4).len(), 2);
+        assert_eq!(pool.strip_ranges(3, 4), vec![0..3]);
+    }
+
+    #[test]
+    fn scope_groups_mut_writes_are_disjoint_and_deterministic() {
+        let mut serial = vec![0u32; 24];
+        Pool::new(1).scope_groups_mut(&mut serial, 3, 1, |g0, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (g0 * 3 + j) as u32 * 7;
+            }
+        });
+        for threads in [2usize, 3, 5] {
+            let mut par = vec![0u32; 24];
+            Pool::new(threads).scope_groups_mut(&mut par, 3, 1, |g0, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (g0 * 3 + j) as u32 * 7;
+                }
+            });
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_mut_preserves_item_order() {
+        let mut items: Vec<u64> = (0..13).collect();
+        let out = Pool::new(4).map_mut(&mut items, |i, it| {
+            *it += 100;
+            (i as u64, *it)
+        });
+        let want: Vec<(u64, u64)> = (0..13u64).map(|i| (i, i + 100)).collect();
+        assert_eq!(out, want);
+        assert_eq!(items, (100..113u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let base = current_threads();
+        let inner = with_threads(1, || {
+            let one = current_threads();
+            let nested = with_threads(3, current_threads);
+            (one, nested, current_threads())
+        });
+        assert_eq!(inner, (1, 3, 1));
+        assert_eq!(current_threads(), base, "override must restore");
+        assert!(default_threads() >= 1);
+    }
+}

@@ -28,6 +28,7 @@ pub mod codebook;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod exec;
 pub mod hadamard;
 pub mod io;
 pub mod lattice;

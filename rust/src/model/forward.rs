@@ -9,6 +9,13 @@
 //! ([`QuantizedWeight::matmul_from_codes`], DESIGN.md §11) — the dense
 //! weight is **never** materialized, so serving keeps only codes + shared
 //! codebooks (plus their derived decode LUTs) resident (DESIGN.md §7).
+//!
+//! Since PR 5 the hot path is multi-core (DESIGN.md §12): the fused matmul
+//! fans out over output-column strips inside [`QuantizedWeight`], and the
+//! per-position attention of [`causal_self_attention`] / the
+//! `advance_block` chunk walk fans out over disjoint activation-row strips
+//! on the shared pool ([`crate::exec`]) — both bit-identical to their
+//! serial walks at every thread count.
 
 use std::collections::BTreeMap;
 
@@ -26,7 +33,7 @@ pub enum LinearW {
 
 impl LinearW {
     /// `y = x · W` (x: `(n, rows)` → `(n, cols)`).
-    fn matmul(&self, x: &Matrix) -> Matrix {
+    pub(crate) fn matmul(&self, x: &Matrix) -> Matrix {
         match self {
             LinearW::Dense(w) => matmul(x, w),
             LinearW::Codes(q) => q.matmul_from_codes(x),
@@ -34,31 +41,40 @@ impl LinearW {
     }
 
     /// Bits resident on the host for this linear.
-    fn resident_bits(&self) -> u64 {
+    pub(crate) fn resident_bits(&self) -> u64 {
         match self {
             LinearW::Dense(w) => w.len() as u64 * 32,
             LinearW::Codes(q) => q.payload_bits(),
         }
     }
+
+    /// The compressed artifact behind this linear, if codes-resident.
+    pub(crate) fn codes(&self) -> Option<&QuantizedWeight> {
+        match self {
+            LinearW::Codes(q) => Some(q),
+            LinearW::Dense(_) => None,
+        }
+    }
 }
 
-/// Pre-resolved tensor names of one layer — the per-token decode path looks
-/// these up every step, so they are built once instead of `format!`-ing ten
-/// fresh strings per layer per token.
-struct LayerNames {
-    ln1_g: String,
-    ln1_b: String,
-    wq: String,
-    wk: String,
-    wv: String,
-    wo: String,
-    ln2_g: String,
-    ln2_b: String,
-    w1: String,
-    w2: String,
+/// Pre-resolved tensor names of one layer — the per-token decode path (and
+/// every shard node's per-block walk) looks these up every step, so they
+/// are built once instead of `format!`-ing ten fresh strings per layer per
+/// token.
+pub(crate) struct LayerNames {
+    pub(crate) ln1_g: String,
+    pub(crate) ln1_b: String,
+    pub(crate) wq: String,
+    pub(crate) wk: String,
+    pub(crate) wv: String,
+    pub(crate) wo: String,
+    pub(crate) ln2_g: String,
+    pub(crate) ln2_b: String,
+    pub(crate) w1: String,
+    pub(crate) w2: String,
 }
 
-fn layer_names(n_layer: usize) -> Vec<LayerNames> {
+pub(crate) fn layer_names(n_layer: usize) -> Vec<LayerNames> {
     (0..n_layer)
         .map(|i| LayerNames {
             ln1_g: format!("layer{i}.ln1.g"),
@@ -155,11 +171,13 @@ impl HostForward {
     }
 
     fn linear(&self, name: &str, x: &Matrix) -> Result<Matrix> {
-        Ok(self
-            .linears
+        Ok(self.linear_ref(name)?.matmul(x))
+    }
+
+    fn linear_ref(&self, name: &str) -> Result<&LinearW> {
+        self.linears
             .get(name)
-            .with_context(|| format!("missing linear '{name}'"))?
-            .matmul(x))
+            .with_context(|| format!("missing linear '{name}'"))
     }
 
     /// Bits resident for the quantizable matrices (payload only — shared
@@ -183,92 +201,27 @@ impl HostForward {
 
     /// Forward a `(b, t)` token block to logits `(b · t · vocab)`,
     /// matching `forward_fp` in `python/compile/model.py`.
+    ///
+    /// The per-layer math is the shared [`block_layer_forward`] unit (also
+    /// the body of every node in the layer-sharded chain,
+    /// [`crate::coordinator::ShardedForward`]), so a sharded forward is
+    /// bit-identical to this single-node pass by construction.
     pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Vec<f32>> {
         let cfg = &self.config;
         anyhow::ensure!(tokens.len() == b * t, "token block shape mismatch");
         anyhow::ensure!(t <= cfg.ctx, "sequence longer than ctx");
-        let d = cfg.d_model;
-        let n_head = cfg.n_head;
-        let hd = d / n_head;
-
-        // embeddings
-        let tok = self.fp("embed.tok");
-        let pos = self.fp("embed.pos");
-        let mut x = Matrix::zeros(b * t, d);
-        for bi in 0..b {
-            for ti in 0..t {
-                let id = tokens[bi * t + ti];
-                anyhow::ensure!(
-                    id >= 0 && (id as usize) < cfg.vocab,
-                    "token {id} out of vocab"
-                );
-                let row = x.row_mut(bi * t + ti);
-                for ((o, &e), &p) in
-                    row.iter_mut().zip(tok.row(id as usize)).zip(pos.row(ti))
-                {
-                    *o = e + p;
-                }
-            }
-        }
-
+        let mut x = embed_block(
+            self.fp("embed.tok"),
+            self.fp("embed.pos"),
+            tokens,
+            b,
+            t,
+            cfg.vocab,
+        )?;
         for layer in 0..cfg.n_layer {
-            let pfx = format!("layer{layer}");
-            // attention block
-            let ln1 = layer_norm(
-                &x,
-                self.fp(&format!("{pfx}.ln1.g")).as_slice(),
-                self.fp(&format!("{pfx}.ln1.b")).as_slice(),
-            );
-            let q = self.linear(&format!("{pfx}.attn.wq"), &ln1)?;
-            let k = self.linear(&format!("{pfx}.attn.wk"), &ln1)?;
-            let v = self.linear(&format!("{pfx}.attn.wv"), &ln1)?;
-            let mut y = Matrix::zeros(b * t, d);
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut scores = vec![0.0f32; t];
-            for bi in 0..b {
-                for h in 0..n_head {
-                    let c0 = h * hd;
-                    for ti in 0..t {
-                        let qrow = &q.row(bi * t + ti)[c0..c0 + hd];
-                        for (tj, s) in scores.iter_mut().enumerate() {
-                            if tj > ti {
-                                *s = -1e9;
-                                continue;
-                            }
-                            let krow = &k.row(bi * t + tj)[c0..c0 + hd];
-                            *s = crate::tensor::dot(qrow, krow) * scale;
-                        }
-                        softmax_inplace(&mut scores);
-                        let yrow = &mut y.row_mut(bi * t + ti)[c0..c0 + hd];
-                        for (tj, &a) in scores.iter().enumerate().take(ti + 1) {
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let vrow = &v.row(bi * t + tj)[c0..c0 + hd];
-                            for (o, &vv) in yrow.iter_mut().zip(vrow) {
-                                *o += a * vv;
-                            }
-                        }
-                    }
-                }
-            }
-            let attn = self.linear(&format!("{pfx}.attn.wo"), &y)?;
-            add_inplace(&mut x, &attn);
-
-            // mlp block
-            let ln2 = layer_norm(
-                &x,
-                self.fp(&format!("{pfx}.ln2.g")).as_slice(),
-                self.fp(&format!("{pfx}.ln2.b")).as_slice(),
-            );
-            let mut h1 = self.linear(&format!("{pfx}.mlp.w1"), &ln2)?;
-            for v in h1.as_mut_slice() {
-                *v = gelu(*v);
-            }
-            let h2 = self.linear(&format!("{pfx}.mlp.w2"), &h1)?;
-            add_inplace(&mut x, &h2);
+            let p = self.layer_params(layer)?;
+            block_layer_forward(&mut x, &p, b, t, cfg.n_head, cfg.head_dim());
         }
-
         let xf = layer_norm(
             &x,
             self.fp("final_ln.g").as_slice(),
@@ -276,6 +229,23 @@ impl HostForward {
         );
         let logits = self.linear("head.w", &xf)?;
         Ok(logits.into_vec())
+    }
+
+    /// Borrowed parameter view of one layer (pre-resolved names).
+    fn layer_params(&self, layer: usize) -> Result<LayerParams<'_>> {
+        let nm = &self.names[layer];
+        Ok(LayerParams {
+            ln1_g: self.fp(&nm.ln1_g),
+            ln1_b: self.fp(&nm.ln1_b),
+            wq: self.linear_ref(&nm.wq)?,
+            wk: self.linear_ref(&nm.wk)?,
+            wv: self.linear_ref(&nm.wv)?,
+            wo: self.linear_ref(&nm.wo)?,
+            ln2_g: self.fp(&nm.ln2_g),
+            ln2_b: self.fp(&nm.ln2_b),
+            w1: self.linear_ref(&nm.w1)?,
+            w2: self.linear_ref(&nm.w2)?,
+        })
     }
 
     /// Advance one token through the model with a [`KvCache`], returning the
@@ -455,7 +425,6 @@ impl HostForward {
         }
 
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut scores = vec![0.0f32; base + m];
         for layer in 0..cfg.n_layer {
             let nm = &self.names[layer];
             // attention block: project the whole chunk in one matmul, write
@@ -475,27 +444,42 @@ impl HostForward {
             }
             let (kc, vc) = cache.layer(layer);
             let mut y = Matrix::zeros(m, d);
-            for j in 0..m {
-                let srow = &mut scores[..base + j + 1];
-                for h in 0..n_head {
-                    let c0 = h * hd;
-                    let qrow = &q.row(j)[c0..c0 + hd];
-                    for (tj, s) in srow.iter_mut().enumerate() {
-                        *s = crate::tensor::dot(qrow, &kc.row(tj)[c0..c0 + hd]) * scale;
-                    }
-                    softmax_inplace(srow);
-                    let yrow = &mut y.row_mut(j)[c0..c0 + hd];
-                    for (tj, &a) in srow.iter().enumerate() {
-                        if a == 0.0 {
-                            continue;
+            // every position's attention depends only on its own query row
+            // plus the already-written K/V, so the chunk fans out as
+            // disjoint y-row strips on the shared pool — bit-identical to
+            // the serial walk at any thread count (a 1-token decode step
+            // stays inline)
+            crate::exec::Pool::current().scope_groups_mut(
+                y.as_mut_slice(),
+                d,
+                MIN_ATTN_ROWS_PER_STRIP,
+                |j0, chunk| {
+                    let mut scores = vec![0.0f32; base + m];
+                    for (jj, yfull) in chunk.chunks_mut(d).enumerate() {
+                        let j = j0 + jj;
+                        let srow = &mut scores[..base + j + 1];
+                        for h in 0..n_head {
+                            let c0 = h * hd;
+                            let qrow = &q.row(j)[c0..c0 + hd];
+                            for (tj, s) in srow.iter_mut().enumerate() {
+                                *s = crate::tensor::dot(qrow, &kc.row(tj)[c0..c0 + hd])
+                                    * scale;
+                            }
+                            softmax_inplace(srow);
+                            let yrow = &mut yfull[c0..c0 + hd];
+                            for (tj, &a) in srow.iter().enumerate() {
+                                if a == 0.0 {
+                                    continue;
+                                }
+                                let vrow = &vc.row(tj)[c0..c0 + hd];
+                                for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                                    *o += a * vv;
+                                }
+                            }
                         }
-                        let vrow = &vc.row(tj)[c0..c0 + hd];
-                        for (o, &vv) in yrow.iter_mut().zip(vrow) {
-                            *o += a * vv;
-                        }
                     }
-                }
-            }
+                },
+            );
             let attn = self.linear(&nm.wo, &y)?;
             add_inplace(&mut x, &attn);
 
@@ -529,9 +513,140 @@ impl HostForward {
     }
 }
 
+/// Borrowed view of one transformer layer's parameters — the unit
+/// [`HostForward::forward`] and every shard node of the layer-sharded
+/// chain ([`crate::coordinator::ShardedForward`]) run per layer.
+pub(crate) struct LayerParams<'a> {
+    pub ln1_g: &'a Matrix,
+    pub ln1_b: &'a Matrix,
+    pub wq: &'a LinearW,
+    pub wk: &'a LinearW,
+    pub wv: &'a LinearW,
+    pub wo: &'a LinearW,
+    pub ln2_g: &'a Matrix,
+    pub ln2_b: &'a Matrix,
+    pub w1: &'a LinearW,
+    pub w2: &'a LinearW,
+}
+
+/// One pre-norm transformer layer over a `(b·t, d)` hidden block with full
+/// causal attention, in place. Exactly the math `forward_fp` runs per
+/// layer; shared so the single-node forward and the shard chain are the
+/// same function composed differently (bit-identical by construction).
+pub(crate) fn block_layer_forward(
+    x: &mut Matrix,
+    p: &LayerParams<'_>,
+    b: usize,
+    t: usize,
+    n_head: usize,
+    hd: usize,
+) {
+    let ln1 = layer_norm(x, p.ln1_g.as_slice(), p.ln1_b.as_slice());
+    let q = p.wq.matmul(&ln1);
+    let k = p.wk.matmul(&ln1);
+    let v = p.wv.matmul(&ln1);
+    let y = causal_self_attention(&q, &k, &v, b, t, n_head, hd);
+    let attn = p.wo.matmul(&y);
+    add_inplace(x, &attn);
+    let ln2 = layer_norm(x, p.ln2_g.as_slice(), p.ln2_b.as_slice());
+    let mut h1 = p.w1.matmul(&ln2);
+    for vv in h1.as_mut_slice() {
+        *vv = gelu(*vv);
+    }
+    let h2 = p.w2.matmul(&h1);
+    add_inplace(x, &h2);
+}
+
+/// Token + position embeddings of a `(b, t)` block (positions restart at 0
+/// per sequence) — shared by [`HostForward::forward`] and shard node 0.
+pub(crate) fn embed_block(
+    tok: &Matrix,
+    pos: &Matrix,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    vocab: usize,
+) -> Result<Matrix> {
+    let d = tok.cols();
+    let mut x = Matrix::zeros(b * t, d);
+    for bi in 0..b {
+        for ti in 0..t {
+            let id = tokens[bi * t + ti];
+            anyhow::ensure!(id >= 0 && (id as usize) < vocab, "token {id} out of vocab");
+            let row = x.row_mut(bi * t + ti);
+            for ((o, &e), &p) in row.iter_mut().zip(tok.row(id as usize)).zip(pos.row(ti)) {
+                *o = e + p;
+            }
+        }
+    }
+    Ok(x)
+}
+
+/// Fewest activation rows one attention worker takes: below this the spawn
+/// cost beats the per-row attention work (DESIGN.md §12).
+const MIN_ATTN_ROWS_PER_STRIP: usize = 4;
+
+/// Full causal self-attention over a `(b·t, d)` projection block: row
+/// `bi·t + ti` attends over its sequence prefix `0..=ti` per head.
+///
+/// Each output row depends only on its own query row (plus the shared K/V),
+/// so the rows fan out as disjoint strips on the shared worker pool
+/// ([`crate::exec::Pool::current`]) — bit-identical to the serial loop at
+/// any thread count. The prefix-truncated softmax equals the `-1e9`-masked
+/// full softmax bit-for-bit (the masked terms underflow to exactly `0.0`
+/// and are skipped), which is how this helper replaced the original masked
+/// loop without moving a single logit.
+pub(crate) fn causal_self_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    b: usize,
+    t: usize,
+    n_head: usize,
+    hd: usize,
+) -> Matrix {
+    let d = n_head * hd;
+    debug_assert_eq!(q.rows(), b * t);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut y = Matrix::zeros(b * t, d);
+    crate::exec::Pool::current().scope_groups_mut(
+        y.as_mut_slice(),
+        d,
+        MIN_ATTN_ROWS_PER_STRIP,
+        |row0, chunk| {
+            let mut scores = vec![0.0f32; t];
+            for (jj, yrow) in chunk.chunks_mut(d).enumerate() {
+                let row = row0 + jj;
+                let (bi, ti) = (row / t, row % t);
+                let srow = &mut scores[..ti + 1];
+                for h in 0..n_head {
+                    let c0 = h * hd;
+                    let qrow = &q.row(row)[c0..c0 + hd];
+                    for (tj, s) in srow.iter_mut().enumerate() {
+                        let krow = &k.row(bi * t + tj)[c0..c0 + hd];
+                        *s = crate::tensor::dot(qrow, krow) * scale;
+                    }
+                    softmax_inplace(srow);
+                    let yslot = &mut yrow[c0..c0 + hd];
+                    for (tj, &a) in srow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(bi * t + tj)[c0..c0 + hd];
+                        for (o, &vv) in yslot.iter_mut().zip(vrow) {
+                            *o += a * vv;
+                        }
+                    }
+                }
+            }
+        },
+    );
+    y
+}
+
 /// Row-wise pre-norm layer norm (population variance, ε = 1e-5), matching
 /// `model.py::_layer_norm`.
-fn layer_norm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+pub(crate) fn layer_norm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
     let d = x.cols();
     assert_eq!(g.len(), d);
     assert_eq!(b.len(), d);
@@ -552,12 +667,12 @@ fn layer_norm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
 
 /// tanh-approximate GELU (JAX's default `jax.nn.gelu(approximate=True)`).
 #[inline]
-fn gelu(x: f32) -> f32 {
+pub(crate) fn gelu(x: f32) -> f32 {
     const C: f32 = 0.797_884_56; // sqrt(2/π)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-fn softmax_inplace(xs: &mut [f32]) {
+pub(crate) fn softmax_inplace(xs: &mut [f32]) {
     let maxv = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
     let mut sum = 0.0f32;
     for v in xs.iter_mut() {
@@ -570,7 +685,7 @@ fn softmax_inplace(xs: &mut [f32]) {
     }
 }
 
-fn add_inplace(x: &mut Matrix, y: &Matrix) {
+pub(crate) fn add_inplace(x: &mut Matrix, y: &Matrix) {
     debug_assert_eq!((x.rows(), x.cols()), (y.rows(), y.cols()));
     for (a, &b) in x.as_mut_slice().iter_mut().zip(y.as_slice()) {
         *a += b;

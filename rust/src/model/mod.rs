@@ -13,5 +13,8 @@ mod kv_cache;
 
 pub use config::GptConfig;
 pub use forward::{HostForward, LinearW};
+pub(crate) use forward::{
+    block_layer_forward, embed_block, layer_names, layer_norm, LayerNames, LayerParams,
+};
 pub use gpt::{GptModel, QuantizedGpt};
 pub use kv_cache::KvCache;

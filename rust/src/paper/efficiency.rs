@@ -96,7 +96,10 @@ pub fn verify_codes_resident(q: &QuantizedGpt) -> Result<f64> {
 
         // blocked ≡ scalar: the serving kernel must be bit-identical to the
         // reference kernel (tests/kernel_equivalence.rs pins the full grid;
-        // this re-checks on the real model's artifacts)
+        // this re-checks on the real model's artifacts), including at an
+        // explicit multi-thread strip count (the parallel pool, DESIGN.md
+        // §12 — the default entry point may auto-select 1 strip on small
+        // layers, so force the fan-out here)
         let scalar = w.matmul_from_codes_scalar(&x);
         for (a, b) in scalar.as_slice().iter().zip(fused.as_slice()) {
             anyhow::ensure!(
@@ -105,6 +108,37 @@ pub fn verify_codes_resident(q: &QuantizedGpt) -> Result<f64> {
                  reference ({b} vs {a})"
             );
         }
+        let threaded = w.matmul_from_codes_threaded(&x, w.default_block_vecs(), true, 4);
+        for (a, b) in scalar.as_slice().iter().zip(threaded.as_slice()) {
+            anyhow::ensure!(
+                a.to_bits() == b.to_bits(),
+                "'{name}': parallel kernel (4 strips) not bit-identical to \
+                 scalar reference ({b} vs {a})"
+            );
+        }
+    }
+
+    // codebook-once-per-node: the sharded topology keeps each shared
+    // codebook resident on every node whose layers reference it. The
+    // per-node dedup must collapse to the classic accounting at one node
+    // and stay bracketed by [global, n_nodes · global] otherwise.
+    let global = q.codebook_bits();
+    for n_shards in [1usize, 2, 3] {
+        let per_node = crate::coordinator::sharded_codebook_bits(q, n_shards);
+        anyhow::ensure!(!per_node.is_empty(), "sharded accounting produced no nodes");
+        let total: u64 = per_node.iter().sum();
+        if n_shards == 1 {
+            anyhow::ensure!(
+                total == global,
+                "1-node sharded accounting ({total}) != codebook dedup ({global})"
+            );
+        }
+        anyhow::ensure!(
+            total >= global && total <= global * per_node.len() as u64,
+            "{n_shards}-shard codebook accounting out of bounds: \
+             {total} vs global {global} x {} nodes",
+            per_node.len()
+        );
     }
     Ok(q.dense_bits() as f64 / q.resident_bits() as f64)
 }
@@ -162,6 +196,23 @@ pub fn run_efficiency(ctx: &Ctx, model_name: &str, quick: bool) -> Result<()> {
         "  verified: serving holds codes + codebooks only \
          ({ratio:.1}x smaller than dense fp32; per-layer resident bytes \
          ≈ payload bits / 8; fused matmul ≡ dequant path)"
+    );
+
+    // layer-sharded deployment accounting (codebook-once-per-node): codes
+    // partition exactly; each node keeps one copy of every codebook its
+    // layers reference
+    let sharded = crate::coordinator::ShardedForward::new(&q, 2)?;
+    for (i, nb) in sharded.node_bits().iter().enumerate() {
+        println!(
+            "  shard node {i} (layers {:?}): payload {:>7.1} KiB + codebooks {:>7.1} KiB",
+            nb.layers,
+            nb.payload_bits as f64 / 8.0 / 1024.0,
+            nb.codebook_bits as f64 / 8.0 / 1024.0,
+        );
+    }
+    println!(
+        "  2-node sharded resident total: {:.1} KiB (codebooks once per node)",
+        sharded.resident_bits() as f64 / 8.0 / 1024.0
     );
 
     // --- host codes-resident serving (no XLA, no dense weights, ever) ---

@@ -67,52 +67,30 @@ pub fn assign_batch(vectors: &Matrix, codebook: &Matrix, bias: &[f32]) -> Vec<u3
     out
 }
 
-std::thread_local! {
-    /// Per-thread override of the worker count (see [`with_assign_threads`]).
-    static THREAD_OVERRIDE: std::cell::Cell<Option<usize>> =
-        const { std::cell::Cell::new(None) };
-}
-
-/// Default worker count: `PCDVQ_ASSIGN_THREADS` if set (read once per
-/// process — repeated `getenv` from concurrent threads is not safe on every
-/// libc), else the available parallelism.
-fn default_threads() -> usize {
-    static DEFAULT: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *DEFAULT.get_or_init(|| {
-        std::env::var("PCDVQ_ASSIGN_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-    })
-}
-
 /// Run `f` with [`assign_into`] capped at `threads` workers on this thread —
 /// the coordination hook for callers that already parallelize at a coarser
-/// grain (the layer-parallel scheduler pins its workers' inner assignment
-/// to 1 thread so the machine is not oversubscribed).
+/// grain (the layer-parallel scheduler pins its workers' inner parallelism
+/// to 1 thread so the machine is not oversubscribed). Since PR 5 this is an
+/// alias for [`crate::exec::with_threads`]: the cap applies to *every*
+/// pool-driven kernel on this thread (assignment and the fused matmul
+/// alike), which is exactly what a coarser-grain caller wants.
 pub fn with_assign_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
-    let prev = THREAD_OVERRIDE.with(|c| c.replace(Some(threads)));
-    let out = f();
-    THREAD_OVERRIDE.with(|c| c.set(prev));
-    out
+    crate::exec::with_threads(threads, f)
 }
 
 /// [`assign_batch`] into a caller-provided buffer (no allocation beyond the
 /// per-call scratch — used by the scheduler's per-worker loops).
 ///
-/// The vector strip is split across scoped threads (each thread owns a
-/// disjoint `out` chunk, so writes are deterministic and the result is
-/// bit-identical to the serial scan regardless of thread count). Thread
-/// count defaults to the available parallelism, capped so each strip keeps
-/// at least [`MIN_STRIP`] vectors; `PCDVQ_ASSIGN_THREADS` or an enclosing
-/// [`with_assign_threads`] overrides it.
+/// The vector strip is split across the shared worker pool
+/// ([`crate::exec::Pool`]: each worker owns a disjoint `out` chunk with
+/// fixed [`crate::exec::partition`] boundaries, so writes are deterministic
+/// and the result is bit-identical to the serial scan regardless of thread
+/// count). Thread count defaults to [`crate::exec::current_threads`]
+/// (`PALLAS_THREADS` overrides the process default; an enclosing
+/// [`with_assign_threads`]/[`crate::exec::with_threads`] overrides it per
+/// thread), capped so each strip keeps at least [`MIN_STRIP`] vectors.
 pub fn assign_into(vectors: &Matrix, codebook: &Matrix, bias: &[f32], out: &mut [u32]) {
-    let threads = THREAD_OVERRIDE
-        .with(|c| c.get())
-        .unwrap_or_else(default_threads);
-    assign_into_with_threads(vectors, codebook, bias, out, threads)
+    assign_into_with_threads(vectors, codebook, bias, out, crate::exec::current_threads())
 }
 
 /// [`assign_into`] with an explicit worker count (1 = the serial scan; the
@@ -134,23 +112,11 @@ pub fn assign_into_with_threads(
     if n == 0 {
         return;
     }
-    // floor division: never split into strips shorter than MIN_STRIP
-    let threads = threads.clamp(1, (n / MIN_STRIP).max(1));
-    if threads <= 1 {
-        assign_strip(vectors, 0, n, codebook, bias, out);
-        return;
-    }
-    // Deterministic split: fixed-size strips in row order; each scoped
-    // thread writes only its own chunk.
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, out_chunk) in out.chunks_mut(chunk).enumerate() {
-            let row_start = t * chunk;
-            let row_end = row_start + out_chunk.len();
-            scope.spawn(move || {
-                assign_strip(vectors, row_start, row_end, codebook, bias, out_chunk);
-            });
-        }
+    // Deterministic split through the shared pool contract: fixed-size
+    // strips in row order, never shorter than MIN_STRIP; each worker writes
+    // only its own chunk.
+    crate::exec::Pool::new(threads).scope_groups_mut(out, 1, MIN_STRIP, |row_start, chunk| {
+        assign_strip(vectors, row_start, row_start + chunk.len(), codebook, bias, chunk);
     });
 }
 

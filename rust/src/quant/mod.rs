@@ -37,9 +37,11 @@
 //! LUT-driven GEMM** (DESIGN.md §11): code blocks bulk-unpack
 //! ([`packing::PackedIndices::unpack_range_into`]) and decode once into an
 //! L1-resident tile via a pre-expanded [`DecodeLut`], then FMA against every
-//! activation row as contiguous autovectorized segments — with the original
-//! scalar kernel kept as the bit-identical reference
-//! ([`QuantizedWeight::matmul_from_codes_scalar`],
+//! activation row as contiguous autovectorized segments. Since PR 5 the
+//! kernel additionally fans out across disjoint output-column strips on the
+//! shared worker pool ([`crate::exec`], DESIGN.md §12) — with the original
+//! scalar kernel kept as the bit-identical reference **at every thread
+//! count** ([`QuantizedWeight::matmul_from_codes_scalar`],
 //! `tests/kernel_equivalence.rs`).
 
 pub mod assign;
@@ -457,17 +459,138 @@ impl QuantizedWeight {
     ///
     /// This is the blocked, LUT-driven kernel
     /// ([`Self::matmul_from_codes_blocked`] at [`Self::default_block_vecs`],
-    /// LUT on). Its output is **bit-identical** to the scalar reference
-    /// kernel ([`Self::matmul_from_codes_scalar`]) for every block size and
-    /// LUT mode — both walk each output element's contributions in the same
-    /// flat (row-major) order with the same unfused mul-then-add sequence,
-    /// and every [`CodeDecoder::decode_lut`] row is bit-identical to
+    /// LUT on), fanned out across disjoint **output-column strips** on the
+    /// shared worker pool ([`crate::exec`], [`Self::auto_strips`] workers at
+    /// [`crate::exec::current_threads`]; `PALLAS_THREADS` overrides the
+    /// process default). Its output is **bit-identical** to the scalar
+    /// reference kernel ([`Self::matmul_from_codes_scalar`]) for every block
+    /// size, LUT mode **and thread count** — each worker owns its slice of
+    /// `y`, within a column the contributions still arrive in increasing
+    /// weight-row order (the same flat row-major order the scalar kernel
+    /// walks) with the same unfused mul-then-add sequence, and every
+    /// [`CodeDecoder::decode_lut`] row is bit-identical to
     /// [`CodeDecoder::decode_into`]. `tests/kernel_equivalence.rs` pins this
-    /// across the block-size grid {1, 7, default, default+1, n_vectors}.
-    /// Relative to `x · dequantize()` the result agrees to f32 rounding
-    /// (≤ 1e-5 relative — the dense path sums in a different association).
+    /// across the block-size grid {1, 7, default, default+1, n_vectors} and
+    /// the thread grid {1, 2, 4, n+1}. Relative to `x · dequantize()` the
+    /// result agrees to f32 rounding (≤ 1e-5 relative — the dense path sums
+    /// in a different association).
     pub fn matmul_from_codes(&self, x: &Matrix) -> Matrix {
-        self.matmul_from_codes_blocked(x, self.default_block_vecs(), true)
+        let threads = crate::exec::current_threads();
+        self.matmul_from_codes_threaded(
+            x,
+            self.default_block_vecs(),
+            true,
+            self.auto_strips(x.rows(), threads),
+        )
+    }
+
+    /// Column strips the default entry point fans out to at `threads`
+    /// workers: capped so each strip keeps ≥ 2¹⁵ flat mul-adds (below that
+    /// the spawn cost beats the win — single-token decode matvecs on small
+    /// layers stay serial) and ≥ 8 output columns (shorter axpy runs defeat
+    /// the vectorized inner loop). DESIGN.md §12 records the tuning
+    /// contract; the strip *boundaries* for a given count come from
+    /// [`crate::exec::partition`].
+    pub fn auto_strips(&self, batch_rows: usize, threads: usize) -> usize {
+        const MIN_FLAT_PER_STRIP: usize = 1 << 15;
+        const MIN_COLS_PER_STRIP: usize = 8;
+        let work = self.len().saturating_mul(batch_rows.max(1));
+        threads
+            .clamp(1, (work / MIN_FLAT_PER_STRIP).max(1))
+            .min((self.cols / MIN_COLS_PER_STRIP).max(1))
+    }
+
+    /// The parallel fused kernel: [`Self::matmul_from_codes_blocked`]
+    /// fanned out across `threads` disjoint output-column strips
+    /// ([`crate::exec::partition`] of the column range — fixed boundaries,
+    /// never scheduling-dependent). Each worker decodes only the records
+    /// covering its strip (records straddling a strip edge are decoded by
+    /// both neighbours) and accumulates into its own `(n, strip)` buffer;
+    /// the caller stitches strips back in column order and applies the
+    /// scale epilogue, so the result is **bit-identical** to the scalar
+    /// reference for any `threads ≥ 1` (see [`Self::matmul_from_codes`]).
+    pub fn matmul_from_codes_threaded(
+        &self,
+        x: &Matrix,
+        block_vecs: usize,
+        use_lut: bool,
+        threads: usize,
+    ) -> Matrix {
+        let strips = threads.clamp(1, self.cols.max(1));
+        if strips <= 1 {
+            return self.matmul_from_codes_blocked(x, block_vecs, use_lut);
+        }
+        let n = x.rows();
+        let (transformed, lut) = self.kernel_prelude(x, use_lut);
+        let t: &Matrix = transformed.as_ref().unwrap_or(x);
+        let block = block_vecs.clamp(1, self.codes.len().max(1));
+        let pool = crate::exec::Pool::new(strips);
+        // each worker reports its range back with its buffer, so the
+        // stitch-back can never drift from the layout the pool actually ran
+        let parts = pool.run_strips(self.cols, 1, |_, range| {
+            let mut strip = Matrix::zeros(n, range.len());
+            self.accumulate_columns(t, &mut strip, range.clone(), block, lut.as_ref());
+            (range, strip)
+        });
+        let mut y = Matrix::zeros(n, self.cols);
+        for (range, strip) in &parts {
+            for b in 0..n {
+                y.row_mut(b)[range.start..range.end].copy_from_slice(strip.row(b));
+            }
+        }
+        self.apply_col_scales(&mut y);
+        y
+    }
+
+    /// Accumulate the fused product into one output-column strip
+    /// `y[:, c0..c1)` — the per-worker body of
+    /// [`Self::matmul_from_codes_threaded`]. Walks the packed stream row by
+    /// row: for weight row `r` only the records covering flat elements
+    /// `[r·cols + c0, r·cols + c1)` are unpacked and decoded (in
+    /// `block`-sized tiles, exactly like the single-thread kernel). Within
+    /// a column the contributions arrive in increasing weight-row order
+    /// with the same single mul-then-add per element, which is what keeps
+    /// the parallel kernel bit-identical to the scalar reference.
+    fn accumulate_columns(
+        &self,
+        t: &Matrix,
+        y: &mut Matrix,
+        cols_range: std::ops::Range<usize>,
+        block: usize,
+        lut: Option<&Arc<DecodeLut>>,
+    ) {
+        let (c0, c1) = (cols_range.start, cols_range.end);
+        debug_assert!(c0 < c1 && c1 <= self.cols);
+        let k = self.decoder.k();
+        let cols = self.cols;
+        let n = t.rows();
+        let n_streams = self.codes.n_streams();
+        let mut tile = vec![0.0f32; block * k];
+        let mut unpacked = vec![vec![0u64; block]; n_streams];
+        let mut rec = vec![0u64; n_streams];
+        for r in 0..self.rows {
+            let f_lo = r * cols + c0;
+            let f_hi = r * cols + c1;
+            let rec_end = (f_hi - 1) / k + 1;
+            let mut i0 = f_lo / k;
+            while i0 < rec_end {
+                let i1 = (i0 + block).min(rec_end);
+                let bn = i1 - i0;
+                self.decode_block(i0, bn, &mut unpacked, &mut rec, &mut tile, lut);
+                // overlap of the decoded tile's flat range with this row's
+                // strip — one contiguous column run at fixed weight row r
+                let lo = f_lo.max(i0 * k);
+                let hi = f_hi.min(i1 * k);
+                for b in 0..n {
+                    axpy(
+                        &mut y.row_mut(b)[lo - f_lo..hi - f_lo],
+                        &tile[lo - i0 * k..hi - i0 * k],
+                        t.row(b)[r],
+                    );
+                }
+                i0 = i1;
+            }
+        }
     }
 
     /// Default column-block size (in k-vector records) for the blocked
@@ -553,30 +676,14 @@ impl QuantizedWeight {
         block_vecs: usize,
         use_lut: bool,
     ) -> Matrix {
-        assert_eq!(
-            x.cols(),
-            self.rows,
-            "matmul_from_codes: x has {} cols, weight has {} rows",
-            x.cols(),
-            self.rows
-        );
         let n = x.rows();
-        let transformed = self.rht_transformed(x);
+        let (transformed, lut) = self.kernel_prelude(x, use_lut);
         let t: &Matrix = transformed.as_ref().unwrap_or(x);
         let k = self.decoder.k();
         let cols = self.cols;
         let n_vec = self.codes.len();
         let n_streams = self.codes.n_streams();
         let mut y = Matrix::zeros(n, cols);
-        let lut = if use_lut { self.decoder.decode_lut() } else { None };
-        if let Some(l) = &lut {
-            assert_eq!(l.k(), k, "decode LUT width disagrees with decoder k");
-            assert_eq!(
-                l.n_strides(),
-                n_streams,
-                "decode LUT stride count disagrees with stream count"
-            );
-        }
         let block = block_vecs.clamp(1, n_vec.max(1));
         let mut tile = vec![0.0f32; block * k];
         let mut unpacked = vec![vec![0u64; block]; n_streams];
@@ -585,28 +692,7 @@ impl QuantizedWeight {
         while i0 < n_vec {
             let i1 = (i0 + block).min(n_vec);
             let bn = i1 - i0;
-            for (s, buf) in unpacked.iter_mut().enumerate() {
-                self.codes.stream(s).unpack_range_into(i0, &mut buf[..bn]);
-            }
-            match &lut {
-                Some(l) => {
-                    for j in 0..bn {
-                        let mut idx = 0usize;
-                        for (s, buf) in unpacked.iter().enumerate() {
-                            idx += buf[j] as usize * l.stride(s);
-                        }
-                        tile[j * k..(j + 1) * k].copy_from_slice(l.row(idx));
-                    }
-                }
-                None => {
-                    for j in 0..bn {
-                        for (r, buf) in rec.iter_mut().zip(&unpacked) {
-                            *r = buf[j];
-                        }
-                        self.decoder.decode_into(&rec, &mut tile[j * k..(j + 1) * k]);
-                    }
-                }
-            }
+            self.decode_block(i0, bn, &mut unpacked, &mut rec, &mut tile, lut.as_ref());
             // FMA the tile: flat range [i0·k, i1·k) splits into contiguous
             // column segments at fixed weight row r
             let f0 = i0 * k;
@@ -626,6 +712,78 @@ impl QuantizedWeight {
         }
         self.apply_col_scales(&mut y);
         y
+    }
+
+    /// Shared kernel prelude — shape check, the one-time RHT activation
+    /// transform, and the (consistency-checked) decode LUT. One copy for
+    /// the single-thread blocked kernel and the column-strip workers, so
+    /// the two entry points can never drift in what they validate.
+    fn kernel_prelude(
+        &self,
+        x: &Matrix,
+        use_lut: bool,
+    ) -> (Option<Matrix>, Option<Arc<DecodeLut>>) {
+        assert_eq!(
+            x.cols(),
+            self.rows,
+            "matmul_from_codes: x has {} cols, weight has {} rows",
+            x.cols(),
+            self.rows
+        );
+        let transformed = self.rht_transformed(x);
+        let lut = if use_lut { self.decoder.decode_lut() } else { None };
+        if let Some(l) = &lut {
+            assert_eq!(
+                l.k(),
+                self.decoder.k(),
+                "decode LUT width disagrees with decoder k"
+            );
+            assert_eq!(
+                l.n_strides(),
+                self.codes.n_streams(),
+                "decode LUT stride count disagrees with stream count"
+            );
+        }
+        (transformed, lut)
+    }
+
+    /// Decode records `[i0, i0 + bn)` into the first `bn · k` floats of
+    /// `tile` — the per-block decode shared by the single-thread blocked
+    /// kernel and the per-strip workers: bulk-unpack each stream with one
+    /// sequential bit cursor, then gather LUT rows (or fall back to
+    /// per-record [`CodeDecoder::decode_into`]).
+    fn decode_block(
+        &self,
+        i0: usize,
+        bn: usize,
+        unpacked: &mut [Vec<u64>],
+        rec: &mut [u64],
+        tile: &mut [f32],
+        lut: Option<&Arc<DecodeLut>>,
+    ) {
+        let k = self.decoder.k();
+        for (s, buf) in unpacked.iter_mut().enumerate() {
+            self.codes.stream(s).unpack_range_into(i0, &mut buf[..bn]);
+        }
+        match lut {
+            Some(l) => {
+                for j in 0..bn {
+                    let mut idx = 0usize;
+                    for (s, buf) in unpacked.iter().enumerate() {
+                        idx += buf[j] as usize * l.stride(s);
+                    }
+                    tile[j * k..(j + 1) * k].copy_from_slice(l.row(idx));
+                }
+            }
+            None => {
+                for j in 0..bn {
+                    for (r, buf) in rec.iter_mut().zip(unpacked.iter()) {
+                        *r = buf[j];
+                    }
+                    self.decoder.decode_into(rec, &mut tile[j * k..(j + 1) * k]);
+                }
+            }
+        }
     }
 
     /// RHT prelude shared by both kernels: transform the activations once
@@ -805,6 +963,59 @@ mod tests {
         }
         // the default entry point is the blocked+LUT kernel
         assert_eq!(bits(&scalar), bits(&qw.matmul_from_codes(&x)));
+    }
+
+    #[test]
+    fn threaded_kernel_bit_identical_across_thread_grid() {
+        let qw = table_artifact(32, 16, 7, 31);
+        let mut rng = Rng::new(32);
+        let x = Matrix::from_vec(rng.normal_vec(5 * 32), 5, 32);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        let block = qw.default_block_vecs();
+        for threads in [1usize, 2, 3, 4, 16, qw.cols() + 5] {
+            for lut in [false, true] {
+                let par = qw.matmul_from_codes_threaded(&x, block, lut, threads);
+                assert_eq!(bits(&scalar), bits(&par), "threads={threads} lut={lut}");
+            }
+            // odd block sizes through the strip walk too
+            let par = qw.matmul_from_codes_threaded(&x, 3, true, threads);
+            assert_eq!(bits(&scalar), bits(&par), "threads={threads} block=3");
+        }
+    }
+
+    #[test]
+    fn threaded_kernel_handles_straddling_and_scales() {
+        // cols=6, k=4 with per-column scales: strip edges fall inside
+        // decoded vectors and the scale epilogue runs after assembly
+        let k = 4usize;
+        let n_entries = 32usize;
+        let mut rng = Rng::new(33);
+        let table = Arc::new(Matrix::from_vec(rng.normal_vec(n_entries * k), n_entries, k));
+        let records: Vec<u64> = (0..12).map(|_| rng.below(n_entries) as u64).collect();
+        let qw = QuantizedWeight::new(
+            "strad",
+            8,
+            6,
+            PackedStreams::single(PackedIndices::pack(&records, 5)),
+            Arc::new(TableDecoder::new(table, "strad")),
+            vec![0.5, -1.0, 2.0, 0.25, 3.0, -0.125],
+            None,
+        );
+        let x = Matrix::from_vec(rng.normal_vec(3 * 8), 3, 8);
+        let scalar = qw.matmul_from_codes_scalar(&x);
+        for threads in [2usize, 3, 5, 6, 9] {
+            let par = qw.matmul_from_codes_threaded(&x, 2, true, threads);
+            assert_eq!(bits(&scalar), bits(&par), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn auto_strips_keeps_small_work_serial() {
+        let qw = table_artifact(32, 16, 7, 34);
+        // 32x16 · 1 row = 512 flat mul-adds — far below the strip floor
+        assert_eq!(qw.auto_strips(1, 8), 1);
+        // cols cap: never more strips than cols/8
+        assert!(qw.auto_strips(usize::MAX / qw.len(), 64) <= 2);
     }
 
     #[test]

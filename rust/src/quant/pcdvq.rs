@@ -474,6 +474,35 @@ mod tests {
         assert!(nd * nm <= MAX_LUT_ENTRIES, "the paper's a=14 setting must expand");
         let nd_big = 1usize << 17;
         assert!(nd_big * nm > MAX_LUT_ENTRIES, "past the cap the decoder declines");
+
+        // ...and execute the decline branch itself: an (untrained) 2^17-row
+        // direction codebook crosses the cap with b=2, so decode_lut must
+        // return None without attempting the multi-entry expansion
+        let dir = Arc::new(DirectionCodebook {
+            vectors: crate::tensor::Matrix::zeros(nd_big, 8),
+            bits: 17,
+            method: DirectionMethod::RandomGaussian,
+        });
+        let mag = Arc::new(MagnitudeCodebook {
+            levels: vec![0.5, 1.0, 1.5, 2.0],
+            bits: 2,
+            method: MagnitudeMethod::LloydMax,
+        });
+        let dec = DaccDecoder::new(dir, mag);
+        assert!(dec.decode_lut().is_none(), "oversized joint space must decline");
+        // a within-cap pair through the same constructor still expands
+        let dir_ok = Arc::new(DirectionCodebook {
+            vectors: crate::tensor::Matrix::zeros(1 << 6, 8),
+            bits: 6,
+            method: DirectionMethod::RandomGaussian,
+        });
+        let mag_ok = Arc::new(MagnitudeCodebook {
+            levels: vec![0.5, 1.0, 1.5, 2.0],
+            bits: 2,
+            method: MagnitudeMethod::LloydMax,
+        });
+        let dec_ok = DaccDecoder::new(dir_ok, mag_ok);
+        assert!(dec_ok.decode_lut().is_some(), "within-cap pair must expand");
     }
 
     #[test]

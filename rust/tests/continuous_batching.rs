@@ -10,6 +10,13 @@
 //! token-at-a-time `prefill` for every chunk size (including across the
 //! slide+rebuild eviction boundary), admission is FIFO and starvation-free,
 //! and deadlines resolve as timeouts instead of occupying slots.
+//!
+//! Since PR 5 the per-slot steps fan out on the shared worker pool
+//! (`Server::threads`, DESIGN.md §12): the whole suite runs under whatever
+//! `PALLAS_THREADS` CI sets (named steps pin 1 and 4), and
+//! `parallel_slot_pool_matches_serial_outputs_and_metrics` additionally
+//! compares explicit 1- vs 4-thread runs token-for-token and
+//! counter-for-counter.
 
 use std::sync::mpsc::channel;
 use std::time::Instant;
@@ -392,6 +399,58 @@ fn expired_deadline_times_out_in_the_serving_loop() {
     assert_eq!(live.generated.len(), 3);
     assert_eq!(server.metrics.timeouts, 1);
     assert_eq!(server.metrics.requests, 2, "timed-out request never held a slot");
+}
+
+/// The parallel slot pool (exec-driven fan-out of the per-slot steps) is
+/// output- and metrics-invariant: the same traffic served with 1 and 4
+/// worker threads produces identical tokens, admission seqs, and scheduler
+/// counters — the DESIGN.md §12 determinism contract, end to end.
+#[test]
+fn parallel_slot_pool_matches_serial_outputs_and_metrics() {
+    let model = synthetic_model("pool");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = vec![
+        (prompt_bytes(9, 0), 6, 0.0),
+        (prompt_bytes(ctx - 1, 1), 3, 0.9), // sampled, long prompt
+        (prompt_bytes(4, 2), 5, 0.0),
+        (prompt_bytes(ctx + 7, 3), 4, 0.0), // truncates + evicts
+        (prompt_bytes(13, 4), 2, 0.7),
+        (Vec::new(), 3, 0.0), // degenerate rides along
+    ];
+    let run = |threads: usize| {
+        let mut server =
+            Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+        server.max_slots = 3;
+        server.prefill_chunk = 8;
+        server.threads = threads;
+        let (tx, rx) = channel::<GenRequest>();
+        drop(tx);
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut rxs = Vec::new();
+        for (p, max_new, temp) in &reqs {
+            let (rtx, rrx) = channel();
+            batcher.push(GenRequest::new(p.clone(), *max_new, *temp, rtx));
+            rxs.push(rrx);
+        }
+        server.serve_continuous(&mut batcher).unwrap();
+        let resps: Vec<GenResponse> = rxs.iter().map(|r| r.recv().unwrap()).collect();
+        (resps, server)
+    };
+    let (serial, serial_srv) = run(1);
+    for threads in [2usize, 4] {
+        let (par, par_srv) = run(threads);
+        for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+            assert_eq!(a.generated, b.generated, "req {i}: threads={threads} output");
+            assert_eq!(a.seq, b.seq, "req {i}: admission order");
+            assert_eq!(a.steps, b.steps, "req {i}: scheduler steps");
+        }
+        assert_eq!(par_srv.metrics.requests, serial_srv.metrics.requests);
+        assert_eq!(par_srv.metrics.tokens_generated, serial_srv.metrics.tokens_generated);
+        assert_eq!(par_srv.metrics.decode_steps, serial_srv.metrics.decode_steps);
+        assert_eq!(par_srv.metrics.slot_steps_busy, serial_srv.metrics.slot_steps_busy);
+        assert_eq!(par_srv.metrics.slot_steps_total, serial_srv.metrics.slot_steps_total);
+    }
 }
 
 /// Degenerate requests resolve with zero tokens without wedging the pool.

@@ -1,8 +1,11 @@
 //! Kernel-equivalence suite (its own named CI step): the blocked,
 //! LUT-driven `matmul_from_codes` must be **bit-identical** to the scalar
 //! reference kernel (`matmul_from_codes_scalar`) for every decoder family,
-//! every block size in the grid {1, 7, default, default+1, n_vectors}, and
-//! both LUT modes — the equivalence guarantee DESIGN.md §11 documents.
+//! every block size in the grid {1, 7, default, default+1, n_vectors},
+//! both LUT modes, **and every thread count** in
+//! {1, 2, 4, default_threads + 1} (the parallel column-strip fan-out,
+//! DESIGN.md §12) — CI runs the whole suite twice, `PALLAS_THREADS=1` and
+//! `=4`, so the default entry point is exercised at both extremes too.
 //!
 //! Every failure prints a `PCDVQ_PROP_SEED` that reproduces the exact case.
 
@@ -22,7 +25,8 @@ fn bits(m: &Matrix) -> Vec<u32> {
 }
 
 /// Assert blocked ≡ scalar across the block-size grid, with and without the
-/// decode LUT, plus the default entry point.
+/// decode LUT, across the thread grid {1, 2, 4, default_threads + 1}, plus
+/// the default entry point.
 fn assert_kernels_equal(qw: &QuantizedWeight, x: &Matrix, ctx: &str) {
     let scalar = qw.matmul_from_codes_scalar(x);
     let reference = bits(&scalar);
@@ -37,6 +41,26 @@ fn assert_kernels_equal(qw: &QuantizedWeight, x: &Matrix, ctx: &str) {
                 "{ctx}: block={block} lut={lut} diverged from scalar kernel"
             );
         }
+    }
+    // the parallel column-strip fan-out: each worker owns a disjoint slice
+    // of y, accumulation order within a column is unchanged — bit-identical
+    // at every thread count (n+1 oversubscribes on purpose)
+    for threads in [1usize, 2, 4, pcdvq::exec::default_threads() + 1] {
+        for lut in [false, true] {
+            let par = qw.matmul_from_codes_threaded(x, default_block, lut, threads);
+            assert_eq!(
+                reference,
+                bits(&par),
+                "{ctx}: threads={threads} lut={lut} diverged from scalar kernel"
+            );
+        }
+        // an odd block size through the strip walk as well
+        let par = qw.matmul_from_codes_threaded(x, 7, true, threads);
+        assert_eq!(
+            reference,
+            bits(&par),
+            "{ctx}: threads={threads} block=7 diverged from scalar kernel"
+        );
     }
     assert_eq!(
         reference,
@@ -159,5 +183,14 @@ fn prop_blocked_equals_scalar_random_shapes() {
                 g.case_seed
             );
         }
+        // random thread count through the same case (strips clamp to cols)
+        let threads = g.usize_in(1, 9);
+        let par = qw.matmul_from_codes_threaded(&x, block, true, threads);
+        assert_eq!(
+            reference,
+            bits(&par),
+            "case={} {rows}x{cols} k={k} n={n} block={block} threads={threads}",
+            g.case_seed
+        );
     });
 }
