@@ -1,7 +1,8 @@
 //! Bench: end-to-end serving throughput — KV-cached incremental decode vs
 //! windowed re-forward on the host codes-resident backend, continuous vs
-//! static batching, the layer-sharded pipeline vs a single node, plus the
-//! §4.4 XLA comparison when `make artifacts` has run.
+//! static batching, paged-KV prefix sharing (hot vs cold TTFT, paged vs
+//! dense), the layer-sharded pipeline vs a single node, plus the §4.4 XLA
+//! comparison when `make artifacts` has run.
 //!
 //! Needs **no** artifacts: without `gpt-m.pct` it builds a synthetic tinygpt
 //! (the same shape the coordinator integration tests use), so CI gets real
@@ -185,6 +186,91 @@ fn main() {
     println!(
         "static batches:     {stat_tps:>10.1} tok/s   ({:.2}x continuous/static)",
         cont_tps / stat_tps.max(1e-9)
+    );
+
+    // --- paged KV pool + cross-request prefix sharing ---
+    // 8 requests over a common 3/4-length prompt prefix (36 of 48 bytes):
+    // the dense layout re-prefills the prefix for every request, the paged
+    // pool with sharing attaches the resident prefix pages at admission and
+    // prefills only the cold suffix — hot-prefix TTFT is the headline win.
+    println!("== paged prefix sharing (8 reqs, 36/48-byte shared prefix, 2 slots) ==");
+    let shared_prefix: Vec<u8> = (0..36).map(|_| prng.below(256) as u8).collect();
+    let shared_reqs: Vec<(Vec<u8>, usize)> = (0..8)
+        .map(|_| {
+            let mut p = shared_prefix.clone();
+            p.extend((0..12).map(|_| prng.below(256) as u8));
+            (p, 6usize)
+        })
+        .collect();
+    let shared_toks: u64 = shared_reqs.iter().map(|(_, m)| *m as u64).sum();
+    let mk_paged = |q: &QuantizedGpt, kv_page: Option<usize>, share: bool| {
+        let mut s = mk_host(q);
+        s.kv_page = kv_page;
+        s.prefix_share = share;
+        s
+    };
+    let mut dense_server = mk_paged(&q, None, false);
+    drive_mixed(&mut dense_server, &shared_reqs, BatcherConfig::default(), true); // warm-up
+    let dense_m = bench
+        .run_elems("paged_prefix_sharing/dense_tok", shared_toks, || {
+            drive_mixed(&mut dense_server, &shared_reqs, BatcherConfig::default(), true)
+        })
+        .clone();
+    let mut noshare_server = mk_paged(&q, Some(8), false);
+    drive_mixed(&mut noshare_server, &shared_reqs, BatcherConfig::default(), true); // warm-up
+    let noshare_m = bench
+        .run_elems("paged_prefix_sharing/paged_noshare_tok", shared_toks, || {
+            drive_mixed(&mut noshare_server, &shared_reqs, BatcherConfig::default(), true)
+        })
+        .clone();
+    let mut shared_server = mk_paged(&q, Some(8), true);
+    drive_mixed(&mut shared_server, &shared_reqs, BatcherConfig::default(), true); // warm-up
+    let shared_m = bench
+        .run_elems("paged_prefix_sharing/paged_shared_tok", shared_toks, || {
+            drive_mixed(&mut shared_server, &shared_reqs, BatcherConfig::default(), true)
+        })
+        .clone();
+
+    // hot vs cold TTFT from one fresh drive: the first admissions prefill
+    // the whole prompt (cold), later requests ride the published prefix
+    let mut ttft_server = mk_paged(&q, Some(8), true);
+    drive_mixed(&mut ttft_server, &shared_reqs, BatcherConfig::default(), true);
+    bench.record_ns(
+        "paged_prefix_sharing/ttft_cold_p50",
+        ttft_server.metrics.ttft_cold_ms(50.0) * 1e6,
+    );
+    bench.record_ns(
+        "paged_prefix_sharing/ttft_hot_p50",
+        ttft_server.metrics.ttft_hot_ms(50.0) * 1e6,
+    );
+
+    let dense_tps = tok_s(dense_m.median_ns, shared_toks as f64);
+    let noshare_tps = tok_s(noshare_m.median_ns, shared_toks as f64);
+    let shared_tps = tok_s(shared_m.median_ns, shared_toks as f64);
+    println!("dense per-slot:      {dense_tps:>10.1} tok/s");
+    println!("paged, no sharing:   {noshare_tps:>10.1} tok/s");
+    println!(
+        "paged + prefix share:{shared_tps:>10.1} tok/s   ({:.2}x vs dense; \
+         hits {}/{}, reuse {} toks)",
+        shared_tps / dense_tps.max(1e-9),
+        ttft_server.metrics.prefix_hits,
+        ttft_server.metrics.prefix_hits + ttft_server.metrics.prefix_misses,
+        ttft_server.metrics.prefix_tokens_reused,
+    );
+    // effective slot density: the paged pool only materializes pages the
+    // traffic touched, so short-prompt slots cost far less than a dense
+    // full-ctx buffer
+    let gib_bits = 8.0 * 1024.0 * 1024.0 * 1024.0;
+    let dense_slot_bits = (dense_server.config.kv_cache_bits() as f64).max(1.0);
+    let paged_slot_bits =
+        (shared_server.kv_cache_bits() as f64 / shared_server.max_slots as f64).max(1.0);
+    println!(
+        "KV footprint: dense {:.1} KiB/slot ({:.0} slots/GiB) vs paged \
+         {:.1} KiB/slot ({:.0} slots/GiB)",
+        dense_slot_bits / 8.0 / 1024.0,
+        gib_bits / dense_slot_bits,
+        paged_slot_bits / 8.0 / 1024.0,
+        gib_bits / paged_slot_bits,
     );
 
     // --- layer-sharded pipeline vs single node ---

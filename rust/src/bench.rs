@@ -137,6 +137,25 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Record an externally-measured duration as a single-sample
+    /// measurement (min = median = mean, MAD 0). For scenario-level numbers
+    /// a timed closure cannot express — e.g. percentile latencies pulled out
+    /// of serving [`crate::coordinator::Metrics`] — so they still flow into
+    /// [`Self::write_json`] and the `bench_gate` trend table.
+    pub fn record_ns(&mut self, name: &str, ns: f64) -> &Measurement {
+        let m = Measurement {
+            name: name.to_string(),
+            min_ns: ns,
+            median_ns: ns,
+            mean_ns: ns,
+            mad_ns: 0.0,
+            elements: None,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }

@@ -119,6 +119,12 @@ SUBCOMMANDS
              --threads N  worker threads for the per-slot fan-out
                         (default: PALLAS_THREADS or the core count;
                         outputs are identical at every setting)
+             --kv-page-size N  tokens per KV page in the block-paged
+                        pool (default ctx/8, or PALLAS_KV_PAGE); 0
+                        selects the dense per-slot layout — the
+                        paged-path parity oracle
+             --no-prefix-share  disable cross-request prefix sharing
+                        (paged layout only; hot prompts re-prefill)
              --shards N  layer-shard the codes-resident model across N
                         worker nodes (host + --quantized only; codebooks
                         resident once per node; decodes via re-forward

@@ -38,6 +38,33 @@ pub struct Metrics {
     pub slot_steps_busy: u64,
     /// Scheduler steps × slots offered (busy or idle).
     pub slot_steps_total: u64,
+    /// Fresh KV page buffers allocated by the paged pool
+    /// ([`crate::model::KvPool`]; 0 under the dense layout).
+    pub kv_pages_allocated: u64,
+    /// KV page acquisitions served from a free list instead of a fresh
+    /// allocation.
+    pub kv_pages_reused: u64,
+    /// KV page buffers returned to a free list (reset / eviction churn).
+    pub kv_pages_released: u64,
+    /// KV page buffers freed back to the allocator (prefix-trie eviction).
+    pub kv_pages_dropped: u64,
+    /// Copy-on-write page copies (0 in the serving loop by construction —
+    /// writes never target attached prefix pages).
+    pub kv_cow_copies: u64,
+    /// Admissions that attached at least one shared prefix page.
+    pub prefix_hits: u64,
+    /// Admissions that found no shared prefix (paged + sharing only).
+    pub prefix_misses: u64,
+    /// Prompt tokens served from shared pages instead of prefill work.
+    pub prefix_tokens_reused: u64,
+    /// Pages inserted into the prefix trie after prompt prefill.
+    pub prefix_pages_published: u64,
+    /// Pages the prefix trie's LRU cap dropped.
+    pub prefix_pages_evicted: u64,
+    /// TTFT samples of requests that attached shared prefix pages.
+    ttft_hot_us: Vec<u64>,
+    /// TTFT samples of requests that prefilled from scratch.
+    ttft_cold_us: Vec<u64>,
 }
 
 impl Metrics {
@@ -74,6 +101,18 @@ impl Metrics {
         self.slot_steps_total += total as u64;
     }
 
+    /// TTFT of a request that attached shared prefix pages (also record the
+    /// sample via [`Self::record_ttft`] — the hot/cold split is an extra
+    /// breakdown, not a replacement).
+    pub fn record_ttft_hot(&mut self, d: Duration) {
+        self.ttft_hot_us.push(d.as_micros() as u64);
+    }
+
+    /// TTFT of a request that prefilled its whole prompt from scratch.
+    pub fn record_ttft_cold(&mut self, d: Duration) {
+        self.ttft_cold_us.push(d.as_micros() as u64);
+    }
+
     /// Latency percentile in milliseconds (p in [0,100]).
     pub fn latency_ms(&self, p: f64) -> f64 {
         percentile_ms(&self.latencies_us, p)
@@ -87,6 +126,26 @@ impl Metrics {
     /// Queue-wait percentile in milliseconds.
     pub fn queue_wait_ms(&self, p: f64) -> f64 {
         percentile_ms(&self.queue_wait_us, p)
+    }
+
+    /// Hot-prefix (shared pages attached) TTFT percentile in milliseconds.
+    pub fn ttft_hot_ms(&self, p: f64) -> f64 {
+        percentile_ms(&self.ttft_hot_us, p)
+    }
+
+    /// Cold-prefix (full prefill) TTFT percentile in milliseconds.
+    pub fn ttft_cold_ms(&self, p: f64) -> f64 {
+        percentile_ms(&self.ttft_cold_us, p)
+    }
+
+    /// Number of hot-prefix TTFT samples recorded.
+    pub fn ttft_hot_count(&self) -> usize {
+        self.ttft_hot_us.len()
+    }
+
+    /// Number of cold-prefix TTFT samples recorded.
+    pub fn ttft_cold_count(&self) -> usize {
+        self.ttft_cold_us.len()
     }
 
     /// Queue-wait samples (µs) in admission order — the fairness tests
@@ -140,6 +199,25 @@ impl Metrics {
                 self.ttft_ms(50.0),
                 self.queue_wait_ms(50.0),
                 self.slot_occupancy() * 100.0,
+            ));
+        }
+        if self.kv_pages_allocated > 0 {
+            s.push_str(&format!(
+                " kv_pages={} (reused={} released={} dropped={})",
+                self.kv_pages_allocated,
+                self.kv_pages_reused,
+                self.kv_pages_released,
+                self.kv_pages_dropped,
+            ));
+        }
+        if self.prefix_hits + self.prefix_misses > 0 {
+            s.push_str(&format!(
+                " prefix_hits={}/{} reuse_toks={} ttft_hot_p50={:.1}ms ttft_cold_p50={:.1}ms",
+                self.prefix_hits,
+                self.prefix_hits + self.prefix_misses,
+                self.prefix_tokens_reused,
+                self.ttft_hot_ms(50.0),
+                self.ttft_cold_ms(50.0),
             ));
         }
         if self.timeouts > 0 {
@@ -254,6 +332,30 @@ mod tests {
             }
             assert_eq!(par.slot_occupancy(), 1.0);
         }
+    }
+
+    #[test]
+    fn paged_kv_signals() {
+        let mut m = Metrics::new();
+        // dense serving: paged sections stay out of the summary entirely
+        assert!(!m.summary().contains("kv_pages"));
+        assert!(!m.summary().contains("prefix_hits"));
+        m.kv_pages_allocated = 6;
+        m.kv_pages_reused = 10;
+        m.prefix_hits = 3;
+        m.prefix_misses = 1;
+        m.prefix_tokens_reused = 96;
+        m.record_ttft(Duration::from_millis(2));
+        m.record_ttft_hot(Duration::from_millis(2));
+        m.record_ttft(Duration::from_millis(9));
+        m.record_ttft_cold(Duration::from_millis(9));
+        assert_eq!(m.ttft_hot_count(), 1);
+        assert_eq!(m.ttft_cold_count(), 1);
+        assert!(m.ttft_hot_ms(50.0) < m.ttft_cold_ms(50.0));
+        let s = m.summary();
+        assert!(s.contains("kv_pages=6"), "summary was: {s}");
+        assert!(s.contains("prefix_hits=3/4"), "summary was: {s}");
+        assert!(s.contains("reuse_toks=96"), "summary was: {s}");
     }
 
     #[test]

@@ -22,6 +22,10 @@
 //!   slots admit new requests the moment a sequence finishes, prompts
 //!   enter the cache in chunks. The windowed re-forward remains as the
 //!   parity oracle.
+//! * [`prefix`] — the cross-request prefix-sharing trie ([`PrefixCache`]):
+//!   maps prompt prefixes to shared KV page chains
+//!   ([`crate::model::kv_pool`]) at admission time, so a hot prefix's
+//!   prefill is paid once per server (DESIGN.md §13).
 //! * [`shard`] — the layer-sharded multi-worker topology: the artifact
 //!   collection partitions by layer across N worker nodes
 //!   ([`ShardedForward`]), activations pipeline through the shard chain,
@@ -31,14 +35,16 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod prefix;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
 
 pub use batcher::{Admitted, Batcher, BatcherConfig, GenRequest, GenResponse};
 pub use metrics::Metrics;
+pub use prefix::{PrefixCache, PrefixStats};
 pub use scheduler::{
     quantize_model_compressed, quantize_model_parallel, sharded_codebook_bits, QuantStats,
 };
-pub use server::{DecodePolicy, Server, ServingWeights};
+pub use server::{validate_kv_page, DecodePolicy, KvPageAudit, Server, ServingWeights};
 pub use shard::{shard_layers, ShardBits, ShardedForward};

@@ -1,0 +1,394 @@
+//! Token-id-keyed prefix trie mapping prompt prefixes to shared KV page
+//! chains — the admission-time half of cross-request prefix sharing
+//! (DESIGN.md §13).
+//!
+//! Each trie edge is one **full page** of token ids (`page_size` tokens);
+//! a node owns the `Arc<`[`KvPage`]`>` holding that block's K/V rows. At
+//! admission [`PrefixCache::lookup`] walks the prompt's page-aligned blocks
+//! as deep as the trie matches and hands back the chain of shared pages, so
+//! the serving loop attaches them ([`crate::model::PagedKvCache::attach`])
+//! and prefills only the cold suffix. After a prompt's prefill completes,
+//! [`PrefixCache::publish`] inserts its full pages so later requests over
+//! the same prefix find them.
+//!
+//! ```text
+//!   admission(prompt) ── split into page-sized token blocks ──┐
+//!                                                             ▼
+//!        roots ──[b0]──▶ node(page₀) ──[b1]──▶ node(page₁) ──[b2]─▶ ∅
+//!                        │ match           │ match           miss
+//!                        ▼                 ▼
+//!                attach page₀        attach page₁        prefill b2.. cold
+//! ```
+//!
+//! Correctness guardrails:
+//!
+//! * **Whole pages only** — a partially-filled tail page could still be
+//!   written by its owner, so only completely full pages are published or
+//!   attached (and at most `(prompt_len − 1) / page_size` pages are looked
+//!   up: at least one prompt token must run through the model to produce
+//!   the first-token logits).
+//! * **Publication is idempotent-first** — re-publishing a block keeps the
+//!   existing node, so every earlier request that attached it keeps sharing
+//!   the same allocation.
+//! * **Coordinator-thread only** — lookup, publish and eviction run between
+//!   the serving loop's parallel sections, which is what keeps pool
+//!   counters and refcount transitions deterministic at every thread count
+//!   (DESIGN.md §12/§13).
+//! * **Eviction skips pinned pages** — a page some live chain still holds
+//!   (`Arc` refcount > 1) is never dropped from the trie; the LRU victim is
+//!   always a leaf, so chains evict deepest-first.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::model::{KvPage, KvPool};
+
+struct Node {
+    page: Arc<KvPage>,
+    /// Logical clock of the last lookup/publish that touched this node.
+    last_used: u64,
+    /// Insertion tiebreak — makes LRU victim selection a unique minimum
+    /// (HashMap iteration order never leaks into eviction decisions).
+    seq: u64,
+    children: HashMap<Box<[i32]>, Node>,
+}
+
+/// Snapshot of a [`PrefixCache`]'s counters — the serving loop folds deltas
+/// of these into [`crate::coordinator::Metrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub tokens_reused: u64,
+    pub pages_published: u64,
+    pub pages_evicted: u64,
+}
+
+/// Prompt-prefix → shared-page-chain trie, one per paged server. See the
+/// module docs for the admission diagram and guardrails.
+pub struct PrefixCache {
+    page_size: usize,
+    /// Resident-page cap; eviction trims LRU leaves down to this.
+    max_pages: usize,
+    roots: HashMap<Box<[i32]>, Node>,
+    resident: usize,
+    tick: u64,
+    next_seq: u64,
+    /// Lookups that attached at least one page.
+    pub hits: u64,
+    /// Lookups that attached nothing.
+    pub misses: u64,
+    /// Prompt tokens served from shared pages instead of prefill.
+    pub tokens_reused: u64,
+    /// Pages inserted by [`Self::publish`].
+    pub pages_published: u64,
+    /// Pages dropped by the LRU cap (unpinned leaves only).
+    pub pages_evicted: u64,
+}
+
+impl PrefixCache {
+    /// An empty trie for pages of `page_size` tokens, capped at `max_pages`
+    /// resident pages (clamped to at least 1).
+    pub fn new(page_size: usize, max_pages: usize) -> Self {
+        PrefixCache {
+            page_size: page_size.max(1),
+            max_pages: max_pages.max(1),
+            roots: HashMap::new(),
+            resident: 0,
+            tick: 0,
+            next_seq: 0,
+            hits: 0,
+            misses: 0,
+            tokens_reused: 0,
+            pages_published: 0,
+            pages_evicted: 0,
+        }
+    }
+
+    /// Pages currently held by the trie.
+    pub fn resident_pages(&self) -> usize {
+        self.resident
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            tokens_reused: self.tokens_reused,
+            pages_published: self.pages_published,
+            pages_evicted: self.pages_evicted,
+        }
+    }
+
+    /// Walk `prompt`'s page-aligned blocks down the trie and return the
+    /// matched chain plus the number of prompt tokens it covers (a multiple
+    /// of the page size, at most `prompt.len() - 1` rounded down to whole
+    /// pages — the cold suffix is never empty).
+    pub fn lookup(&mut self, prompt: &[i32]) -> (Vec<Arc<KvPage>>, usize) {
+        self.tick += 1;
+        let ps = self.page_size;
+        let max_pages = prompt.len().saturating_sub(1) / ps;
+        let mut chain = Vec::new();
+        let mut map = &mut self.roots;
+        for block in 0..max_pages {
+            match map.get_mut(&prompt[block * ps..(block + 1) * ps]) {
+                Some(node) => {
+                    node.last_used = self.tick;
+                    chain.push(node.page.clone());
+                    map = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        let covered = chain.len() * ps;
+        if covered > 0 {
+            self.hits += 1;
+            self.tokens_reused += covered as u64;
+        } else {
+            self.misses += 1;
+        }
+        (chain, covered)
+    }
+
+    /// Insert the full pages of a freshly prefilled prompt. `chain` is the
+    /// owning cache's page chain (`chain[i]` holds prompt tokens
+    /// `i·ps .. (i+1)·ps`); only `prompt.len() / ps` whole pages are
+    /// published. Existing nodes are kept (their page is already shared),
+    /// then the LRU cap is enforced via `pool` accounting.
+    pub fn publish(&mut self, prompt: &[i32], chain: &[Arc<KvPage>], pool: &KvPool) {
+        self.tick += 1;
+        let ps = self.page_size;
+        let full = (prompt.len() / ps).min(chain.len());
+        let tick = self.tick;
+        let mut inserted = 0usize;
+        let mut map = &mut self.roots;
+        for block in 0..full {
+            let key = &prompt[block * ps..(block + 1) * ps];
+            if !map.contains_key(key) {
+                self.next_seq += 1;
+                map.insert(
+                    key.into(),
+                    Node {
+                        page: chain[block].clone(),
+                        last_used: tick,
+                        seq: self.next_seq,
+                        children: HashMap::new(),
+                    },
+                );
+                inserted += 1;
+            }
+            let node = map.get_mut(key).expect("present or just inserted");
+            node.last_used = tick;
+            map = &mut node.children;
+        }
+        self.resident += inserted;
+        self.pages_published += inserted as u64;
+        self.enforce_cap(pool);
+    }
+
+    /// Drop LRU leaf pages until at most `max_pages` remain, skipping pages
+    /// some chain still holds. Deterministic: the victim is the unique
+    /// minimum of `(last_used, seq)` over unpinned leaves.
+    fn enforce_cap(&mut self, pool: &KvPool) {
+        while self.resident > self.max_pages {
+            let mut path = Vec::new();
+            let mut best: Option<(u64, u64, Vec<Box<[i32]>>)> = None;
+            find_lru_leaf(&self.roots, &mut path, &mut best);
+            let Some((_, _, victim)) = best else {
+                break; // every leaf is pinned by a live chain
+            };
+            let node = remove_at(&mut self.roots, &victim);
+            pool.drop_external(node.page);
+            self.resident -= 1;
+            self.pages_evicted += 1;
+        }
+    }
+
+    /// Drop every page (pinned pages just lose the trie's ref; last-ref
+    /// drops are counted by the pool). Counters survive.
+    pub fn clear(&mut self, pool: &KvPool) {
+        fn drop_all(map: &mut HashMap<Box<[i32]>, Node>, pool: &KvPool) {
+            for (_, mut node) in map.drain() {
+                drop_all(&mut node.children, pool);
+                pool.drop_external(node.page);
+            }
+        }
+        drop_all(&mut self.roots, pool);
+        self.resident = 0;
+    }
+}
+
+/// Depth-first scan for the least-recently-used **unpinned leaf**
+/// (refcount 1 = only the trie holds it). `best` carries the minimum
+/// `(last_used, seq)` and the key path to it.
+fn find_lru_leaf(
+    map: &HashMap<Box<[i32]>, Node>,
+    path: &mut Vec<Box<[i32]>>,
+    best: &mut Option<(u64, u64, Vec<Box<[i32]>>)>,
+) {
+    for (key, node) in map {
+        path.push(key.clone());
+        if node.children.is_empty() {
+            if Arc::strong_count(&node.page) == 1 {
+                let better = match best {
+                    Some((lu, sq, _)) => (node.last_used, node.seq) < (*lu, *sq),
+                    None => true,
+                };
+                if better {
+                    *best = Some((node.last_used, node.seq, path.clone()));
+                }
+            }
+        } else {
+            find_lru_leaf(&node.children, path, best);
+        }
+        path.pop();
+    }
+}
+
+/// Remove and return the node at `path` (must exist; must be a leaf).
+fn remove_at(map: &mut HashMap<Box<[i32]>, Node>, path: &[Box<[i32]>]) -> Node {
+    let (last, rest) = path.split_last().expect("non-empty victim path");
+    let mut map = map;
+    for key in rest {
+        map = &mut map.get_mut(key).expect("victim path valid").children;
+    }
+    map.remove(last).expect("victim leaf present")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GptConfig, KvPool, PagedKvCache};
+
+    fn cfg() -> GptConfig {
+        GptConfig { vocab: 256, d_model: 16, n_layer: 2, n_head: 2, d_ff: 32, ctx: 32 }
+    }
+
+    /// Prefill `cache` with `toks` via raw writes (no model needed here).
+    fn feed(cache: &mut PagedKvCache, toks: &[i32]) {
+        let base = cache.len();
+        for (j, &t) in toks.iter().enumerate() {
+            for l in 0..2 {
+                cache.write_kv_at(l, base + j, &vec![t as f32; 16], &vec![-t as f32; 16]);
+            }
+        }
+        cache.commit_block(toks);
+    }
+
+    #[test]
+    fn lookup_miss_then_publish_then_hit() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut trie = PrefixCache::new(4, 64);
+        let prompt: Vec<i32> = (0..10).collect();
+
+        let (chain, covered) = trie.lookup(&prompt);
+        assert!(chain.is_empty());
+        assert_eq!(covered, 0);
+        assert_eq!(trie.misses, 1);
+
+        let mut cache = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut cache, &prompt);
+        trie.publish(&prompt, cache.pages(), &pool);
+        assert_eq!(trie.resident_pages(), 2, "10 tokens / page 4 → 2 full pages");
+        assert_eq!(trie.pages_published, 2);
+
+        let (chain, covered) = trie.lookup(&prompt);
+        assert_eq!(chain.len(), 2);
+        assert_eq!(covered, 8);
+        assert_eq!(trie.hits, 1);
+        assert_eq!(trie.tokens_reused, 8);
+        // the shared rows are the owner's rows
+        assert_eq!(chain[1].k_row(0, 3), cache.k_row(0, 7));
+
+        // a prompt that diverges in the second block shares only the first
+        let mut other = prompt.clone();
+        other[5] = 99;
+        let (chain, covered) = trie.lookup(&other);
+        assert_eq!((chain.len(), covered), (1, 4));
+    }
+
+    #[test]
+    fn lookup_never_covers_the_whole_prompt() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut trie = PrefixCache::new(4, 64);
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut cache = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut cache, &prompt);
+        trie.publish(&prompt, cache.pages(), &pool);
+        assert_eq!(trie.resident_pages(), 2);
+        // page-aligned prompt: both pages resident, but lookup caps at
+        // (8-1)/4 = 1 page so one token still runs through the model
+        let (chain, covered) = trie.lookup(&prompt);
+        assert_eq!((chain.len(), covered), (1, 4));
+    }
+
+    #[test]
+    fn publish_is_idempotent_and_keeps_existing_pages() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut trie = PrefixCache::new(4, 64);
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut a = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut a, &prompt);
+        trie.publish(&prompt, a.pages(), &pool);
+        let (first, _) = trie.lookup(&prompt);
+
+        let mut b = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut b, &prompt);
+        trie.publish(&prompt, b.pages(), &pool);
+        assert_eq!(trie.resident_pages(), 2, "re-publish inserts nothing");
+        let (second, _) = trie.lookup(&prompt);
+        assert!(Arc::ptr_eq(&first[0], &second[0]), "existing page kept");
+    }
+
+    #[test]
+    fn cap_evicts_lru_leaves_but_never_pinned_pages() {
+        let pool = KvPool::new(&cfg(), 2).unwrap();
+        let mut trie = PrefixCache::new(2, 2);
+        let pa: Vec<i32> = vec![1, 2, 3, 4];
+        let pb: Vec<i32> = vec![9, 8, 7, 6];
+        let mut a = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut a, &pa);
+        trie.publish(&pa, a.pages(), &pool);
+        assert_eq!(trie.resident_pages(), 2);
+
+        // `a` still holds its pages → both of pa's pages are pinned; pb's
+        // publish overflows the cap but can only evict unpinned leaves
+        let mut b = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut b, &pb);
+        trie.publish(&pb, b.pages(), &pool);
+        assert_eq!(trie.resident_pages(), 4, "all pages pinned → nothing evicted");
+        assert_eq!(trie.pages_evicted, 0);
+
+        // release the chains: now eviction can trim down to the cap, oldest
+        // (pa's deepest leaf first) going first
+        a.reset();
+        b.reset();
+        let pc: Vec<i32> = vec![5, 5, 5, 5];
+        let mut c = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut c, &pc);
+        trie.publish(&pc, c.pages(), &pool);
+        c.reset();
+        assert_eq!(trie.resident_pages(), 2);
+        assert!(trie.pages_evicted >= 4, "trimmed to cap once unpinned");
+        // evicted unshared pages return to the allocator, counted
+        assert_eq!(pool.counters().dropped, trie.pages_evicted);
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut trie = PrefixCache::new(4, 64);
+        let prompt: Vec<i32> = (0..12).collect();
+        let mut cache = PagedKvCache::new(&cfg(), &pool);
+        feed(&mut cache, &prompt);
+        trie.publish(&prompt, cache.pages(), &pool);
+        cache.reset();
+        assert_eq!(trie.resident_pages(), 3);
+        trie.clear(&pool);
+        assert_eq!(trie.resident_pages(), 0);
+        assert_eq!(pool.counters().dropped, 3);
+        let (chain, covered) = trie.lookup(&prompt);
+        assert!(chain.is_empty() && covered == 0);
+    }
+}

@@ -38,9 +38,15 @@
 //!   pinned token-for-token to single-request [`DecodePolicy::Reforward`]
 //!   oracle runs by `tests/continuous_batching.rs` (DESIGN.md §9).
 //!
-//! The host backend decodes **incrementally** with one [`KvCache`] per slot
-//! (reset at every request boundary — per-request state is explicit); the
-//! windowed re-forward survives as [`DecodePolicy::Reforward`], both as the
+//! The host backend decodes **incrementally** with one KV cache per slot
+//! (reset at every request boundary — per-request state is explicit). By
+//! default the slot caches are views onto a **block-paged pool**
+//! ([`crate::model::kv_pool`]) and admissions attach shared pages for
+//! prompt prefixes already resident in the [`PrefixCache`] trie, so a hot
+//! prefix's prefill is paid once per server (DESIGN.md §13); the dense
+//! per-slot layout stays reachable as the parity oracle
+//! (`--kv-page-size 0`, [`validate_kv_page`]). The windowed re-forward
+//! survives as [`DecodePolicy::Reforward`], both as the cross-layout
 //! parity oracle and as the only option for the fixed-geometry XLA
 //! executables.
 
@@ -50,9 +56,12 @@ use anyhow::{Context, Result};
 
 use super::batcher::{Admitted, Batcher, GenRequest, GenResponse};
 use super::metrics::Metrics;
+use super::prefix::{PrefixCache, PrefixStats};
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
 use crate::eval::weight_inputs;
-use crate::model::{GptModel, HostForward, KvCache, QuantizedGpt};
+use crate::model::{
+    GptModel, HostForward, KvCache, KvPool, KvPoolCounters, KvStore, PagedKvCache, QuantizedGpt,
+};
 use crate::rng::Rng;
 use crate::runtime::{BoundExecutable, Engine, Input};
 
@@ -139,6 +148,11 @@ struct Slot {
     ttft: Option<std::time::Duration>,
     /// Scheduler steps this request consumed (prefill chunks + decode).
     steps: usize,
+    /// Prompt tokens attached from shared prefix pages at admission (0 on a
+    /// cold prefix or under the dense layout).
+    reused: usize,
+    /// Whether this prompt's pages have been offered to the prefix trie.
+    published: bool,
 }
 
 impl Slot {
@@ -167,11 +181,39 @@ enum StepKind {
     Decode,
 }
 
+/// Per-slot KV storage: the block-paged pool layout
+/// ([`crate::model::PagedKvCache`], the default) or the dense per-slot
+/// buffers kept reachable as the parity oracle (`--kv-page-size 0`).
+enum SlotCache {
+    Dense(KvCache),
+    Paged(PagedKvCache),
+}
+
+impl SlotCache {
+    fn reset(&mut self) {
+        match self {
+            SlotCache::Dense(c) => c.reset(),
+            SlotCache::Paged(c) => c.reset(),
+        }
+    }
+
+    fn memory_bits(&self) -> u64 {
+        match self {
+            SlotCache::Dense(c) => c.memory_bits(),
+            SlotCache::Paged(c) => c.memory_bits(),
+        }
+    }
+}
+
 /// One slot + its KV cache, owned exclusively by one pool worker for the
-/// duration of a scheduler step.
+/// duration of a scheduler step. Under prefix sharing the worker's
+/// exclusivity covers the *mutable tail* of the chain; attached prefix
+/// pages are immutable and shared read-only (writes during a step always
+/// target positions past them — see `model::kv_pool`'s COW rule for why
+/// even a violation of that would stay correct).
 struct SlotWork<'a> {
     slot: &'a mut Slot,
-    cache: &'a mut KvCache,
+    cache: &'a mut SlotCache,
 }
 
 /// Advance one active slot by one unit of work — one prompt chunk
@@ -179,11 +221,12 @@ struct SlotWork<'a> {
 /// projection and emits the first token) or one cached decode step. This is
 /// the per-worker body of the continuous loop's slot fan-out: it touches
 /// nothing but its own slot and cache, so any number of slots can step
-/// concurrently with outputs identical to the serial walk.
-fn step_slot(
+/// concurrently with outputs identical to the serial walk. Generic over the
+/// KV layout ([`KvStore`]): dense and paged caches step byte-identically.
+fn step_slot<C: KvStore>(
     hf: &HostForward,
     slot: &mut Slot,
-    cache: &mut KvCache,
+    cache: &mut C,
     chunk: usize,
     capture: bool,
 ) -> Result<StepKind> {
@@ -214,6 +257,63 @@ fn step_slot(
         }
         SlotPhase::Done => unreachable!("Done slots are filtered before stepping"),
     }
+}
+
+/// Decode one static-path request to completion against its own cache:
+/// reset, fresh placement-derived sampling stream, full-prompt prefill,
+/// then `max_new` cached decode steps. The per-worker body of
+/// [`Server::process_batch`]'s slot fan-out, generic over the KV layout
+/// ([`KvStore`]) so the dense and paged paths share one copy and cannot
+/// drift.
+#[allow(clippy::too_many_arguments)]
+fn decode_one<C: KvStore>(
+    hf: &HostForward,
+    cache: &mut C,
+    slot: u64,
+    prompt_bytes: &[u8],
+    max_new: usize,
+    temperature: f32,
+    seed: u64,
+    ctx: usize,
+    v: usize,
+) -> Result<Vec<u8>> {
+    cache.reset(); // new request → fresh cache
+    let mut rng = request_rng(seed, slot);
+    let prompt = truncate_prompt(prompt_bytes, ctx);
+    let mut gen = Vec::new();
+    if prompt.is_empty() {
+        // degenerate request: resolve with zero tokens rather than
+        // failing the whole batch (finish_batch responds)
+        return Ok(gen);
+    }
+    let mut logits = hf.prefill(&prompt, cache).context("prefill")?;
+    for step in 0..max_new {
+        debug_assert_eq!(logits.len(), v);
+        let next = next_token(&logits, temperature, &mut rng);
+        gen.push(next);
+        if step + 1 < max_new {
+            logits = hf.decode_step(next as i32, cache).context("decode step")?;
+        }
+    }
+    Ok(gen)
+}
+
+/// Snapshot of where every page the KV pool ever created currently lives
+/// ([`Server::kv_page_audit`]). With every slot idle, `created ==
+/// slot_free_pages + prefix_pages + dropped` and `slot_chain_pages == 0`
+/// — the no-leak invariant the paged proptests assert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPageAudit {
+    /// Page buffers the pool ever materialized.
+    pub created: u64,
+    /// Buffers dropped out of circulation (trie evictions / clears).
+    pub dropped: u64,
+    /// Pages currently held by live slot chains.
+    pub slot_chain_pages: u64,
+    /// Recycled buffers parked on slot free lists.
+    pub slot_free_pages: u64,
+    /// Pages resident in the prefix trie.
+    pub prefix_pages: u64,
 }
 
 /// A ready-to-serve model: backend + decode state.
@@ -250,10 +350,33 @@ pub struct Server {
     /// Capture per-step logits into [`GenResponse::logits`] (continuous
     /// loop only) — parity harnesses; off in normal serving.
     pub capture_logits: bool,
+    /// KV layout: `Some(page_size)` → the block-paged pool
+    /// ([`crate::model::kv_pool`], the default: `ctx / 8` pages, or
+    /// `PALLAS_KV_PAGE`); `None` → dense per-slot buffers, kept reachable
+    /// as the parity oracle (`serve --kv-page-size 0`). Validate CLI input
+    /// with [`validate_kv_page`]. Changing this between serve calls
+    /// rebuilds the slot caches on the next call.
+    pub kv_page: Option<usize>,
+    /// Cross-request prefix sharing (paged layout only): admissions attach
+    /// shared pages for resident prompt prefixes and completed prompts
+    /// publish their pages into the [`PrefixCache`] trie (DESIGN.md §13).
+    /// `serve --no-prefix-share` turns it off.
+    pub prefix_share: bool,
+    /// Page budget of the prefix trie; LRU leaves evict past it.
+    pub prefix_page_cap: usize,
     /// One KV cache per slot, built lazily on the host backend and
     /// **reset at every request boundary** — a new request always starts
-    /// from an empty cache.
-    slot_caches: Vec<KvCache>,
+    /// from an empty cache (possibly re-attaching shared prefix pages).
+    slot_caches: Vec<SlotCache>,
+    /// The shared page pool behind the paged slot caches (geometry +
+    /// counters; pages themselves recycle through per-slot free lists).
+    kv_pool: Option<KvPool>,
+    /// The prompt-prefix → page-chain trie (paged layout only).
+    prefix: Option<PrefixCache>,
+    /// High-water marks for folding pool/trie counter deltas into
+    /// [`Self::metrics`] (counters accumulate across serve calls).
+    pool_seen: KvPoolCounters,
+    prefix_seen: PrefixStats,
     /// Weight bits actually resident for the quantizable matrices (fp32 vs
     /// packed codes) — reported by the efficiency harness.
     pub resident_weight_bits: u64,
@@ -285,7 +408,14 @@ impl Server {
             prefill_chunk: (config.ctx / 4).max(1),
             threads: crate::exec::default_threads(),
             capture_logits: false,
+            kv_page: default_kv_page(config.ctx),
+            prefix_share: true,
+            prefix_page_cap: 1024,
             slot_caches: Vec::new(),
+            kv_pool: None,
+            prefix: None,
+            pool_seen: KvPoolCounters::default(),
+            prefix_seen: PrefixStats::default(),
             resident_weight_bits,
             resident_codebook_bits,
         }
@@ -401,10 +531,126 @@ impl Server {
     }
 
     /// f32 bits of KV-cache state currently allocated across slots
-    /// (0 until the first cached batch; grows to
-    /// `slots · config.kv_cache_bits()`).
+    /// (0 until the first cached batch). Dense: `slots ·
+    /// config.kv_cache_bits()`. Paged: every page the pool ever created —
+    /// whether currently in a chain, a free list, or the prefix trie —
+    /// which is the honest footprint (pages are recycled, never freed).
     pub fn kv_cache_bits(&self) -> u64 {
-        self.slot_caches.iter().map(|c| c.memory_bits()).sum()
+        match &self.kv_pool {
+            Some(pool) => pool.pages_created() * pool.page_bits(),
+            None => self.slot_caches.iter().map(|c| c.memory_bits()).sum(),
+        }
+    }
+
+    /// Pool counters since server construction (`None` under the dense
+    /// layout). Test hook; the same deltas flow into [`Self::metrics`].
+    pub fn kv_pool_counters(&self) -> Option<KvPoolCounters> {
+        self.kv_pool.as_ref().map(|p| p.counters())
+    }
+
+    /// Pages currently resident in the prefix trie (0 when sharing is off
+    /// or the layout is dense).
+    pub fn prefix_resident_pages(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |t| t.resident_pages())
+    }
+
+    /// Drop every published prefix page (their buffers leave the pool's
+    /// accounting as `dropped`). The next request over any prefix is cold
+    /// again — parity harnesses use this to compare hot vs cold runs.
+    pub fn clear_prefix_cache(&mut self) {
+        if let (Some(trie), Some(pool)) = (self.prefix.as_mut(), self.kv_pool.as_ref()) {
+            trie.clear(pool);
+        }
+        self.sync_kv_metrics();
+    }
+
+    /// Where every page the pool ever created currently lives. With all
+    /// slots idle (chains reset), `created == slot_free_pages +
+    /// prefix_pages + dropped` and `slot_chain_pages == 0` — the no-leak
+    /// invariant `tests/paged_kv.rs` asserts after every traffic pattern.
+    pub fn kv_page_audit(&self) -> Option<KvPageAudit> {
+        let pool = self.kv_pool.as_ref()?;
+        let mut chain = 0u64;
+        let mut free = 0u64;
+        for c in &self.slot_caches {
+            if let SlotCache::Paged(p) = c {
+                chain += p.pages().len() as u64;
+                free += p.local_free_len() as u64;
+            }
+        }
+        Some(KvPageAudit {
+            created: pool.pages_created(),
+            dropped: pool.counters().dropped,
+            slot_chain_pages: chain,
+            slot_free_pages: free,
+            prefix_pages: self.prefix_resident_pages() as u64,
+        })
+    }
+
+    /// Make at least `n` slot caches exist under the *current* layout
+    /// ([`Self::kv_page`]). A layout change (page size toggled or resized
+    /// between serve calls) rebuilds from scratch: old caches, pool and
+    /// trie are dropped together so no page can outlive its pool's
+    /// accounting.
+    fn ensure_slot_caches(&mut self, n: usize) -> Result<()> {
+        let stale = match (&self.kv_page, self.kv_pool.as_ref()) {
+            (Some(ps), Some(pool)) => pool.page_size() != *ps,
+            (Some(_), None) => !self.slot_caches.is_empty(),
+            (None, Some(_)) => true,
+            (None, None) => self
+                .slot_caches
+                .iter()
+                .any(|c| matches!(c, SlotCache::Paged(_))),
+        };
+        if stale {
+            self.slot_caches.clear();
+            if let (Some(trie), Some(pool)) = (self.prefix.as_mut(), self.kv_pool.as_ref()) {
+                trie.clear(pool);
+            }
+            self.prefix = None;
+            self.kv_pool = None;
+            self.pool_seen = KvPoolCounters::default();
+            self.prefix_seen = PrefixStats::default();
+        }
+        if let Some(ps) = self.kv_page {
+            if self.kv_pool.is_none() {
+                self.kv_pool = Some(KvPool::new(&self.config, ps)?);
+                self.prefix = Some(PrefixCache::new(ps, self.prefix_page_cap));
+            }
+        }
+        while self.slot_caches.len() < n {
+            self.slot_caches.push(match &self.kv_pool {
+                Some(pool) => SlotCache::Paged(PagedKvCache::new(&self.config, pool)),
+                None => SlotCache::Dense(KvCache::new(&self.config)),
+            });
+        }
+        Ok(())
+    }
+
+    /// Fold pool-counter and trie-stat deltas (since the last fold) into
+    /// [`Self::metrics`]. Called at the end of each serving entry point so
+    /// `Metrics::summary` and `BENCH_serving.json` see cumulative totals.
+    fn sync_kv_metrics(&mut self) {
+        if let Some(pool) = &self.kv_pool {
+            let c = pool.counters();
+            self.metrics.kv_pages_allocated += c.allocated - self.pool_seen.allocated;
+            self.metrics.kv_pages_reused += c.reused - self.pool_seen.reused;
+            self.metrics.kv_pages_released += c.released - self.pool_seen.released;
+            self.metrics.kv_pages_dropped += c.dropped - self.pool_seen.dropped;
+            self.metrics.kv_cow_copies += c.cow_copies - self.pool_seen.cow_copies;
+            self.pool_seen = c;
+        }
+        if let Some(trie) = &self.prefix {
+            let s = trie.stats();
+            self.metrics.prefix_hits += s.hits - self.prefix_seen.hits;
+            self.metrics.prefix_misses += s.misses - self.prefix_seen.misses;
+            self.metrics.prefix_tokens_reused += s.tokens_reused - self.prefix_seen.tokens_reused;
+            self.metrics.prefix_pages_published +=
+                s.pages_published - self.prefix_seen.pages_published;
+            self.metrics.prefix_pages_evicted +=
+                s.pages_evicted - self.prefix_seen.pages_evicted;
+            self.prefix_seen = s;
+        }
     }
 
     /// Decode one batch of requests to completion; sends responses on each
@@ -434,12 +680,10 @@ impl Server {
         let ctx = self.config.ctx;
         let v = self.config.vocab;
         let seed = self.sampler_seed;
+        self.ensure_slot_caches(batch.len())?;
         let Backend::Host(hf) = &self.backend else {
             anyhow::bail!("cached decode needs the host backend")
         };
-        while self.slot_caches.len() < batch.len() {
-            self.slot_caches.push(KvCache::new(&self.config));
-        }
 
         /// One batch slot's work unit: shareable request fields + exclusive
         /// cache ownership (the response `Sender` stays on the coordinator).
@@ -448,7 +692,7 @@ impl Server {
             prompt: &'a [u8],
             max_new: usize,
             temperature: f32,
-            cache: &'a mut KvCache,
+            cache: &'a mut SlotCache,
         }
         let mut work: Vec<CachedWork> = batch
             .iter()
@@ -467,27 +711,13 @@ impl Server {
         // request fan-out is real (exec::Pool::inner_threads)
         let inner = pool.inner_threads(work.len());
         let results = pool.map_mut(&mut work, |_, w| -> Result<Vec<u8>> {
-            crate::exec::with_threads(inner, || {
-                w.cache.reset(); // new request → fresh cache
-                let mut rng = request_rng(seed, w.slot as u64);
-                let prompt = truncate_prompt(w.prompt, ctx);
-                let mut gen = Vec::new();
-                if prompt.is_empty() {
-                    // degenerate request: resolve with zero tokens rather
-                    // than failing the whole batch (finish_batch responds)
-                    return Ok(gen);
+            crate::exec::with_threads(inner, || match w.cache {
+                SlotCache::Dense(c) => {
+                    decode_one(hf, c, w.slot as u64, w.prompt, w.max_new, w.temperature, seed, ctx, v)
                 }
-                let mut logits = hf.prefill(&prompt, w.cache).context("prefill")?;
-                for step in 0..w.max_new {
-                    debug_assert_eq!(logits.len(), v);
-                    let next = next_token(&logits, w.temperature, &mut rng);
-                    gen.push(next);
-                    if step + 1 < w.max_new {
-                        logits =
-                            hf.decode_step(next as i32, w.cache).context("decode step")?;
-                    }
+                SlotCache::Paged(c) => {
+                    decode_one(hf, c, w.slot as u64, w.prompt, w.max_new, w.temperature, seed, ctx, v)
                 }
-                Ok(gen)
             })
         });
         let mut generated: Vec<Vec<u8>> = Vec::with_capacity(batch.len());
@@ -497,6 +727,7 @@ impl Server {
 
         let steps = batch.iter().map(|r| r.max_new).max().unwrap_or(0);
         self.finish_batch(t0, &batch, &generated, steps);
+        self.sync_kv_metrics();
         Ok(())
     }
 
@@ -631,10 +862,19 @@ impl Server {
     /// §12).
     ///
     /// Per-request state is explicit, exactly as in the static cached path:
-    /// a reset [`KvCache`] and a fresh sampling stream per request (derived
+    /// a reset cache and a fresh sampling stream per request (derived
     /// from the admission `seq`, so streams are independent of slot
     /// placement). Greedy outputs are therefore token-identical to
     /// single-request oracle runs regardless of traffic interleaving.
+    ///
+    /// Under the paged layout ([`Self::kv_page`], the default) with
+    /// [`Self::prefix_share`] on, admission additionally attaches shared
+    /// pages covering the longest whole-page prompt prefix resident in the
+    /// [`PrefixCache`], prefill runs only the cold suffix, and the step a
+    /// prompt finishes prefilling its whole pages are published back to the
+    /// trie. Attached pages hold exactly the K/V rows the model would have
+    /// recomputed, so outputs stay token-identical to the dense layout and
+    /// to the [`DecodePolicy::Reforward`] oracle (DESIGN.md §13).
     pub fn serve_continuous(&mut self, batcher: &mut Batcher) -> Result<()> {
         anyhow::ensure!(
             matches!(&self.backend, Backend::Host(_)),
@@ -648,9 +888,7 @@ impl Server {
         let n = self.max_slots.max(1);
         let chunk = self.prefill_chunk.max(1);
         let ctx = self.config.ctx;
-        while self.slot_caches.len() < n {
-            self.slot_caches.push(KvCache::new(&self.config));
-        }
+        self.ensure_slot_caches(n)?;
         let Backend::Host(hf) = &self.backend else { unreachable!() };
         let mut slots: Vec<Option<Slot>> = (0..n).map(|_| None).collect();
         let mut seen_timeouts = batcher.timed_out();
@@ -666,19 +904,37 @@ impl Server {
                     let queue_wait = admitted.saturating_duration_since(req.enqueued);
                     self.metrics.record_queue_wait(queue_wait);
                     let prompt = truncate_prompt(&req.prompt, ctx);
-                    // degenerate requests resolve with zero tokens without
-                    // occupying a scheduler step's worth of model work
-                    let phase = if prompt.is_empty() || req.max_new == 0 {
-                        SlotPhase::Done
-                    } else {
-                        SlotPhase::Prefill { remaining: prompt.len() }
-                    };
                     let rng = request_rng(self.sampler_seed, seq);
                     let idx = slots
                         .iter()
                         .position(|s| s.is_none())
                         .expect("admission capped at free slots");
                     self.slot_caches[idx].reset(); // new request → fresh cache
+                    // prefix sharing: attach resident pages covering the
+                    // longest whole-page prompt prefix, so prefill only
+                    // runs the cold suffix through the model (§13)
+                    let mut reused = 0usize;
+                    if self.prefix_share && !prompt.is_empty() && req.max_new > 0 {
+                        if let (SlotCache::Paged(cache), Some(trie)) =
+                            (&mut self.slot_caches[idx], self.prefix.as_mut())
+                        {
+                            let (chain, covered) = trie.lookup(&prompt);
+                            if covered > 0 {
+                                cache.attach(&chain, &prompt[..covered]);
+                            }
+                            reused = covered;
+                        }
+                    }
+                    // degenerate requests resolve with zero tokens without
+                    // occupying a scheduler step's worth of model work
+                    let phase = if prompt.is_empty() || req.max_new == 0 {
+                        SlotPhase::Done
+                    } else {
+                        // lookup never covers the whole prompt, so at
+                        // least one token always prefills through the
+                        // model (the head needs fresh logits)
+                        SlotPhase::Prefill { remaining: prompt.len() - reused }
+                    };
                     slots[idx] = Some(Slot {
                         req,
                         seq,
@@ -691,6 +947,8 @@ impl Server {
                         captured: Vec::new(),
                         ttft: None,
                         steps: 0,
+                        reused,
+                        published: false,
                     });
                     active += 1;
                 }
@@ -727,8 +985,9 @@ impl Server {
             // attention-row parallelism (exec::Pool::inner_threads)
             let inner = pool.inner_threads(worked);
             let outcomes = pool.map_mut(&mut work, |_, w| {
-                crate::exec::with_threads(inner, || {
-                    step_slot(hf, w.slot, w.cache, chunk, capture)
+                crate::exec::with_threads(inner, || match w.cache {
+                    SlotCache::Dense(c) => step_slot(hf, w.slot, c, chunk, capture),
+                    SlotCache::Paged(c) => step_slot(hf, w.slot, c, chunk, capture),
                 })
             });
             for outcome in outcomes {
@@ -741,8 +1000,35 @@ impl Server {
             self.metrics.record_occupancy(worked, n);
             self.metrics.wall_s += t0.elapsed().as_secs_f64();
 
+            // ---- publication: offer freshly-prefilled prompts' pages ----
+            // The step a slot leaves Prefill its cache holds exactly the
+            // prompt (`len == prompt.len()` — the first decode write lands
+            // next step), so its whole pages are immutable from here on and
+            // safe to share. Runs on the coordinator thread only; `publish`
+            // is idempotent-first, so racing admissions are impossible and
+            // repeated prompts keep the already-resident pages (§13).
+            if self.prefix_share {
+                if let (Some(pool), Some(trie)) = (self.kv_pool.as_ref(), self.prefix.as_mut()) {
+                    for (entry, cache) in slots.iter_mut().zip(self.slot_caches.iter()) {
+                        let Some(slot) = entry else { continue };
+                        if slot.published
+                            || matches!(slot.phase, SlotPhase::Prefill { .. })
+                            || slot.prompt.is_empty()
+                        {
+                            continue;
+                        }
+                        if let SlotCache::Paged(c) = cache {
+                            if c.len() == slot.prompt.len() {
+                                trie.publish(&slot.prompt, c.pages(), pool);
+                            }
+                        }
+                        slot.published = true;
+                    }
+                }
+            }
+
             // ---- completions: respond and free slots ----
-            for entry in slots.iter_mut() {
+            for (entry, cache) in slots.iter_mut().zip(self.slot_caches.iter_mut()) {
                 let done = matches!(entry, Some(s) if s.phase == SlotPhase::Done);
                 if !done {
                     continue;
@@ -752,6 +1038,13 @@ impl Server {
                 self.metrics.tokens_generated += slot.generated.len() as u64;
                 if let Some(t) = slot.ttft {
                     self.metrics.record_ttft(t);
+                    // hot/cold TTFT breakdown: did this prompt ride shared
+                    // prefix pages? (always cold under the dense layout)
+                    if slot.reused > 0 {
+                        self.metrics.record_ttft_hot(t);
+                    } else {
+                        self.metrics.record_ttft_cold(t);
+                    }
                 }
                 let resp = GenResponse {
                     generated: slot.generated,
@@ -765,10 +1058,46 @@ impl Server {
                 };
                 self.metrics.record_latency(resp.latency);
                 slot.req.resp.send(resp).ok();
+                // return the chain's pages promptly (published pages stay
+                // resident through the trie's refs): idle slots hold no
+                // pages, which keeps the no-leak audit exact
+                cache.reset();
             }
         }
+        self.sync_kv_metrics();
         Ok(())
     }
+}
+
+/// Default KV layout for a fresh server: the block-paged pool with
+/// `ctx / 8`-token pages. `PALLAS_KV_PAGE` overrides it — `0` forces the
+/// dense per-slot layout (the parity oracle), any other value is clamped
+/// into `1..=ctx`; unset or unparseable falls back to the default.
+fn default_kv_page(ctx: usize) -> Option<usize> {
+    match std::env::var("PALLAS_KV_PAGE") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(0) => None,
+            Ok(p) => Some(p.clamp(1, ctx.max(1))),
+            Err(_) => Some((ctx / 8).max(1)),
+        },
+        Err(_) => Some((ctx / 8).max(1)),
+    }
+}
+
+/// Validate a `serve --kv-page-size` value against the model context and
+/// turn it into a [`Server::kv_page`] setting: `0` selects the dense
+/// layout, `1..=ctx` the paged pool, anything larger is a flag error (not
+/// a panic — degenerate page sizes must fail with a usable message).
+pub fn validate_kv_page(page: usize, ctx: usize) -> Result<Option<usize>> {
+    if page == 0 {
+        return Ok(None); // dense per-slot buffers (the parity oracle)
+    }
+    anyhow::ensure!(
+        page <= ctx,
+        "--kv-page-size {page} exceeds the model context ({ctx}); \
+         pass 0 for the dense layout or a page size in 1..={ctx}"
+    );
+    Ok(Some(page))
 }
 
 /// Truncate a byte prompt to the last `ctx - 1` positions (leaving room to
@@ -909,6 +1238,16 @@ mod tests {
         assert!(same.iter().all(|&x| x == b.next_u64()));
         let other: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
         assert_ne!(same, other);
+    }
+
+    #[test]
+    fn validate_kv_page_accepts_range_and_rejects_oversize() {
+        assert_eq!(validate_kv_page(0, 64).unwrap(), None); // dense oracle
+        assert_eq!(validate_kv_page(1, 64).unwrap(), Some(1));
+        assert_eq!(validate_kv_page(64, 64).unwrap(), Some(64));
+        let err = validate_kv_page(65, 64).unwrap_err().to_string();
+        assert!(err.contains("--kv-page-size 65"), "got: {err}");
+        assert!(err.contains("1..=64"), "got: {err}");
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use super::{GptConfig, GptModel, KvCache, QuantizedGpt};
+use super::{GptConfig, GptModel, KvCache, KvStore, QuantizedGpt};
 use crate::quant::QuantizedWeight;
 use crate::tensor::{matmul, Matrix};
 
@@ -248,8 +248,11 @@ impl HostForward {
         })
     }
 
-    /// Advance one token through the model with a [`KvCache`], returning the
-    /// logits (`vocab` floats) at the new position.
+    /// Advance one token through the model with a KV cache (dense
+    /// [`KvCache`] or paged [`crate::model::PagedKvCache`] — any
+    /// [`KvStore`]), returning the logits (`vocab` floats) at the new
+    /// position. Both layouts produce byte-identical cache state and logits
+    /// for the same token stream (DESIGN.md §13).
     ///
     /// Each call runs exactly one token through every layer and attends over
     /// the cached K/V plus the new position — O(1) weight work per token
@@ -262,7 +265,7 @@ impl HostForward {
     /// tokens and the surviving window's K/V are rebuilt at their shifted
     /// positions before the new token is processed (see [`KvCache`] for the
     /// amortized cost).
-    pub fn decode_step(&self, token: i32, cache: &mut KvCache) -> Result<Vec<f32>> {
+    pub fn decode_step<C: KvStore>(&self, token: i32, cache: &mut C) -> Result<Vec<f32>> {
         let x = self.advance_token(token, cache)?;
         self.head_logits(&x)
     }
@@ -276,7 +279,7 @@ impl HostForward {
     /// This is the chunk-size-1 reference for [`Self::prefill_block`]: the
     /// two leave the cache **byte-identical** for every chunk size (pinned
     /// by `tests/continuous_batching.rs`).
-    pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
+    pub fn prefill<C: KvStore>(&self, tokens: &[i32], cache: &mut C) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
         let (last, head) = tokens.split_last().unwrap();
         for &t in head {
@@ -296,10 +299,10 @@ impl HostForward {
     /// on its own input row, so the resulting [`KvCache`] (tokens, K/V rows,
     /// telemetry) and logits are **byte-identical** to [`Self::prefill`]
     /// for any `chunk ≥ 1`.
-    pub fn prefill_block(
+    pub fn prefill_block<C: KvStore>(
         &self,
         tokens: &[i32],
-        cache: &mut KvCache,
+        cache: &mut C,
         chunk: usize,
     ) -> Result<Vec<f32>> {
         let x = self.feed_blocks(tokens, cache, chunk)?;
@@ -312,10 +315,10 @@ impl HostForward {
     /// The continuous-batching server feeds one prompt chunk per scheduler
     /// step through this, and pays the single lazy head projection via
     /// [`Self::prefill_block`] on the prompt's final chunk.
-    pub fn prefill_extend(
+    pub fn prefill_extend<C: KvStore>(
         &self,
         tokens: &[i32],
-        cache: &mut KvCache,
+        cache: &mut C,
         chunk: usize,
     ) -> Result<()> {
         self.feed_blocks(tokens, cache, chunk).map(|_| ())
@@ -324,10 +327,10 @@ impl HostForward {
     /// Drive `tokens` through the cache in blocks of at most `chunk`,
     /// evicting on the same boundaries the token-at-a-time path would.
     /// Returns the hidden states of the final block.
-    fn feed_blocks(
+    fn feed_blocks<C: KvStore>(
         &self,
         tokens: &[i32],
-        cache: &mut KvCache,
+        cache: &mut C,
         chunk: usize,
     ) -> Result<Matrix> {
         anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
@@ -356,7 +359,7 @@ impl HostForward {
     /// Evict if full, then advance one token (K/V appended, hidden state
     /// returned). The head projection is the caller's decision — prefill
     /// and eviction rebuilds never need logits, so they skip it.
-    fn advance_token(&self, token: i32, cache: &mut KvCache) -> Result<Matrix> {
+    fn advance_token<C: KvStore>(&self, token: i32, cache: &mut C) -> Result<Matrix> {
         if cache.len() == cache.capacity() {
             // Slide + rebuild: surviving tokens re-embed at shifted
             // positions, so their K/V must be recomputed (kv_cache.rs).
@@ -385,11 +388,11 @@ impl HostForward {
     /// activation row of the chunk reuses the decoded tile, rather than
     /// paying a full code-stream decode per row (the dominant block-prefill
     /// saving; DESIGN.md §11).
-    fn advance_block(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Matrix> {
+    fn advance_block<C: KvStore>(&self, tokens: &[i32], cache: &mut C) -> Result<Matrix> {
         let cfg = &self.config;
         anyhow::ensure!(
             cache.compatible_with(cfg),
-            "KvCache geometry does not match this model"
+            "KV cache geometry does not match this model"
         );
         let m = tokens.len();
         anyhow::ensure!(m > 0, "advance_block needs at least one token");
@@ -442,7 +445,10 @@ impl HostForward {
             for j in 0..m {
                 cache.write_kv_at(layer, base + j, k.row(j), v.row(j));
             }
-            let (kc, vc) = cache.layer(layer);
+            // attention reads go through the layout-agnostic view: a
+            // contiguous matrix for the dense cache, a page walk for the
+            // paged one (model::kv_pool) — same rows either way
+            let view = cache.attn_view(layer);
             let mut y = Matrix::zeros(m, d);
             // every position's attention depends only on its own query row
             // plus the already-written K/V, so the chunk fans out as
@@ -462,7 +468,7 @@ impl HostForward {
                             let c0 = h * hd;
                             let qrow = &q.row(j)[c0..c0 + hd];
                             for (tj, s) in srow.iter_mut().enumerate() {
-                                *s = crate::tensor::dot(qrow, &kc.row(tj)[c0..c0 + hd])
+                                *s = crate::tensor::dot(qrow, &view.k_row(tj)[c0..c0 + hd])
                                     * scale;
                             }
                             softmax_inplace(srow);
@@ -471,7 +477,7 @@ impl HostForward {
                                 if a == 0.0 {
                                     continue;
                                 }
-                                let vrow = &vc.row(tj)[c0..c0 + hd];
+                                let vrow = &view.v_row(tj)[c0..c0 + hd];
                                 for (o, &vv) in yrow.iter_mut().zip(vrow) {
                                     *o += a * vv;
                                 }

@@ -1,0 +1,730 @@
+//! Block-paged KV storage with refcounted cross-request page sharing.
+//!
+//! The dense [`KvCache`] gives every serving slot a private
+//! `(capacity, d_model)` K and V buffer per layer — at production batch
+//! sizes those buffers, not the ~2-bit weights, dominate resident bytes, and
+//! every request re-prefills shared system prompts from scratch. This module
+//! is the PagedAttention-style answer (DESIGN.md §13): K/V rows live in
+//! fixed-size [`KvPage`]s handed out by a shared [`KvPool`], a
+//! [`PagedKvCache`] owns a *chain* of `Arc<KvPage>`s instead of one dense
+//! buffer, and immutable prefix pages can be attached to many chains at once
+//! so a hot prefix's prefill is paid once per server
+//! (see [`crate::coordinator::PrefixCache`]).
+//!
+//! ## Page layout
+//!
+//! A [`KvPage`] holds one `(page_size, d_model)` K matrix and one V matrix
+//! per layer. Chain position `pos` maps to page `pos / page_size`, row
+//! `pos % page_size`. Rows are valid only below the owning cache's `len()`
+//! — exactly the dense cache's fill-level rule, per page.
+//!
+//! ## Sharing and copy-on-write
+//!
+//! Pages are shared by cloning their `Arc`: the prefix trie publishes a
+//! chain's full prompt pages, later admissions attach them read-only.
+//! [`PagedKvCache::write_kv_at`] writes through `Arc::get_mut`; if the page
+//! is shared (refcount > 1) the cache first copies the committed rows into a
+//! fresh page and swaps it in — copy-on-write on the first divergent write.
+//! In the serving loop writes only ever target positions past the attached
+//! (full, immutable) prefix pages, so COW never fires there; it exists as
+//! the safety rule that makes sharing unconditionally sound.
+//!
+//! ## Free-list reuse and determinism
+//!
+//! Released page buffers (request reset, slide+rebuild eviction) go to the
+//! *owning cache's* local free list, never to shared pool state — every
+//! allocate/reuse decision depends only on per-slot history, so the pool
+//! counters are bit-identical at every `PALLAS_THREADS` setting (the §12
+//! determinism contract extends to paged serving). The pool itself holds
+//! only geometry and atomic telemetry counters. Pages dropped from the
+//! prefix trie return to the allocator (counted in
+//! [`KvPoolCounters::dropped`]) — trie eviction runs on the coordinator
+//! thread only.
+//!
+//! ## Eviction
+//!
+//! [`PagedKvCache::begin_evict`] keeps the slide+rebuild contract of the
+//! dense cache bit-for-bit: drop the oldest `evict_stride` tokens, release
+//! the *entire* chain (owned buffers recycle through the local free list,
+//! shared ones just drop their ref), and let the caller re-feed the
+//! surviving window at its shifted absolute positions.
+//!
+//! The [`KvStore`] trait abstracts over [`KvCache`] and [`PagedKvCache`] so
+//! [`crate::model::HostForward::decode_step`] / `prefill` / `prefill_block`
+//! / `advance_block` and [`crate::coordinator::Server::serve_continuous`]
+//! run unchanged on either layout; attention reads go through
+//! [`KvLayerView`], which walks the page chain in the paged case.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::tensor::Matrix;
+
+use super::{GptConfig, KvCache};
+
+/// One fixed-size block of K/V rows: per layer, a `(page_size, d_model)` K
+/// matrix and a V matrix. Rows are valid only below the owning cache's
+/// `len()`; shared (prefix) pages are always completely full.
+#[derive(Debug)]
+pub struct KvPage {
+    /// Per layer: `(page_size, d_model)` keys.
+    k: Vec<Matrix>,
+    /// Per layer: `(page_size, d_model)` values.
+    v: Vec<Matrix>,
+}
+
+impl KvPage {
+    fn new(n_layer: usize, page_size: usize, d_model: usize) -> Self {
+        KvPage {
+            k: (0..n_layer).map(|_| Matrix::zeros(page_size, d_model)).collect(),
+            v: (0..n_layer).map(|_| Matrix::zeros(page_size, d_model)).collect(),
+        }
+    }
+
+    /// K row at in-page offset `off` for `layer`.
+    #[inline]
+    pub fn k_row(&self, layer: usize, off: usize) -> &[f32] {
+        self.k[layer].row(off)
+    }
+
+    /// V row at in-page offset `off` for `layer`.
+    #[inline]
+    pub fn v_row(&self, layer: usize, off: usize) -> &[f32] {
+        self.v[layer].row(off)
+    }
+}
+
+/// Snapshot of the pool's telemetry counters. All five totals are
+/// deterministic for a given request stream at every thread count — see the
+/// module docs for why.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolCounters {
+    /// Fresh page buffers created (never shrinks; `allocated · page_bits` is
+    /// the pool's resident-byte high-water mark).
+    pub allocated: u64,
+    /// Acquisitions served from a cache-local free list instead of a fresh
+    /// allocation.
+    pub reused: u64,
+    /// Page buffers returned to a local free list (reset / eviction churn).
+    pub released: u64,
+    /// Page buffers freed back to the allocator (prefix-trie eviction of a
+    /// page no chain holds).
+    pub dropped: u64,
+    /// Copy-on-write page copies (a write hit a shared page).
+    pub cow_copies: u64,
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    n_layer: usize,
+    d_model: usize,
+    page_size: usize,
+    allocated: AtomicU64,
+    reused: AtomicU64,
+    released: AtomicU64,
+    dropped: AtomicU64,
+    cow_copies: AtomicU64,
+}
+
+/// Shared page allocator: geometry plus atomic telemetry. Cheap to clone
+/// (an `Arc` handle); every [`PagedKvCache`] and the prefix trie hold one.
+///
+/// The pool deliberately has **no** shared free list — released buffers
+/// recycle through the releasing cache's local list so that allocation
+/// decisions never depend on cross-slot timing (DESIGN.md §12/§13).
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    inner: Arc<PoolInner>,
+}
+
+impl KvPool {
+    /// Pool for `cfg`'s geometry with the given page size. Errors unless
+    /// `1 <= page_size <= cfg.ctx` — a zero page can hold nothing and a page
+    /// beyond the context window could never fill (and so never be shared).
+    pub fn new(cfg: &GptConfig, page_size: usize) -> Result<Self> {
+        anyhow::ensure!(
+            (1..=cfg.ctx).contains(&page_size),
+            "kv page size {page_size} out of range 1..={} (model ctx)",
+            cfg.ctx
+        );
+        Ok(KvPool {
+            inner: Arc::new(PoolInner {
+                n_layer: cfg.n_layer,
+                d_model: cfg.d_model,
+                page_size,
+                allocated: AtomicU64::new(0),
+                reused: AtomicU64::new(0),
+                released: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                cow_copies: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// Tokens per page.
+    pub fn page_size(&self) -> usize {
+        self.inner.page_size
+    }
+
+    /// f32 bits held by one page (both K and V, all layers).
+    pub fn page_bits(&self) -> u64 {
+        2 * (self.inner.n_layer * self.inner.page_size * self.inner.d_model) as u64 * 32
+    }
+
+    /// Fresh page buffers ever created; `pages_created() · page_bits()` is
+    /// the pool-wide resident high-water mark.
+    pub fn pages_created(&self) -> u64 {
+        self.inner.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of all telemetry counters.
+    pub fn counters(&self) -> KvPoolCounters {
+        KvPoolCounters {
+            allocated: self.inner.allocated.load(Ordering::Relaxed),
+            reused: self.inner.reused.load(Ordering::Relaxed),
+            released: self.inner.released.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+            cow_copies: self.inner.cow_copies.load(Ordering::Relaxed),
+        }
+    }
+
+    /// True when pages from this pool can hold `cfg`'s K/V rows.
+    pub fn matches(&self, cfg: &GptConfig) -> bool {
+        self.inner.n_layer == cfg.n_layer && self.inner.d_model == cfg.d_model
+    }
+
+    /// A writable page buffer: recycled from `local` when possible, freshly
+    /// allocated otherwise.
+    fn take_buffer(&self, local: &mut Vec<KvPage>) -> KvPage {
+        if let Some(page) = local.pop() {
+            self.inner.reused.fetch_add(1, Ordering::Relaxed);
+            page
+        } else {
+            self.inner.allocated.fetch_add(1, Ordering::Relaxed);
+            KvPage::new(self.inner.n_layer, self.inner.page_size, self.inner.d_model)
+        }
+    }
+
+    /// Release one chain ref. If this was the last ref the buffer recycles
+    /// into `local`; a still-shared page just drops the ref (the remaining
+    /// holder — always including the prefix trie — will release it later).
+    fn give_back(&self, page: Arc<KvPage>, local: &mut Vec<KvPage>) {
+        if let Ok(buffer) = Arc::try_unwrap(page) {
+            self.inner.released.fetch_add(1, Ordering::Relaxed);
+            local.push(buffer);
+        }
+    }
+
+    /// Drop a ref with no local list to recycle into (prefix-trie eviction).
+    /// A last-ref drop frees the buffer to the allocator.
+    pub(crate) fn drop_external(&self, page: Arc<KvPage>) {
+        if Arc::try_unwrap(page).is_ok() {
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn count_cow(&self) {
+        self.inner.cow_copies.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Paged counterpart of [`KvCache`]: the same observable state machine
+/// (token window, capacity, slide+rebuild eviction, telemetry) over a chain
+/// of pool pages instead of one dense buffer. Byte-identical K/V rows and
+/// token windows to the dense cache for any feed sequence — the paged-vs-
+/// dense parity suites pin this.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pool: KvPool,
+    capacity: usize,
+    evict_stride: usize,
+    /// The token window the cached rows were computed from (`len()` entries).
+    tokens: Vec<i32>,
+    /// Page chain: position `p` lives in `pages[p / page_size]`.
+    pages: Vec<Arc<KvPage>>,
+    /// Buffers this cache released and may reuse (never shared).
+    local_free: Vec<KvPage>,
+    /// Tokens ever fed through the model into this cache (attach does NOT
+    /// count — attached rows were computed by another request).
+    total_fed: u64,
+    evictions: u64,
+    /// Tokens ever attached from shared prefix pages (telemetry).
+    attached_tokens: u64,
+}
+
+impl PagedKvCache {
+    /// Cache over `cfg.ctx` positions with the default `capacity/4` eviction
+    /// stride, drawing pages from `pool`.
+    pub fn new(cfg: &GptConfig, pool: &KvPool) -> Self {
+        Self::with_stride(cfg, pool, cfg.ctx, (cfg.ctx / 4).max(1))
+    }
+
+    /// Full control over window capacity and eviction stride, clamped
+    /// exactly like [`KvCache::with_stride`].
+    pub fn with_stride(cfg: &GptConfig, pool: &KvPool, capacity: usize, stride: usize) -> Self {
+        debug_assert!(pool.matches(cfg), "pool geometry mismatch");
+        let capacity = capacity.clamp(1, cfg.ctx);
+        PagedKvCache {
+            pool: pool.clone(),
+            capacity,
+            evict_stride: stride.clamp(1, capacity),
+            tokens: Vec::with_capacity(capacity),
+            pages: Vec::new(),
+            local_free: Vec::new(),
+            total_fed: 0,
+            evictions: 0,
+            attached_tokens: 0,
+        }
+    }
+
+    /// Valid cached positions (= tokens in the current window).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Maximum window length before eviction.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Tokens dropped per window slide.
+    pub fn evict_stride(&self) -> usize {
+        self.evict_stride
+    }
+
+    /// Tokens per page (the pool's geometry).
+    pub fn page_size(&self) -> usize {
+        self.pool.page_size()
+    }
+
+    /// The token window the cached rows correspond to.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Tokens ever fed through the model (attach-shared tokens excluded —
+    /// that exclusion is what lets tests assert "prefill work proportional
+    /// to the cold suffix only").
+    pub fn total_fed(&self) -> u64 {
+        self.total_fed
+    }
+
+    /// Window slides performed so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Tokens ever attached from shared prefix pages.
+    pub fn attached_tokens(&self) -> u64 {
+        self.attached_tokens
+    }
+
+    /// The current page chain (prefix publication clones these `Arc`s).
+    pub fn pages(&self) -> &[Arc<KvPage>] {
+        &self.pages
+    }
+
+    /// Buffers parked on this cache's local free list.
+    pub fn local_free_len(&self) -> usize {
+        self.local_free.len()
+    }
+
+    /// f32 bits resident in this cache's chain + local free list. Shared
+    /// pages are counted once per holder here; pool-wide residency is
+    /// `KvPool::pages_created() · page_bits()`.
+    pub fn memory_bits(&self) -> u64 {
+        (self.pages.len() + self.local_free.len()) as u64 * self.pool.page_bits()
+    }
+
+    /// True when this cache's geometry matches `cfg`.
+    pub fn compatible_with(&self, cfg: &GptConfig) -> bool {
+        self.pool.matches(cfg) && self.capacity <= cfg.ctx
+    }
+
+    /// K row of `layer` at chain position `pos` (`pos < len()`), for parity
+    /// tests against the dense layout.
+    pub fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let ps = self.pool.page_size();
+        self.pages[pos / ps].k_row(layer, pos % ps)
+    }
+
+    /// V row of `layer` at chain position `pos` (`pos < len()`).
+    pub fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        let ps = self.pool.page_size();
+        self.pages[pos / ps].v_row(layer, pos % ps)
+    }
+
+    /// Drop all cached state (new-request boundary): the page chain releases
+    /// — owned buffers recycle into the local free list, shared refs drop —
+    /// and the token window clears. Telemetry survives, like
+    /// [`KvCache::reset`].
+    pub fn reset(&mut self) {
+        self.release_chain();
+        self.tokens.clear();
+    }
+
+    /// Attach already-computed prefix pages to an empty cache: the chain
+    /// takes shared refs on `chain` and the window starts at `tokens`
+    /// without feeding anything through the model. `tokens` must exactly
+    /// fill `chain` (whole pages only — a partial page could still be
+    /// written by its owner).
+    pub fn attach(&mut self, chain: &[Arc<KvPage>], tokens: &[i32]) {
+        assert!(self.tokens.is_empty() && self.pages.is_empty(), "attach requires an empty cache");
+        assert_eq!(
+            tokens.len(),
+            chain.len() * self.pool.page_size(),
+            "attach must cover whole pages"
+        );
+        assert!(tokens.len() <= self.capacity, "attach past capacity");
+        self.pages.extend(chain.iter().cloned());
+        self.tokens.extend_from_slice(tokens);
+        self.attached_tokens += tokens.len() as u64;
+    }
+
+    fn release_chain(&mut self) {
+        let PagedKvCache { pool, pages, local_free, .. } = self;
+        for page in pages.drain(..) {
+            pool.give_back(page, local_free);
+        }
+    }
+
+    /// Begin a window slide — same contract as [`KvCache::begin_evict`]:
+    /// drop the oldest `evict_stride` tokens, invalidate every cached row
+    /// (here: release the whole chain), return the survivors for re-feed.
+    pub(crate) fn begin_evict(&mut self) -> Vec<i32> {
+        let stride = self.evict_stride.min(self.tokens.len());
+        let keep = self.tokens[stride..].to_vec();
+        self.tokens.clear();
+        self.release_chain();
+        self.evictions += 1;
+        keep
+    }
+
+    /// A mutable view of the page holding chain position `pos`, extending
+    /// the chain and copying-on-write as needed.
+    fn writable_page(&mut self, page_idx: usize) -> &mut KvPage {
+        while self.pages.len() <= page_idx {
+            let PagedKvCache { pool, local_free, .. } = self;
+            let buffer = pool.take_buffer(local_free);
+            self.pages.push(Arc::new(buffer));
+        }
+        if Arc::get_mut(&mut self.pages[page_idx]).is_none() {
+            // Shared page: copy the committed rows, then swap in the copy.
+            let ps = self.pool.page_size();
+            let valid = self.tokens.len().saturating_sub(page_idx * ps).min(ps);
+            let PagedKvCache { pool, local_free, .. } = self;
+            let mut fresh = pool.take_buffer(local_free);
+            let src = &self.pages[page_idx];
+            for layer in 0..fresh.k.len() {
+                for row in 0..valid {
+                    fresh.k[layer].row_mut(row).copy_from_slice(src.k[layer].row(row));
+                    fresh.v[layer].row_mut(row).copy_from_slice(src.v[layer].row(row));
+                }
+            }
+            self.pool.count_cow();
+            let shared = std::mem::replace(&mut self.pages[page_idx], Arc::new(fresh));
+            // The old ref just drops: a shared page always has another
+            // holder (the prefix trie), so it cannot be the last ref here.
+            drop(shared);
+        }
+        Arc::get_mut(&mut self.pages[page_idx]).expect("exclusive after COW")
+    }
+
+    /// Write the K/V rows of one (still uncommitted) position for one layer.
+    pub(crate) fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(pos < self.capacity, "write_kv_at past capacity");
+        let ps = self.pool.page_size();
+        let (page_idx, off) = (pos / ps, pos % ps);
+        let page = self.writable_page(page_idx);
+        page.k[layer].row_mut(off).copy_from_slice(k_row);
+        page.v[layer].row_mut(off).copy_from_slice(v_row);
+    }
+
+    /// Finish a block step — same contract as [`KvCache::commit_block`].
+    pub(crate) fn commit_block(&mut self, tokens: &[i32]) {
+        debug_assert!(
+            self.tokens.len() + tokens.len() <= self.capacity,
+            "commit_block past capacity"
+        );
+        self.tokens.extend_from_slice(tokens);
+        self.total_fed += tokens.len() as u64;
+    }
+}
+
+impl Drop for PagedKvCache {
+    fn drop(&mut self) {
+        // Refs held by a dying cache must not strand trie-shared pages in a
+        // "someone still holds this" state.
+        self.release_chain();
+    }
+}
+
+/// Read view of one layer's K/V rows for the attention inner loop —
+/// contiguous matrices for the dense cache, a page walk for the paged one.
+/// `Sync` so [`crate::exec::Pool::scope_groups_mut`] strips can share it.
+pub enum KvLayerView<'a> {
+    Dense { k: &'a Matrix, v: &'a Matrix },
+    Paged { pages: &'a [Arc<KvPage>], layer: usize, page_size: usize },
+}
+
+impl KvLayerView<'_> {
+    /// K row at window position `pos`.
+    #[inline]
+    pub fn k_row(&self, pos: usize) -> &[f32] {
+        match self {
+            KvLayerView::Dense { k, .. } => k.row(pos),
+            KvLayerView::Paged { pages, layer, page_size } => {
+                pages[pos / *page_size].k_row(*layer, pos % *page_size)
+            }
+        }
+    }
+
+    /// V row at window position `pos`.
+    #[inline]
+    pub fn v_row(&self, pos: usize) -> &[f32] {
+        match self {
+            KvLayerView::Dense { v, .. } => v.row(pos),
+            KvLayerView::Paged { pages, layer, page_size } => {
+                pages[pos / *page_size].v_row(*layer, pos % *page_size)
+            }
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for super::KvCache {}
+    impl Sealed for super::PagedKvCache {}
+}
+
+/// The cache contract [`crate::model::HostForward`]'s incremental paths are
+/// generic over: the dense [`KvCache`] and the paged [`PagedKvCache`]
+/// implement identical observable semantics (window, slide+rebuild
+/// eviction, block commit), so `decode_step`/`prefill`/`prefill_block`
+/// produce byte-identical results on either. Sealed: the forward pass's
+/// correctness argument only covers these two layouts.
+pub trait KvStore: sealed::Sealed {
+    /// Valid cached positions (= tokens in the current window).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Maximum window length before eviction.
+    fn capacity(&self) -> usize;
+    /// The token window the cached rows correspond to.
+    fn tokens(&self) -> &[i32];
+    /// True when this cache's geometry matches `cfg`.
+    fn compatible_with(&self, cfg: &GptConfig) -> bool;
+    /// Drop all cached state at a request boundary (telemetry survives).
+    fn reset(&mut self);
+    #[doc(hidden)]
+    fn begin_evict(&mut self) -> Vec<i32>;
+    #[doc(hidden)]
+    fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]);
+    #[doc(hidden)]
+    fn commit_block(&mut self, tokens: &[i32]);
+    /// Read view of one layer's K/V rows for attention.
+    fn attn_view(&self, layer: usize) -> KvLayerView<'_>;
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        KvCache::len(self)
+    }
+    fn capacity(&self) -> usize {
+        KvCache::capacity(self)
+    }
+    fn tokens(&self) -> &[i32] {
+        KvCache::tokens(self)
+    }
+    fn compatible_with(&self, cfg: &GptConfig) -> bool {
+        KvCache::compatible_with(self, cfg)
+    }
+    fn reset(&mut self) {
+        KvCache::reset(self)
+    }
+    fn begin_evict(&mut self) -> Vec<i32> {
+        KvCache::begin_evict(self)
+    }
+    fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        KvCache::write_kv_at(self, layer, pos, k_row, v_row)
+    }
+    fn commit_block(&mut self, tokens: &[i32]) {
+        KvCache::commit_block(self, tokens)
+    }
+    fn attn_view(&self, layer: usize) -> KvLayerView<'_> {
+        let (k, v) = self.layer(layer);
+        KvLayerView::Dense { k, v }
+    }
+}
+
+impl KvStore for PagedKvCache {
+    fn len(&self) -> usize {
+        PagedKvCache::len(self)
+    }
+    fn capacity(&self) -> usize {
+        PagedKvCache::capacity(self)
+    }
+    fn tokens(&self) -> &[i32] {
+        PagedKvCache::tokens(self)
+    }
+    fn compatible_with(&self, cfg: &GptConfig) -> bool {
+        PagedKvCache::compatible_with(self, cfg)
+    }
+    fn reset(&mut self) {
+        PagedKvCache::reset(self)
+    }
+    fn begin_evict(&mut self) -> Vec<i32> {
+        PagedKvCache::begin_evict(self)
+    }
+    fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        PagedKvCache::write_kv_at(self, layer, pos, k_row, v_row)
+    }
+    fn commit_block(&mut self, tokens: &[i32]) {
+        PagedKvCache::commit_block(self, tokens)
+    }
+    fn attn_view(&self, layer: usize) -> KvLayerView<'_> {
+        KvLayerView::Paged {
+            pages: &self.pages,
+            layer,
+            page_size: self.pool.page_size(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GptConfig {
+        GptConfig { vocab: 256, d_model: 32, n_layer: 3, n_head: 4, d_ff: 64, ctx: 16 }
+    }
+
+    fn fill(c: &mut PagedKvCache, toks: &[i32]) {
+        let base = c.len();
+        for (j, &t) in toks.iter().enumerate() {
+            for l in 0..3 {
+                let kr = vec![t as f32 + l as f32; 32];
+                let vr = vec![-(t as f32) - l as f32; 32];
+                c.write_kv_at(l, base + j, &kr, &vr);
+            }
+        }
+        c.commit_block(toks);
+    }
+
+    #[test]
+    fn pool_rejects_degenerate_page_sizes() {
+        assert!(KvPool::new(&cfg(), 0).is_err());
+        assert!(KvPool::new(&cfg(), 17).is_err());
+        assert!(KvPool::new(&cfg(), 1).is_ok());
+        assert!(KvPool::new(&cfg(), 16).is_ok());
+    }
+
+    #[test]
+    fn geometry_mirrors_dense_cache() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let c = PagedKvCache::new(&cfg(), &pool);
+        let d = KvCache::new(&cfg());
+        assert_eq!(c.capacity(), d.capacity());
+        assert_eq!(c.evict_stride(), d.evict_stride());
+        assert!(c.compatible_with(&cfg()));
+        assert_eq!(pool.page_bits(), 2 * 3 * 4 * 32 * 32);
+        let other = GptConfig { d_model: 64, ..cfg() };
+        assert!(!c.compatible_with(&other));
+    }
+
+    #[test]
+    fn write_commit_reset_recycles_pages() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut c = PagedKvCache::new(&cfg(), &pool);
+        fill(&mut c, &[5, 9, 2, 7, 1]); // spans two pages
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.pages().len(), 2);
+        assert_eq!(c.k_row(1, 4)[0], 1.0 + 1.0);
+        assert_eq!(c.v_row(2, 0)[0], -5.0 - 2.0);
+        assert_eq!(pool.counters().allocated, 2);
+        c.reset();
+        assert!(c.is_empty());
+        assert_eq!(c.local_free_len(), 2, "owned pages recycle locally");
+        assert_eq!(c.total_fed(), 5, "telemetry survives reset");
+        fill(&mut c, &[3, 3, 3]);
+        let counters = pool.counters();
+        assert_eq!(counters.allocated, 2, "no fresh allocation after recycle");
+        assert_eq!(counters.reused, 1);
+        assert_eq!(counters.released, 2);
+    }
+
+    #[test]
+    fn begin_evict_matches_dense_contract_and_releases_chain() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut c = PagedKvCache::with_stride(&cfg(), &pool, 8, 3);
+        fill(&mut c, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(c.len(), c.capacity());
+        let keep = c.begin_evict();
+        assert_eq!(keep, vec![3, 4, 5, 6, 7]);
+        assert!(c.is_empty());
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.pages().len(), 0, "chain fully released on slide");
+        assert_eq!(c.local_free_len(), 2);
+    }
+
+    #[test]
+    fn attach_shares_pages_and_skips_total_fed() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut owner = PagedKvCache::new(&cfg(), &pool);
+        fill(&mut owner, &[10, 11, 12, 13, 14, 15]); // 1.5 pages
+        let shared: Vec<_> = owner.pages()[..1].to_vec(); // the full page only
+        let mut borrower = PagedKvCache::new(&cfg(), &pool);
+        borrower.attach(&shared, &owner.tokens()[..4]);
+        assert_eq!(borrower.len(), 4);
+        assert_eq!(borrower.tokens(), &[10, 11, 12, 13]);
+        assert_eq!(borrower.total_fed(), 0, "attached tokens were not fed");
+        assert_eq!(borrower.attached_tokens(), 4);
+        assert_eq!(borrower.k_row(0, 2), owner.k_row(0, 2), "rows are shared");
+        // releasing the borrower must NOT recycle the still-shared page
+        borrower.reset();
+        assert_eq!(borrower.local_free_len(), 0);
+        assert_eq!(owner.k_row(0, 2)[0], 12.0, "owner rows untouched");
+    }
+
+    #[test]
+    fn write_into_shared_page_copies_on_write() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        let mut owner = PagedKvCache::new(&cfg(), &pool);
+        fill(&mut owner, &[1, 2, 3, 4]);
+        let mut borrower = PagedKvCache::new(&cfg(), &pool);
+        borrower.attach(&owner.pages().to_vec(), owner.tokens());
+        // divergent write: borrower evicts down to 1 committed token, then
+        // overwrites position 1 of the shared page
+        let keep = borrower.begin_evict(); // stride 4 on capacity 16
+        assert_eq!(keep.len(), 0);
+        borrower.attach(&owner.pages().to_vec(), owner.tokens());
+        borrower.tokens.truncate(1); // simulate a 1-token committed window
+        borrower.write_kv_at(0, 1, &[99.0; 32], &[98.0; 32]);
+        assert_eq!(pool.counters().cow_copies, 1);
+        assert_eq!(borrower.k_row(0, 1)[0], 99.0);
+        assert_eq!(owner.k_row(0, 1)[0], 2.0, "owner page untouched by COW");
+        assert_eq!(borrower.k_row(0, 0), owner.k_row(0, 0), "committed row copied");
+    }
+
+    #[test]
+    fn layer_view_walks_pages() {
+        let pool = KvPool::new(&cfg(), 2).unwrap();
+        let mut c = PagedKvCache::new(&cfg(), &pool);
+        fill(&mut c, &[4, 5, 6]);
+        let view = c.attn_view(1);
+        assert_eq!(view.k_row(2)[0], 6.0 + 1.0);
+        assert_eq!(view.v_row(0)[0], -4.0 - 1.0);
+        let dense = KvCache::new(&cfg());
+        match KvStore::attn_view(&dense, 0) {
+            KvLayerView::Dense { .. } => {}
+            KvLayerView::Paged { .. } => panic!("dense cache must yield a dense view"),
+        }
+    }
+}

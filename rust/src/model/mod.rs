@@ -10,6 +10,7 @@ mod config;
 mod forward;
 pub(crate) mod gpt;
 mod kv_cache;
+pub mod kv_pool;
 
 pub use config::GptConfig;
 pub use forward::{HostForward, LinearW};
@@ -18,3 +19,4 @@ pub(crate) use forward::{
 };
 pub use gpt::{GptModel, QuantizedGpt};
 pub use kv_cache::KvCache;
+pub use kv_pool::{KvLayerView, KvPage, KvPool, KvPoolCounters, KvStore, PagedKvCache};

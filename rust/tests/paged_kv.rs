@@ -1,0 +1,328 @@
+//! Paged KV pool + prefix sharing vs the dense layout and decode oracles.
+//!
+//! The contract (DESIGN.md §13): the block-paged [`PagedKvCache`] is an
+//! observable drop-in for the dense [`KvCache`] — byte-identical K/V rows,
+//! token windows, logits and telemetry for any feed sequence, including the
+//! slide+rebuild eviction boundary — and `serve_continuous` over the paged
+//! pool with cross-request prefix sharing stays **token-identical** to the
+//! `DecodePolicy::Reforward` / dense-cached oracles for any traffic
+//! interleaving, while page refcounts return to the slot free lists after
+//! every request completes (no leaks, [`Server::kv_page_audit`]).
+
+use std::sync::mpsc::channel;
+
+use pcdvq::coordinator::{
+    Batcher, BatcherConfig, DecodePolicy, GenRequest, GenResponse, Server, ServingWeights,
+};
+use pcdvq::model::{
+    GptModel, HostForward, KvCache, KvPool, KvStore, PagedKvCache, QuantizedGpt,
+};
+use pcdvq::proptest::{for_cases, synthetic_tinygpt, tiny_pcdvq};
+
+/// Synthetic tinygpt (d=64, 2 layers, ctx=64) — the paged-KV testbed.
+fn synthetic_model(name: &str) -> GptModel {
+    synthetic_tinygpt("pcdvq_paged_tests", name, 53)
+}
+
+fn quantize(model: &GptModel) -> QuantizedGpt {
+    QuantizedGpt::quantize(model, &tiny_pcdvq())
+}
+
+fn prompt_bytes(n: usize, salt: usize) -> Vec<u8> {
+    (0..n).map(|i| ((i * 11 + salt * 17 + 3) % 251) as u8).collect()
+}
+
+/// Serve `reqs` = (prompt, max_new, temperature) through the continuous
+/// loop with an explicit KV layout — all requests pre-queued.
+fn run_continuous_paged(
+    q: &QuantizedGpt,
+    max_slots: usize,
+    prefill_chunk: usize,
+    kv_page: Option<usize>,
+    prefix_share: bool,
+    threads: usize,
+    reqs: &[(Vec<u8>, usize, f32)],
+) -> (Vec<GenResponse>, Server) {
+    let mut server =
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    server.max_slots = max_slots;
+    server.prefill_chunk = prefill_chunk;
+    server.kv_page = kv_page;
+    server.prefix_share = prefix_share;
+    if threads > 0 {
+        server.threads = threads;
+    }
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rxs = Vec::new();
+    for (p, max_new, temp) in reqs {
+        let (rtx, rrx) = channel();
+        batcher.push(GenRequest::new(p.clone(), *max_new, *temp, rtx));
+        rxs.push(rrx);
+    }
+    server.serve_continuous(&mut batcher).unwrap();
+    let resps = rxs.iter().map(|r| r.recv().expect("response missing")).collect();
+    (resps, server)
+}
+
+/// Single-request oracle through the static path with an explicit layout.
+fn run_single(
+    q: &QuantizedGpt,
+    policy: DecodePolicy,
+    kv_page: Option<usize>,
+    prompt: &[u8],
+    max_new: usize,
+) -> Vec<u8> {
+    let mut server =
+        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    server.decode = policy;
+    server.kv_page = kv_page;
+    let (rtx, rrx) = channel();
+    server
+        .process_batch(vec![GenRequest::new(prompt.to_vec(), max_new, 0.0, rtx)])
+        .unwrap();
+    rrx.recv().unwrap().generated
+}
+
+/// Assert the pool's no-leak invariant on an idle server: every page the
+/// pool ever created is on a slot free list, resident in the prefix trie,
+/// or dropped back to the allocator — and no slot chain holds pages.
+fn assert_no_leaks(server: &Server, tag: &str) {
+    let audit = server.kv_page_audit().expect("paged server has an audit");
+    assert_eq!(audit.slot_chain_pages, 0, "{tag}: idle slots hold pages");
+    assert_eq!(
+        audit.created,
+        audit.slot_free_pages + audit.prefix_pages + audit.dropped,
+        "{tag}: page leak — audit was {audit:?}"
+    );
+}
+
+/// Property: for random token streams (crossing the slide+rebuild eviction
+/// boundary) and random page sizes, `prefill` + a greedy `decode_step` tail
+/// through a [`PagedKvCache`] leave byte-identical tokens, K/V rows,
+/// telemetry and logits to the dense [`KvCache`] — the KvStore layouts are
+/// observationally equal.
+#[test]
+fn prop_paged_cache_byte_identical_to_dense() {
+    let model = synthetic_model("prop_layout");
+    let ctx = model.config.ctx;
+    let hf = HostForward::from_quantized(quantize(&model)).unwrap();
+    for_cases(4, 0x9A6ED, |g| {
+        let n = g.usize_in(1, ctx + 20);
+        let stream: Vec<i32> = (0..n).map(|_| g.rng.below(251) as i32).collect();
+        let mut dense = KvCache::new(&model.config);
+        let dense_logits = hf.prefill(&stream, &mut dense).unwrap();
+        for ps in [1usize, 3, ctx / 8, ctx] {
+            let pool = KvPool::new(&model.config, ps).unwrap();
+            let mut paged = PagedKvCache::new(&model.config, &pool);
+            let paged_logits = hf.prefill(&stream, &mut paged).unwrap();
+            let tag = format!("case {} ps {ps} len {n}", g.case_seed);
+            assert_eq!(paged_logits, dense_logits, "{tag}: prefill logits");
+            assert_eq!(paged.tokens(), dense.tokens(), "{tag}: token window");
+            assert_eq!(paged.len(), dense.len(), "{tag}: len");
+            assert_eq!(paged.total_fed(), dense.total_fed(), "{tag}: total_fed");
+            assert_eq!(paged.evictions(), dense.evictions(), "{tag}: evictions");
+            for layer in 0..model.config.n_layer {
+                let (kd, vd) = dense.layer(layer);
+                for pos in 0..dense.len() {
+                    assert_eq!(paged.k_row(layer, pos), kd.row(pos), "{tag}: K {layer}/{pos}");
+                    assert_eq!(paged.v_row(layer, pos), vd.row(pos), "{tag}: V {layer}/{pos}");
+                }
+            }
+            // greedy decode tail — long enough to slide on most lengths
+            let mut dtail = dense.clone();
+            let mut dlog = dense_logits.clone();
+            let mut plog = paged_logits.clone();
+            for step in 0..10 {
+                let next = pcdvq::tensor::argmax(&dlog) as i32;
+                dlog = hf.decode_step(next, &mut dtail).unwrap();
+                plog = {
+                    let pnext = pcdvq::tensor::argmax(&plog) as i32;
+                    assert_eq!(pnext, next, "{tag} step {step}: argmax");
+                    hf.decode_step(pnext, &mut paged).unwrap()
+                };
+                assert_eq!(plog, dlog, "{tag} step {step}: decode logits");
+            }
+            assert_eq!(paged.tokens(), dtail.tokens(), "{tag}: post-decode window");
+            assert_eq!(paged.evictions(), dtail.evictions(), "{tag}: post-decode slides");
+        }
+    });
+}
+
+/// Property (satellite): interleaved admissions over random shared-prefix
+/// families keep paged+shared continuous serving token-identical to the
+/// per-request `DecodePolicy::Reforward` oracle, an eviction-crossing
+/// request rides along (pinned to the dense static-cached path, whose slide
+/// schedule it shares), and after the stream drains every page refcount has
+/// returned to a slot free list / the trie — no leaks, even after the trie
+/// is cleared.
+#[test]
+fn prop_interleaved_prefix_families_match_oracles_without_leaks() {
+    let model = synthetic_model("prop_families");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+    for_cases(3, 0xFA31_11E5, |g| {
+        let ps = [2usize, 4, 8][g.usize_in(0, 2)];
+        let chunk = [1usize, ps, 16][g.usize_in(0, 2)];
+        // two families over distinct shared prefixes, interleaved arrivals
+        let mut reqs: Vec<(Vec<u8>, usize, f32)> = Vec::new();
+        for fam in 0..2usize {
+            let plen = g.usize_in(ps, 3 * ps);
+            let prefix = prompt_bytes(plen, 100 + fam + g.case_seed as usize);
+            for member in 0..3usize {
+                let mut p = prefix.clone();
+                let suffix = g.usize_in(1, 2 * ps);
+                p.extend((0..suffix).map(|_| g.rng.below(251) as u8));
+                let max_new = g.usize_in(1, 6);
+                // window fits: the re-forward and cached schedules coincide
+                assert!(p.len() + max_new <= ctx + 1);
+                // interleave: A0 B0 A1 B1 A2 B2
+                let at = member * 2 + fam;
+                if at >= reqs.len() {
+                    reqs.push((p, max_new, 0.0));
+                } else {
+                    reqs.insert(at, (p, max_new, 0.0));
+                }
+            }
+        }
+        // an eviction-crossing request rides along in the same pool
+        reqs.push((prompt_bytes(ctx + 9, g.case_seed as usize), 8, 0.0));
+
+        let (resps, mut server) =
+            run_continuous_paged(&q, 2, chunk, Some(ps), true, 0, &reqs);
+        let tag = format!("case {} ps {ps} chunk {chunk}", g.case_seed);
+        for (i, (resp, (prompt, max_new, _))) in resps.iter().zip(&reqs).enumerate() {
+            let oracle = if prompt.len() + max_new <= ctx + 1 {
+                run_single(&q, DecodePolicy::Reforward, Some(ps), prompt, *max_new)
+            } else {
+                // past the boundary the cached slide policy takes over:
+                // the dense static-cached run is the oracle there
+                run_single(&q, DecodePolicy::KvCached, None, prompt, *max_new)
+            };
+            assert_eq!(resp.generated, oracle, "{tag} req {i}: diverged from oracle");
+        }
+        assert_no_leaks(&server, &tag);
+        assert!(server.metrics.prefix_hits >= 1, "{tag}: families never shared");
+        // dropping the trie releases its pages without disturbing the books
+        server.clear_prefix_cache();
+        assert_eq!(server.prefix_resident_pages(), 0, "{tag}: trie cleared");
+        assert_no_leaks(&server, &format!("{tag} (cleared)"));
+    });
+}
+
+/// Acceptance: the second request over a resident prefix pays prefill work
+/// proportional to the **cold suffix only** — asserted through scheduler
+/// steps, the prefix-reuse counters, the pool's page-reuse counters, and
+/// the hot/cold TTFT breakdown.
+#[test]
+fn second_request_over_resident_prefix_prefills_only_the_cold_suffix() {
+    let model = synthetic_model("hot_prefix");
+    let q = quantize(&model);
+    let (ps, chunk, plen, max_new) = (8usize, 8usize, 30usize, 5usize);
+    let prompt = prompt_bytes(plen, 7);
+    let reqs = vec![(prompt.clone(), max_new, 0.0), (prompt.clone(), max_new, 0.0)];
+    // one slot → strictly sequential: A prefills cold + publishes, B hits
+    let (resps, server) = run_continuous_paged(&q, 1, chunk, Some(ps), true, 0, &reqs);
+
+    assert_eq!(resps[0].generated, resps[1].generated, "same prompt, same tokens");
+    let oracle = run_single(&q, DecodePolicy::Reforward, Some(ps), &prompt, max_new);
+    assert_eq!(resps[0].generated, oracle, "hot path still oracle-identical");
+
+    // A: ceil(30/8)=4 prefill steps; B: covered 24 → ceil(6/8)=1 step
+    let covered = ((plen - 1) / ps) * ps;
+    assert_eq!(covered, 24);
+    assert_eq!(resps[0].steps, plen.div_ceil(chunk) + (max_new - 1));
+    assert_eq!(
+        resps[1].steps,
+        (plen - covered).div_ceil(chunk) + (max_new - 1),
+        "second request's prefill was not proportional to the cold suffix"
+    );
+    assert!(resps[1].steps < resps[0].steps);
+
+    assert_eq!(server.metrics.prefix_misses, 1, "A was cold");
+    assert_eq!(server.metrics.prefix_hits, 1, "B rode the resident prefix");
+    assert_eq!(server.metrics.prefix_tokens_reused, covered as u64);
+    assert_eq!(server.metrics.ttft_cold_count(), 1);
+    assert_eq!(server.metrics.ttft_hot_count(), 1);
+
+    // page-reuse accounting, exactly: A allocates pages 0..4 (30 prompt +
+    // 4 decode tokens), releases the two unshared ones at completion; B
+    // attaches the three published pages and recycles the two free buffers
+    // — nothing new is allocated for the hot request, and COW never fires
+    let c = server.kv_pool_counters().unwrap();
+    assert_eq!(c.allocated, 5, "hot request allocated fresh pages: {c:?}");
+    assert_eq!(c.reused, 2, "hot request skipped the free list: {c:?}");
+    assert_eq!(c.cow_copies, 0, "serving writes never hit shared pages");
+    assert_eq!(server.prefix_resident_pages(), covered / ps);
+    assert_no_leaks(&server, "hot prefix");
+}
+
+/// Sharing is inert where it must be: dense layout ignores `prefix_share`,
+/// and paged-without-sharing matches paged-with-sharing token-for-token
+/// (the speedup is scheduling, never sampling).
+#[test]
+fn sharing_toggles_change_work_but_never_tokens() {
+    let model = synthetic_model("toggles");
+    let q = quantize(&model);
+    let prefix = prompt_bytes(24, 1);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = (0..4)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend(prompt_bytes(6, 50 + i));
+            (p, 4usize, 0.0)
+        })
+        .collect();
+    let (dense, dense_srv) = run_continuous_paged(&q, 2, 8, None, true, 0, &reqs);
+    let (noshare, _) = run_continuous_paged(&q, 2, 8, Some(4), false, 0, &reqs);
+    let (shared, shared_srv) = run_continuous_paged(&q, 2, 8, Some(4), true, 0, &reqs);
+    for (i, ((a, b), c)) in dense.iter().zip(&noshare).zip(&shared).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: dense vs paged");
+        assert_eq!(b.generated, c.generated, "req {i}: sharing changed tokens");
+    }
+    assert!(dense_srv.kv_page_audit().is_none(), "dense server has no pool");
+    assert_eq!(dense_srv.metrics.prefix_hits + dense_srv.metrics.prefix_misses, 0);
+    assert!(shared_srv.metrics.prefix_tokens_reused > 0, "sharing never engaged");
+    assert_no_leaks(&shared_srv, "toggles");
+}
+
+/// The §12 determinism contract extends to the paged pool: 1- vs 4-thread
+/// runs of shared-prefix traffic produce identical tokens, steps, scheduler
+/// counters, pool counters and prefix stats.
+#[test]
+fn paged_sharing_deterministic_across_thread_counts() {
+    let model = synthetic_model("threads");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+    let prefix = prompt_bytes(20, 9);
+    let mut reqs: Vec<(Vec<u8>, usize, f32)> = (0..5)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend(prompt_bytes(3 + i, 70 + i));
+            (p, 3 + (i % 3), 0.0)
+        })
+        .collect();
+    reqs.push((prompt_bytes(ctx + 5, 80), 6, 0.0)); // eviction rides along
+    let run = |threads: usize| run_continuous_paged(&q, 3, 8, Some(4), true, threads, &reqs);
+    let (serial, serial_srv) = run(1);
+    let (par, par_srv) = run(4);
+    for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: threads changed tokens");
+        assert_eq!(a.steps, b.steps, "req {i}: threads changed steps");
+        assert_eq!(a.seq, b.seq, "req {i}: admission order");
+    }
+    assert_eq!(serial_srv.kv_pool_counters(), par_srv.kv_pool_counters());
+    assert_eq!(serial_srv.prefix_resident_pages(), par_srv.prefix_resident_pages());
+    let (sm, pm) = (&serial_srv.metrics, &par_srv.metrics);
+    assert_eq!(sm.kv_pages_allocated, pm.kv_pages_allocated);
+    assert_eq!(sm.kv_pages_reused, pm.kv_pages_reused);
+    assert_eq!(sm.kv_pages_released, pm.kv_pages_released);
+    assert_eq!(sm.prefix_hits, pm.prefix_hits);
+    assert_eq!(sm.prefix_misses, pm.prefix_misses);
+    assert_eq!(sm.prefix_tokens_reused, pm.prefix_tokens_reused);
+    assert_eq!(sm.prefix_pages_published, pm.prefix_pages_published);
+    assert_eq!(sm.decode_steps, pm.decode_steps);
+    assert_eq!(sm.slot_steps_busy, pm.slot_steps_busy);
+    assert_no_leaks(&serial_srv, "threads=1");
+    assert_no_leaks(&par_srv, "threads=4");
+}
