@@ -59,7 +59,7 @@ fn main() -> Result<()> {
         )?,
         Err(e) => {
             println!("PJRT unavailable ({e:#}); serving codes-resident on the host");
-            Server::new_host(ServingWeights::CodesResident(Box::new(q)))?
+            Server::builder(ServingWeights::CodesResident(Box::new(q))).build()?
         }
     };
 
@@ -73,13 +73,11 @@ fn main() -> Result<()> {
         let s = rng.below(eval_tokens.len() - 80);
         let prompt: Vec<u8> = eval_tokens[s..s + 56].iter().map(|&t| t as u8).collect();
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(
-            prompt,
-            24,
-            if i % 2 == 0 { 0.0 } else { 0.7 },
-            rtx,
-        ))
-        .unwrap();
+        let req = GenRequest::builder(prompt)
+            .max_new(24)
+            .temperature(if i % 2 == 0 { 0.0 } else { 0.7 })
+            .build(rtx);
+        tx.send(req).unwrap();
         responses.push(rrx);
     }
     drop(tx);

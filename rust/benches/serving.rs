@@ -21,8 +21,10 @@ use std::time::Instant;
 use pcdvq::bench::{black_box, Bench};
 use pcdvq::codebook::{DirectionMethod, MagnitudeMethod};
 use pcdvq::config::Paths;
+use pcdvq::coordinator::ingress::{parse_sse, post_generate, sse_tokens};
 use pcdvq::coordinator::{
-    Batcher, BatcherConfig, DecodePolicy, GenRequest, Server, ServingWeights,
+    Batcher, BatcherConfig, DecodePolicy, GenRequest, Ingress, IngressConfig, Server,
+    ServingWeights,
 };
 use pcdvq::model::{GptModel, KvCache, QuantizedGpt};
 use pcdvq::proptest::{synthetic_tinygpt, tiny_pcdvq};
@@ -56,7 +58,7 @@ fn drive_mixed(
     let mut keep = Vec::new();
     for (p, max_new) in reqs {
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(p.clone(), *max_new, 0.0, rtx)).unwrap();
+        tx.send(GenRequest::builder(p.clone()).max_new(*max_new).build(rtx)).unwrap();
         keep.push(rrx);
     }
     drop(tx);
@@ -94,7 +96,8 @@ fn main() {
     let kv_kib = model.config.kv_cache_bits() as f64 / 8.0 / 1024.0;
     println!("resident weights {resident_kib:.1} KiB, KV cache {kv_kib:.1} KiB/slot");
 
-    let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
+    let mut server =
+        Server::builder(ServingWeights::CodesResident(Box::new(q.clone()))).build().unwrap();
 
     server.decode = DecodePolicy::KvCached;
     drive(&mut server, &prompts, max_new); // discarded warm-up iteration
@@ -154,11 +157,11 @@ fn main() {
         .collect();
     let mixed_toks: u64 = mixed.iter().map(|(_, m)| *m as u64).sum();
     let mk_host = |q: &QuantizedGpt| {
-        let mut s =
-            Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-        s.max_slots = 2;
-        s.prefill_chunk = 16;
-        s
+        Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .max_slots(2)
+            .prefill_chunk(16)
+            .build()
+            .unwrap()
     };
     let mut cont_server = mk_host(&q);
     drive_mixed(&mut cont_server, &mixed, BatcherConfig::default(), true); // warm-up
@@ -168,8 +171,11 @@ fn main() {
         })
         .clone();
     let mut stat_server = mk_host(&q);
-    let static_cfg =
-        BatcherConfig { max_batch: 2, max_wait: std::time::Duration::from_millis(1) };
+    let static_cfg = BatcherConfig {
+        max_batch: 2,
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
     drive_mixed(&mut stat_server, &mixed, static_cfg, false); // warm-up
     let static_m = bench
         .run_elems("continuous_vs_static/static_tok", mixed_toks, || {
@@ -204,10 +210,13 @@ fn main() {
         .collect();
     let shared_toks: u64 = shared_reqs.iter().map(|(_, m)| *m as u64).sum();
     let mk_paged = |q: &QuantizedGpt, kv_page: Option<usize>, share: bool| {
-        let mut s = mk_host(q);
-        s.kv_page = kv_page;
-        s.prefix_share = share;
-        s
+        Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .max_slots(2)
+            .prefill_chunk(16)
+            .kv_page(kv_page.unwrap_or(0)) // 0 selects the dense layout
+            .prefix_share(share)
+            .build()
+            .unwrap()
     };
     let mut dense_server = mk_paged(&q, None, false);
     drive_mixed(&mut dense_server, &shared_reqs, BatcherConfig::default(), true); // warm-up
@@ -319,6 +328,105 @@ fn main() {
         "sharded pipeline:   {piped_tps:>10.1} tok/s\nsingle node:        \
          {single_tps:>10.1} tok/s   ({:.2}x sharded/single)",
         piped_tps / single_tps.max(1e-9)
+    );
+
+    // --- ingress_load: closed-loop HTTP traffic through the front end ---
+    // Client threads drive POST /v1/generate over a real socket with mixed
+    // prompt/output lengths and bursty arrivals (a think-time gap every 4th
+    // request). Two runs: 1x offered load (clients == slots, generous gate)
+    // and 2x overload (double the clients, tight gate) — under overload the
+    // admission gate must shed the excess with 429 *early* so goodput for
+    // the admitted population stays close to the 1x run.
+    println!("== ingress_load: closed-loop HTTP traffic (2 slots, 1x vs 2x) ==");
+    let reqs_per_client = 8usize;
+    let mut run_load = |label: &str, clients: usize, icfg: IngressConfig| -> (f64, u64, u64) {
+        let server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .max_slots(2)
+            .prefill_chunk(16)
+            .build()
+            .unwrap();
+        let ingress =
+            Ingress::spawn(server, BatcherConfig::default(), icfg, "127.0.0.1:0").unwrap();
+        let addr = ingress.addr();
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..clients)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(1000 + c as u64);
+                    let mut lat_ms = Vec::new();
+                    let (mut toks, mut shed, mut errors) = (0u64, 0u64, 0u64);
+                    for i in 0..reqs_per_client {
+                        let plen = [12usize, 24, 48][rng.below(3)];
+                        let max_new = [2usize, 6, 10][rng.below(3)];
+                        let prompt: String =
+                            (0..plen).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                        let t = Instant::now();
+                        // generous deadline: with the gate shedding early,
+                        // no admitted request should ever hit it
+                        match post_generate(addr, &prompt, max_new, 0.0, "", 10_000) {
+                            Ok(r) if r.status == 200 => {
+                                lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                                toks += sse_tokens(&parse_sse(&r.body)).len() as u64;
+                            }
+                            Ok(r) if r.status == 429 => shed += 1,
+                            _ => errors += 1,
+                        }
+                        if i % 4 == 3 {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                    }
+                    (lat_ms, toks, shed, errors)
+                })
+            })
+            .collect();
+        let mut lat_ms = Vec::new();
+        let (mut toks, mut shed, mut errors) = (0u64, 0u64, 0u64);
+        for w in workers {
+            let (l, t, s, e) = w.join().unwrap();
+            lat_ms.extend(l);
+            toks += t;
+            shed += s;
+            errors += e;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let server = ingress.shutdown().unwrap();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat_ms.is_empty() {
+                return 0.0;
+            }
+            lat_ms[((p / 100.0) * (lat_ms.len() - 1) as f64).round() as usize]
+        };
+        let goodput = toks as f64 / wall_s;
+        bench.record_ns(&format!("ingress_load/p50_ms_{label}"), pct(50.0) * 1e6);
+        bench.record_ns(&format!("ingress_load/p99_ms_{label}"), pct(99.0) * 1e6);
+        // ns per goodput token: lower is better, comparable across runs
+        bench.record_ns(
+            &format!("ingress_load/goodput_tok_{label}"),
+            wall_s * 1e9 / (toks as f64).max(1.0),
+        );
+        let offered = (clients * reqs_per_client) as f64;
+        println!(
+            "{label}: {clients} clients  p50 {:.1} ms  p99 {:.1} ms  goodput {goodput:.1} tok/s  \
+             shed {shed}/{} ({:.0}%)  errors {errors}  timeouts {}",
+            pct(50.0),
+            pct(99.0),
+            offered,
+            100.0 * shed as f64 / offered,
+            server.metrics.timeouts,
+        );
+        (goodput, shed, server.metrics.timeouts)
+    };
+    let (good_1x, _, _) = run_load("1x", 2, IngressConfig::default());
+    let overload_gate = IngressConfig { max_in_flight: 3, ..IngressConfig::default() };
+    let (good_2x, shed_2x, timeouts_2x) = run_load("2x", 4, overload_gate);
+    bench.record_ns(
+        "ingress_load/shed_rate_2x_pct",
+        100.0 * shed_2x as f64 / (4 * reqs_per_client) as f64,
+    );
+    println!(
+        "overload goodput {:.0}% of 1x (shed {shed_2x} early, {timeouts_2x} late timeouts)",
+        100.0 * good_2x / good_1x.max(1e-9)
     );
 
     bench.write_json("BENCH_serving.json").unwrap();

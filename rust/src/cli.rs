@@ -106,8 +106,15 @@ SUBCOMMANDS
              --model NAME (gpt-m) --method SPEC (pcdvq2) --workers N (1)
   eval       perplexity + zero-shot proxy suite for a (quantized) model
              --model NAME --method SPEC|fp16 --windows N (48) --items N (40)
-  serve      run the generation service on synthetic traffic
+  serve      run the generation service (synthetic traffic, or HTTP
+             with --listen)
              --model NAME --quantized --requests N (32) --max-new N (32)
+             --listen ADDR  serve HTTP instead of the synthetic loop:
+                        POST /v1/generate (SSE token stream + usage
+                        record), GET /metrics (Prometheus text),
+                        GET /healthz; admission gate sheds overload
+                        with 429 + Retry-After. Continuous host path
+                        only (e.g. --host --listen 0.0.0.0:8080)
              --host     serve on the host backend (codes-resident with
                         --quantized: packed codes + shared codebooks only,
                         no XLA artifacts, no dense weights); decodes

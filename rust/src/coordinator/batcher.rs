@@ -11,18 +11,33 @@
 //! slot frees, and [`Batcher::wait_any`] parks the server only when every
 //! slot is idle.
 //!
-//! Admission is strictly FIFO in arrival order and stamps each request with
-//! a monotone sequence number ([`Admitted::seq`]) — the ordering the
-//! fairness tests pin. Requests carry an optional [`GenRequest::deadline`];
-//! a request whose deadline passed before admission is resolved immediately
-//! with [`GenResponse::timed_out`] instead of occupying a slot.
+//! # Admission order
 //!
-//! Determinism under test: arrivals are drained into an internal buffer
+//! Arrivals are routed into per-`(priority, tenant)` FIFO queues
+//! ([`GenRequest::tenant`], [`GenRequest::priority`]). Admission drains
+//! [`Priority::High`] queues strictly before [`Priority::Normal`] ones;
+//! within a class, tenants are served weighted-round-robin in first-seen
+//! order (default weight 1, [`Batcher::set_tenant_weight`]); within a
+//! tenant, order is FIFO. Traffic from a single tenant at a single priority
+//! therefore degenerates to the original strict-FIFO contract the
+//! fairness tests pin. Each admitted request is stamped with a monotone
+//! sequence number ([`Admitted::seq`]) in admission order.
+//!
+//! Requests carry an optional [`GenRequest::deadline`]; a request whose
+//! deadline passed before admission is resolved immediately with
+//! [`FinishReason::TimedOut`] instead of occupying a slot (it still
+//! consumes a sequence number). When [`BatcherConfig::tenant_queue_cap`]
+//! is non-zero, an arrival that would overflow its tenant queue is
+//! resolved immediately with [`FinishReason::Shed`] at routing time — the
+//! in-process twin of the HTTP 429 path in
+//! [`crate::coordinator::ingress`].
+//!
+//! Determinism under test: arrivals are drained into the internal queues
 //! before every poll, so whether a request is visible to a poll depends
 //! only on whether it was sent before the poll — never on channel timing —
 //! and [`Batcher::push`] injects requests directly, so tests drive
 //! admission without sleeping. (The raw mpsc channel already never loses
-//! buffered sends; the buffer is about making admission *observable and
+//! buffered sends; the buffering is about making admission *observable and
 //! injectable*, and about letting a timed-out poll hand over everything
 //! that arrived during its wait window in one batch.)
 
@@ -30,7 +45,72 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
+/// Scheduling class of a request. [`Priority::High`] queues drain strictly
+/// before [`Priority::Normal`] ones; within a class tenants share capacity
+/// weighted-round-robin (see the [module docs](self)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Admitted before any `Normal` request, regardless of arrival order.
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+}
+
+impl Priority {
+    /// Strict drain order: smaller classes drain first.
+    fn class(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+        }
+    }
+
+    /// Parse the wire spelling used by the HTTP ingress (`"high"` /
+    /// `"normal"`, case-sensitive). Unknown spellings are `None` so the
+    /// caller can reject rather than silently downgrade.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            _ => None,
+        }
+    }
+}
+
+/// How a request left the system. Replaces the old bare `timed_out` flag
+/// with the three terminal states the serving stack distinguishes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Ran to completion (generated `max_new` tokens or hit a stop).
+    #[default]
+    Done,
+    /// [`GenRequest::deadline`] expired before a slot picked the request
+    /// up; no tokens were generated.
+    TimedOut,
+    /// Rejected by admission control (tenant queue over
+    /// [`BatcherConfig::tenant_queue_cap`], or the ingress gate) before
+    /// entering a queue; no tokens were generated.
+    Shed,
+}
+
+impl FinishReason {
+    /// Wire spelling for usage records and logs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Done => "done",
+            FinishReason::TimedOut => "timed_out",
+            FinishReason::Shed => "shed",
+        }
+    }
+}
+
 /// A generation request.
+///
+/// Construct via [`GenRequest::builder`] — the same builder serves the
+/// in-process path and the HTTP ingress
+/// ([`crate::coordinator::ingress`]), so tenant / priority / deadline
+/// semantics are identical no matter where a request enters.
 #[derive(Debug)]
 pub struct GenRequest {
     /// Prompt bytes (byte-level vocab).
@@ -44,26 +124,123 @@ pub struct GenRequest {
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
     /// Admission deadline: if no slot picked the request up by this instant,
-    /// it resolves immediately as [`GenResponse::timed_out`]. `None` waits
+    /// it resolves immediately as [`FinishReason::TimedOut`]. `None` waits
     /// forever.
     pub deadline: Option<Instant>,
+    /// Fairness bucket. Requests from the same tenant are FIFO; distinct
+    /// tenants share capacity weighted-round-robin. Empty = the anonymous
+    /// default tenant.
+    pub tenant: String,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
+    /// Optional token stream: each generated token byte is sent here by the
+    /// coordinator thread as soon as the scheduler step that produced it
+    /// completes (slot order, so the stream is deterministic). The sender is
+    /// dropped with the request once the final [`GenResponse`] has been
+    /// delivered, which is the receiver's end-of-stream signal. Powers SSE
+    /// in [`crate::coordinator::ingress`]; `None` for plain
+    /// request/response use.
+    pub stream: Option<Sender<u8>>,
 }
 
 impl GenRequest {
+    /// Start building a request for `prompt`. Defaults: `max_new` 16,
+    /// greedy temperature, anonymous tenant, [`Priority::Normal`], no
+    /// deadline, no token stream.
+    pub fn builder(prompt: Vec<u8>) -> GenRequestBuilder {
+        GenRequestBuilder {
+            prompt,
+            max_new: 16,
+            temperature: 0.0,
+            deadline: None,
+            tenant: String::new(),
+            priority: Priority::Normal,
+            stream: None,
+        }
+    }
+
     /// A request enqueued now, with no admission deadline.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `GenRequest::builder(prompt).max_new(n).temperature(t).build(resp)`"
+    )]
     pub fn new(
         prompt: Vec<u8>,
         max_new: usize,
         temperature: f32,
         resp: Sender<GenResponse>,
     ) -> Self {
+        GenRequest::builder(prompt).max_new(max_new).temperature(temperature).build(resp)
+    }
+}
+
+/// Builder for [`GenRequest`] — see [`GenRequest::builder`].
+#[derive(Debug)]
+pub struct GenRequestBuilder {
+    prompt: Vec<u8>,
+    max_new: usize,
+    temperature: f32,
+    deadline: Option<Instant>,
+    tenant: String,
+    priority: Priority,
+    stream: Option<Sender<u8>>,
+}
+
+impl GenRequestBuilder {
+    /// Number of tokens to generate (default 16).
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    /// Sampling temperature; 0 = greedy (the default).
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    /// Absolute admission deadline (see [`GenRequest::deadline`]).
+    pub fn deadline(mut self, d: Instant) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Admission deadline `d` from now.
+    pub fn deadline_in(mut self, d: Duration) -> Self {
+        self.deadline = Some(Instant::now() + d);
+        self
+    }
+
+    /// Fairness bucket (see [`GenRequest::tenant`]).
+    pub fn tenant(mut self, t: impl Into<String>) -> Self {
+        self.tenant = t.into();
+        self
+    }
+
+    /// Scheduling class (see [`Priority`]).
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Attach a per-token stream (see [`GenRequest::stream`]).
+    pub fn stream(mut self, tx: Sender<u8>) -> Self {
+        self.stream = Some(tx);
+        self
+    }
+
+    /// Finish the build; the request is stamped as enqueued now.
+    pub fn build(self, resp: Sender<GenResponse>) -> GenRequest {
         GenRequest {
-            prompt,
-            max_new,
-            temperature,
+            prompt: self.prompt,
+            max_new: self.max_new,
+            temperature: self.temperature,
             resp,
             enqueued: Instant::now(),
-            deadline: None,
+            deadline: self.deadline,
+            tenant: self.tenant,
+            priority: self.priority,
+            stream: self.stream,
         }
     }
 }
@@ -79,11 +256,11 @@ pub struct GenResponse {
     /// steps on the static path.
     pub steps: usize,
     /// Request placement marker. Under continuous batching (and for every
-    /// timed-out response) this is the queue's monotone admission sequence
-    /// number. Successful *static*-path responses instead carry their batch
-    /// slot index (those requests may bypass the queue entirely via
-    /// `process_batch`), so seq values are only globally orderable on the
-    /// continuous path.
+    /// timed-out or shed response) this is the queue's monotone admission
+    /// sequence number. Successful *static*-path responses instead carry
+    /// their batch slot index (those requests may bypass the queue entirely
+    /// via `process_batch`), so seq values are only globally orderable on
+    /// the continuous path.
     pub seq: u64,
     /// Time spent queued before a slot picked the request up.
     pub queue_wait: Duration,
@@ -94,12 +271,29 @@ pub struct GenResponse {
     /// [`crate::coordinator::Server::capture_logits`] is set (parity
     /// harnesses); empty in normal serving.
     pub logits: Vec<Vec<f32>>,
-    /// The request's [`GenRequest::deadline`] expired before admission; no
-    /// tokens were generated.
-    pub timed_out: bool,
+    /// How the request left the system (see [`FinishReason`]).
+    pub finish: FinishReason,
 }
 
-/// Batching policy.
+impl GenResponse {
+    /// A terminal response carrying no tokens (timed out or shed), with
+    /// latency == queue wait == time since enqueue.
+    fn rejected(enqueued: Instant, seq: u64, finish: FinishReason) -> Self {
+        let wait = enqueued.elapsed();
+        GenResponse {
+            generated: Vec::new(),
+            latency: wait,
+            steps: 0,
+            seq,
+            queue_wait: wait,
+            ttft: None,
+            logits: Vec::new(),
+            finish,
+        }
+    }
+}
+
+/// Batching and admission policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Maximum requests per batch (the executable's compiled B).
@@ -107,11 +301,20 @@ pub struct BatcherConfig {
     /// Maximum time the first request of a batch waits for company
     /// (static path only — continuous admission never waits).
     pub max_wait: Duration,
+    /// Per-`(priority, tenant)` queue bound: an arrival that would make its
+    /// queue exceed this depth is resolved immediately with
+    /// [`FinishReason::Shed`]. `0` (the default) disables in-queue shedding
+    /// — the HTTP ingress layers its own gate in front regardless.
+    pub tenant_queue_cap: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            tenant_queue_cap: 0,
+        }
     }
 }
 
@@ -119,39 +322,119 @@ impl Default for BatcherConfig {
 #[derive(Debug)]
 pub struct Admitted {
     pub req: GenRequest,
-    /// Monotone admission sequence number — FIFO in arrival order.
+    /// Monotone admission sequence number, stamped in admission order (see
+    /// the [module docs](self) for the order contract).
     pub seq: u64,
     /// When the queue handed the request over (queue wait =
     /// `admitted - req.enqueued`).
     pub admitted: Instant,
 }
 
-/// The admission queue: drains a request channel into an internal FIFO
-/// buffer and hands requests to the serving loop — batched
+/// One tenant's FIFO within a priority class.
+#[derive(Debug)]
+struct TenantQueue {
+    tenant: String,
+    buf: VecDeque<GenRequest>,
+}
+
+/// The admission queue: drains a request channel into per-tenant FIFO
+/// queues and hands requests to the serving loop — batched
 /// ([`Self::next_batch`]) or continuously ([`Self::poll_admit`]).
 pub struct Batcher {
     rx: Receiver<GenRequest>,
     pub cfg: BatcherConfig,
-    /// Arrivals drained from the channel (or injected) but not yet admitted.
-    buf: VecDeque<GenRequest>,
-    /// The channel's sender side is gone; once `buf` drains too, the stream
-    /// is over.
+    /// Per-priority-class tenant queues, first-seen tenant order.
+    /// `classes[Priority::High.class()]` drains strictly first.
+    classes: [Vec<TenantQueue>; 2],
+    /// Weighted-round-robin position per class: index of the tenant queue
+    /// currently being served.
+    cursor: [usize; 2],
+    /// Requests the current tenant may still take in this WRR visit.
+    credit: [usize; 2],
+    /// Per-tenant WRR weights (default 1); applies to both classes.
+    weights: Vec<(String, usize)>,
+    /// The channel's sender side is gone; once the queues drain too, the
+    /// stream is over.
     closed: bool,
     next_seq: u64,
     timed_out: u64,
+    shed: u64,
 }
 
 impl Batcher {
     pub fn new(rx: Receiver<GenRequest>, cfg: BatcherConfig) -> Self {
-        Batcher { rx, cfg, buf: VecDeque::new(), closed: false, next_seq: 0, timed_out: 0 }
+        Batcher {
+            rx,
+            cfg,
+            classes: [Vec::new(), Vec::new()],
+            cursor: [0, 0],
+            credit: [0, 0],
+            weights: Vec::new(),
+            closed: false,
+            next_seq: 0,
+            timed_out: 0,
+            shed: 0,
+        }
     }
 
-    /// Move everything currently sitting in the channel into the buffer.
+    /// Set a tenant's weighted-round-robin weight (default 1; clamped to
+    /// ≥ 1). A tenant with weight `w` may take up to `w` consecutive
+    /// requests per round-robin visit within its priority class.
+    pub fn set_tenant_weight(&mut self, tenant: impl Into<String>, weight: usize) {
+        let tenant = tenant.into();
+        let weight = weight.max(1);
+        match self.weights.iter_mut().find(|(t, _)| *t == tenant) {
+            Some(entry) => entry.1 = weight,
+            None => self.weights.push((tenant, weight)),
+        }
+    }
+
+    fn weight_of(&self, tenant: &str) -> usize {
+        self.weights
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|(_, w)| *w)
+            .unwrap_or(1)
+    }
+
+    /// Route an arrival into its `(priority, tenant)` queue, shedding at
+    /// the tenant-queue cap. Routing happens in arrival order.
+    fn route(&mut self, req: GenRequest) {
+        let class = req.priority.class();
+        let idx = match self.classes[class].iter().position(|q| q.tenant == req.tenant) {
+            Some(i) => i,
+            None => {
+                let w = self.weight_of(&req.tenant);
+                self.classes[class]
+                    .push(TenantQueue { tenant: req.tenant.clone(), buf: VecDeque::new() });
+                let i = self.classes[class].len() - 1;
+                if i == 0 {
+                    // First tenant in this class: start the WRR scan here
+                    // with a full credit so single-tenant traffic is pure
+                    // FIFO from the first admission.
+                    self.cursor[class] = 0;
+                    self.credit[class] = w;
+                }
+                i
+            }
+        };
+        let cap = self.cfg.tenant_queue_cap;
+        if cap > 0 && self.classes[class][idx].buf.len() >= cap {
+            self.shed += 1;
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            req.resp.send(GenResponse::rejected(req.enqueued, seq, FinishReason::Shed)).ok();
+            return;
+        }
+        self.classes[class][idx].buf.push_back(req);
+    }
+
+    /// Move everything currently sitting in the channel into the queues.
     /// Never blocks; records channel disconnection.
     fn drain_channel(&mut self) {
         loop {
             match self.rx.try_recv() {
-                Ok(r) => self.buf.push_back(r),
+                Ok(r) => self.route(r),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     self.closed = true;
@@ -163,22 +446,26 @@ impl Batcher {
 
     /// Inject a request directly, bypassing the channel — deterministic
     /// admission for tests and benches: the request is visible to the very
-    /// next poll, no channel timing involved. FIFO order with already
+    /// next poll, no channel timing involved. Queue order with already
     /// buffered requests is preserved.
     pub fn push(&mut self, req: GenRequest) {
-        self.buf.push_back(req);
+        self.route(req);
+    }
+
+    fn total_buffered(&self) -> usize {
+        self.classes.iter().flatten().map(|q| q.buf.len()).sum()
     }
 
     /// Requests buffered right now (drains the channel first).
     pub fn poll_pending(&mut self) -> usize {
         self.drain_channel();
-        self.buf.len()
+        self.total_buffered()
     }
 
-    /// True once the sender side is gone *and* the buffer has drained —
+    /// True once the sender side is gone *and* the queues have drained —
     /// reflects the state as of the last poll.
     pub fn is_closed(&self) -> bool {
-        self.closed && self.buf.is_empty()
+        self.closed && self.total_buffered() == 0
     }
 
     /// Requests resolved as timed-out at admission so far.
@@ -186,22 +473,54 @@ impl Batcher {
         self.timed_out
     }
 
+    /// Requests resolved as shed (tenant queue over cap) so far.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
     /// Block until at least one request is buffered or the stream closes.
     /// Returns `false` only when the channel is disconnected and fully
     /// drained (shutdown). Never spins: parks on the channel when idle.
     pub fn wait_any(&mut self) -> bool {
         self.drain_channel();
-        while self.buf.is_empty() && !self.closed {
+        while self.total_buffered() == 0 && !self.closed {
             match self.rx.recv() {
-                Ok(r) => self.buf.push_back(r),
+                Ok(r) => self.route(r),
                 Err(_) => self.closed = true,
             }
         }
-        !self.buf.is_empty()
+        self.total_buffered() > 0
+    }
+
+    /// Pop the next request in admission order: strict priority, then
+    /// weighted round-robin across tenants, then FIFO within a tenant.
+    fn pop_next(&mut self) -> Option<GenRequest> {
+        (0..self.classes.len()).find_map(|class| self.pop_class(class))
+    }
+
+    fn pop_class(&mut self, class: usize) -> Option<GenRequest> {
+        let n = self.classes[class].len();
+        if n == 0 || self.classes[class].iter().all(|q| q.buf.is_empty()) {
+            return None;
+        }
+        loop {
+            let i = self.cursor[class] % n;
+            if self.classes[class][i].buf.is_empty() || self.credit[class] == 0 {
+                // This tenant's visit is over (queue empty or credit
+                // spent): move on and grant the next tenant a full visit.
+                let next = (i + 1) % n;
+                let w = self.weight_of(&self.classes[class][next].tenant);
+                self.cursor[class] = next;
+                self.credit[class] = w;
+                continue;
+            }
+            self.credit[class] -= 1;
+            return self.classes[class][i].buf.pop_front();
+        }
     }
 
     /// Consume an admission seq for `req`; if its deadline has passed as of
-    /// `now`, resolve it with [`GenResponse::timed_out`] and return `None`,
+    /// `now`, resolve it with [`FinishReason::TimedOut`] and return `None`,
     /// else hand the request back for a slot. Shared by both serving paths
     /// so the deadline contract is admission-wide.
     fn admit_or_expire(&mut self, req: GenRequest, now: Instant) -> Option<GenRequest> {
@@ -209,34 +528,22 @@ impl Batcher {
         self.next_seq += 1;
         if req.deadline.is_some_and(|d| now >= d) {
             self.timed_out += 1;
-            let wait = req.enqueued.elapsed();
-            req.resp
-                .send(GenResponse {
-                    generated: Vec::new(),
-                    latency: wait,
-                    steps: 0,
-                    seq,
-                    queue_wait: wait,
-                    ttft: None,
-                    logits: Vec::new(),
-                    timed_out: true,
-                })
-                .ok();
+            req.resp.send(GenResponse::rejected(req.enqueued, seq, FinishReason::TimedOut)).ok();
             return None;
         }
         Some(req)
     }
 
-    /// Admit up to `max` buffered requests, FIFO, without blocking.
-    /// Requests whose [`GenRequest::deadline`] has passed are resolved
-    /// immediately with [`GenResponse::timed_out`] (they still consume a
-    /// sequence number — admission order is arrival order, always).
+    /// Admit up to `max` buffered requests in admission order (see the
+    /// [module docs](self)), without blocking. Requests whose
+    /// [`GenRequest::deadline`] has passed are resolved immediately with
+    /// [`FinishReason::TimedOut`] (they still consume a sequence number).
     pub fn poll_admit(&mut self, max: usize) -> Vec<Admitted> {
         self.drain_channel();
         let now = Instant::now();
         let mut out = Vec::new();
         while out.len() < max {
-            let Some(req) = self.buf.pop_front() else { break };
+            let Some(req) = self.pop_next() else { break };
             let seq = self.next_seq; // admit_or_expire consumes it
             if let Some(req) = self.admit_or_expire(req, now) {
                 out.push(Admitted { req, seq, admitted: now });
@@ -249,7 +556,7 @@ impl Batcher {
     /// request channel has been closed and drained (shutdown). Buffered
     /// arrivals are never lost: a poll that times out still returns
     /// whatever arrived during the wait window. Expired-deadline requests
-    /// resolve as [`GenResponse::timed_out`] here too, never reaching a
+    /// resolve as [`FinishReason::TimedOut`] here too, never reaching a
     /// batch slot.
     pub fn next_batch(&mut self) -> Option<Vec<GenRequest>> {
         loop {
@@ -261,7 +568,7 @@ impl Batcher {
             let deadline = Instant::now() + self.cfg.max_wait;
             loop {
                 self.drain_channel();
-                if self.buf.len() >= self.cfg.max_batch || self.closed {
+                if self.total_buffered() >= self.cfg.max_batch || self.closed {
                     break;
                 }
                 let now = Instant::now();
@@ -269,7 +576,7 @@ impl Batcher {
                     break;
                 }
                 match self.rx.recv_timeout(deadline - now) {
-                    Ok(req) => self.buf.push_back(req),
+                    Ok(req) => self.route(req),
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => {
                         self.closed = true;
@@ -280,7 +587,7 @@ impl Batcher {
             let now = Instant::now();
             let mut batch = Vec::new();
             while batch.len() < self.cfg.max_batch {
-                let Some(req) = self.buf.pop_front() else { break };
+                let Some(req) = self.pop_next() else { break };
                 if let Some(req) = self.admit_or_expire(req, now) {
                     batch.push(req);
                 }
@@ -300,7 +607,12 @@ mod tests {
 
     fn req(prompt: &[u8]) -> (GenRequest, Receiver<GenResponse>) {
         let (tx, rx) = channel();
-        (GenRequest::new(prompt.to_vec(), 4, 0.0, tx), rx)
+        (GenRequest::builder(prompt.to_vec()).max_new(4).build(tx), rx)
+    }
+
+    fn tenant_req(prompt: &[u8], tenant: &str) -> (GenRequest, Receiver<GenResponse>) {
+        let (tx, rx) = channel();
+        (GenRequest::builder(prompt.to_vec()).max_new(4).tenant(tenant).build(tx), rx)
     }
 
     #[test]
@@ -308,7 +620,11 @@ mod tests {
         let (tx, rx) = channel();
         let mut batcher = Batcher::new(
             rx,
-            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) },
+            BatcherConfig {
+                max_batch: 3,
+                max_wait: Duration::from_millis(50),
+                ..BatcherConfig::default()
+            },
         );
         let mut keep = Vec::new();
         for _ in 0..5 {
@@ -327,7 +643,11 @@ mod tests {
         let (tx, rx) = channel();
         let mut batcher = Batcher::new(
             rx,
-            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                ..BatcherConfig::default()
+            },
         );
         let (r, _keep) = req(b"solo");
         tx.send(r).unwrap();
@@ -403,7 +723,11 @@ mod tests {
         let (tx, rx) = channel::<GenRequest>();
         let mut batcher = Batcher::new(
             rx,
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
         );
         let (mut dead, dead_rx) = req(b"late");
         dead.deadline = Some(dead.enqueued); // already expired
@@ -415,7 +739,8 @@ mod tests {
         assert_eq!(b[0].prompt, b"ok");
         assert_eq!(batcher.timed_out(), 1);
         let resp = dead_rx.recv().unwrap();
-        assert!(resp.timed_out && resp.generated.is_empty());
+        assert_eq!(resp.finish, FinishReason::TimedOut);
+        assert!(resp.generated.is_empty());
         drop(tx);
     }
 
@@ -434,8 +759,135 @@ mod tests {
         assert_eq!(admitted[0].seq, 1, "expiry still consumes its seq");
         assert_eq!(batcher.timed_out(), 1);
         let resp = rrx.recv().unwrap();
-        assert!(resp.timed_out);
+        assert_eq!(resp.finish, FinishReason::TimedOut);
         assert!(resp.generated.is_empty());
         drop(live_rx);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_new_shim_builds_a_default_request() {
+        // shim coverage for one release: positional construction still
+        // yields the builder's defaults for the new fields
+        let (tx, _rx) = channel();
+        let r = GenRequest::new(b"compat".to_vec(), 7, 0.5, tx);
+        assert_eq!(r.prompt, b"compat");
+        assert_eq!(r.max_new, 7);
+        assert_eq!(r.temperature, 0.5);
+        assert_eq!(r.tenant, "");
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.deadline.is_none() && r.stream.is_none());
+    }
+
+    #[test]
+    fn tenants_interleave_round_robin_within_a_class() {
+        // tenant a floods 4 requests, then tenant b sends 2; admission
+        // alternates a,b while b has work, FIFO within each tenant
+        let (_tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut keep = Vec::new();
+        for p in [b"a0" as &[u8], b"a1", b"a2", b"a3"] {
+            let (r, rrx) = tenant_req(p, "a");
+            batcher.push(r);
+            keep.push(rrx);
+        }
+        for p in [b"b0" as &[u8], b"b1"] {
+            let (r, rrx) = tenant_req(p, "b");
+            batcher.push(r);
+            keep.push(rrx);
+        }
+        let order: Vec<Vec<u8>> =
+            batcher.poll_admit(16).into_iter().map(|a| a.req.prompt).collect();
+        let want: Vec<Vec<u8>> =
+            [b"a0" as &[u8], b"b0", b"a1", b"b1", b"a2", b"a3"]
+                .iter()
+                .map(|p| p.to_vec())
+                .collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn tenant_weights_scale_the_round_robin_share() {
+        // weight 2 lets tenant a take two requests per visit
+        let (_tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        batcher.set_tenant_weight("a", 2);
+        let mut keep = Vec::new();
+        for p in [b"a0" as &[u8], b"a1", b"a2", b"a3"] {
+            let (r, rrx) = tenant_req(p, "a");
+            batcher.push(r);
+            keep.push(rrx);
+        }
+        for p in [b"b0" as &[u8], b"b1"] {
+            let (r, rrx) = tenant_req(p, "b");
+            batcher.push(r);
+            keep.push(rrx);
+        }
+        let order: Vec<Vec<u8>> =
+            batcher.poll_admit(16).into_iter().map(|a| a.req.prompt).collect();
+        let want: Vec<Vec<u8>> =
+            [b"a0" as &[u8], b"a1", b"b0", b"a2", b"a3", b"b1"]
+                .iter()
+                .map(|p| p.to_vec())
+                .collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn high_priority_drains_strictly_first() {
+        let (_tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let mut keep = Vec::new();
+        let (r, rrx) = req(b"normal0");
+        batcher.push(r);
+        keep.push(rrx);
+        let (tx_h, rrx) = channel();
+        batcher.push(
+            GenRequest::builder(b"vip".to_vec())
+                .max_new(4)
+                .priority(Priority::High)
+                .build(tx_h),
+        );
+        keep.push(rrx);
+        let (r, rrx) = req(b"normal1");
+        batcher.push(r);
+        keep.push(rrx);
+        let order: Vec<Vec<u8>> =
+            batcher.poll_admit(16).into_iter().map(|a| a.req.prompt).collect();
+        assert_eq!(order[0], b"vip", "High admits before earlier-arrived Normal");
+        assert_eq!(order[1], b"normal0");
+        assert_eq!(order[2], b"normal1");
+    }
+
+    #[test]
+    fn tenant_queue_cap_sheds_at_routing_time() {
+        let (_tx, rx) = channel::<GenRequest>();
+        let mut batcher = Batcher::new(
+            rx,
+            BatcherConfig { tenant_queue_cap: 2, ..BatcherConfig::default() },
+        );
+        let mut keep = Vec::new();
+        let mut shed_rx = Vec::new();
+        for i in 0..4u8 {
+            let (r, rrx) = tenant_req(&[b'a', i], "a");
+            batcher.push(r);
+            if i < 2 {
+                keep.push(rrx);
+            } else {
+                shed_rx.push(rrx);
+            }
+        }
+        // other tenants are unaffected by a's full queue
+        let (r, rrx) = tenant_req(b"b0", "b");
+        batcher.push(r);
+        keep.push(rrx);
+        assert_eq!(batcher.shed(), 2);
+        for rrx in &shed_rx {
+            let resp = rrx.recv().unwrap();
+            assert_eq!(resp.finish, FinishReason::Shed);
+            assert!(resp.generated.is_empty() && resp.steps == 0);
+        }
+        let admitted = batcher.poll_admit(16);
+        assert_eq!(admitted.len(), 3, "capped overflow never reaches a slot");
     }
 }

@@ -1,0 +1,1060 @@
+//! HTTP ingress: the network front end of the continuous-batching server.
+//!
+//! [`Ingress::spawn`] binds a std [`TcpListener`] and puts three endpoints
+//! in front of [`Server::serve_continuous`] — no async runtime, no
+//! dependencies beyond the standard library:
+//!
+//! * `POST /v1/generate` — JSON body (`prompt`, `max_new`, `temperature`,
+//!   optional `deadline_ms` / `tenant` / `priority`), answered as a
+//!   Server-Sent-Events stream: one `data: {"token":N}` event per generated
+//!   token as the scheduler produces it, terminated by an `event: usage`
+//!   record (token/step counts, queue wait, TTFT, admission seq, finish
+//!   reason). Requests are built through the same [`GenRequest::builder`]
+//!   the in-process path uses, so tenant / priority / deadline semantics
+//!   are identical no matter how a request enters.
+//! * `GET /metrics` — Prometheus text format: the serving loop's counters
+//!   and latency quantiles ([`Metrics::prometheus_text`] via
+//!   [`Server::metrics_mirror`]) plus the gate's per-tenant admitted/shed
+//!   counters and live queue-pressure gauges.
+//! * `GET /healthz` — liveness probe.
+//!
+//! # Admission control and load shedding
+//!
+//! An [`AdmissionGate`] sits between the socket and the [`Batcher`]: every
+//! `POST /v1/generate` is checked *synchronously, before any response byte
+//! is written*, against three budgets ([`IngressConfig`]) — total
+//! in-flight requests, per-tenant in-flight requests, and the estimated
+//! queue wait (requests beyond slot capacity × an EWMA of observed service
+//! time ÷ slots). A request over budget is rejected **early** with
+//! `429 Too Many Requests` + a `Retry-After` hint, instead of timing out
+//! late after queueing — the admitted population is therefore one the
+//! server can actually serve, which is what keeps goodput flat under
+//! overload (the `ingress_load` bench scenario pins this). Requests that
+//! pass the gate enter the batcher's per-`(priority, tenant)` queues and
+//! get weighted-round-robin fairness from there (see
+//! [`crate::coordinator::batcher`]'s module docs).
+//!
+//! # Threading
+//!
+//! One **serving thread** owns the [`Server`] and runs
+//! `serve_continuous` (whose slot fan-out keeps using the shared
+//! [`crate::exec::Pool`] — all model compute stays there). One **accept
+//! thread** takes connections and hands each to a short-lived handler
+//! thread (handlers are I/O-bound: parse, gate check, relay channel
+//! messages to the socket; they never touch model state). Connections are
+//! `Connection: close` — one request per connection — and capped at
+//! [`IngressConfig::max_connections`] (503 beyond). [`Ingress::shutdown`]
+//! stops accepting, drains in-flight requests, and hands the [`Server`]
+//! back for inspection; [`Ingress::wait`] parks forever (the CLI
+//! `serve --listen` path).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Batcher, BatcherConfig, GenRequest, GenResponse, Priority};
+use super::metrics::Metrics;
+use super::server::Server;
+
+/// Admission budgets and connection limits for [`Ingress::spawn`].
+#[derive(Clone, Debug)]
+pub struct IngressConfig {
+    /// Admitted requests in flight (queued + running) beyond which new
+    /// arrivals shed with 429. `0` = unbounded.
+    pub max_in_flight: usize,
+    /// Per-tenant in-flight bound; the fairness backstop against one
+    /// tenant monopolizing the queue. `0` = unbounded.
+    pub tenant_in_flight_cap: usize,
+    /// Estimated queue wait beyond which arrivals shed with 429. The
+    /// estimate is `(in_flight - slots) × EWMA(service time) / slots`.
+    /// Zero = disabled.
+    pub queue_wait_budget: Duration,
+    /// Concurrent connections; excess get an immediate 503.
+    pub max_connections: usize,
+    /// Weighted-round-robin weights handed to
+    /// [`Batcher::set_tenant_weight`] at spawn (default weight is 1).
+    pub tenant_weights: Vec<(String, usize)>,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            max_in_flight: 64,
+            tenant_in_flight_cap: 0,
+            queue_wait_budget: Duration::ZERO,
+            max_connections: 256,
+            tenant_weights: Vec::new(),
+        }
+    }
+}
+
+/// Per-tenant admission bookkeeping inside the gate.
+#[derive(Clone, Debug, Default)]
+struct TenantStat {
+    admitted: u64,
+    shed: u64,
+    in_flight: usize,
+}
+
+#[derive(Debug, Default)]
+struct GateState {
+    in_flight: usize,
+    /// EWMA of per-request *service* time (latency minus queue wait),
+    /// seconds; 0 until the first completion.
+    ema_service_s: f64,
+    /// First-seen order, so `/metrics` output is stable across scrapes.
+    tenants: Vec<(String, TenantStat)>,
+}
+
+/// The synchronous admission gate in front of the request queue: bounded
+/// in-flight counts (total and per tenant) plus an estimated-queue-wait
+/// budget. Shared by every handler thread; one short [`Mutex`] hold per
+/// decision.
+pub struct AdmissionGate {
+    max_in_flight: usize,
+    tenant_cap: usize,
+    wait_budget: Duration,
+    slots: usize,
+    state: Mutex<GateState>,
+}
+
+impl AdmissionGate {
+    fn new(cfg: &IngressConfig, slots: usize) -> Self {
+        AdmissionGate {
+            max_in_flight: cfg.max_in_flight,
+            tenant_cap: cfg.tenant_in_flight_cap,
+            wait_budget: cfg.queue_wait_budget,
+            slots: slots.max(1),
+            state: Mutex::new(GateState::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, GateState> {
+        // a poisoned gate mutex means a handler panicked mid-update; the
+        // counters are still sane (single writes), so keep serving
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Estimated wait for a request arriving now, given `in_flight`
+    /// admitted requests ahead of it.
+    fn estimate_wait_s(&self, in_flight: usize, ema_service_s: f64) -> f64 {
+        let excess = in_flight.saturating_sub(self.slots) as f64;
+        excess * ema_service_s / self.slots as f64
+    }
+
+    /// Admit or shed. `Err(retry_after_s)` means shed: the caller answers
+    /// 429 with that `Retry-After` hint and MUST NOT call
+    /// [`Self::complete`]. `Ok(())` increments the in-flight counts; the
+    /// caller MUST pair it with exactly one `complete`.
+    fn try_admit(&self, tenant: &str) -> std::result::Result<(), u64> {
+        let mut st = self.lock();
+        let est_wait = self.estimate_wait_s(st.in_flight, st.ema_service_s);
+        let idx = match st.tenants.iter().position(|(t, _)| t == tenant) {
+            Some(i) => i,
+            None => {
+                st.tenants.push((tenant.to_string(), TenantStat::default()));
+                st.tenants.len() - 1
+            }
+        };
+        let over_total = self.max_in_flight > 0 && st.in_flight >= self.max_in_flight;
+        let over_tenant =
+            self.tenant_cap > 0 && st.tenants[idx].1.in_flight >= self.tenant_cap;
+        let over_wait = self.wait_budget > Duration::ZERO
+            && est_wait > self.wait_budget.as_secs_f64();
+        if over_total || over_tenant || over_wait {
+            st.tenants[idx].1.shed += 1;
+            return Err((est_wait.ceil() as u64).max(1));
+        }
+        st.in_flight += 1;
+        st.tenants[idx].1.admitted += 1;
+        st.tenants[idx].1.in_flight += 1;
+        Ok(())
+    }
+
+    /// Mark one admitted request resolved. `service` (latency minus queue
+    /// wait) feeds the wait estimator; pass `None` for requests that did
+    /// no work (timed out, shed in-queue, server shutting down).
+    fn complete(&self, tenant: &str, service: Option<Duration>) {
+        let mut st = self.lock();
+        st.in_flight = st.in_flight.saturating_sub(1);
+        if let Some(entry) = st.tenants.iter_mut().find(|(t, _)| t == tenant) {
+            entry.1.in_flight = entry.1.in_flight.saturating_sub(1);
+        }
+        if let Some(s) = service {
+            let s = s.as_secs_f64();
+            st.ema_service_s = if st.ema_service_s == 0.0 {
+                s
+            } else {
+                0.7 * st.ema_service_s + 0.3 * s
+            };
+        }
+    }
+
+    /// `(admitted, shed)` counters for one tenant (0, 0 if never seen).
+    pub fn tenant_counters(&self, tenant: &str) -> (u64, u64) {
+        let st = self.lock();
+        st.tenants
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|(_, s)| (s.admitted, s.shed))
+            .unwrap_or((0, 0))
+    }
+
+    /// Total requests shed at the gate across all tenants.
+    pub fn shed_total(&self) -> u64 {
+        self.lock().tenants.iter().map(|(_, s)| s.shed).sum()
+    }
+
+    /// The gate's Prometheus lines, appended after the server metrics by
+    /// `GET /metrics`.
+    fn prometheus_text(&self) -> String {
+        let st = self.lock();
+        let mut out = String::new();
+        out.push_str(
+            "# HELP pallas_tenant_admitted_total Requests admitted through the ingress gate\n\
+             # TYPE pallas_tenant_admitted_total counter\n",
+        );
+        for (t, s) in &st.tenants {
+            out.push_str(&format!(
+                "pallas_tenant_admitted_total{{tenant=\"{}\"}} {}\n",
+                escape_label(t),
+                s.admitted
+            ));
+        }
+        out.push_str(
+            "# HELP pallas_tenant_shed_total Requests shed at the ingress gate\n\
+             # TYPE pallas_tenant_shed_total counter\n",
+        );
+        for (t, s) in &st.tenants {
+            out.push_str(&format!(
+                "pallas_tenant_shed_total{{tenant=\"{}\"}} {}\n",
+                escape_label(t),
+                s.shed
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP pallas_ingress_in_flight Admitted requests currently queued or running\n\
+             # TYPE pallas_ingress_in_flight gauge\n\
+             pallas_ingress_in_flight {}\n",
+            st.in_flight
+        ));
+        out.push_str(&format!(
+            "# HELP pallas_ingress_est_queue_wait_seconds Estimated wait for a request arriving now\n\
+             # TYPE pallas_ingress_est_queue_wait_seconds gauge\n\
+             pallas_ingress_est_queue_wait_seconds {}\n",
+            self.estimate_wait_s(st.in_flight, st.ema_service_s)
+        ));
+        out
+    }
+}
+
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// State shared by the accept loop and every handler thread. The request
+/// sender lives here and nowhere else: when the accept thread and the last
+/// in-flight handler drop their `Arc`, the channel closes, the batcher
+/// drains, and the serving thread returns the server.
+struct Ctx {
+    req_tx: Mutex<Sender<GenRequest>>,
+    gate: Arc<AdmissionGate>,
+    mirror: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+    live_conns: AtomicUsize,
+    max_conns: usize,
+}
+
+/// A running HTTP front end — see the [module docs](self).
+pub struct Ingress {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    gate: Arc<AdmissionGate>,
+    accept: Option<JoinHandle<()>>,
+    serve: Option<JoinHandle<Result<Server>>>,
+}
+
+impl Ingress {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start serving: the server moves onto its own thread running
+    /// [`Server::serve_continuous`]; requests flow socket → gate →
+    /// [`Batcher`] → slots → SSE.
+    pub fn spawn(
+        mut server: Server,
+        batcher_cfg: BatcherConfig,
+        cfg: IngressConfig,
+        addr: &str,
+    ) -> Result<Ingress> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding ingress on {addr}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let mirror = server.metrics_mirror();
+        let gate = Arc::new(AdmissionGate::new(&cfg, server.max_slots));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let (req_tx, req_rx) = channel();
+        let mut batcher = Batcher::new(req_rx, batcher_cfg);
+        for (tenant, weight) in &cfg.tenant_weights {
+            batcher.set_tenant_weight(tenant.clone(), *weight);
+        }
+        let serve = std::thread::Builder::new()
+            .name("pallas-serve".into())
+            .spawn(move || -> Result<Server> {
+                server.serve_continuous(&mut batcher)?;
+                Ok(server)
+            })
+            .context("spawning serving thread")?;
+
+        let ctx = Arc::new(Ctx {
+            req_tx: Mutex::new(req_tx),
+            gate: gate.clone(),
+            mirror,
+            stop: stop.clone(),
+            live_conns: AtomicUsize::new(0),
+            max_conns: cfg.max_connections.max(1),
+        });
+        let accept = std::thread::Builder::new()
+            .name("pallas-ingress".into())
+            .spawn(move || accept_loop(listener, ctx))
+            .context("spawning accept thread")?;
+
+        Ok(Ingress { addr, stop, gate, accept: Some(accept), serve: Some(serve) })
+    }
+
+    /// The bound socket address (resolves `:0` test binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `(admitted, shed)` gate counters for one tenant — test hook; the
+    /// same numbers flow out of `GET /metrics`.
+    pub fn tenant_counters(&self, tenant: &str) -> (u64, u64) {
+        self.gate.tenant_counters(tenant)
+    }
+
+    /// Total requests shed at the gate.
+    pub fn shed_total(&self) -> u64 {
+        self.gate.shed_total()
+    }
+
+    /// Stop accepting, drain every in-flight request, and hand the
+    /// [`Server`] back (its [`Server::metrics`] hold the final counters).
+    pub fn shutdown(mut self) -> Result<Server> {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept loop is parked in accept(): poke it awake so it can
+        // observe the flag and exit
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("ingress accept thread panicked"))?;
+        }
+        // with the accept thread gone, the request channel closes as soon
+        // as the last in-flight handler finishes; the serving loop then
+        // drains and returns the server
+        match self.serve.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("serving thread panicked"))?,
+            None => anyhow::bail!("serving thread already taken"),
+        }
+    }
+
+    /// Park until the process dies (the CLI `serve --listen` path): joins
+    /// the accept thread, which only exits on [`Self::shutdown`].
+    pub fn wait(mut self) -> Result<()> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("ingress accept thread panicked"))?;
+        }
+        if let Some(h) = self.serve.take() {
+            h.join().map_err(|_| anyhow::anyhow!("serving thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>) {
+    for stream in listener.incoming() {
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(mut stream) = stream else { continue };
+        if ctx.live_conns.fetch_add(1, Ordering::SeqCst) >= ctx.max_conns {
+            ctx.live_conns.fetch_sub(1, Ordering::SeqCst);
+            let _ = write_simple(
+                &mut stream,
+                503,
+                "Service Unavailable",
+                "application/json",
+                &[("Retry-After", "1".to_string())],
+                "{\"error\":\"too many connections\"}\n",
+            );
+            continue;
+        }
+        let hctx = ctx.clone();
+        let spawned = std::thread::Builder::new().name("pallas-conn".into()).spawn(move || {
+            let _ = handle_connection(stream, &hctx);
+            hctx.live_conns.fetch_sub(1, Ordering::SeqCst);
+        });
+        if spawned.is_err() {
+            ctx.live_conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).context("reading header")?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_len = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    const MAX_BODY: usize = 1 << 20;
+    if content_len > MAX_BODY {
+        return write_simple(
+            &mut stream,
+            413,
+            "Payload Too Large",
+            "application/json",
+            &[],
+            "{\"error\":\"body too large\"}\n",
+        );
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).context("reading body")?;
+
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(&mut stream, &body, ctx),
+        ("GET", "/metrics") => {
+            let mut text = {
+                let m = ctx.mirror.lock().unwrap_or_else(|e| e.into_inner());
+                m.prometheus_text()
+            };
+            text.push_str(&ctx.gate.prometheus_text());
+            write_simple(
+                &mut stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &[],
+                &text,
+            )
+        }
+        ("GET", "/healthz") => {
+            write_simple(&mut stream, 200, "OK", "text/plain; charset=utf-8", &[], "ok\n")
+        }
+        _ => write_simple(
+            &mut stream,
+            404,
+            "Not Found",
+            "application/json",
+            &[],
+            "{\"error\":\"not found\"}\n",
+        ),
+    }
+}
+
+fn handle_generate(stream: &mut TcpStream, body: &[u8], ctx: &Ctx) -> Result<()> {
+    let spec = match parse_generate(body) {
+        Ok(s) => s,
+        Err(e) => {
+            return write_simple(
+                stream,
+                400,
+                "Bad Request",
+                "application/json",
+                &[],
+                &format!("{{\"error\":{}}}\n", json_quote(&format!("{e:#}"))),
+            )
+        }
+    };
+    // The shed decision happens here, synchronously, before any response
+    // byte: a rejected request costs the server nothing downstream.
+    if let Err(retry_after) = ctx.gate.try_admit(&spec.tenant) {
+        return write_simple(
+            stream,
+            429,
+            "Too Many Requests",
+            "application/json",
+            &[("Retry-After", retry_after.to_string())],
+            &format!("{{\"error\":\"shed\",\"retry_after_s\":{retry_after}}}\n"),
+        );
+    }
+    // gate admitted: exactly one `complete` below, on every path
+    let (resp_tx, resp_rx) = channel();
+    let (tok_tx, tok_rx) = channel();
+    let mut builder = GenRequest::builder(spec.prompt)
+        .max_new(spec.max_new)
+        .temperature(spec.temperature)
+        .tenant(spec.tenant.clone())
+        .priority(spec.priority)
+        .stream(tok_tx);
+    if let Some(ms) = spec.deadline_ms {
+        builder = builder.deadline_in(Duration::from_millis(ms));
+    }
+    let req = builder.build(resp_tx);
+    let sent = {
+        let tx = ctx.req_tx.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        tx.send(req)
+    };
+    if sent.is_err() {
+        ctx.gate.complete(&spec.tenant, None);
+        return write_simple(
+            stream,
+            503,
+            "Service Unavailable",
+            "application/json",
+            &[],
+            "{\"error\":\"shutting down\"}\n",
+        );
+    }
+    let result = stream_sse(stream, tok_rx, resp_rx);
+    let service = result
+        .as_ref()
+        .ok()
+        .filter(|r| !r.generated.is_empty())
+        .map(|r| r.latency.saturating_sub(r.queue_wait));
+    ctx.gate.complete(&spec.tenant, service);
+    result.map(|_| ())
+}
+
+/// Relay the token stream and the final response onto the socket as SSE.
+/// A client that disconnects mid-stream stops receiving but never stops
+/// the generation — the channels just drain into dropped receivers.
+fn stream_sse(
+    stream: &mut TcpStream,
+    tok_rx: Receiver<u8>,
+    resp_rx: Receiver<GenResponse>,
+) -> Result<GenResponse> {
+    write_head(stream, 200, "OK", "text/event-stream", &[("Cache-Control", "no-cache".into())])?;
+    let mut client_gone = false;
+    for tok in tok_rx.iter() {
+        if client_gone {
+            continue; // keep draining so the serving loop never blocks on us
+        }
+        let event = format!("data: {{\"token\":{tok}}}\n\n");
+        if stream.write_all(event.as_bytes()).and_then(|_| stream.flush()).is_err() {
+            client_gone = true;
+        }
+    }
+    // the token sender dropping means the request resolved: its response
+    // is already in (or about to enter) the channel
+    let resp = resp_rx.recv().context("serving thread dropped the request")?;
+    let ttft_ms = match resp.ttft {
+        Some(d) => format!("{:.3}", d.as_secs_f64() * 1e3),
+        None => "null".to_string(),
+    };
+    let usage = format!(
+        "event: usage\ndata: {{\"tokens\":{},\"steps\":{},\"seq\":{},\"queue_wait_ms\":{:.3},\"ttft_ms\":{},\"latency_ms\":{:.3},\"finish\":\"{}\"}}\n\n",
+        resp.generated.len(),
+        resp.steps,
+        resp.seq,
+        resp.queue_wait.as_secs_f64() * 1e3,
+        ttft_ms,
+        resp.latency.as_secs_f64() * 1e3,
+        resp.finish.as_str(),
+    );
+    if !client_gone {
+        let _ = stream.write_all(usage.as_bytes()).and_then(|_| stream.flush());
+    }
+    Ok(resp)
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing (hand-rolled: the offline crate set has no HTTP stack)
+// ---------------------------------------------------------------------------
+
+fn write_head(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nConnection: close\r\n"
+    );
+    for (name, value) in extra {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).context("writing response head")?;
+    stream.flush().context("flushing response head")
+}
+
+fn write_simple(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &str,
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (name, value) in extra {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).context("writing response")?;
+    stream.write_all(body.as_bytes()).context("writing body")?;
+    stream.flush().context("flushing response")
+}
+
+/// A parsed HTTP response from [`http_request`] — the minimal blocking
+/// client the ingress tests and the `ingress_load` bench drive traffic
+/// with.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    /// Entire response body (the server closes after each response, so
+    /// SSE bodies arrive complete; decode them with [`parse_sse`]).
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Issue one blocking HTTP/1.1 request (`Connection: close`) and read the
+/// response to EOF.
+pub fn http_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<HttpResponse> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).context("writing request")?;
+    stream.flush().ok();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    let raw = String::from_utf8(raw).context("response is not UTF-8")?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .context("response has no header/body separator")?;
+    let mut lines = head.lines();
+    let status_line = lines.next().context("empty response")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line: {status_line}"))?;
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(n, v)| (n.trim().to_string(), v.trim().to_string()))
+        .collect();
+    Ok(HttpResponse { status, headers, body: body.to_string() })
+}
+
+/// Convenience: `POST /v1/generate` with a JSON body assembled from parts.
+/// `deadline_ms` 0 means no deadline; empty `tenant` is the anonymous
+/// default.
+pub fn post_generate(
+    addr: SocketAddr,
+    prompt: &str,
+    max_new: usize,
+    temperature: f32,
+    tenant: &str,
+    deadline_ms: u64,
+) -> Result<HttpResponse> {
+    let mut body = format!(
+        "{{\"prompt\":{},\"max_new\":{max_new},\"temperature\":{temperature}",
+        json_quote(prompt)
+    );
+    if !tenant.is_empty() {
+        body.push_str(&format!(",\"tenant\":{}", json_quote(tenant)));
+    }
+    if deadline_ms > 0 {
+        body.push_str(&format!(",\"deadline_ms\":{deadline_ms}"));
+    }
+    body.push('}');
+    http_request(addr, "POST", "/v1/generate", Some(&body))
+}
+
+/// One Server-Sent Event from a response body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SseEvent {
+    /// The `event:` field; `"message"` when absent (plain `data:` events).
+    pub event: String,
+    pub data: String,
+}
+
+/// Split an SSE body into events (blank-line-delimited, `data:` payloads
+/// concatenated per the SSE spec).
+pub fn parse_sse(body: &str) -> Vec<SseEvent> {
+    let mut events = Vec::new();
+    for chunk in body.split("\n\n") {
+        let mut event = String::from("message");
+        let mut data = String::new();
+        for line in chunk.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                if !data.is_empty() {
+                    data.push('\n');
+                }
+                data.push_str(v);
+            }
+        }
+        if !data.is_empty() {
+            events.push(SseEvent { event, data });
+        }
+    }
+    events
+}
+
+/// Decode the generated token bytes out of a parsed SSE stream (the
+/// `data: {"token":N}` events, in order).
+pub fn sse_tokens(events: &[SseEvent]) -> Vec<u8> {
+    events
+        .iter()
+        .filter(|e| e.event == "message")
+        .filter_map(|e| {
+            e.data
+                .strip_prefix("{\"token\":")
+                .and_then(|r| r.strip_suffix('}'))
+                .and_then(|n| n.trim().parse::<u8>().ok())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON (flat objects of strings/numbers — the request body schema)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum JsonVal {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+type Chars<'a> = std::iter::Peekable<std::str::Chars<'a>>;
+
+fn skip_ws(p: &mut Chars) {
+    while matches!(p.peek(), Some(' ' | '\t' | '\r' | '\n')) {
+        p.next();
+    }
+}
+
+fn parse_json_string(p: &mut Chars) -> Result<String> {
+    anyhow::ensure!(p.next() == Some('"'), "expected a string");
+    let mut out = String::new();
+    loop {
+        match p.next() {
+            None => anyhow::bail!("unterminated string"),
+            Some('"') => return Ok(out),
+            Some('\\') => match p.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('/') => out.push('/'),
+                Some('n') => out.push('\n'),
+                Some('r') => out.push('\r'),
+                Some('t') => out.push('\t'),
+                Some('b') => out.push('\u{8}'),
+                Some('f') => out.push('\u{c}'),
+                Some('u') => {
+                    let mut code = 0u32;
+                    for _ in 0..4 {
+                        let d = p
+                            .next()
+                            .and_then(|c| c.to_digit(16))
+                            .context("bad \\u escape")?;
+                        code = code * 16 + d;
+                    }
+                    out.push(char::from_u32(code).context("bad \\u code point")?);
+                }
+                _ => anyhow::bail!("bad escape"),
+            },
+            Some(c) => out.push(c),
+        }
+    }
+}
+
+fn parse_json_number(p: &mut Chars) -> Result<f64> {
+    let mut s = String::new();
+    while let Some(&c) = p.peek() {
+        if c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E') {
+            s.push(c);
+            p.next();
+        } else {
+            break;
+        }
+    }
+    s.parse::<f64>().with_context(|| format!("bad number '{s}'"))
+}
+
+fn expect_word(p: &mut Chars, word: &str) -> Result<()> {
+    for c in word.chars() {
+        anyhow::ensure!(p.next() == Some(c), "malformed literal (expected '{word}')");
+    }
+    Ok(())
+}
+
+/// Parse a flat JSON object of string/number/bool/null values — the whole
+/// grammar `POST /v1/generate` accepts (nested values are a 400).
+fn parse_flat_object(s: &str) -> Result<Vec<(String, JsonVal)>> {
+    let mut p = s.chars().peekable();
+    skip_ws(&mut p);
+    anyhow::ensure!(p.next() == Some('{'), "body must be a JSON object");
+    let mut out = Vec::new();
+    skip_ws(&mut p);
+    if p.peek().copied() == Some('}') {
+        p.next();
+        return Ok(out);
+    }
+    loop {
+        skip_ws(&mut p);
+        let key = parse_json_string(&mut p).context("object key")?;
+        skip_ws(&mut p);
+        anyhow::ensure!(p.next() == Some(':'), "expected ':' after \"{key}\"");
+        skip_ws(&mut p);
+        let val = match p.peek().copied() {
+            Some('"') => JsonVal::Str(parse_json_string(&mut p)?),
+            Some('t') => {
+                expect_word(&mut p, "true")?;
+                JsonVal::Bool(true)
+            }
+            Some('f') => {
+                expect_word(&mut p, "false")?;
+                JsonVal::Bool(false)
+            }
+            Some('n') => {
+                expect_word(&mut p, "null")?;
+                JsonVal::Null
+            }
+            Some(c) if c.is_ascii_digit() || c == '-' => JsonVal::Num(parse_json_number(&mut p)?),
+            _ => anyhow::bail!("unsupported value for \"{key}\" (flat strings/numbers only)"),
+        };
+        out.push((key, val));
+        skip_ws(&mut p);
+        match p.next() {
+            Some(',') => continue,
+            Some('}') => return Ok(out),
+            _ => anyhow::bail!("expected ',' or '}}'"),
+        }
+    }
+}
+
+/// Quote a string as a JSON value (for response bodies and the client
+/// helper).
+fn json_quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A validated `POST /v1/generate` body.
+#[derive(Debug)]
+struct GenSpec {
+    prompt: Vec<u8>,
+    max_new: usize,
+    temperature: f32,
+    deadline_ms: Option<u64>,
+    tenant: String,
+    priority: Priority,
+}
+
+fn parse_generate(body: &[u8]) -> Result<GenSpec> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let fields = parse_flat_object(text)?;
+    let mut spec = GenSpec {
+        prompt: Vec::new(),
+        max_new: 16,
+        temperature: 0.0,
+        deadline_ms: None,
+        tenant: String::new(),
+        priority: Priority::Normal,
+    };
+    let mut have_prompt = false;
+    let usize_field = |key: &str, n: f64, cap: f64| -> Result<usize> {
+        anyhow::ensure!(
+            n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= cap,
+            "'{key}' must be an integer in 0..={cap}"
+        );
+        Ok(n as usize)
+    };
+    for (key, val) in fields {
+        match (key.as_str(), val) {
+            ("prompt", JsonVal::Str(s)) => {
+                spec.prompt = s.into_bytes();
+                have_prompt = true;
+            }
+            ("max_new", JsonVal::Num(n)) => spec.max_new = usize_field("max_new", n, 65536.0)?,
+            ("temperature", JsonVal::Num(n)) => {
+                anyhow::ensure!(n.is_finite() && n >= 0.0, "'temperature' must be >= 0");
+                spec.temperature = n as f32;
+            }
+            ("deadline_ms", JsonVal::Num(n)) => {
+                spec.deadline_ms = Some(usize_field("deadline_ms", n, 86_400_000.0)? as u64);
+            }
+            ("tenant", JsonVal::Str(s)) => spec.tenant = s,
+            ("priority", JsonVal::Str(s)) => {
+                spec.priority = Priority::parse(&s)
+                    .with_context(|| format!("'priority' must be \"high\" or \"normal\", got \"{s}\""))?;
+            }
+            (k, _) => anyhow::bail!("unknown or mistyped field '{k}'"),
+        }
+    }
+    anyhow::ensure!(have_prompt, "missing required field 'prompt'");
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_generate_body() {
+        let body = br#"{"prompt": "say \"hi\"", "max_new": 8, "temperature": 0.5,
+                        "deadline_ms": 250, "tenant": "acme", "priority": "high"}"#;
+        let spec = parse_generate(body).unwrap();
+        assert_eq!(spec.prompt, b"say \"hi\"");
+        assert_eq!(spec.max_new, 8);
+        assert!((spec.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(spec.deadline_ms, Some(250));
+        assert_eq!(spec.tenant, "acme");
+        assert_eq!(spec.priority, Priority::High);
+    }
+
+    #[test]
+    fn generate_body_defaults_and_rejections() {
+        let spec = parse_generate(br#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(spec.max_new, 16);
+        assert_eq!(spec.temperature, 0.0);
+        assert_eq!(spec.tenant, "");
+        assert_eq!(spec.priority, Priority::Normal);
+        assert!(spec.deadline_ms.is_none());
+        assert!(parse_generate(b"{}").is_err(), "prompt is required");
+        assert!(parse_generate(br#"{"prompt":"x","max_new":-1}"#).is_err());
+        assert!(parse_generate(br#"{"prompt":"x","max_new":1.5}"#).is_err());
+        assert!(parse_generate(br#"{"prompt":"x","priority":"urgent"}"#).is_err());
+        assert!(parse_generate(br#"{"prompt":"x","bogus":1}"#).is_err());
+        assert!(parse_generate(br#"{"prompt":["x"]}"#).is_err(), "no nested values");
+        assert!(parse_generate(b"not json").is_err());
+    }
+
+    #[test]
+    fn json_quote_roundtrips_through_the_parser() {
+        let nasty = "a\"b\\c\nd\te\u{1}f";
+        let body = format!("{{\"prompt\":{}}}", json_quote(nasty));
+        let spec = parse_generate(body.as_bytes()).unwrap();
+        assert_eq!(spec.prompt, nasty.as_bytes());
+    }
+
+    #[test]
+    fn sse_roundtrip_decodes_tokens_in_order() {
+        let body = "data: {\"token\":7}\n\ndata: {\"token\":255}\n\n\
+                    event: usage\ndata: {\"tokens\":2,\"finish\":\"done\"}\n\n";
+        let events = parse_sse(body);
+        assert_eq!(events.len(), 3);
+        assert_eq!(sse_tokens(&events), vec![7, 255]);
+        assert_eq!(events[2].event, "usage");
+        assert!(events[2].data.contains("\"finish\":\"done\""));
+    }
+
+    #[test]
+    fn gate_sheds_over_total_and_tenant_budgets() {
+        let cfg = IngressConfig {
+            max_in_flight: 3,
+            tenant_in_flight_cap: 2,
+            ..IngressConfig::default()
+        };
+        let gate = AdmissionGate::new(&cfg, 1);
+        assert!(gate.try_admit("a").is_ok());
+        assert!(gate.try_admit("a").is_ok());
+        // tenant cap hits before the total cap
+        assert!(gate.try_admit("a").is_err());
+        assert!(gate.try_admit("b").is_ok());
+        // now the total cap bites for everyone
+        assert!(gate.try_admit("b").is_err());
+        assert_eq!(gate.tenant_counters("a"), (2, 1));
+        assert_eq!(gate.tenant_counters("b"), (1, 1));
+        assert_eq!(gate.shed_total(), 2);
+        // completions reopen the gate
+        gate.complete("a", Some(Duration::from_millis(10)));
+        assert!(gate.try_admit("b").is_ok());
+    }
+
+    #[test]
+    fn gate_sheds_on_estimated_wait_and_recovers() {
+        let cfg = IngressConfig {
+            max_in_flight: 0,
+            queue_wait_budget: Duration::from_millis(50),
+            ..IngressConfig::default()
+        };
+        let gate = AdmissionGate::new(&cfg, 1);
+        // no service-time samples yet: estimate is 0, everything admits
+        for _ in 0..4 {
+            assert!(gate.try_admit("t").is_ok());
+        }
+        // a slow completion teaches the estimator; 3 still in flight over
+        // 1 slot → est wait = 2 × 100ms > 50ms budget
+        gate.complete("t", Some(Duration::from_millis(100)));
+        assert!(gate.try_admit("t").is_err());
+        // drain the queue: estimate falls back under budget
+        gate.complete("t", None);
+        gate.complete("t", None);
+        assert!(gate.try_admit("t").is_ok());
+    }
+
+    #[test]
+    fn gate_prometheus_lines_are_labelled_and_escaped() {
+        let gate = AdmissionGate::new(&IngressConfig::default(), 2);
+        gate.try_admit("plain").unwrap();
+        gate.try_admit("we\"ird\\t").unwrap();
+        let text = gate.prometheus_text();
+        assert!(text.contains("pallas_tenant_admitted_total{tenant=\"plain\"} 1"));
+        assert!(text.contains("tenant=\"we\\\"ird\\\\t\""));
+        assert!(text.contains("pallas_ingress_in_flight 2"));
+        assert!(text.contains("# TYPE pallas_tenant_shed_total counter"));
+    }
+}

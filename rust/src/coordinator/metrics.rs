@@ -34,6 +34,9 @@ pub struct Metrics {
     queue_wait_us: Vec<u64>,
     /// Requests resolved as timed-out at admission (deadline expired).
     pub timeouts: u64,
+    /// Requests rejected by admission control before reaching a slot
+    /// (tenant queue over cap, or the ingress gate's 429 path).
+    pub shed: u64,
     /// Scheduler steps × slots that held an active request.
     pub slot_steps_busy: u64,
     /// Scheduler steps × slots offered (busy or idle).
@@ -223,7 +226,68 @@ impl Metrics {
         if self.timeouts > 0 {
             s.push_str(&format!(" timeouts={}", self.timeouts));
         }
+        if self.shed > 0 {
+            s.push_str(&format!(" shed={}", self.shed));
+        }
         s
+    }
+
+    /// Render the metrics in the Prometheus text exposition format
+    /// (version 0.0.4): monotone `*_total` counters for every event
+    /// counter, gauges for rates/ratios, and `{quantile="…"}`-labelled
+    /// gauges for the latency distributions. Scraped by `GET /metrics` on
+    /// [`crate::coordinator::ingress`], which appends its own per-tenant
+    /// admission counters after this block.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let counters: [(&str, &str, u64); 16] = [
+            ("pallas_requests_total", "Requests resolved (all finish reasons)", self.requests),
+            ("pallas_tokens_generated_total", "Tokens generated", self.tokens_generated),
+            ("pallas_batches_total", "Static-path batches executed", self.batches),
+            ("pallas_decode_steps_total", "Scheduler decode steps", self.decode_steps),
+            ("pallas_timeouts_total", "Requests expired before admission", self.timeouts),
+            ("pallas_shed_total", "Requests rejected by admission control", self.shed),
+            ("pallas_slot_steps_busy_total", "Slot-steps holding an active request", self.slot_steps_busy),
+            ("pallas_slot_steps_offered_total", "Slot-steps offered (busy or idle)", self.slot_steps_total),
+            ("pallas_kv_pages_allocated_total", "Fresh KV pages allocated", self.kv_pages_allocated),
+            ("pallas_kv_pages_reused_total", "KV pages served from a free list", self.kv_pages_reused),
+            ("pallas_kv_pages_released_total", "KV pages returned to a free list", self.kv_pages_released),
+            ("pallas_kv_pages_dropped_total", "KV pages freed to the allocator", self.kv_pages_dropped),
+            ("pallas_kv_cow_copies_total", "Copy-on-write KV page copies", self.kv_cow_copies),
+            ("pallas_prefix_hits_total", "Admissions that attached shared prefix pages", self.prefix_hits),
+            ("pallas_prefix_misses_total", "Admissions with no shared prefix", self.prefix_misses),
+            ("pallas_prefix_tokens_reused_total", "Prompt tokens served from shared pages", self.prefix_tokens_reused),
+        ];
+        for (name, help, v) in counters {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        }
+        let gauges: [(&str, &str, f64); 2] = [
+            ("pallas_slot_occupancy", "Busy fraction of offered slot-steps", self.slot_occupancy()),
+            ("pallas_tokens_per_second", "Generated tokens per wall-clock second", self.tokens_per_s()),
+        ];
+        for (name, help, v) in gauges {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        let quantiles: [(&str, &str, &dyn Fn(f64) -> f64); 5] = [
+            ("pallas_latency_ms", "End-to-end request latency (ms)", &|p| self.latency_ms(p)),
+            ("pallas_ttft_ms", "Time to first token (ms)", &|p| self.ttft_ms(p)),
+            ("pallas_ttft_hot_ms", "TTFT with shared prefix pages attached (ms)", &|p| {
+                self.ttft_hot_ms(p)
+            }),
+            ("pallas_ttft_cold_ms", "TTFT with full prompt prefill (ms)", &|p| {
+                self.ttft_cold_ms(p)
+            }),
+            ("pallas_queue_wait_ms", "Enqueue-to-admission wait (ms)", &|p| {
+                self.queue_wait_ms(p)
+            }),
+        ];
+        for (name, help, f) in quantiles {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+            for (label, p) in [("0.5", 50.0), ("0.99", 99.0)] {
+                out.push_str(&format!("{name}{{quantile=\"{label}\"}} {}\n", f(p)));
+            }
+        }
+        out
     }
 }
 
@@ -356,6 +420,39 @@ mod tests {
         assert!(s.contains("kv_pages=6"), "summary was: {s}");
         assert!(s.contains("prefix_hits=3/4"), "summary was: {s}");
         assert!(s.contains("reuse_toks=96"), "summary was: {s}");
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let mut m = Metrics::new();
+        m.record_batch(2, 16, 8);
+        m.shed = 3;
+        m.timeouts = 1;
+        m.record_ttft(Duration::from_millis(4));
+        m.record_queue_wait(Duration::from_millis(1));
+        m.record_occupancy(3, 4);
+        m.wall_s = 0.5;
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE pallas_requests_total counter"));
+        assert!(text.contains("pallas_requests_total 2\n"));
+        assert!(text.contains("pallas_shed_total 3\n"));
+        assert!(text.contains("pallas_timeouts_total 1\n"));
+        assert!(text.contains("pallas_slot_occupancy 0.75\n"));
+        assert!(text.contains("pallas_ttft_ms{quantile=\"0.5\"}"));
+        // every exposition line is either a comment or `name[{labels}] value`
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            let bare = name.split('{').next().unwrap();
+            assert!(
+                bare.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name: {line}"
+            );
+            value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        }
     }
 
     #[test]

@@ -32,19 +32,31 @@
 //!   and compression accounting extends to **codebook-once-per-node** bits
 //!   ([`sharded_codebook_bits`]). Bit-identical to the single-node host
 //!   forward at any shard count (DESIGN.md §12).
+//! * [`ingress`] — the network front end: a threaded HTTP/1.1 listener
+//!   (`POST /v1/generate` streamed as SSE, `GET /metrics` in Prometheus
+//!   text, `GET /healthz`) with an admission gate that sheds overload
+//!   early with 429 instead of timing out late, in front of the batcher's
+//!   per-tenant weighted-round-robin queues (DESIGN.md §14).
 
 pub mod batcher;
+pub mod ingress;
 pub mod metrics;
 pub mod prefix;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
 
-pub use batcher::{Admitted, Batcher, BatcherConfig, GenRequest, GenResponse};
+pub use batcher::{
+    Admitted, Batcher, BatcherConfig, FinishReason, GenRequest, GenRequestBuilder, GenResponse,
+    Priority,
+};
+pub use ingress::{Ingress, IngressConfig};
 pub use metrics::Metrics;
 pub use prefix::{PrefixCache, PrefixStats};
 pub use scheduler::{
     quantize_model_compressed, quantize_model_parallel, sharded_codebook_bits, QuantStats,
 };
-pub use server::{validate_kv_page, DecodePolicy, KvPageAudit, Server, ServingWeights};
+pub use server::{
+    validate_kv_page, DecodePolicy, KvPageAudit, Server, ServerBuilder, ServingWeights,
+};
 pub use shard::{shard_layers, ShardBits, ShardedForward};

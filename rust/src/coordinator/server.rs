@@ -50,11 +50,12 @@
 //! parity oracle and as the only option for the fixed-geometry XLA
 //! executables.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::batcher::{Admitted, Batcher, GenRequest, GenResponse};
+use super::batcher::{Admitted, Batcher, FinishReason, GenRequest, GenResponse};
 use super::metrics::Metrics;
 use super::prefix::{PrefixCache, PrefixStats};
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
@@ -68,7 +69,7 @@ use crate::runtime::{BoundExecutable, Engine, Input};
 /// What the server serves.
 pub enum ServingWeights {
     /// Dense weights (original or fake-quant) through the XLA `fwd_fp`
-    /// executable — or the host backend via [`Server::new_host`].
+    /// executable — or the host backend via [`Server::builder`].
     Fp(GptModel),
     /// PCDVQ codes + the shared DACC codebooks through the XLA `fwd_q`
     /// executable (in-graph dequantization).
@@ -153,6 +154,10 @@ struct Slot {
     reused: usize,
     /// Whether this prompt's pages have been offered to the prefix trie.
     published: bool,
+    /// Tokens already flushed to [`GenRequest::stream`] — the coordinator
+    /// flushes `generated[streamed..]` after every scheduler step's join,
+    /// in slot order, so streams are as deterministic as the outputs.
+    streamed: usize,
 }
 
 impl Slot {
@@ -322,7 +327,7 @@ pub struct Server {
     pub config: crate::model::GptConfig,
     pub batch: usize,
     pub metrics: Metrics,
-    /// Decode strategy. [`Self::new_host`] defaults to
+    /// Decode strategy. Host servers ([`Server::builder`]) default to
     /// [`DecodePolicy::KvCached`]; an XLA server ignores `KvCached` and
     /// re-forwards regardless (its executable geometry is fixed).
     pub decode: DecodePolicy,
@@ -377,6 +382,11 @@ pub struct Server {
     /// [`Self::metrics`] (counters accumulate across serve calls).
     pool_seen: KvPoolCounters,
     prefix_seen: PrefixStats,
+    /// Live snapshot of [`Self::metrics`] for out-of-band scrapers
+    /// ([`Self::metrics_mirror`]): the continuous loop copies its metrics
+    /// in after every scheduler step, so `GET /metrics` on the ingress can
+    /// read them while the serving thread owns the server.
+    mirror: Option<Arc<Mutex<Metrics>>>,
     /// Weight bits actually resident for the quantizable matrices (fp32 vs
     /// packed codes) — reported by the efficiency harness.
     pub resident_weight_bits: u64,
@@ -416,8 +426,43 @@ impl Server {
             prefix: None,
             pool_seen: KvPoolCounters::default(),
             prefix_seen: PrefixStats::default(),
+            mirror: None,
             resident_weight_bits,
             resident_codebook_bits,
+        }
+    }
+
+    /// Start building a host-backed server (no XLA artifacts required) —
+    /// the blessed construction path for everything but the XLA backend
+    /// ([`Server::new`]). All knobs default exactly as documented on the
+    /// corresponding [`Server`] fields:
+    ///
+    /// ```no_run
+    /// # use pcdvq::coordinator::{Server, ServingWeights};
+    /// # fn demo(weights: ServingWeights) -> anyhow::Result<()> {
+    /// let server = Server::builder(weights)
+    ///     .shards(1)
+    ///     .threads(4)
+    ///     .kv_page(8)
+    ///     .prefix_share(true)
+    ///     .build()?;
+    /// # let _ = server; Ok(())
+    /// # }
+    /// ```
+    pub fn builder(weights: ServingWeights) -> ServerBuilder {
+        ServerBuilder {
+            weights,
+            shards: 1,
+            threads: None,
+            kv_page: None,
+            prefix_share: None,
+            prefix_page_cap: None,
+            max_slots: None,
+            prefill_chunk: None,
+            decode: None,
+            sampler_seed: None,
+            capture_logits: false,
+            batch: None,
         }
     }
 
@@ -442,7 +487,7 @@ impl Server {
                 (exe.bind(&fixed, 1)?, q.payload_bits(), cb_bits)
             }
             ServingWeights::CodesResident(_) => anyhow::bail!(
-                "codes-resident serving runs on the host — use Server::new_host"
+                "codes-resident serving runs on the host — use Server::builder"
             ),
         };
         debug_assert_eq!(batch, 8, "XLA executables are lowered at batch 8");
@@ -457,7 +502,14 @@ impl Server {
 
     /// Build a host-backed server (no XLA artifacts required). `Fp` serves
     /// dense weights; `CodesResident` serves packed codes directly.
+    #[deprecated(since = "0.2.0", note = "use `Server::builder(weights).build()`")]
     pub fn new_host(weights: ServingWeights) -> Result<Self> {
+        Server::host_server(weights)
+    }
+
+    /// Constructor core of the single-node host backend (the
+    /// [`Server::builder`] default).
+    fn host_server(weights: ServingWeights) -> Result<Self> {
         let config = weights.config();
         let (hf, resident_weight_bits, resident_codebook_bits) = match weights {
             ServingWeights::Fp(model) => {
@@ -492,7 +544,14 @@ impl Server {
     /// Sharded serving decodes by windowed re-forward
     /// ([`DecodePolicy::Reforward`]) through the chain; per-slot KV caches
     /// stay a single-node feature for now.
+    #[deprecated(since = "0.2.0", note = "use `Server::builder(weights).shards(n).build()`")]
     pub fn new_host_sharded(weights: ServingWeights, n_shards: usize) -> Result<Self> {
+        Server::sharded_server(weights, n_shards)
+    }
+
+    /// Constructor core of the layer-sharded host backend
+    /// ([`ServerBuilder::shards`] > 1).
+    fn sharded_server(weights: ServingWeights, n_shards: usize) -> Result<Self> {
         let config = weights.config();
         let ServingWeights::CodesResident(q) = weights else {
             anyhow::bail!(
@@ -809,7 +868,7 @@ impl Server {
                 queue_wait: t0.saturating_duration_since(req.enqueued),
                 ttft: None,
                 logits: Vec::new(),
-                timed_out: false,
+                finish: FinishReason::Done,
             };
             self.metrics.record_latency(resp.latency);
             req.resp.send(resp).ok();
@@ -818,23 +877,46 @@ impl Server {
         self.metrics.wall_s += t0.elapsed().as_secs_f64();
     }
 
-    /// Fold the batcher's admission-timeout count into metrics, returning
-    /// the new high-water mark. (The counter accumulates across serve calls
-    /// and across batchers.)
-    fn sync_timeouts(&mut self, batcher: &Batcher, seen: u64) -> u64 {
+    /// A live, lock-guarded snapshot of [`Self::metrics`] for scrapers on
+    /// other threads (the ingress `GET /metrics` endpoint). The continuous
+    /// loop refreshes the snapshot after every scheduler step; before the
+    /// first serve call it reads as the current metrics.
+    pub fn metrics_mirror(&mut self) -> Arc<Mutex<Metrics>> {
+        if self.mirror.is_none() {
+            self.mirror = Some(Arc::new(Mutex::new(self.metrics.clone())));
+        }
+        self.mirror.as_ref().expect("just installed").clone()
+    }
+
+    /// Refresh the out-of-band snapshot, if anyone asked for one.
+    fn publish_mirror(&self) {
+        if let Some(m) = &self.mirror {
+            if let Ok(mut guard) = m.lock() {
+                *guard = self.metrics.clone();
+            }
+        }
+    }
+
+    /// Fold the batcher's admission-side resolution counters (timeouts,
+    /// sheds) into metrics past the `(timed_out, shed)` high-water marks in
+    /// `seen`. (The counters accumulate across serve calls and batchers.)
+    fn sync_admission_counters(&mut self, batcher: &Batcher, seen: &mut (u64, u64)) {
         let t = batcher.timed_out();
-        self.metrics.timeouts += t - seen;
-        t
+        self.metrics.timeouts += t - seen.0;
+        seen.0 = t;
+        let s = batcher.shed();
+        self.metrics.shed += s - seen.1;
+        seen.1 = s;
     }
 
     /// Serve static batches until the request channel closes.
     pub fn serve(&mut self, batcher: &mut Batcher) -> Result<()> {
-        let mut seen = batcher.timed_out();
+        let mut seen = (batcher.timed_out(), batcher.shed());
         while let Some(batch) = batcher.next_batch() {
-            seen = self.sync_timeouts(batcher, seen);
+            self.sync_admission_counters(batcher, &mut seen);
             self.process_batch(batch)?;
         }
-        self.sync_timeouts(batcher, seen);
+        self.sync_admission_counters(batcher, &mut seen);
         Ok(())
     }
 
@@ -891,7 +973,7 @@ impl Server {
         self.ensure_slot_caches(n)?;
         let Backend::Host(hf) = &self.backend else { unreachable!() };
         let mut slots: Vec<Option<Slot>> = (0..n).map(|_| None).collect();
-        let mut seen_timeouts = batcher.timed_out();
+        let mut seen = (batcher.timed_out(), batcher.shed());
 
         loop {
             // ---- admission: fill free slots from the queue ----
@@ -949,14 +1031,14 @@ impl Server {
                         steps: 0,
                         reused,
                         published: false,
+                        streamed: 0,
                     });
                     active += 1;
                 }
             }
-            let t = batcher.timed_out();
-            self.metrics.timeouts += t - seen_timeouts;
-            seen_timeouts = t;
+            self.sync_admission_counters(batcher, &mut seen);
             if active == 0 {
+                self.publish_mirror();
                 continue; // everything admitted had expired — park again
             }
 
@@ -999,6 +1081,24 @@ impl Server {
             // degenerate request parked in Done does not inflate it
             self.metrics.record_occupancy(worked, n);
             self.metrics.wall_s += t0.elapsed().as_secs_f64();
+
+            // ---- streaming: flush freshly generated tokens ----
+            // Coordinator thread only, slot order — workers never do I/O,
+            // so the §12 determinism contract covers token streams too. A
+            // dropped receiver just stops listening; generation proceeds
+            // and the final response still carries the full output.
+            for entry in slots.iter_mut() {
+                let Some(slot) = entry else { continue };
+                match &slot.req.stream {
+                    Some(stream) => {
+                        while slot.streamed < slot.generated.len() {
+                            stream.send(slot.generated[slot.streamed]).ok();
+                            slot.streamed += 1;
+                        }
+                    }
+                    None => slot.streamed = slot.generated.len(),
+                }
+            }
 
             // ---- publication: offer freshly-prefilled prompts' pages ----
             // The step a slot leaves Prefill its cache holds exactly the
@@ -1054,7 +1154,7 @@ impl Server {
                     queue_wait: slot.queue_wait,
                     ttft: slot.ttft,
                     logits: slot.captured,
-                    timed_out: false,
+                    finish: FinishReason::Done,
                 };
                 self.metrics.record_latency(resp.latency);
                 slot.req.resp.send(resp).ok();
@@ -1063,9 +1163,162 @@ impl Server {
                 // pages, which keeps the no-leak audit exact
                 cache.reset();
             }
+            self.publish_mirror();
         }
         self.sync_kv_metrics();
+        self.publish_mirror();
         Ok(())
+    }
+}
+
+/// Builder for host-backed [`Server`]s — see [`Server::builder`]. Replaces
+/// the old `new_host` / `new_host_sharded` constructors plus post-hoc
+/// field mutation; each setter documents its default. XLA-bound servers
+/// keep their own constructor ([`Server::new`] — they need an engine and
+/// an artifacts directory, which have no host equivalent).
+#[must_use = "call .build() to construct the server"]
+pub struct ServerBuilder {
+    weights: ServingWeights,
+    shards: usize,
+    threads: Option<usize>,
+    kv_page: Option<usize>,
+    prefix_share: Option<bool>,
+    prefix_page_cap: Option<usize>,
+    max_slots: Option<usize>,
+    prefill_chunk: Option<usize>,
+    decode: Option<DecodePolicy>,
+    sampler_seed: Option<u64>,
+    capture_logits: bool,
+    batch: Option<usize>,
+}
+
+impl ServerBuilder {
+    /// Partition the model's layers across `n` worker nodes
+    /// ([`crate::coordinator::ShardedForward`]). `0` and `1` both mean
+    /// single-node (the default); sharded servers decode by windowed
+    /// re-forward and require [`ServingWeights::CodesResident`].
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    /// Worker threads for the slot fan-out (see [`Server::threads`]).
+    /// `0` keeps the default ([`crate::exec::default_threads`]) — same
+    /// contract as `serve --threads`.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
+        self
+    }
+
+    /// KV layout: `0` selects the dense per-slot buffers (the parity
+    /// oracle), `1..=ctx` the block-paged pool with that page size (see
+    /// [`Server::kv_page`]). Values past the model context fail
+    /// [`ServerBuilder::build`] with the [`validate_kv_page`] error. Unset
+    /// keeps the environment-driven default (`PALLAS_KV_PAGE`, else
+    /// `ctx / 8`).
+    pub fn kv_page(mut self, page: usize) -> Self {
+        self.kv_page = Some(page);
+        self
+    }
+
+    /// Cross-request prefix sharing (see [`Server::prefix_share`];
+    /// default on).
+    pub fn prefix_share(mut self, share: bool) -> Self {
+        self.prefix_share = Some(share);
+        self
+    }
+
+    /// Page budget of the prefix trie (see [`Server::prefix_page_cap`];
+    /// default 1024).
+    pub fn prefix_page_cap(mut self, cap: usize) -> Self {
+        self.prefix_page_cap = Some(cap);
+        self
+    }
+
+    /// Slot-pool width for the continuous loop (see [`Server::max_slots`];
+    /// default 8).
+    pub fn max_slots(mut self, n: usize) -> Self {
+        self.max_slots = Some(n);
+        self
+    }
+
+    /// Prompt tokens per block-prefill step (see [`Server::prefill_chunk`];
+    /// default `ctx / 4`). `0` keeps the default — same contract as
+    /// `serve --prefill-chunk`.
+    pub fn prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = Some(chunk);
+        self
+    }
+
+    /// Decode strategy (see [`DecodePolicy`]; defaults to `KvCached`
+    /// single-node, `Reforward` sharded).
+    pub fn decode(mut self, policy: DecodePolicy) -> Self {
+        self.decode = Some(policy);
+        self
+    }
+
+    /// Seed of the per-request sampling streams (see
+    /// [`Server::sampler_seed`]).
+    pub fn sampler_seed(mut self, seed: u64) -> Self {
+        self.sampler_seed = Some(seed);
+        self
+    }
+
+    /// Capture per-step logits into [`GenResponse::logits`] (parity
+    /// harnesses; default off).
+    pub fn capture_logits(mut self, capture: bool) -> Self {
+        self.capture_logits = capture;
+        self
+    }
+
+    /// Static-path batch width (see [`Server::batch`]; default 8).
+    pub fn batch(mut self, n: usize) -> Self {
+        self.batch = Some(n);
+        self
+    }
+
+    /// Construct the server. Fails on an invalid weights/backend pairing
+    /// (e.g. sharding non-codes-resident weights) or an out-of-range
+    /// [`ServerBuilder::kv_page`].
+    pub fn build(self) -> Result<Server> {
+        let mut server = if self.shards > 1 {
+            Server::sharded_server(self.weights, self.shards)?
+        } else {
+            Server::host_server(self.weights)?
+        };
+        if let Some(page) = self.kv_page {
+            server.kv_page = validate_kv_page(page, server.config.ctx)?;
+        }
+        if let Some(t) = self.threads {
+            if t > 0 {
+                server.threads = t;
+            }
+        }
+        if let Some(share) = self.prefix_share {
+            server.prefix_share = share;
+        }
+        if let Some(cap) = self.prefix_page_cap {
+            server.prefix_page_cap = cap;
+        }
+        if let Some(n) = self.max_slots {
+            server.max_slots = n.max(1);
+        }
+        if let Some(chunk) = self.prefill_chunk {
+            if chunk > 0 {
+                server.prefill_chunk = chunk;
+            }
+        }
+        if let Some(policy) = self.decode {
+            server.decode = policy;
+        }
+        if let Some(seed) = self.sampler_seed {
+            server.sampler_seed = seed;
+        }
+        if let Some(n) = self.batch {
+            server.batch = n.max(1);
+        }
+        server.capture_logits = self.capture_logits;
+        Ok(server)
     }
 }
 

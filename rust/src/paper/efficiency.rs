@@ -152,7 +152,8 @@ fn drive(server: &mut Server, ctx: &Ctx, n_requests: usize, max_new: usize) -> R
         let s = rng.below(ctx.eval_tokens.len() - 64);
         let prompt: Vec<u8> = ctx.eval_tokens[s..s + 48].iter().map(|&t| t as u8).collect();
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(prompt, max_new, 0.0, rtx)).unwrap();
+        let req = GenRequest::builder(prompt).max_new(max_new).build(rtx);
+        tx.send(req).unwrap();
         keep.push(rrx);
     }
     drop(tx);
@@ -218,7 +219,7 @@ pub fn run_efficiency(ctx: &Ctx, model_name: &str, quick: bool) -> Result<()> {
     // --- host codes-resident serving (no XLA, no dense weights, ever) ---
     let (n_req, max_new) = if quick { (8, 12) } else { (32, 32) };
     let mut host_server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone())))?;
+        Server::builder(ServingWeights::CodesResident(Box::new(q.clone()))).build()?;
     let host_tps = drive(&mut host_server, ctx, n_req, max_new)?;
     println!(
         "\nhost codes-resident serving: {host_tps:.1} tok/s (resident weights \

@@ -22,7 +22,8 @@ use std::sync::mpsc::channel;
 use std::time::Instant;
 
 use pcdvq::coordinator::{
-    Batcher, BatcherConfig, DecodePolicy, GenRequest, GenResponse, Server, ServingWeights,
+    Batcher, BatcherConfig, DecodePolicy, FinishReason, GenRequest, GenResponse, Priority, Server,
+    ServingWeights,
 };
 use pcdvq::model::{GptModel, HostForward, KvCache, QuantizedGpt};
 use pcdvq::proptest::{for_cases, synthetic_tinygpt, tiny_pcdvq};
@@ -50,18 +51,19 @@ fn run_continuous(
     capture_logits: bool,
     reqs: &[(Vec<u8>, usize, f32)],
 ) -> (Vec<GenResponse>, Server) {
-    let mut server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-    server.max_slots = max_slots;
-    server.prefill_chunk = prefill_chunk;
-    server.capture_logits = capture_logits;
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .max_slots(max_slots)
+        .prefill_chunk(prefill_chunk)
+        .capture_logits(capture_logits)
+        .build()
+        .unwrap();
     let (tx, rx) = channel::<GenRequest>();
     drop(tx);
     let mut batcher = Batcher::new(rx, BatcherConfig::default());
     let mut rxs = Vec::new();
     for (p, max_new, temp) in reqs {
         let (rtx, rrx) = channel();
-        batcher.push(GenRequest::new(p.clone(), *max_new, *temp, rtx));
+        batcher.push(GenRequest::builder(p.clone()).max_new(*max_new).temperature(*temp).build(rtx));
         rxs.push(rrx);
     }
     server.serve_continuous(&mut batcher).unwrap();
@@ -76,12 +78,13 @@ fn run_single(
     prompt: &[u8],
     max_new: usize,
 ) -> Vec<u8> {
-    let mut server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-    server.decode = policy;
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .decode(policy)
+        .build()
+        .unwrap();
     let (rtx, rrx) = channel();
     server
-        .process_batch(vec![GenRequest::new(prompt.to_vec(), max_new, 0.0, rtx)])
+        .process_batch(vec![GenRequest::builder(prompt.to_vec()).max_new(max_new).build(rtx)])
         .unwrap();
     rrx.recv().unwrap().generated
 }
@@ -318,10 +321,11 @@ fn prefill_block_byte_identical_across_eviction_codes_resident() {
 fn short_requests_never_starve_behind_a_long_one() {
     let model = synthetic_model("fairness");
     let q = quantize(&model);
-    let mut server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-    server.max_slots = 2;
-    server.prefill_chunk = 16;
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .max_slots(2)
+        .prefill_chunk(16)
+        .build()
+        .unwrap();
     let (tx, rx) = channel::<GenRequest>();
     drop(tx);
     let mut batcher = Batcher::new(rx, BatcherConfig::default());
@@ -336,6 +340,9 @@ fn short_requests_never_starve_behind_a_long_one() {
             resp: rtx,
             enqueued: t0, // pinned: queue waits comparable across requests
             deadline: None,
+            tenant: String::new(),
+            priority: Priority::Normal,
+            stream: None,
         });
         rxs.push(rrx);
     };
@@ -369,33 +376,35 @@ fn short_requests_never_starve_behind_a_long_one() {
 }
 
 /// A request whose deadline expired before a slot freed resolves as
-/// `timed_out` without occupying the pool; its batchmates are unaffected.
+/// [`FinishReason::TimedOut`] without occupying the pool; its batchmates
+/// are unaffected.
 #[test]
 fn expired_deadline_times_out_in_the_serving_loop() {
     let model = synthetic_model("deadline");
     let q = quantize(&model);
-    let mut server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-    server.max_slots = 1;
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .max_slots(1)
+        .build()
+        .unwrap();
     let (tx, rx) = channel::<GenRequest>();
     drop(tx);
     let mut batcher = Batcher::new(rx, BatcherConfig::default());
     let (rtx1, rrx1) = channel();
-    batcher.push(GenRequest::new(prompt_bytes(6, 0), 3, 0.0, rtx1));
+    batcher.push(GenRequest::builder(prompt_bytes(6, 0)).max_new(3).build(rtx1));
     let (rtx2, rrx2) = channel();
-    let mut expired = GenRequest::new(prompt_bytes(6, 1), 3, 0.0, rtx2);
+    let mut expired = GenRequest::builder(prompt_bytes(6, 1)).max_new(3).build(rtx2);
     expired.deadline = Some(expired.enqueued); // already past
     batcher.push(expired);
     let (rtx3, rrx3) = channel();
-    batcher.push(GenRequest::new(prompt_bytes(6, 2), 3, 0.0, rtx3));
+    batcher.push(GenRequest::builder(prompt_bytes(6, 2)).max_new(3).build(rtx3));
     server.serve_continuous(&mut batcher).unwrap();
 
     assert_eq!(rrx1.recv().unwrap().generated.len(), 3);
     let dead = rrx2.recv().unwrap();
-    assert!(dead.timed_out);
+    assert_eq!(dead.finish, FinishReason::TimedOut);
     assert!(dead.generated.is_empty());
     let live = rrx3.recv().unwrap();
-    assert!(!live.timed_out);
+    assert_eq!(live.finish, FinishReason::Done);
     assert_eq!(live.generated.len(), 3);
     assert_eq!(server.metrics.timeouts, 1);
     assert_eq!(server.metrics.requests, 2, "timed-out request never held a slot");
@@ -419,18 +428,20 @@ fn parallel_slot_pool_matches_serial_outputs_and_metrics() {
         (Vec::new(), 3, 0.0), // degenerate rides along
     ];
     let run = |threads: usize| {
-        let mut server =
-            Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-        server.max_slots = 3;
-        server.prefill_chunk = 8;
-        server.threads = threads;
+        let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .max_slots(3)
+            .prefill_chunk(8)
+            .threads(threads)
+            .build()
+            .unwrap();
         let (tx, rx) = channel::<GenRequest>();
         drop(tx);
         let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let mut rxs = Vec::new();
         for (p, max_new, temp) in &reqs {
             let (rtx, rrx) = channel();
-            batcher.push(GenRequest::new(p.clone(), *max_new, *temp, rtx));
+            batcher
+                .push(GenRequest::builder(p.clone()).max_new(*max_new).temperature(*temp).build(rtx));
             rxs.push(rrx);
         }
         server.serve_continuous(&mut batcher).unwrap();

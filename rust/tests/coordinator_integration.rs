@@ -51,19 +51,20 @@ fn host_codes_resident_server_serves_without_artifacts() {
     pcdvq::paper::verify_codes_resident(&q).unwrap();
     assert!(q.resident_bits() * 8 < q.dense_bits());
 
-    let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q))).unwrap();
+    let mut server =
+        Server::builder(ServingWeights::CodesResident(Box::new(q))).build().unwrap();
     assert!(server.is_codes_resident());
     assert_eq!(server.resident_weight_bits, payload);
 
     let (tx, rx) = channel::<GenRequest>();
     let mut batcher = Batcher::new(
         rx,
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5), ..Default::default() },
     );
     let mut rxs = Vec::new();
     for i in 0..3 {
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(format!("hello {i}").into_bytes(), 4, 0.0, rtx))
+        tx.send(GenRequest::builder(format!("hello {i}").into_bytes()).max_new(4).build(rtx))
             .unwrap();
         rxs.push(rrx);
     }
@@ -86,13 +87,13 @@ fn back_to_back_requests_match_fresh_servers() {
     let pcdvq_q = small_pcdvq();
     let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 1);
     let mk = || {
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap()
+        Server::builder(ServingWeights::CodesResident(Box::new(q.clone()))).build().unwrap()
     };
     let run = |server: &mut Server, prompt: &[u8], temperature: f32| -> Vec<u8> {
         let (rtx, rrx) = channel();
-        server
-            .process_batch(vec![GenRequest::new(prompt.to_vec(), 6, temperature, rtx)])
-            .unwrap();
+        let req =
+            GenRequest::builder(prompt.to_vec()).max_new(6).temperature(temperature).build(rtx);
+        server.process_batch(vec![req]).unwrap();
         rrx.recv().unwrap().generated
     };
     for temperature in [0.0f32, 0.9] {
@@ -112,13 +113,14 @@ fn empty_prompt_resolves_without_killing_the_batch() {
     // it resolves with zero tokens while its batchmates decode normally.
     let model = synthetic_model("empty_prompt");
     let (q, _) = quantize_model_compressed(&model, &small_pcdvq(), 1);
-    let mut server = Server::new_host(ServingWeights::CodesResident(Box::new(q))).unwrap();
+    let mut server =
+        Server::builder(ServingWeights::CodesResident(Box::new(q))).build().unwrap();
     let (rtx1, rrx1) = channel();
     let (rtx2, rrx2) = channel();
     server
         .process_batch(vec![
-            GenRequest::new(Vec::new(), 3, 0.0, rtx1),
-            GenRequest::new(b"a real one".to_vec(), 3, 0.0, rtx2),
+            GenRequest::builder(Vec::new()).max_new(3).build(rtx1),
+            GenRequest::builder(b"a real one".to_vec()).max_new(3).build(rtx2),
         ])
         .unwrap();
     assert_eq!(rrx1.recv().unwrap().generated.len(), 0);
@@ -134,20 +136,18 @@ fn cached_and_reforward_policies_agree_on_greedy() {
     let pcdvq_q = small_pcdvq();
     let (q, _) = quantize_model_compressed(&model, &pcdvq_q, 1);
     let gen = |decode: DecodePolicy| -> Vec<Vec<u8>> {
-        let mut server =
-            Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-        server.decode = decode;
+        let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .decode(decode)
+            .build()
+            .unwrap();
         let (tx, rx) = channel::<GenRequest>();
         let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let mut rxs = Vec::new();
         for i in 0..2 {
             let (rtx, rrx) = channel();
-            tx.send(GenRequest::new(
-                format!("parity check {i}").into_bytes(),
-                5,
-                0.0,
-                rtx,
-            ))
+            tx.send(GenRequest::builder(format!("parity check {i}").into_bytes())
+                .max_new(5)
+                .build(rtx))
             .unwrap();
             rxs.push(rrx);
         }
@@ -177,11 +177,11 @@ fn host_codes_resident_matches_dense_host_serving() {
     let dense = q.to_dense();
 
     let gen = |weights: ServingWeights| -> Vec<u8> {
-        let mut server = Server::new_host(weights).unwrap();
+        let mut server = Server::builder(weights).build().unwrap();
         let (tx, rx) = channel::<GenRequest>();
         let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(b"the quantization".to_vec(), 6, 0.0, rtx))
+        tx.send(GenRequest::builder(b"the quantization".to_vec()).max_new(6).build(rtx))
             .unwrap();
         drop(tx);
         server.serve(&mut batcher).unwrap();
@@ -224,11 +224,11 @@ fn packed_persistence_round_trips_into_serving() {
 
     let gen = |qm: QuantizedGpt| -> Vec<u8> {
         let mut server =
-            Server::new_host(ServingWeights::CodesResident(Box::new(qm))).unwrap();
+            Server::builder(ServingWeights::CodesResident(Box::new(qm))).build().unwrap();
         let (tx, rx) = channel::<GenRequest>();
         let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(b"roundtrip".to_vec(), 5, 0.0, rtx)).unwrap();
+        tx.send(GenRequest::builder(b"roundtrip".to_vec()).max_new(5).build(rtx)).unwrap();
         drop(tx);
         server.serve(&mut batcher).unwrap();
         rrx.recv().unwrap().generated
@@ -317,17 +317,14 @@ fn server_round_trip_with_batcher() {
     let (tx, rx) = channel::<GenRequest>();
     let mut batcher = Batcher::new(
         rx,
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5), ..Default::default() },
     );
     let mut rxs = Vec::new();
     for i in 0..5 {
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(
-            format!("fn main{i}() {{").into_bytes(),
-            6,
-            0.0,
-            rtx,
-        ))
+        tx.send(GenRequest::builder(format!("fn main{i}() {{").into_bytes())
+            .max_new(6)
+            .build(rtx))
         .unwrap();
         rxs.push(rrx);
     }
@@ -358,7 +355,7 @@ fn greedy_generation_deterministic() {
         let (tx, rx) = channel::<GenRequest>();
         let mut batcher = Batcher::new(rx, BatcherConfig::default());
         let (rtx, rrx) = channel();
-        tx.send(GenRequest::new(b"the quantization".to_vec(), 8, 0.0, rtx))
+        tx.send(GenRequest::builder(b"the quantization".to_vec()).max_new(8).build(rtx))
             .unwrap();
         drop(tx);
         server.serve(&mut batcher).unwrap();

@@ -1,0 +1,331 @@
+//! End-to-end ingress tests over a real socket (DESIGN.md §14).
+//!
+//! The contract under test: HTTP is a *transparent* transport — an SSE
+//! stream carries exactly the tokens the in-process `serve_continuous`
+//! path produces for the same request and seed; the admission gate sheds
+//! overload early with 429 (+ Retry-After) so admitted requests never time
+//! out late; tenant fairness (weighted round-robin in the batcher) is
+//! observable from the outside; and `GET /metrics` is valid Prometheus
+//! text whose counters only ever go up.
+//!
+//! Timing discipline: tests that need a busy server park a long occupier
+//! request in the (single) slot and use the gate's own counters to wait
+//! for admission — no bare sleeps deciding correctness. The occupier's
+//! generation (thousands of tokens) dwarfs the microseconds-to-millis the
+//! asserting requests take, which is what makes the shed/fairness
+//! assertions robust.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use pcdvq::coordinator::ingress::{http_request, parse_sse, post_generate, sse_tokens};
+use pcdvq::coordinator::{
+    Batcher, BatcherConfig, FinishReason, GenRequest, Ingress, IngressConfig, Server,
+    ServingWeights,
+};
+use pcdvq::model::QuantizedGpt;
+use pcdvq::proptest::{synthetic_tinygpt, tiny_pcdvq};
+
+fn quantized() -> QuantizedGpt {
+    let model = synthetic_tinygpt("pcdvq_ingress_tests", "ingress", 23);
+    QuantizedGpt::quantize(&model, &tiny_pcdvq())
+}
+
+fn mk_server(q: &QuantizedGpt, max_slots: usize) -> Server {
+    Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .max_slots(max_slots)
+        .prefill_chunk(16)
+        .build()
+        .unwrap()
+}
+
+/// Block until `tenant` has at least `n` admitted requests at the gate, or
+/// panic after 10s — the no-bare-sleeps way to sequence traffic phases.
+fn wait_admitted(ingress: &Ingress, tenant: &str, n: u64) {
+    let t0 = Instant::now();
+    while ingress.tenant_counters(tenant).0 < n {
+        assert!(t0.elapsed() < Duration::from_secs(10), "tenant {tenant} never reached {n}");
+        std::thread::yield_now();
+    }
+}
+
+/// The SSE stream is token-identical to the in-process path: same prompt,
+/// same admission seq (0), same server seed — greedy and sampled.
+#[test]
+fn sse_stream_matches_in_process_serving() {
+    let q = quantized();
+    for temperature in [0.0f32, 0.9] {
+        // in-process reference (admission seq 0, like the first HTTP req)
+        let mut server = mk_server(&q, 2);
+        let (tx, rx) = channel::<GenRequest>();
+        drop(tx);
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let (rtx, rrx) = channel();
+        batcher.push(
+            GenRequest::builder(b"the polar quantizer".to_vec())
+                .max_new(12)
+                .temperature(temperature)
+                .build(rtx),
+        );
+        server.serve_continuous(&mut batcher).unwrap();
+        let reference = rrx.recv().unwrap();
+        assert_eq!(reference.generated.len(), 12);
+
+        // the same request over the wire
+        let ingress = Ingress::spawn(
+            mk_server(&q, 2),
+            BatcherConfig::default(),
+            IngressConfig::default(),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let resp =
+            post_generate(ingress.addr(), "the polar quantizer", 12, temperature, "", 0).unwrap();
+        assert_eq!(resp.status, 200, "t={temperature}: body {}", resp.body);
+        assert_eq!(resp.header("content-type"), Some("text/event-stream"));
+        let events = parse_sse(&resp.body);
+        assert_eq!(
+            sse_tokens(&events),
+            reference.generated,
+            "t={temperature}: SSE tokens diverged from the in-process path"
+        );
+        let usage = events.last().unwrap();
+        assert_eq!(usage.event, "usage");
+        assert!(usage.data.contains("\"tokens\":12"), "usage: {}", usage.data);
+        assert!(usage.data.contains("\"seq\":0"), "usage: {}", usage.data);
+        assert!(usage.data.contains("\"finish\":\"done\""), "usage: {}", usage.data);
+
+        let server = ingress.shutdown().unwrap();
+        assert_eq!(server.metrics.requests, 1);
+        assert_eq!(server.metrics.tokens_generated, 12);
+        assert_eq!(reference.finish, FinishReason::Done);
+    }
+}
+
+/// Synthetic overload: one occupier pins the single slot and the only
+/// in-flight budget; a concurrent flood then sheds with 429 + Retry-After
+/// *before* queueing — and nothing admitted ever times out, even though
+/// every request carries a deadline.
+#[test]
+fn overload_sheds_early_with_429_and_no_late_timeouts() {
+    let q = quantized();
+    let cfg = IngressConfig { max_in_flight: 1, ..IngressConfig::default() };
+    let ingress =
+        Ingress::spawn(mk_server(&q, 1), BatcherConfig::default(), cfg, "127.0.0.1:0").unwrap();
+    let addr = ingress.addr();
+
+    // the occupier: thousands of tokens through the only slot
+    let occupier = std::thread::spawn(move || {
+        post_generate(addr, "hold the slot", 4000, 0.0, "occ", 60_000).unwrap()
+    });
+    wait_admitted(&ingress, "occ", 1);
+
+    // concurrent flood while the occupier owns the whole in-flight budget
+    let flood: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                post_generate(addr, &format!("flood {i}"), 1, 0.0, "flood", 30_000).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<_> = flood.into_iter().map(|h| h.join().unwrap()).collect();
+    let sheds: Vec<_> = results.iter().filter(|r| r.status == 429).collect();
+    let done = results.iter().filter(|r| r.status == 200).count();
+    assert!(
+        sheds.len() >= 4,
+        "expected most of the flood shed, got {} of 6 (statuses: {:?})",
+        sheds.len(),
+        results.iter().map(|r| r.status).collect::<Vec<_>>()
+    );
+    assert_eq!(done + sheds.len(), 6, "flood outcomes must be 200 or 429");
+    for r in &sheds {
+        let retry: u64 = r
+            .header("retry-after")
+            .expect("429 carries Retry-After")
+            .parse()
+            .expect("Retry-After is integral seconds");
+        assert!(retry >= 1);
+        assert!(r.body.contains("\"error\":\"shed\""), "shed body: {}", r.body);
+    }
+    // any flood request that did get through finished cleanly
+    for r in results.iter().filter(|r| r.status == 200) {
+        assert!(r.body.contains("\"finish\":\"done\""), "admitted body: {}", r.body);
+    }
+
+    let occ = occupier.join().unwrap();
+    assert_eq!(occ.status, 200);
+    assert_eq!(sse_tokens(&parse_sse(&occ.body)).len(), 4000);
+
+    let (occ_admitted, occ_shed) = ingress.tenant_counters("occ");
+    let (_, flood_shed) = ingress.tenant_counters("flood");
+    assert_eq!((occ_admitted, occ_shed), (1, 0));
+    assert_eq!(flood_shed, sheds.len() as u64);
+
+    let server = ingress.shutdown().unwrap();
+    assert_eq!(server.metrics.timeouts, 0, "shedding must preempt deadline timeouts");
+    assert_eq!(server.metrics.shed, 0, "gate sheds never reached the batcher");
+    assert_eq!(server.metrics.requests, 1 + done as u64);
+}
+
+/// Two-tenant skewed load: tenant `a` floods 8 requests first, tenant `b`
+/// adds 2 afterwards — weighted round-robin in the batcher interleaves
+/// them, so `b` finishes long before `a`'s backlog drains (plain FIFO
+/// would leave `b` last).
+#[test]
+fn late_minority_tenant_is_not_starved_by_an_early_flood() {
+    let q = quantized();
+    let ingress = Ingress::spawn(
+        mk_server(&q, 1),
+        BatcherConfig::default(),
+        IngressConfig::default(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = ingress.addr();
+
+    // pin the slot so both tenants' queues build up behind it
+    let occupier = std::thread::spawn(move || {
+        post_generate(addr, "hold the slot", 8000, 0.0, "occ", 0).unwrap()
+    });
+    wait_admitted(&ingress, "occ", 1);
+
+    let clock = Instant::now();
+    let spawn_tenant = |tenant: &'static str, i: usize| {
+        std::thread::spawn(move || {
+            let r = post_generate(addr, &format!("{tenant} req {i}"), 30, 0.0, tenant, 0).unwrap();
+            assert_eq!(r.status, 200, "{tenant} {i}: {}", r.body);
+            clock.elapsed()
+        })
+    };
+    let a_threads: Vec<_> = (0..8).map(|i| spawn_tenant("a", i)).collect();
+    wait_admitted(&ingress, "a", 8);
+    // small grace so the admitted requests are routed into the batcher's
+    // tenant queues before b arrives (admission happens just before send)
+    std::thread::sleep(Duration::from_millis(30));
+    let b_threads: Vec<_> = (0..2).map(|i| spawn_tenant("b", i)).collect();
+
+    let a_done: Vec<Duration> = a_threads.into_iter().map(|h| h.join().unwrap()).collect();
+    let b_done: Vec<Duration> = b_threads.into_iter().map(|h| h.join().unwrap()).collect();
+    let occ = occupier.join().unwrap();
+    assert_eq!(occ.status, 200);
+
+    let last_a = a_done.iter().max().unwrap();
+    let last_b = b_done.iter().max().unwrap();
+    assert!(
+        last_b < last_a,
+        "tenant b (late, 2 reqs) finished after tenant a's 8-deep backlog \
+         (b last {last_b:?}, a last {last_a:?}) — round-robin fairness broken"
+    );
+
+    let server = ingress.shutdown().unwrap();
+    assert_eq!(server.metrics.requests, 11);
+    assert_eq!(server.metrics.timeouts, 0);
+}
+
+/// Parse a Prometheus text body: every non-comment line is
+/// `name[{labels}] value`; returns the samples. Panics on malformed lines.
+fn parse_prometheus(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        let metric = name.split('{').next().unwrap();
+        assert!(
+            !metric.is_empty()
+                && metric.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name: {line}"
+        );
+        if name.contains('{') {
+            assert!(name.ends_with('}'), "unterminated labels: {line}");
+        }
+        out.push((name.to_string(), v));
+    }
+    out
+}
+
+/// `GET /metrics` is valid Prometheus text before and after traffic, and
+/// every `*_total` counter is monotone across scrapes. `GET /healthz`
+/// answers; unknown routes 404.
+#[test]
+fn metrics_endpoint_is_valid_prometheus_and_counters_are_monotone() {
+    let q = quantized();
+    let ingress = Ingress::spawn(
+        mk_server(&q, 2),
+        BatcherConfig::default(),
+        IngressConfig::default(),
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = ingress.addr();
+
+    let health = http_request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!((health.status, health.body.as_str()), (200, "ok\n"));
+    assert_eq!(http_request(addr, "GET", "/nope", None).unwrap().status, 404);
+
+    let scrape = |min_requests: f64| -> Vec<(String, f64)> {
+        // the serving thread publishes its mirror just after responding, so
+        // poll (bounded) instead of racing it
+        let t0 = Instant::now();
+        loop {
+            let r = http_request(addr, "GET", "/metrics", None).unwrap();
+            assert_eq!(r.status, 200);
+            assert_eq!(
+                r.header("content-type"),
+                Some("text/plain; version=0.0.4; charset=utf-8")
+            );
+            let samples = parse_prometheus(&r.body);
+            let requests = samples
+                .iter()
+                .find(|(n, _)| n == "pallas_requests_total")
+                .map(|(_, v)| *v)
+                .expect("pallas_requests_total missing");
+            if requests >= min_requests {
+                return samples;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "mirror never caught up");
+            std::thread::yield_now();
+        }
+    };
+
+    let before = scrape(0.0);
+    for name in [
+        "pallas_requests_total",
+        "pallas_tokens_generated_total",
+        "pallas_timeouts_total",
+        "pallas_shed_total",
+        "pallas_slot_occupancy",
+        "pallas_ingress_in_flight",
+    ] {
+        assert!(before.iter().any(|(n, _)| n == name), "{name} missing from /metrics");
+    }
+    // quantile families carry labels
+    assert!(before.iter().any(|(n, _)| n == "pallas_ttft_ms{quantile=\"0.5\"}"));
+    assert!(before.iter().any(|(n, _)| n == "pallas_queue_wait_ms{quantile=\"0.99\"}"));
+
+    for i in 0..3 {
+        let r = post_generate(addr, &format!("traffic {i}"), 4, 0.0, "scraper", 0).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    let after = scrape(3.0);
+    assert!(after
+        .iter()
+        .any(|(n, v)| n == "pallas_tenant_admitted_total{tenant=\"scraper\"}" && *v == 3.0));
+
+    for (name, v0) in before.iter().filter(|(n, _)| n.contains("_total")) {
+        let v1 = after
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("{name} vanished between scrapes"))
+            .1;
+        assert!(v1 >= *v0, "counter {name} went backwards: {v0} -> {v1}");
+    }
+    let toks = |s: &[(String, f64)]| {
+        s.iter().find(|(n, _)| n == "pallas_tokens_generated_total").unwrap().1
+    };
+    assert_eq!(toks(&after) - toks(&before), 12.0, "3 requests x 4 tokens");
+
+    ingress.shutdown().unwrap();
+}

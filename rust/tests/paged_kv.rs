@@ -43,22 +43,21 @@ fn run_continuous_paged(
     threads: usize,
     reqs: &[(Vec<u8>, usize, f32)],
 ) -> (Vec<GenResponse>, Server) {
-    let mut server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-    server.max_slots = max_slots;
-    server.prefill_chunk = prefill_chunk;
-    server.kv_page = kv_page;
-    server.prefix_share = prefix_share;
-    if threads > 0 {
-        server.threads = threads;
-    }
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .max_slots(max_slots)
+        .prefill_chunk(prefill_chunk)
+        .kv_page(kv_page.unwrap_or(0)) // 0 selects the dense layout
+        .prefix_share(prefix_share)
+        .threads(threads)
+        .build()
+        .unwrap();
     let (tx, rx) = channel::<GenRequest>();
     drop(tx);
     let mut batcher = Batcher::new(rx, BatcherConfig::default());
     let mut rxs = Vec::new();
     for (p, max_new, temp) in reqs {
         let (rtx, rrx) = channel();
-        batcher.push(GenRequest::new(p.clone(), *max_new, *temp, rtx));
+        batcher.push(GenRequest::builder(p.clone()).max_new(*max_new).temperature(*temp).build(rtx));
         rxs.push(rrx);
     }
     server.serve_continuous(&mut batcher).unwrap();
@@ -74,13 +73,14 @@ fn run_single(
     prompt: &[u8],
     max_new: usize,
 ) -> Vec<u8> {
-    let mut server =
-        Server::new_host(ServingWeights::CodesResident(Box::new(q.clone()))).unwrap();
-    server.decode = policy;
-    server.kv_page = kv_page;
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .decode(policy)
+        .kv_page(kv_page.unwrap_or(0)) // 0 selects the dense layout
+        .build()
+        .unwrap();
     let (rtx, rrx) = channel();
     server
-        .process_batch(vec![GenRequest::new(prompt.to_vec(), max_new, 0.0, rtx)])
+        .process_batch(vec![GenRequest::builder(prompt.to_vec()).max_new(max_new).build(rtx)])
         .unwrap();
     rrx.recv().unwrap().generated
 }
