@@ -429,6 +429,44 @@ fn main() {
         100.0 * good_2x / good_1x.max(1e-9)
     );
 
+    // --- kv_quant: exact vs quantized KV cache (DESIGN.md §15) ---
+    // Same shared-prefix traffic as the paging scenario, three cache
+    // codecs: exact f32 rows, 8-bit and 4-bit polar-decoupled codes. The
+    // quantized cache trades a per-row encode (direction scan + magnitude
+    // search + LUT decode into the tile) for resident bits — the headline
+    // is slot density: sequences resident per fixed pool budget.
+    println!("== kv_quant: exact vs 8/4-bit polar-decoupled cache (2 slots) ==");
+    let kvq_budget_bits = 64.0 * 1024.0 * 8.0; // fixed 64-KiB pool budget
+    let full_seq_values = (2 * model.config.n_layer * ctx * model.config.d_model) as f64;
+    for bits in [0u32, 8, 4] {
+        let mut srv = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .max_slots(2)
+            .prefill_chunk(16)
+            .kv_quant(bits)
+            .build()
+            .unwrap();
+        drive_mixed(&mut srv, &shared_reqs, BatcherConfig::default(), true); // warm-up
+        let label = if bits == 0 { "exact".to_string() } else { format!("{bits}bit") };
+        let m = bench
+            .run_elems(&format!("kv_quant/{label}_tok"), shared_toks, || {
+                drive_mixed(&mut srv, &shared_reqs, BatcherConfig::default(), true)
+            })
+            .clone();
+        let resident_bits = srv.kv_cache_bits() + srv.kv_codebook_bits();
+        bench.record_ns(&format!("kv_quant/{label}_resident_kv_bits"), resident_bits as f64);
+        let per_seq_bits = srv.kv_cache_bpw() * full_seq_values;
+        let seqs_per_budget = (kvq_budget_bits / per_seq_bits).floor();
+        bench.record_ns(&format!("kv_quant/{label}_seqs_per_64kib"), seqs_per_budget);
+        println!(
+            "{label:>6}: {:>10.1} tok/s  cache {:>4.1} bpw  resident {:>7.1} KiB \
+             (+ codebooks {:.2} KiB)  {seqs_per_budget:.0} seqs/64KiB",
+            tok_s(m.median_ns, shared_toks as f64),
+            srv.kv_cache_bpw(),
+            srv.kv_cache_bits() as f64 / 8.0 / 1024.0,
+            srv.kv_codebook_bits() as f64 / 8.0 / 1024.0,
+        );
+    }
+
     bench.write_json("BENCH_serving.json").unwrap();
     println!("wrote BENCH_serving.json");
 

@@ -130,6 +130,11 @@ SUBCOMMANDS
                         pool (default ctx/8, or PALLAS_KV_PAGE); 0
                         selects the dense per-slot layout — the
                         paged-path parity oracle
+             --kv-quant BITS  polar-decoupled KV-cache quantization:
+                        cache K/V rows as direction codes + magnitude
+                        codes at BITS bits/value (2..=8, even; default
+                        PALLAS_KV_QUANT); 0 = exact f32 rows — the
+                        quantized-cache parity oracle
              --no-prefix-share  disable cross-request prefix sharing
                         (paged layout only; hot prompts re-prefill)
              --shards N  layer-shard the codes-resident model across N

@@ -64,6 +64,17 @@ pub struct Metrics {
     pub prefix_pages_published: u64,
     /// Pages the prefix trie's LRU cap dropped.
     pub prefix_pages_evicted: u64,
+    /// KV subvectors decoded through the cache codec's LUT (write-path
+    /// tile decodes + explicit re-decodes; 0 with an exact cache).
+    pub kv_decoded_subvecs: u64,
+    /// Resident KV payload bits (packed code words under `--kv-quant`,
+    /// f32 rows otherwise) — gauge, refreshed at each metrics sync.
+    pub kv_cache_resident_bits: u64,
+    /// Bits of the frozen per-layer cache codebooks (0 with an exact
+    /// cache) — gauge.
+    pub kv_cache_codebook_bits: u64,
+    /// Declared cache bits per value (32.0 exact) — gauge.
+    pub kv_cache_bpw: f64,
     /// TTFT samples of requests that attached shared prefix pages.
     ttft_hot_us: Vec<u64>,
     /// TTFT samples of requests that prefilled from scratch.
@@ -223,6 +234,15 @@ impl Metrics {
                 self.ttft_cold_ms(50.0),
             ));
         }
+        if self.kv_cache_bpw > 0.0 && self.kv_cache_bpw < 32.0 {
+            s.push_str(&format!(
+                " kv_bpw={:.1} kv_bits={} kv_cb_bits={} kv_decoded={}",
+                self.kv_cache_bpw,
+                self.kv_cache_resident_bits,
+                self.kv_cache_codebook_bits,
+                self.kv_decoded_subvecs,
+            ));
+        }
         if self.timeouts > 0 {
             s.push_str(&format!(" timeouts={}", self.timeouts));
         }
@@ -240,7 +260,7 @@ impl Metrics {
     /// admission counters after this block.
     pub fn prometheus_text(&self) -> String {
         let mut out = String::new();
-        let counters: [(&str, &str, u64); 16] = [
+        let counters: [(&str, &str, u64); 17] = [
             ("pallas_requests_total", "Requests resolved (all finish reasons)", self.requests),
             ("pallas_tokens_generated_total", "Tokens generated", self.tokens_generated),
             ("pallas_batches_total", "Static-path batches executed", self.batches),
@@ -257,13 +277,17 @@ impl Metrics {
             ("pallas_prefix_hits_total", "Admissions that attached shared prefix pages", self.prefix_hits),
             ("pallas_prefix_misses_total", "Admissions with no shared prefix", self.prefix_misses),
             ("pallas_prefix_tokens_reused_total", "Prompt tokens served from shared pages", self.prefix_tokens_reused),
+            ("pallas_kv_decoded_subvecs_total", "KV subvectors decoded through the cache LUT", self.kv_decoded_subvecs),
         ];
         for (name, help, v) in counters {
             out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
         }
-        let gauges: [(&str, &str, f64); 2] = [
+        let gauges: [(&str, &str, f64); 5] = [
             ("pallas_slot_occupancy", "Busy fraction of offered slot-steps", self.slot_occupancy()),
             ("pallas_tokens_per_second", "Generated tokens per wall-clock second", self.tokens_per_s()),
+            ("pallas_kv_cache_resident_bits", "Resident KV payload bits", self.kv_cache_resident_bits as f64),
+            ("pallas_kv_cache_codebook_bits", "Frozen cache codebook bits", self.kv_cache_codebook_bits as f64),
+            ("pallas_kv_cache_bpw", "Declared cache bits per value (32 = exact)", self.kv_cache_bpw),
         ];
         for (name, help, v) in gauges {
             out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));

@@ -57,6 +57,7 @@ pub use scheduler::{
     quantize_model_compressed, quantize_model_parallel, sharded_codebook_bits, QuantStats,
 };
 pub use server::{
-    validate_kv_page, DecodePolicy, KvPageAudit, Server, ServerBuilder, ServingWeights,
+    validate_kv_page, validate_kv_quant, DecodePolicy, KvPageAudit, Server, ServerBuilder,
+    ServingWeights,
 };
 pub use shard::{shard_layers, ShardBits, ShardedForward};

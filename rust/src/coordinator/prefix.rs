@@ -37,6 +37,11 @@
 //! * **Eviction skips pinned pages** — a page some live chain still holds
 //!   (`Arc` refcount > 1) is never dropped from the trie; the LRU victim is
 //!   always a leaf, so chains evict deepest-first.
+//! * **Codec-agnostic** — the trie shares `Arc<KvPage>`s, not row layouts:
+//!   under a quantized pool (DESIGN.md §15) a published page carries its
+//!   packed code words alongside the decoded tile, so every request that
+//!   attaches a hot prefix shares the *quantized* page — same codes, same
+//!   decoded rows, same accounting — with no re-quantization on attach.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -63,6 +63,7 @@ use crate::eval::weight_inputs;
 use crate::model::{
     GptModel, HostForward, KvCache, KvPool, KvPoolCounters, KvStore, PagedKvCache, QuantizedGpt,
 };
+use crate::quant::kv::{KvQuantCodec, KvQuantSpec};
 use crate::rng::Rng;
 use crate::runtime::{BoundExecutable, Engine, Input};
 
@@ -369,6 +370,14 @@ pub struct Server {
     pub prefix_share: bool,
     /// Page budget of the prefix trie; LRU leaves evict past it.
     pub prefix_page_cap: usize,
+    /// Cache quantization: `Some(bits)` stores K/V rows as polar-decoupled
+    /// codes at `bits` bits per cached value (DESIGN.md §15,
+    /// [`crate::quant::kv`]); `None` keeps exact f32 rows — the parity
+    /// oracle (`serve --kv-quant 0`). Validate CLI input with
+    /// [`validate_kv_quant`]; defaults to `PALLAS_KV_QUANT` (unset →
+    /// exact). Changing this between serve calls rebuilds the slot caches
+    /// (and the frozen codec) on the next call.
+    pub kv_quant: Option<u32>,
     /// One KV cache per slot, built lazily on the host backend and
     /// **reset at every request boundary** — a new request always starts
     /// from an empty cache (possibly re-attaching shared prefix pages).
@@ -376,6 +385,14 @@ pub struct Server {
     /// The shared page pool behind the paged slot caches (geometry +
     /// counters; pages themselves recycle through per-slot free lists).
     kv_pool: Option<KvPool>,
+    /// The shared cache codec behind quantized slot caches: per-layer
+    /// codebooks freeze on each layer's first write, `Arc`-shared with the
+    /// pool so prefix pages published by one request decode identically
+    /// for every attachment.
+    kv_codec: Option<Arc<KvQuantCodec>>,
+    /// High-water mark of the codec's decode-tile counter (for delta folds
+    /// into [`Self::metrics`], mirroring `pool_seen`).
+    kv_decoded_seen: u64,
     /// The prompt-prefix → page-chain trie (paged layout only).
     prefix: Option<PrefixCache>,
     /// High-water marks for folding pool/trie counter deltas into
@@ -421,8 +438,11 @@ impl Server {
             kv_page: default_kv_page(config.ctx),
             prefix_share: true,
             prefix_page_cap: 1024,
+            kv_quant: default_kv_quant(),
             slot_caches: Vec::new(),
             kv_pool: None,
+            kv_codec: None,
+            kv_decoded_seen: 0,
             prefix: None,
             pool_seen: KvPoolCounters::default(),
             prefix_seen: PrefixStats::default(),
@@ -455,6 +475,7 @@ impl Server {
             shards: 1,
             threads: None,
             kv_page: None,
+            kv_quant: None,
             prefix_share: None,
             prefix_page_cap: None,
             max_slots: None,
@@ -589,15 +610,42 @@ impl Server {
         }
     }
 
-    /// f32 bits of KV-cache state currently allocated across slots
+    /// Payload bits of KV-cache state currently allocated across slots
     /// (0 until the first cached batch). Dense: `slots ·
-    /// config.kv_cache_bits()`. Paged: every page the pool ever created —
+    /// cache.memory_bits()`. Paged: every page the pool ever created —
     /// whether currently in a chain, a free list, or the prefix trie —
     /// which is the honest footprint (pages are recycled, never freed).
+    /// Under [`Server::kv_quant`] the payload is the word-aligned packed
+    /// code words only; the frozen codebooks are a separate, shared
+    /// account ([`Self::kv_codebook_bits`]) and the decoded f32 tiles are
+    /// derived state counted by neither.
     pub fn kv_cache_bits(&self) -> u64 {
         match &self.kv_pool {
             Some(pool) => pool.pages_created() * pool.page_bits(),
             None => self.slot_caches.iter().map(|c| c.memory_bits()).sum(),
+        }
+    }
+
+    /// Bits of the frozen per-layer cache codebooks (directions +
+    /// magnitude levels, shared across every slot and page; 0 with an
+    /// exact cache or before the first prefill freezes them).
+    pub fn kv_codebook_bits(&self) -> u64 {
+        self.kv_codec.as_ref().map_or(0, |c| c.codebook_bits())
+    }
+
+    /// The shared cache codec, once the slot caches have been built under
+    /// [`Server::kv_quant`] (test/diagnostic hook).
+    pub fn kv_codec(&self) -> Option<&Arc<KvQuantCodec>> {
+        self.kv_codec.as_ref()
+    }
+
+    /// Declared cache bits per value: `code_bits_per_row / d_model` under
+    /// [`Server::kv_quant`] (word-alignment overhead included — the honest
+    /// allocated rate), 32.0 for the exact f32 cache.
+    pub fn kv_cache_bpw(&self) -> f64 {
+        match &self.kv_codec {
+            Some(c) => c.code_bits_per_row() as f64 / self.config.d_model as f64,
+            None => 32.0,
         }
     }
 
@@ -647,20 +695,23 @@ impl Server {
     }
 
     /// Make at least `n` slot caches exist under the *current* layout
-    /// ([`Self::kv_page`]). A layout change (page size toggled or resized
-    /// between serve calls) rebuilds from scratch: old caches, pool and
-    /// trie are dropped together so no page can outlive its pool's
-    /// accounting.
+    /// ([`Self::kv_page`] × [`Self::kv_quant`]). A layout change (page size
+    /// or cache bits toggled between serve calls) rebuilds from scratch:
+    /// old caches, pool, trie and codec are dropped together so no page can
+    /// outlive its pool's accounting and no code can outlive the codec that
+    /// wrote it.
     fn ensure_slot_caches(&mut self, n: usize) -> Result<()> {
-        let stale = match (&self.kv_page, self.kv_pool.as_ref()) {
-            (Some(ps), Some(pool)) => pool.page_size() != *ps,
-            (Some(_), None) => !self.slot_caches.is_empty(),
-            (None, Some(_)) => true,
-            (None, None) => self
-                .slot_caches
-                .iter()
-                .any(|c| matches!(c, SlotCache::Paged(_))),
-        };
+        let quant_stale = self.kv_codec.as_ref().map(|c| c.spec().bits()) != self.kv_quant;
+        let stale = quant_stale
+            || match (&self.kv_page, self.kv_pool.as_ref()) {
+                (Some(ps), Some(pool)) => pool.page_size() != *ps,
+                (Some(_), None) => !self.slot_caches.is_empty(),
+                (None, Some(_)) => true,
+                (None, None) => self
+                    .slot_caches
+                    .iter()
+                    .any(|c| matches!(c, SlotCache::Paged(_))),
+            };
         if stale {
             self.slot_caches.clear();
             if let (Some(trie), Some(pool)) = (self.prefix.as_mut(), self.kv_pool.as_ref()) {
@@ -668,19 +719,34 @@ impl Server {
             }
             self.prefix = None;
             self.kv_pool = None;
+            self.kv_codec = None;
+            self.kv_decoded_seen = 0;
             self.pool_seen = KvPoolCounters::default();
             self.prefix_seen = PrefixStats::default();
         }
+        if let Some(bits) = self.kv_quant {
+            if self.kv_codec.is_none() {
+                self.kv_codec = Some(Arc::new(KvQuantCodec::new(
+                    KvQuantSpec::new(bits)?,
+                    self.config.n_layer,
+                    self.config.d_model,
+                    self.sampler_seed ^ 0x6B76_7175_616E_7431,
+                )));
+            }
+        }
         if let Some(ps) = self.kv_page {
             if self.kv_pool.is_none() {
-                self.kv_pool = Some(KvPool::new(&self.config, ps)?);
+                self.kv_pool =
+                    Some(KvPool::with_codec(&self.config, ps, self.kv_codec.clone())?);
                 self.prefix = Some(PrefixCache::new(ps, self.prefix_page_cap));
             }
         }
         while self.slot_caches.len() < n {
             self.slot_caches.push(match &self.kv_pool {
                 Some(pool) => SlotCache::Paged(PagedKvCache::new(&self.config, pool)),
-                None => SlotCache::Dense(KvCache::new(&self.config)),
+                None => {
+                    SlotCache::Dense(KvCache::with_codec(&self.config, self.kv_codec.clone()))
+                }
             });
         }
         Ok(())
@@ -710,6 +776,14 @@ impl Server {
                 s.pages_evicted - self.prefix_seen.pages_evicted;
             self.prefix_seen = s;
         }
+        if let Some(codec) = &self.kv_codec {
+            let d = codec.decoded_subvecs();
+            self.metrics.kv_decoded_subvecs += d - self.kv_decoded_seen;
+            self.kv_decoded_seen = d;
+        }
+        self.metrics.kv_cache_resident_bits = self.kv_cache_bits();
+        self.metrics.kv_cache_codebook_bits = self.kv_codebook_bits();
+        self.metrics.kv_cache_bpw = self.kv_cache_bpw();
     }
 
     /// Decode one batch of requests to completion; sends responses on each
@@ -765,6 +839,26 @@ impl Server {
                 cache,
             })
             .collect();
+        // codebook-freeze determinism (§15): per-layer cache codebooks
+        // freeze on each layer's first-ever write, and under a multi-worker
+        // fan-out "first" would be scheduling-dependent — so while any
+        // layer is unfrozen, slot 0 decodes inline on the coordinator
+        // thread before the fan-out, seeding every layer's codebook from
+        // the same rows at every thread count.
+        let mut head: Option<Result<Vec<u8>>> = None;
+        if let Some(codec) = self.kv_codec.clone() {
+            if !codec.frozen() && !work.is_empty() {
+                let w = work.remove(0);
+                head = Some(match w.cache {
+                    SlotCache::Dense(c) => {
+                        decode_one(hf, c, w.slot as u64, w.prompt, w.max_new, w.temperature, seed, ctx, v)
+                    }
+                    SlotCache::Paged(c) => {
+                        decode_one(hf, c, w.slot as u64, w.prompt, w.max_new, w.temperature, seed, ctx, v)
+                    }
+                });
+            }
+        }
         let pool = crate::exec::Pool::new(self.threads.max(1));
         // the shared nesting policy: pin inner kernels only when the
         // request fan-out is real (exec::Pool::inner_threads)
@@ -780,7 +874,7 @@ impl Server {
             })
         });
         let mut generated: Vec<Vec<u8>> = Vec::with_capacity(batch.len());
-        for r in results {
+        for r in head.into_iter().chain(results) {
             generated.push(r?);
         }
 
@@ -1061,18 +1155,34 @@ impl Server {
                 })
                 .collect();
             let worked = work.len(); // slots that ran model work this step
+            // codebook-freeze determinism (§15): while any layer's cache
+            // codebook is still unfrozen, the lowest-index busy slot steps
+            // inline on the coordinator thread first — its chunk writes a
+            // row to every layer, freezing all codebooks from the same
+            // deterministic seed rows at every thread count. Slots are
+            // independent within a round, so outputs are unchanged.
+            let mut inline_outcome = None;
+            if let Some(codec) = self.kv_codec.clone() {
+                if !codec.frozen() && !work.is_empty() {
+                    let w = work.remove(0);
+                    inline_outcome = Some(match w.cache {
+                        SlotCache::Dense(c) => step_slot(hf, w.slot, c, chunk, capture),
+                        SlotCache::Paged(c) => step_slot(hf, w.slot, c, chunk, capture),
+                    });
+                }
+            }
             // the shared nesting policy: pin inner kernels to one thread
             // only when the slot fan-out is real — a lone active slot (or
             // a 1-thread pool) keeps the matmul's column-strip /
             // attention-row parallelism (exec::Pool::inner_threads)
-            let inner = pool.inner_threads(worked);
+            let inner = pool.inner_threads(work.len());
             let outcomes = pool.map_mut(&mut work, |_, w| {
                 crate::exec::with_threads(inner, || match w.cache {
                     SlotCache::Dense(c) => step_slot(hf, w.slot, c, chunk, capture),
                     SlotCache::Paged(c) => step_slot(hf, w.slot, c, chunk, capture),
                 })
             });
-            for outcome in outcomes {
+            for outcome in inline_outcome.into_iter().chain(outcomes) {
                 if outcome? == StepKind::Decode {
                     self.metrics.decode_steps += 1;
                 }
@@ -1182,6 +1292,7 @@ pub struct ServerBuilder {
     shards: usize,
     threads: Option<usize>,
     kv_page: Option<usize>,
+    kv_quant: Option<u32>,
     prefix_share: Option<bool>,
     prefix_page_cap: Option<usize>,
     max_slots: Option<usize>,
@@ -1218,6 +1329,17 @@ impl ServerBuilder {
     /// `ctx / 8`).
     pub fn kv_page(mut self, page: usize) -> Self {
         self.kv_page = Some(page);
+        self
+    }
+
+    /// Cache quantization: `0` keeps exact f32 K/V rows (the parity
+    /// oracle), `2..=8` stores polar-decoupled codes at that many bits per
+    /// cached value (see [`Server::kv_quant`]). Out-of-range bits fail
+    /// [`ServerBuilder::build`] with the [`validate_kv_quant`] error.
+    /// Unset keeps the environment-driven default (`PALLAS_KV_QUANT`,
+    /// else exact).
+    pub fn kv_quant(mut self, bits: u32) -> Self {
+        self.kv_quant = Some(bits);
         self
     }
 
@@ -1289,6 +1411,9 @@ impl ServerBuilder {
         if let Some(page) = self.kv_page {
             server.kv_page = validate_kv_page(page, server.config.ctx)?;
         }
+        if let Some(bits) = self.kv_quant {
+            server.kv_quant = validate_kv_quant(bits)?;
+        }
         if let Some(t) = self.threads {
             if t > 0 {
                 server.threads = t;
@@ -1335,6 +1460,32 @@ fn default_kv_page(ctx: usize) -> Option<usize> {
         },
         Err(_) => Some((ctx / 8).max(1)),
     }
+}
+
+/// Default cache quantization for a fresh server: exact f32 rows.
+/// `PALLAS_KV_QUANT` overrides it — `0` (or unset/unparseable) keeps the
+/// exact cache, any other value is clamped into the supported
+/// `2..=8` bits-per-value range.
+fn default_kv_quant() -> Option<u32> {
+    match std::env::var("PALLAS_KV_QUANT") {
+        Ok(s) => match s.trim().parse::<u32>() {
+            Ok(0) | Err(_) => None,
+            Ok(b) => Some(b.clamp(KvQuantSpec::MIN_BITS, KvQuantSpec::MAX_BITS)),
+        },
+        Err(_) => None,
+    }
+}
+
+/// Validate a `serve --kv-quant` value and turn it into a
+/// [`Server::kv_quant`] setting: `0` selects the exact f32 cache (the
+/// parity oracle), `2..=8` the polar-decoupled codec at that many bits per
+/// cached value, anything else is a flag error with a usable message.
+pub fn validate_kv_quant(bits: u32) -> Result<Option<u32>> {
+    if bits == 0 {
+        return Ok(None); // exact f32 rows (the parity oracle)
+    }
+    KvQuantSpec::new(bits)?;
+    Ok(Some(bits))
 }
 
 /// Validate a `serve --kv-page-size` value against the model context and
@@ -1501,6 +1652,16 @@ mod tests {
         let err = validate_kv_page(65, 64).unwrap_err().to_string();
         assert!(err.contains("--kv-page-size 65"), "got: {err}");
         assert!(err.contains("1..=64"), "got: {err}");
+    }
+
+    #[test]
+    fn validate_kv_quant_accepts_range_and_rejects_odd_widths() {
+        assert_eq!(validate_kv_quant(0).unwrap(), None); // exact oracle
+        assert_eq!(validate_kv_quant(2).unwrap(), Some(2));
+        assert_eq!(validate_kv_quant(8).unwrap(), Some(8));
+        let err = validate_kv_quant(9).unwrap_err().to_string();
+        assert!(err.contains("--kv-quant 9"), "got: {err}");
+        assert!(validate_kv_quant(1).is_err());
     }
 
     #[test]

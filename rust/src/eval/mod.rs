@@ -18,7 +18,9 @@ pub use ppl::{evaluate_ppl, fit_temperature, PplResult};
 pub use tasks::{evaluate_tasks, TaskResult, TASK_NAMES};
 
 use crate::model::{GptConfig, GptModel, HostForward, KvCache};
+use crate::quant::kv::KvQuantCodec;
 use crate::runtime::{BoundExecutable, Input};
+use std::sync::Arc;
 
 /// A batched forward pass: `(b, t)` token block → logits `(b · t · vocab)`.
 pub trait ForwardPass {
@@ -88,6 +90,48 @@ impl ForwardPass for HostForward {
         Some(Box::new(HostSession {
             hf: self,
             cache: KvCache::new(&self.config),
+        }))
+    }
+}
+
+/// [`HostForward`] wrapper whose decode sessions run against a
+/// **quantized** KV cache: every session it opens stores K/V rows as
+/// polar-decoupled codes under the shared [`KvQuantCodec`] (DESIGN.md §15).
+/// Block evaluation ([`ForwardPass::forward_block`]) is unchanged — only the
+/// cached path quantizes — so `evaluate_ppl` in unbatched (session) mode
+/// measures exactly the quantized-cache quality the serving loop ships.
+pub struct KvQuantForward<'a> {
+    hf: &'a HostForward,
+    codec: Arc<KvQuantCodec>,
+}
+
+impl<'a> KvQuantForward<'a> {
+    /// Wrap `hf` so sessions decode through `codec`'s cache layout. The
+    /// codec geometry must match the model (asserted at cache build).
+    pub fn new(hf: &'a HostForward, codec: Arc<KvQuantCodec>) -> Self {
+        KvQuantForward { hf, codec }
+    }
+
+    /// The shared cache codec (e.g. to read accounting after an eval).
+    pub fn codec(&self) -> &Arc<KvQuantCodec> {
+        &self.codec
+    }
+}
+
+impl ForwardPass for KvQuantForward<'_> {
+    fn forward_block(
+        &self,
+        tokens: Vec<i32>,
+        b: usize,
+        t: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.hf.forward(&tokens, b, t)
+    }
+
+    fn begin_session(&self) -> Option<Box<dyn DecodeSession + '_>> {
+        Some(Box::new(HostSession {
+            hf: self.hf,
+            cache: KvCache::with_codec(&self.hf.config, Some(self.codec.clone())),
         }))
     }
 }

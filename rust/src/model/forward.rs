@@ -16,6 +16,12 @@
 //! `advance_block` chunk walk fans out over disjoint activation-row strips
 //! on the shared pool ([`crate::exec`]) — both bit-identical to their
 //! serial walks at every thread count.
+//!
+//! The forward is **cache-layout-blind**: attention reads K/V rows as
+//! `&[f32]` through [`KvStore`]'s layer views, so the quantized cache
+//! (DESIGN.md §15) needs no kernel changes — the [`KvStore`] quantizes on
+//! write and keeps a LUT-decoded f32 tile as derived state, and this module
+//! attends over the decoded rows exactly as it does over exact ones.
 
 use std::collections::BTreeMap;
 

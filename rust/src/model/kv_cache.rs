@@ -32,7 +32,23 @@
 //! Memory: `2 · n_layer · capacity · d_model · 32` bits of f32 per cache
 //! ([`crate::model::GptConfig::kv_cache_bits`]), one cache per active
 //! session.
+//!
+//! ## Quantized rows
+//!
+//! A cache built with [`KvCache::with_codec`] stores polar-decoupled codes
+//! (DESIGN.md §15, same contract as the paged pool's
+//! [`crate::model::PageCodec::PcdVq`] layout): [`Self::write_kv_at`]
+//! quantizes each incoming row against the layer's codec — frozen on the
+//! layer's first-ever write — into packed code words, and the f32 buffers
+//! hold the LUT-decoded tile (derived state, zero payload bits). The
+//! slide+rebuild eviction re-feed flows through the same write path, so
+//! rebuilt rows **re-quantize against the frozen codebook** rather than
+//! re-building it: an evicted-then-rebuilt window decodes bit-identically
+//! to a fresh quantized prefill of that window with the same codec.
 
+use std::sync::Arc;
+
+use crate::quant::kv::KvQuantCodec;
 use crate::tensor::Matrix;
 
 use super::GptConfig;
@@ -55,6 +71,14 @@ pub struct KvCache {
     k: Vec<Matrix>,
     /// Per layer: `(capacity, d_model)` values; rows `0..len()` are valid.
     v: Vec<Matrix>,
+    /// Present iff rows are stored as polar-decoupled codes; shared
+    /// (`Arc`) so sibling caches quantize against the same frozen state.
+    codec: Option<Arc<KvQuantCodec>>,
+    /// Per layer: `capacity · words_per_row` packed K code words (empty
+    /// without a codec).
+    ck: Vec<Vec<u64>>,
+    /// Per layer: packed V code words.
+    cv: Vec<Vec<u64>>,
     /// Tokens ever fed through this cache (survives resets; telemetry).
     total_fed: u64,
     /// Window slides performed (telemetry; each one cost a rebuild).
@@ -80,8 +104,36 @@ impl KvCache {
     /// Full control over window capacity and eviction stride (both clamped
     /// to valid ranges; `stride` to `1..=capacity`).
     pub fn with_stride(cfg: &GptConfig, capacity: usize, stride: usize) -> Self {
+        Self::with_stride_codec(cfg, capacity, stride, None)
+    }
+
+    /// Full-context cache whose rows are stored as polar-decoupled codes
+    /// quantized by `codec` (DESIGN.md §15); `None` is the exact layout.
+    pub fn with_codec(cfg: &GptConfig, codec: Option<Arc<KvQuantCodec>>) -> Self {
+        Self::with_stride_codec(cfg, cfg.ctx, (cfg.ctx / 4).max(1), codec)
+    }
+
+    /// The general constructor: window geometry plus an optional cache
+    /// codec shared with sibling caches.
+    pub fn with_stride_codec(
+        cfg: &GptConfig,
+        capacity: usize,
+        stride: usize,
+        codec: Option<Arc<KvQuantCodec>>,
+    ) -> Self {
+        if let Some(c) = &codec {
+            assert!(
+                c.n_layer() == cfg.n_layer && c.d_model() == cfg.d_model,
+                "kv codec geometry ({} layers × {}) does not match model ({} × {})",
+                c.n_layer(),
+                c.d_model(),
+                cfg.n_layer,
+                cfg.d_model
+            );
+        }
         let capacity = capacity.clamp(1, cfg.ctx);
         let evict_stride = stride.clamp(1, capacity);
+        let words = codec.as_ref().map_or(0, |c| c.words_per_row());
         KvCache {
             n_layer: cfg.n_layer,
             d_model: cfg.d_model,
@@ -90,6 +142,9 @@ impl KvCache {
             tokens: Vec::with_capacity(capacity),
             k: (0..cfg.n_layer).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
             v: (0..cfg.n_layer).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
+            codec,
+            ck: (0..cfg.n_layer).map(|_| vec![0u64; capacity * words]).collect(),
+            cv: (0..cfg.n_layer).map(|_| vec![0u64; capacity * words]).collect(),
             total_fed: 0,
             evictions: 0,
         }
@@ -131,14 +186,40 @@ impl KvCache {
         self.evictions
     }
 
-    /// K and V buffers of one layer (rows `0..len()` valid).
+    /// K and V buffers of one layer (rows `0..len()` valid). With a codec
+    /// these hold the decoded tile — reads are layout-blind.
     pub fn layer(&self, layer: usize) -> (&Matrix, &Matrix) {
         (&self.k[layer], &self.v[layer])
     }
 
-    /// f32 bits held by the K/V buffers (allocation, not fill level).
+    /// The cache codec, when rows are stored as codes.
+    pub fn codec(&self) -> Option<&Arc<KvQuantCodec>> {
+        self.codec.as_ref()
+    }
+
+    /// Packed K code words of one position (empty without a codec) — the
+    /// row's actual resident payload.
+    pub fn k_codes(&self, layer: usize, pos: usize) -> &[u64] {
+        let w = self.codec.as_ref().map_or(0, |c| c.words_per_row());
+        &self.ck[layer][pos * w..(pos + 1) * w]
+    }
+
+    /// Packed V code words of one position (empty without a codec).
+    pub fn v_codes(&self, layer: usize, pos: usize) -> &[u64] {
+        let w = self.codec.as_ref().map_or(0, |c| c.words_per_row());
+        &self.cv[layer][pos * w..(pos + 1) * w]
+    }
+
+    /// Resident payload bits (allocation, not fill level): the f32 buffers
+    /// exactly, or — with a codec — the word-aligned code words only (the
+    /// decoded tile is derived state; the shared codebooks are counted once
+    /// at the codec, [`KvQuantCodec::codebook_bits`]).
     pub fn memory_bits(&self) -> u64 {
-        2 * (self.n_layer * self.capacity * self.d_model) as u64 * 32
+        let rows = 2 * (self.n_layer * self.capacity) as u64;
+        match &self.codec {
+            None => rows * self.d_model as u64 * 32,
+            Some(c) => rows * c.code_bits_per_row(),
+        }
     }
 
     /// True when this cache's geometry matches `cfg` (a cache built for one
@@ -168,11 +249,27 @@ impl KvCache {
 
     /// Write the K/V rows of one (still uncommitted) position for one layer
     /// — the block advance writes a whole chunk of positions
-    /// (`len()..len()+chunk`) before a single [`Self::commit_block`].
+    /// (`len()..len()+chunk`) before a single [`Self::commit_block`]. With
+    /// a codec the rows quantize against the layer's frozen codebook (built
+    /// on the layer's first-ever write) and the buffers receive the
+    /// LUT-decoded tile; the eviction re-feed flows through here too, so
+    /// rebuilt rows re-quantize against the *same* frozen grid.
     pub(crate) fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(pos < self.capacity, "write_kv_at past capacity");
-        self.k[layer].row_mut(pos).copy_from_slice(k_row);
-        self.v[layer].row_mut(pos).copy_from_slice(v_row);
+        match self.codec.clone() {
+            None => {
+                self.k[layer].row_mut(pos).copy_from_slice(k_row);
+                self.v[layer].row_mut(pos).copy_from_slice(v_row);
+            }
+            Some(codec) => {
+                let lc = codec.observe(layer, k_row, v_row);
+                let w = codec.words_per_row();
+                let kw = &mut self.ck[layer][pos * w..(pos + 1) * w];
+                codec.encode_row(lc, k_row, kw, self.k[layer].row_mut(pos));
+                let vw = &mut self.cv[layer][pos * w..(pos + 1) * w];
+                codec.encode_row(lc, v_row, vw, self.v[layer].row_mut(pos));
+            }
+        }
     }
 
     /// Finish a block step: record `tokens`, whose K/V rows were written at
@@ -269,6 +366,53 @@ mod tests {
                 assert_eq!(va.row(i), vb.row(i));
             }
         }
+    }
+
+    #[test]
+    fn quantized_rows_redecode_bit_identically() {
+        use crate::quant::kv::KvQuantSpec;
+        let cfg = cfg();
+        let codec = Arc::new(KvQuantCodec::new(
+            KvQuantSpec::new(6).unwrap(),
+            cfg.n_layer,
+            cfg.d_model,
+            5,
+        ));
+        let mut c = KvCache::with_codec(&cfg, Some(codec.clone()));
+        // payload accounting: word-aligned codes only, no tile bits
+        assert_eq!(c.memory_bits(), 2 * 3 * 16 * codec.code_bits_per_row());
+        assert!(c.memory_bits() < 2 * 3 * 16 * 32 * 32);
+        let row = |pos: usize, l: usize, s: usize| -> Vec<f32> {
+            (0..32).map(|i| ((pos * 29 + i * 7 + l * 11 + s) % 13) as f32 - 6.0).collect()
+        };
+        for pos in 0..3 {
+            for l in 0..cfg.n_layer {
+                c.write_kv_at(l, pos, &row(pos, l, 0), &row(pos, l, 5));
+            }
+        }
+        c.commit_block(&[7, 8, 9]);
+        assert!(codec.frozen());
+        let mut out = vec![0.0f32; 32];
+        for pos in 0..3 {
+            for l in 0..cfg.n_layer {
+                let lc = codec.layer(l).unwrap();
+                codec.decode_row(lc, c.k_codes(l, pos), &mut out);
+                let (k, v) = c.layer(l);
+                assert_eq!(
+                    out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    k.row(pos).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "layer {l} pos {pos}: K tile is not decode(codes)"
+                );
+                codec.decode_row(lc, c.v_codes(l, pos), &mut out);
+                assert_eq!(
+                    out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    v.row(pos).iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+        // exact caches expose no code payload
+        let exact = KvCache::new(&cfg);
+        assert!(exact.k_codes(0, 0).is_empty());
     }
 
     #[test]

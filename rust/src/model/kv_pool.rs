@@ -54,32 +54,71 @@
 //! / `advance_block` and [`crate::coordinator::Server::serve_continuous`]
 //! run unchanged on either layout; attention reads go through
 //! [`KvLayerView`], which walks the page chain in the paged case.
+//!
+//! ## Quantized pages
+//!
+//! A pool built with [`KvPool::with_codec`] stores polar-decoupled codes
+//! (DESIGN.md §15): every committed row's payload is the packed
+//! direction×magnitude code words ([`crate::quant::kv::KvQuantCodec`]), and
+//! the page's f32 matrices become the **decoded tile** — derived state that
+//! [`PagedKvCache::write_kv_at`] refills through the codec's [`DecodeLut`]
+//! the moment the codes land, so attention reads stay borrowed `&[f32]`
+//! slices and [`KvLayerView`] is layout-blind. [`PageCodec`] names the
+//! layout; COW copies code words alongside the tile, sharing/refcount/
+//! eviction semantics are untouched, and [`KvPool::page_bits`] counts only
+//! the code words (the tile is re-buildable bit-identically from the codes,
+//! like the weight kernel's LUTs).
+//!
+//! [`DecodeLut`]: crate::quant::DecodeLut
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::quant::kv::KvQuantCodec;
 use crate::tensor::Matrix;
 
 use super::{GptConfig, KvCache};
+
+/// The storage layout of a pool's pages: exact f32 rows, or packed
+/// polar-decoupled codes plus a decoded f32 tile (DESIGN.md §15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageCodec {
+    /// Rows are stored exactly — the parity oracle (`--kv-quant 0`).
+    F32,
+    /// Rows are `dir_bits + mag_bits`-bit joint codes per 2-dim subvector;
+    /// the page's f32 matrices hold the LUT-decoded tile.
+    PcdVq { dir_bits: u32, mag_bits: u32 },
+}
 
 /// One fixed-size block of K/V rows: per layer, a `(page_size, d_model)` K
 /// matrix and a V matrix. Rows are valid only below the owning cache's
 /// `len()`; shared (prefix) pages are always completely full.
 #[derive(Debug)]
 pub struct KvPage {
-    /// Per layer: `(page_size, d_model)` keys.
+    /// Per layer: `(page_size, d_model)` keys (the decoded tile when the
+    /// pool carries a codec — derived state, zero payload bits).
     k: Vec<Matrix>,
-    /// Per layer: `(page_size, d_model)` values.
+    /// Per layer: `(page_size, d_model)` values (ditto).
     v: Vec<Matrix>,
+    /// Per layer: `page_size · words_per_row` packed K code words
+    /// (empty under [`PageCodec::F32`]).
+    ck: Vec<Vec<u64>>,
+    /// Per layer: packed V code words.
+    cv: Vec<Vec<u64>>,
+    /// `u64` words per packed code row (0 under [`PageCodec::F32`]).
+    words_per_row: usize,
 }
 
 impl KvPage {
-    fn new(n_layer: usize, page_size: usize, d_model: usize) -> Self {
+    fn new(n_layer: usize, page_size: usize, d_model: usize, words_per_row: usize) -> Self {
         KvPage {
             k: (0..n_layer).map(|_| Matrix::zeros(page_size, d_model)).collect(),
             v: (0..n_layer).map(|_| Matrix::zeros(page_size, d_model)).collect(),
+            ck: (0..n_layer).map(|_| vec![0u64; page_size * words_per_row]).collect(),
+            cv: (0..n_layer).map(|_| vec![0u64; page_size * words_per_row]).collect(),
+            words_per_row,
         }
     }
 
@@ -93,6 +132,23 @@ impl KvPage {
     #[inline]
     pub fn v_row(&self, layer: usize, off: usize) -> &[f32] {
         self.v[layer].row(off)
+    }
+
+    /// Packed K code words at in-page offset `off` (empty under
+    /// [`PageCodec::F32`]) — the row's actual resident payload; the f32 row
+    /// re-decodes from exactly these words.
+    #[inline]
+    pub fn k_codes(&self, layer: usize, off: usize) -> &[u64] {
+        let w = self.words_per_row;
+        &self.ck[layer][off * w..(off + 1) * w]
+    }
+
+    /// Packed V code words at in-page offset `off` (empty under
+    /// [`PageCodec::F32`]).
+    #[inline]
+    pub fn v_codes(&self, layer: usize, off: usize) -> &[u64] {
+        let w = self.words_per_row;
+        &self.cv[layer][off * w..(off + 1) * w]
     }
 }
 
@@ -121,6 +177,10 @@ struct PoolInner {
     n_layer: usize,
     d_model: usize,
     page_size: usize,
+    /// Present iff pages store polar-decoupled codes. Shared by every cache
+    /// drawing from this pool, so prefix pages published by one request
+    /// decode identically for every attachment.
+    codec: Option<Arc<KvQuantCodec>>,
     allocated: AtomicU64,
     reused: AtomicU64,
     released: AtomicU64,
@@ -144,16 +204,37 @@ impl KvPool {
     /// `1 <= page_size <= cfg.ctx` — a zero page can hold nothing and a page
     /// beyond the context window could never fill (and so never be shared).
     pub fn new(cfg: &GptConfig, page_size: usize) -> Result<Self> {
+        Self::with_codec(cfg, page_size, None)
+    }
+
+    /// Pool whose pages store polar-decoupled codes quantized by `codec`
+    /// (DESIGN.md §15); `None` is the exact [`PageCodec::F32`] layout.
+    pub fn with_codec(
+        cfg: &GptConfig,
+        page_size: usize,
+        codec: Option<Arc<KvQuantCodec>>,
+    ) -> Result<Self> {
         anyhow::ensure!(
             (1..=cfg.ctx).contains(&page_size),
             "kv page size {page_size} out of range 1..={} (model ctx)",
             cfg.ctx
         );
+        if let Some(c) = &codec {
+            anyhow::ensure!(
+                c.n_layer() == cfg.n_layer && c.d_model() == cfg.d_model,
+                "kv codec geometry ({} layers × {}) does not match model ({} × {})",
+                c.n_layer(),
+                c.d_model(),
+                cfg.n_layer,
+                cfg.d_model
+            );
+        }
         Ok(KvPool {
             inner: Arc::new(PoolInner {
                 n_layer: cfg.n_layer,
                 d_model: cfg.d_model,
                 page_size,
+                codec,
                 allocated: AtomicU64::new(0),
                 reused: AtomicU64::new(0),
                 released: AtomicU64::new(0),
@@ -168,9 +249,33 @@ impl KvPool {
         self.inner.page_size
     }
 
-    /// f32 bits held by one page (both K and V, all layers).
+    /// The shared cache codec, when pages store codes.
+    pub fn codec(&self) -> Option<&Arc<KvQuantCodec>> {
+        self.inner.codec.as_ref()
+    }
+
+    /// The storage layout of this pool's pages.
+    pub fn page_codec(&self) -> PageCodec {
+        match &self.inner.codec {
+            None => PageCodec::F32,
+            Some(c) => PageCodec::PcdVq {
+                dir_bits: c.spec().dir_bits(),
+                mag_bits: c.spec().mag_bits(),
+            },
+        }
+    }
+
+    /// Resident payload bits of one page (both K and V, all layers): the
+    /// f32 rows under [`PageCodec::F32`], the allocated word-aligned code
+    /// words under [`PageCodec::PcdVq`] (the decoded tile is derived state
+    /// and contributes nothing; the shared codebooks are counted once, at
+    /// the codec — [`KvQuantCodec::codebook_bits`]).
     pub fn page_bits(&self) -> u64 {
-        2 * (self.inner.n_layer * self.inner.page_size * self.inner.d_model) as u64 * 32
+        let rows = 2 * (self.inner.n_layer * self.inner.page_size) as u64;
+        match &self.inner.codec {
+            None => rows * self.inner.d_model as u64 * 32,
+            Some(c) => rows * c.code_bits_per_row(),
+        }
     }
 
     /// Fresh page buffers ever created; `pages_created() · page_bits()` is
@@ -203,7 +308,8 @@ impl KvPool {
             page
         } else {
             self.inner.allocated.fetch_add(1, Ordering::Relaxed);
-            KvPage::new(self.inner.n_layer, self.inner.page_size, self.inner.d_model)
+            let words = self.inner.codec.as_ref().map_or(0, |c| c.words_per_row());
+            KvPage::new(self.inner.n_layer, self.inner.page_size, self.inner.d_model, words)
         }
     }
 
@@ -421,10 +527,18 @@ impl PagedKvCache {
             let PagedKvCache { pool, local_free, .. } = self;
             let mut fresh = pool.take_buffer(local_free);
             let src = &self.pages[page_idx];
+            let w = fresh.words_per_row;
             for layer in 0..fresh.k.len() {
                 for row in 0..valid {
                     fresh.k[layer].row_mut(row).copy_from_slice(src.k[layer].row(row));
                     fresh.v[layer].row_mut(row).copy_from_slice(src.v[layer].row(row));
+                }
+                // code-carrying pages: the packed payload rides along so the
+                // copy stays re-decodable (tile ≡ decode(codes) invariant)
+                if w > 0 {
+                    let n = valid * w;
+                    fresh.ck[layer][..n].copy_from_slice(&src.ck[layer][..n]);
+                    fresh.cv[layer][..n].copy_from_slice(&src.cv[layer][..n]);
                 }
             }
             self.pool.count_cow();
@@ -436,14 +550,32 @@ impl PagedKvCache {
         Arc::get_mut(&mut self.pages[page_idx]).expect("exclusive after COW")
     }
 
-    /// Write the K/V rows of one (still uncommitted) position for one layer.
+    /// Write the K/V rows of one (still uncommitted) position for one
+    /// layer. Under [`PageCodec::PcdVq`] the rows are quantized against the
+    /// layer's codec (frozen on the layer's first-ever write) into packed
+    /// code words, and the page's f32 matrices receive the LUT-decoded tile
+    /// — so every later read sees `decode(encode(row))`, bit-identically
+    /// reproducible from the codes alone.
     pub(crate) fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(pos < self.capacity, "write_kv_at past capacity");
         let ps = self.pool.page_size();
         let (page_idx, off) = (pos / ps, pos % ps);
+        let codec = self.pool.codec().cloned();
         let page = self.writable_page(page_idx);
-        page.k[layer].row_mut(off).copy_from_slice(k_row);
-        page.v[layer].row_mut(off).copy_from_slice(v_row);
+        match codec {
+            None => {
+                page.k[layer].row_mut(off).copy_from_slice(k_row);
+                page.v[layer].row_mut(off).copy_from_slice(v_row);
+            }
+            Some(codec) => {
+                let lc = codec.observe(layer, k_row, v_row);
+                let w = codec.words_per_row();
+                let kw = &mut page.ck[layer][off * w..(off + 1) * w];
+                codec.encode_row(lc, k_row, kw, page.k[layer].row_mut(off));
+                let vw = &mut page.cv[layer][off * w..(off + 1) * w];
+                codec.encode_row(lc, v_row, vw, page.v[layer].row_mut(off));
+            }
+        }
     }
 
     /// Finish a block step — same contract as [`KvCache::commit_block`].
@@ -711,6 +843,116 @@ mod tests {
         assert_eq!(borrower.k_row(0, 1)[0], 99.0);
         assert_eq!(owner.k_row(0, 1)[0], 2.0, "owner page untouched by COW");
         assert_eq!(borrower.k_row(0, 0), owner.k_row(0, 0), "committed row copied");
+    }
+
+    fn quant_pool(bits: u32) -> (Arc<KvQuantCodec>, KvPool) {
+        use crate::quant::kv::KvQuantSpec;
+        let cfg = cfg();
+        let codec = Arc::new(KvQuantCodec::new(
+            KvQuantSpec::new(bits).unwrap(),
+            cfg.n_layer,
+            cfg.d_model,
+            7,
+        ));
+        let pool = KvPool::with_codec(&cfg, 4, Some(codec.clone())).unwrap();
+        (codec, pool)
+    }
+
+    fn probe_row(pos: usize, layer: usize, salt: usize) -> Vec<f32> {
+        (0..32).map(|i| ((pos * 31 + i * 7 + layer * 13 + salt) % 17) as f32 - 8.0).collect()
+    }
+
+    #[test]
+    fn quantized_pages_carry_redecodable_codes() {
+        let (codec, pool) = quant_pool(4);
+        assert_eq!(pool.page_codec(), PageCodec::PcdVq { dir_bits: 6, mag_bits: 2 });
+        // payload accounting: word-aligned code words only, no tile bits
+        assert_eq!(pool.page_bits(), 2 * 3 * 4 * codec.code_bits_per_row());
+        assert!(pool.page_bits() < 2 * 3 * 4 * 32 * 32, "codes beat f32 rows");
+        let mut c = PagedKvCache::new(&cfg(), &pool);
+        for pos in 0..5 {
+            for l in 0..3 {
+                c.write_kv_at(l, pos, &probe_row(pos, l, 0), &probe_row(pos, l, 9));
+            }
+        }
+        c.commit_block(&[1, 2, 3, 4, 5]);
+        assert!(codec.frozen());
+        // the resident f32 tile is derived state: re-decoding the packed
+        // codes reproduces it bit-for-bit
+        let ps = pool.page_size();
+        let mut out = vec![0.0f32; 32];
+        for pos in 0..5 {
+            for l in 0..3 {
+                let lc = codec.layer(l).unwrap();
+                let page = &c.pages()[pos / ps];
+                codec.decode_row(lc, page.k_codes(l, pos % ps), &mut out);
+                let tile: Vec<u32> = c.k_row(l, pos).iter().map(|x| x.to_bits()).collect();
+                let redo: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(tile, redo, "layer {l} pos {pos}: tile is not decode(codes)");
+                codec.decode_row(lc, page.v_codes(l, pos % ps), &mut out);
+                let vtile: Vec<u32> = c.v_row(l, pos).iter().map(|x| x.to_bits()).collect();
+                let vredo: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(vtile, vredo);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_pages_have_no_code_payload() {
+        let pool = KvPool::new(&cfg(), 4).unwrap();
+        assert_eq!(pool.page_codec(), PageCodec::F32);
+        let mut c = PagedKvCache::new(&cfg(), &pool);
+        fill(&mut c, &[1, 2]);
+        assert!(c.pages()[0].k_codes(0, 0).is_empty());
+        assert!(c.pages()[0].v_codes(0, 1).is_empty());
+    }
+
+    #[test]
+    fn cow_copies_code_words_alongside_tile() {
+        let (codec, pool) = quant_pool(4);
+        let mut owner = PagedKvCache::new(&cfg(), &pool);
+        for pos in 0..4 {
+            for l in 0..3 {
+                owner.write_kv_at(l, pos, &probe_row(pos, l, 0), &probe_row(pos, l, 9));
+            }
+        }
+        owner.commit_block(&[1, 2, 3, 4]);
+        let mut borrower = PagedKvCache::new(&cfg(), &pool);
+        borrower.attach(&owner.pages().to_vec(), owner.tokens());
+        borrower.tokens.truncate(2);
+        borrower.write_kv_at(0, 2, &probe_row(90, 0, 3), &probe_row(90, 0, 4));
+        assert_eq!(pool.counters().cow_copies, 1);
+        // committed rows 0..2: tile AND codes copied, still re-decodable
+        let mut out = vec![0.0f32; 32];
+        for pos in 0..2 {
+            assert_eq!(borrower.k_row(0, pos), owner.k_row(0, pos));
+            let page = &borrower.pages()[0];
+            assert_eq!(page.k_codes(0, pos), owner.pages()[0].k_codes(0, pos));
+            codec.decode_row(codec.layer(0).unwrap(), page.k_codes(0, pos), &mut out);
+            assert_eq!(
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                borrower.k_row(0, pos).iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // the divergent row diverged on the borrower only
+        assert_ne!(
+            borrower.pages()[0].k_codes(0, 2),
+            owner.pages()[0].k_codes(0, 2),
+            "divergent write must not alias the shared payload"
+        );
+    }
+
+    #[test]
+    fn codec_geometry_mismatch_is_rejected() {
+        use crate::quant::kv::KvQuantSpec;
+        let other = GptConfig { d_model: 64, ..cfg() };
+        let codec = Arc::new(KvQuantCodec::new(
+            KvQuantSpec::new(4).unwrap(),
+            other.n_layer,
+            other.d_model,
+            7,
+        ));
+        assert!(KvPool::with_codec(&cfg(), 4, Some(codec)).is_err());
     }
 
     #[test]

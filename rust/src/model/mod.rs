@@ -19,4 +19,6 @@ pub(crate) use forward::{
 };
 pub use gpt::{GptModel, QuantizedGpt};
 pub use kv_cache::KvCache;
-pub use kv_pool::{KvLayerView, KvPage, KvPool, KvPoolCounters, KvStore, PagedKvCache};
+pub use kv_pool::{
+    KvLayerView, KvPage, KvPool, KvPoolCounters, KvStore, PageCodec, PagedKvCache,
+};

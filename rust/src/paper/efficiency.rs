@@ -143,6 +143,80 @@ pub fn verify_codes_resident(q: &QuantizedGpt) -> Result<f64> {
     Ok(q.dense_bits() as f64 / q.resident_bits() as f64)
 }
 
+/// The cache-side companion of [`verify_codes_resident`]: verify that a
+/// server running a quantized KV cache (DESIGN.md §15) accounts its cache
+/// exactly like the weight path accounts the artifact —
+///
+/// 1. resident cache bits are **code** bits: `kv_cache_bpw` equals the
+///    codec's word-aligned code bits per row over `d_model`, at least the
+///    declared per-value width and within one u64 of word-packing slack
+///    per row;
+/// 2. the frozen per-layer codebooks are counted once, at the codec
+///    ([`Server::kv_codebook_bits`] ≡ the codec's own accounting), never
+///    folded into per-page payload bits;
+/// 3. the decode LUT is *derived* state, exactly like the weight kernel's:
+///    re-decoding resident codes moves neither payload nor codebook bits.
+///
+/// Returns the cache compression ratio vs the exact f32 layout (1.0 when
+/// the server runs without a codec).
+///
+/// [`Server::kv_codebook_bits`]: crate::coordinator::Server::kv_codebook_bits
+pub fn verify_kv_cache_resident(server: &Server) -> Result<f64> {
+    let Some(codec) = server.kv_codec().cloned() else {
+        anyhow::ensure!(
+            server.kv_codebook_bits() == 0 && server.kv_cache_bpw() == 32.0,
+            "exact cache reported quantized accounting ({} codebook bits, {} bpw)",
+            server.kv_codebook_bits(),
+            server.kv_cache_bpw(),
+        );
+        return Ok(1.0);
+    };
+    let spec = codec.spec();
+    let bpw = server.kv_cache_bpw();
+    let declared = spec.bits() as f64;
+    anyhow::ensure!(
+        bpw >= declared,
+        "cache bpw {bpw:.3} below the declared {declared} bits/value — \
+         accounting dropped code bits"
+    );
+    let code_bits = codec.n_sub() as u64 * spec.code_width() as u64;
+    let row_bits = codec.code_bits_per_row();
+    anyhow::ensure!(
+        row_bits >= code_bits && row_bits - code_bits < 64,
+        "per-row cache bits {row_bits} vs raw code bits {code_bits}: more \
+         than one u64 of word-packing slack"
+    );
+
+    // codebooks once, at the codec — and the decode LUT stays derived state
+    anyhow::ensure!(
+        server.kv_codebook_bits() == codec.codebook_bits(),
+        "server cache codebook bits ({}) diverge from the codec's ({})",
+        server.kv_codebook_bits(),
+        codec.codebook_bits(),
+    );
+    let codebook_before = codec.codebook_bits();
+    let cache_before = server.kv_cache_bits();
+    let mut out = vec![0.0f32; codec.d_model()];
+    for layer in 0..codec.n_layer() {
+        if let Some(lc) = codec.layer(layer) {
+            // code 0 (direction 0, magnitude 0) is valid in every frozen
+            // layer, so an all-zero row exercises the LUT safely
+            let words = vec![0u64; codec.words_per_row()];
+            codec.decode_row(lc, &words, &mut out);
+        }
+    }
+    anyhow::ensure!(
+        codec.codebook_bits() == codebook_before && server.kv_cache_bits() == cache_before,
+        "decoding resident cache codes moved the stored-state accounting \
+         (codebooks {} -> {}, cache {} -> {})",
+        codebook_before,
+        codec.codebook_bits(),
+        cache_before,
+        server.kv_cache_bits(),
+    );
+    Ok(32.0 / bpw)
+}
+
 fn drive(server: &mut Server, ctx: &Ctx, n_requests: usize, max_new: usize) -> Result<f64> {
     let (tx, rx) = channel::<GenRequest>();
     let mut batcher = Batcher::new(rx, BatcherConfig::default());
@@ -226,6 +300,22 @@ pub fn run_efficiency(ctx: &Ctx, model_name: &str, quick: bool) -> Result<()> {
          {:.1} KiB + codebooks {:.1} KiB)",
         host_server.resident_weight_bits as f64 / 8.0 / 1024.0,
         host_server.resident_codebook_bits as f64 / 8.0 / 1024.0,
+    );
+
+    // --- quantized KV cache (DESIGN.md §15): same weights, 4-bit cache ---
+    let mut kvq_server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .kv_quant(4)
+        .build()?;
+    let kvq_tps = drive(&mut kvq_server, ctx, n_req, max_new)?;
+    let cache_ratio = verify_kv_cache_resident(&kvq_server)?;
+    println!(
+        "4-bit polar-decoupled KV cache: {kvq_tps:.1} tok/s \
+         (cache {:.1} bpw = {:.1}x smaller than f32 rows; \
+         {:.1} KiB resident codes + {:.2} KiB frozen cache codebooks)",
+        kvq_server.kv_cache_bpw(),
+        cache_ratio,
+        kvq_server.kv_cache_bits() as f64 / 8.0 / 1024.0,
+        kvq_server.kv_codebook_bits() as f64 / 8.0 / 1024.0,
     );
 
     // --- XLA serving throughput (needs the AOT artifacts) ---

@@ -17,7 +17,7 @@ mod table1;
 mod table3;
 mod table4;
 
-pub use efficiency::{run_efficiency, verify_codes_resident};
+pub use efficiency::{run_efficiency, verify_codes_resident, verify_kv_cache_resident};
 pub use fig1::{run_fig1a, run_fig1b};
 pub use fig3::run_fig3;
 pub use table1::{run_table1, run_table2};

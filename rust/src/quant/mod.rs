@@ -47,6 +47,7 @@
 pub mod assign;
 pub mod error;
 pub mod gptq;
+pub mod kv;
 pub mod packing;
 pub mod pcdvq;
 pub mod quip;

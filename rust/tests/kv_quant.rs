@@ -1,0 +1,421 @@
+//! Quantized KV cache (DESIGN.md §15) vs the exact layout and its oracles.
+//!
+//! The contract: `--kv-quant 0` is **byte-identical** to the unquantized
+//! serving path (the parity oracle); at 2..=8 cache bits the polar-decoupled
+//! codec trades logit fidelity for resident bits behind a hard quality gate
+//! (quantized-cache perplexity within a per-bit-width tolerance of the
+//! exact-cache perplexity, via [`pcdvq::eval::KvQuantForward`] +
+//! `evaluate_ppl`'s session path); serving stays deterministic across thread
+//! counts and KV layouts (DESIGN.md §12/§13 extend to code-carrying pages);
+//! and slide+rebuild eviction re-quantizes rebuilt rows against the *frozen*
+//! per-layer codebooks — never rebuilding them.
+//!
+//! CI drives this suite under `PALLAS_THREADS={1,4}` × `PALLAS_KV_PAGE={4,0}`.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use pcdvq::coordinator::{
+    Batcher, BatcherConfig, GenRequest, GenResponse, Server, ServingWeights,
+};
+use pcdvq::eval::{evaluate_ppl, DecodeSession, ForwardPass, KvQuantForward};
+use pcdvq::model::{GptModel, HostForward, KvCache, KvPool, PagedKvCache, QuantizedGpt};
+use pcdvq::paper::verify_kv_cache_resident;
+use pcdvq::proptest::{for_cases, synthetic_tinygpt, tiny_pcdvq};
+use pcdvq::quant::kv::{KvQuantCodec, KvQuantSpec};
+use pcdvq::tensor::argmax;
+
+/// Synthetic tinygpt (d=64, 2 layers, ctx=64) — the quantized-cache testbed.
+fn synthetic_model(name: &str) -> GptModel {
+    synthetic_tinygpt("pcdvq_kvq_tests", name, 53)
+}
+
+fn quantize(model: &GptModel) -> QuantizedGpt {
+    QuantizedGpt::quantize(model, &tiny_pcdvq())
+}
+
+fn prompt_bytes(n: usize, salt: usize) -> Vec<u8> {
+    (0..n).map(|i| ((i * 11 + salt * 17 + 3) % 251) as u8).collect()
+}
+
+/// Serve pre-queued `reqs` = (prompt, max_new, temperature) through the
+/// continuous loop. `kv_quant` None keeps the server's env default;
+/// `Some(0)` pins the exact codec; `kv_page` 0 selects the dense layout.
+#[allow(clippy::too_many_arguments)]
+fn run_continuous(
+    q: &QuantizedGpt,
+    kv_quant: Option<u32>,
+    kv_page: usize,
+    prefix_share: bool,
+    threads: usize,
+    max_slots: usize,
+    chunk: usize,
+    reqs: &[(Vec<u8>, usize, f32)],
+) -> (Vec<GenResponse>, Server) {
+    let mut builder = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .max_slots(max_slots)
+        .prefill_chunk(chunk)
+        .kv_page(kv_page)
+        .prefix_share(prefix_share)
+        .threads(threads);
+    if let Some(bits) = kv_quant {
+        builder = builder.kv_quant(bits);
+    }
+    let mut server = builder.build().unwrap();
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rxs = Vec::new();
+    for (p, max_new, temp) in reqs {
+        let (rtx, rrx) = channel();
+        batcher.push(GenRequest::builder(p.clone()).max_new(*max_new).temperature(*temp).build(rtx));
+        rxs.push(rrx);
+    }
+    server.serve_continuous(&mut batcher).unwrap();
+    let resps = rxs.iter().map(|r| r.recv().expect("response missing")).collect();
+    (resps, server)
+}
+
+fn assert_no_leaks(server: &Server, tag: &str) {
+    let audit = server.kv_page_audit().expect("paged server has an audit");
+    assert_eq!(audit.slot_chain_pages, 0, "{tag}: idle slots hold pages");
+    assert_eq!(
+        audit.created,
+        audit.slot_free_pages + audit.prefix_pages + audit.dropped,
+        "{tag}: page leak — audit was {audit:?}"
+    );
+}
+
+/// Acceptance: `--kv-quant 0` is the exact codec — byte-identical tokens,
+/// steps and cache accounting vs a server that never saw the flag, on both
+/// the paged and dense layouts.
+#[test]
+fn kv_quant_zero_is_byte_identical_to_the_unquantized_path() {
+    let env_quant = std::env::var("PALLAS_KV_QUANT").unwrap_or_default();
+    if !env_quant.trim().is_empty() && env_quant.trim() != "0" {
+        // the baseline server would inherit a quantized env default and the
+        // comparison below would (correctly) refuse to hold
+        return;
+    }
+    let model = synthetic_model("oracle0");
+    let q = quantize(&model);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = (0..4)
+        .map(|i| (prompt_bytes(12 + 5 * i, i), 5, if i % 2 == 0 { 0.0 } else { 0.8 }))
+        .collect();
+    for ps in [4usize, 0] {
+        let (base, base_srv) = run_continuous(&q, None, ps, true, 0, 2, 8, &reqs);
+        let (zero, zero_srv) = run_continuous(&q, Some(0), ps, true, 0, 2, 8, &reqs);
+        for (i, (a, b)) in base.iter().zip(&zero).enumerate() {
+            assert_eq!(a.generated, b.generated, "ps {ps} req {i}: --kv-quant 0 changed tokens");
+            assert_eq!(a.steps, b.steps, "ps {ps} req {i}: --kv-quant 0 changed steps");
+        }
+        assert_eq!(base_srv.kv_cache_bits(), zero_srv.kv_cache_bits(), "ps {ps}: cache bits");
+        assert!(zero_srv.kv_codec().is_none(), "ps {ps}: bits 0 must not build a codec");
+        assert_eq!(zero_srv.kv_codebook_bits(), 0, "ps {ps}: exact cache has no codebooks");
+        assert_eq!(zero_srv.kv_cache_bpw(), 32.0, "ps {ps}: exact cache is 32 bpw");
+        assert_eq!(zero_srv.metrics.kv_decoded_subvecs, 0, "ps {ps}: exact cache decodes nothing");
+        assert_eq!(verify_kv_cache_resident(&zero_srv).unwrap(), 1.0, "ps {ps}: exact ratio");
+    }
+}
+
+/// The {8, 6, 4}-bit sweep: teacher-forced greedy agreement with the exact
+/// session (the same token stream feeds both, so mismatches never compound)
+/// and max absolute logit drift per bit width. Floors are generous — the
+/// synthetic model is random-weight — but the trend must hold: more cache
+/// bits, more agreement.
+#[test]
+fn cache_bits_sweep_reports_match_rate_and_bounded_drift() {
+    let model = synthetic_model("sweep");
+    let cfg = &model.config;
+    let hf = HostForward::from_quantized(quantize(&model)).unwrap();
+
+    // exact reference stream: greedy tokens + the logits at every position
+    let prompt: Vec<i32> = prompt_bytes(40, 3).iter().map(|&b| b as i32).collect();
+    let n_steps = 20usize;
+    let mut exact = hf.begin_session().expect("host backend has sessions");
+    let mut exact_logits = vec![exact.prefill(&prompt).unwrap()];
+    let mut stream = Vec::with_capacity(n_steps);
+    for _ in 0..n_steps {
+        let next = argmax(exact_logits.last().unwrap()) as i32;
+        stream.push(next);
+        exact_logits.push(exact.step(next).unwrap());
+    }
+
+    let mut sweep: Vec<(u32, f64, f32)> = Vec::new();
+    for bits in [8u32, 6, 4] {
+        let codec = Arc::new(KvQuantCodec::new(
+            KvQuantSpec::new(bits).unwrap(),
+            cfg.n_layer,
+            cfg.d_model,
+            0xBEEF ^ bits as u64,
+        ));
+        let qf = KvQuantForward::new(&hf, codec.clone());
+        let mut sess = qf.begin_session().expect("quantized wrapper has sessions");
+        let mut logits = sess.prefill(&prompt).unwrap();
+        let (mut matches, mut drift) = (0usize, 0.0f32);
+        for (i, &tok) in stream.iter().enumerate() {
+            let e = &exact_logits[i];
+            if argmax(&logits) == argmax(e) {
+                matches += 1;
+            }
+            for (a, b) in logits.iter().zip(e) {
+                drift = drift.max((a - b).abs());
+            }
+            logits = sess.step(tok).unwrap();
+        }
+        assert!(drift.is_finite(), "{bits}-bit cache produced non-finite logits");
+        assert!(codec.frozen(), "{bits}-bit codec never froze during prefill");
+        assert!(codec.codebook_bits() > 0, "{bits}-bit codec has empty codebooks");
+        sweep.push((bits, matches as f64 / n_steps as f64, drift));
+    }
+    assert!(sweep[0].1 >= 0.40, "8-bit cache agreement collapsed: {sweep:?}");
+    assert!(sweep[1].1 >= 0.20, "6-bit cache agreement collapsed: {sweep:?}");
+    assert!(sweep[2].1 >= 0.05, "4-bit cache agreement collapsed: {sweep:?}");
+    assert!(
+        sweep[0].1 + 0.30 >= sweep[2].1,
+        "8-bit cache agrees less than 4-bit beyond slack: {sweep:?}"
+    );
+}
+
+/// The hard quality gate: quantized-cache perplexity (through the stateful
+/// session path `evaluate_ppl` uses at batch 1) must stay within a
+/// per-bit-width factor of the exact-cache perplexity.
+#[test]
+fn ppl_delta_gate_at_8_and_4_cache_bits() {
+    let model = synthetic_model("pplgate");
+    let cfg = &model.config;
+    let hf = HostForward::from_quantized(quantize(&model)).unwrap();
+    let n = cfg.ctx * 3 + 1;
+    let tokens: Vec<u32> = (0..n).map(|i| ((i * 7 + 13) % 251) as u32).collect();
+    let exact = evaluate_ppl(&hf, cfg, &tokens, 1, 3, 1.0).unwrap();
+    assert!(exact.ppl.is_finite() && exact.ppl > 0.0);
+
+    for (bits, tol) in [(8u32, 1.5f64), (4, 3.0)] {
+        let codec = Arc::new(KvQuantCodec::new(
+            KvQuantSpec::new(bits).unwrap(),
+            cfg.n_layer,
+            cfg.d_model,
+            0x99E1 ^ bits as u64,
+        ));
+        let qf = KvQuantForward::new(&hf, codec.clone());
+        let quant = evaluate_ppl(&qf, cfg, &tokens, 1, 3, 1.0).unwrap();
+        assert_eq!(quant.n_tokens, exact.n_tokens, "{bits}-bit eval scored fewer positions");
+        assert!(quant.ppl.is_finite(), "{bits}-bit cache ppl is not finite");
+        assert!(
+            quant.ppl <= exact.ppl * tol,
+            "ppl gate failed at {bits} cache bits: quantized {:.3} vs exact {:.3} (tol x{tol})",
+            quant.ppl,
+            exact.ppl,
+        );
+        assert!(codec.frozen(), "{bits}-bit codec never froze during eval");
+        assert!(codec.decoded_subvecs() > 0, "{bits}-bit eval never touched the LUT");
+    }
+}
+
+/// The §12 determinism contract under a quantized cache: 1- vs 4-thread runs
+/// produce identical tokens, steps, counters and — critically — identical
+/// *frozen codebooks* (the first K/V row is observed on the coordinator
+/// thread, never racing the slot fan-out). The paged and dense layouts stay
+/// drop-in equal with codes in the pages, and the accounting identities
+/// (`kv_cache_bpw`, codebook bits, metrics gauges) hold.
+#[test]
+fn quantized_serving_is_layout_and_thread_invariant() {
+    let model = synthetic_model("threads_q");
+    let q = quantize(&model);
+    let prefix = prompt_bytes(20, 9);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = (0..5)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend(prompt_bytes(3 + i, 70 + i));
+            (p, 3 + (i % 3), if i == 4 { 0.8 } else { 0.0 })
+        })
+        .collect();
+    let run =
+        |page: usize, threads: usize| run_continuous(&q, Some(4), page, true, threads, 3, 8, &reqs);
+    let (serial, s_srv) = run(4, 1);
+    let (par, p_srv) = run(4, 4);
+    let (dense, d_srv) = run(0, 1);
+
+    for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: threads changed tokens");
+        assert_eq!(a.steps, b.steps, "req {i}: threads changed steps");
+        assert_eq!(a.seq, b.seq, "req {i}: admission order");
+    }
+    for (i, (a, b)) in serial.iter().zip(&dense).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: paged vs dense quantized diverged");
+    }
+
+    let (sm, pm) = (&s_srv.metrics, &p_srv.metrics);
+    assert_eq!(sm.decode_steps, pm.decode_steps);
+    assert_eq!(sm.slot_steps_busy, pm.slot_steps_busy);
+    assert_eq!(sm.kv_pages_allocated, pm.kv_pages_allocated);
+    assert_eq!(sm.kv_pages_reused, pm.kv_pages_reused);
+    assert_eq!(sm.prefix_hits, pm.prefix_hits);
+    assert_eq!(sm.prefix_tokens_reused, pm.prefix_tokens_reused);
+    assert_eq!(sm.kv_decoded_subvecs, pm.kv_decoded_subvecs, "decode-tile counter raced");
+    assert!(sm.kv_decoded_subvecs > 0, "quantized serving never encoded a row");
+    assert_eq!(sm.kv_cache_codebook_bits, pm.kv_cache_codebook_bits, "codebooks raced");
+    assert_eq!(sm.kv_cache_resident_bits, pm.kv_cache_resident_bits);
+
+    // identical frozen codebooks across layouts too (same seed row)
+    assert_eq!(s_srv.kv_codebook_bits(), d_srv.kv_codebook_bits());
+
+    // accounting identities: gauges mirror the accessors, bpw is the
+    // word-aligned code rate, the verifier's ratio beats 4x
+    let codec = s_srv.kv_codec().expect("quantized server has a codec");
+    assert_eq!(codec.spec().bits(), 4);
+    assert_eq!(s_srv.kv_codebook_bits(), codec.codebook_bits());
+    assert_eq!(sm.kv_cache_codebook_bits, s_srv.kv_codebook_bits());
+    assert_eq!(sm.kv_cache_resident_bits, s_srv.kv_cache_bits());
+    assert_eq!(sm.kv_cache_bpw, s_srv.kv_cache_bpw());
+    assert!(
+        s_srv.kv_cache_bpw() >= 4.0 && s_srv.kv_cache_bpw() < 32.0,
+        "4-bit cache bpw out of range: {}",
+        s_srv.kv_cache_bpw()
+    );
+    let ratio = verify_kv_cache_resident(&s_srv).unwrap();
+    assert!(ratio > 2.0, "4-bit cache compression ratio too small: {ratio}");
+    assert_no_leaks(&s_srv, "threads=1");
+    assert_no_leaks(&p_srv, "threads=4");
+}
+
+/// Property (satellite): interleaved shared-prefix families with
+/// code-carrying pages — attach/publish, COW bookkeeping, eviction and the
+/// no-leak audit hold at random bit widths, page sizes and chunk sizes;
+/// outputs and counters are bit-identical across thread counts; the dense
+/// layout stays a drop-in for the same traffic.
+#[test]
+fn prop_quantized_prefix_families_stay_deterministic_without_leaks() {
+    let model = synthetic_model("prop_q");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+    for_cases(3, 0x4B56_5172, |g| {
+        let bits = [4u32, 6, 8][g.usize_in(0, 2)];
+        let ps = [2usize, 4, 8][g.usize_in(0, 2)];
+        let chunk = [1usize, ps, 16][g.usize_in(0, 2)];
+        let mut reqs: Vec<(Vec<u8>, usize, f32)> = Vec::new();
+        for fam in 0..2usize {
+            let plen = g.usize_in(ps + 1, 3 * ps);
+            let prefix = prompt_bytes(plen, 100 + fam + g.case_seed as usize);
+            for member in 0..3usize {
+                let mut p = prefix.clone();
+                let suffix = g.usize_in(1, 2 * ps);
+                p.extend((0..suffix).map(|_| g.rng.below(251) as u8));
+                let max_new = g.usize_in(1, 6);
+                assert!(p.len() + max_new <= ctx + 1);
+                let at = member * 2 + fam;
+                if at >= reqs.len() {
+                    reqs.push((p, max_new, 0.0));
+                } else {
+                    reqs.insert(at, (p, max_new, 0.0));
+                }
+            }
+        }
+        // an eviction-crossing request re-quantizes its rebuilt window in
+        // the same pool, against the already-frozen codebooks
+        reqs.push((prompt_bytes(ctx + 9, g.case_seed as usize), 8, 0.0));
+
+        let run = |page: usize, threads: usize| {
+            run_continuous(&q, Some(bits), page, true, threads, 2, chunk, &reqs)
+        };
+        let (serial, s_srv) = run(ps, 1);
+        let (par, p_srv) = run(ps, 4);
+        let (dense, _) = run(0, 1);
+        let tag = format!("case {} bits {bits} ps {ps} chunk {chunk}", g.case_seed);
+        for (i, ((a, b), c)) in serial.iter().zip(&par).zip(&dense).enumerate() {
+            assert_eq!(a.generated, b.generated, "{tag} req {i}: threads changed tokens");
+            assert_eq!(a.steps, b.steps, "{tag} req {i}: threads changed steps");
+            assert_eq!(a.seq, b.seq, "{tag} req {i}: admission order");
+            assert_eq!(a.generated, c.generated, "{tag} req {i}: paged vs dense diverged");
+        }
+        assert_eq!(s_srv.kv_pool_counters(), p_srv.kv_pool_counters(), "{tag}: pool counters");
+        assert_eq!(
+            s_srv.prefix_resident_pages(),
+            p_srv.prefix_resident_pages(),
+            "{tag}: trie size"
+        );
+        let (sm, pm) = (&s_srv.metrics, &p_srv.metrics);
+        assert_eq!(sm.kv_decoded_subvecs, pm.kv_decoded_subvecs, "{tag}: decode counter");
+        assert_eq!(sm.kv_cache_codebook_bits, pm.kv_cache_codebook_bits, "{tag}: codebooks");
+        assert_eq!(sm.prefix_hits, pm.prefix_hits, "{tag}: prefix hits");
+        assert_eq!(sm.prefix_pages_published, pm.prefix_pages_published, "{tag}: published");
+        assert!(sm.prefix_hits >= 1, "{tag}: families never shared a quantized page");
+        assert!(sm.kv_decoded_subvecs > 0, "{tag}: codec never engaged");
+        assert_no_leaks(&s_srv, &format!("{tag} threads=1"));
+        assert_no_leaks(&p_srv, &format!("{tag} threads=4"));
+    });
+}
+
+/// Regression (satellite): slide+rebuild eviction must re-quantize the
+/// rebuilt rows against the **frozen** layer codebooks — never rebuild the
+/// codebooks. After evicting past capacity, the surviving window's codes,
+/// decoded tiles and logits equal a fresh quantized prefill of exactly that
+/// window under the same (already frozen) codec, on both cache layouts.
+#[test]
+fn eviction_requantizes_rebuilt_rows_against_the_frozen_codebook() {
+    let model = synthetic_model("evict_q");
+    let cfg = &model.config;
+    let hf = HostForward::from_quantized(quantize(&model)).unwrap();
+    for bits in [8u32, 4] {
+        let codec = Arc::new(KvQuantCodec::new(
+            KvQuantSpec::new(bits).unwrap(),
+            cfg.n_layer,
+            cfg.d_model,
+            0xE71C ^ bits as u64,
+        ));
+        let stream: Vec<i32> =
+            (0..cfg.ctx + cfg.ctx / 2).map(|i| ((i * 11 + 5) % 251) as i32).collect();
+
+        let mut cache = KvCache::with_codec(cfg, Some(codec.clone()));
+        let slid_logits = hf.prefill(&stream, &mut cache).unwrap();
+        assert!(cache.evictions() >= 1, "{bits} bits: stream never crossed the slide boundary");
+        assert!(codec.frozen());
+        let books = codec.codebook_bits();
+
+        // fresh quantized prefill of the surviving window, same frozen codec
+        let window = cache.tokens().to_vec();
+        let mut fresh = KvCache::with_codec(cfg, Some(codec.clone()));
+        let fresh_logits = hf.prefill(&window, &mut fresh).unwrap();
+        assert_eq!(cache.tokens(), fresh.tokens(), "{bits} bits: window mismatch");
+        assert_eq!(slid_logits, fresh_logits, "{bits} bits: logits after slide");
+        for layer in 0..cfg.n_layer {
+            let (k1, v1) = cache.layer(layer);
+            let (k2, v2) = fresh.layer(layer);
+            for pos in 0..cache.len() {
+                assert_eq!(
+                    cache.k_codes(layer, pos),
+                    fresh.k_codes(layer, pos),
+                    "{bits} bits: K codes {layer}/{pos} — rebuilt rows used a different codebook"
+                );
+                assert_eq!(
+                    cache.v_codes(layer, pos),
+                    fresh.v_codes(layer, pos),
+                    "{bits} bits: V codes {layer}/{pos}"
+                );
+                assert_eq!(k1.row(pos), k2.row(pos), "{bits} bits: K tile {layer}/{pos}");
+                assert_eq!(v1.row(pos), v2.row(pos), "{bits} bits: V tile {layer}/{pos}");
+            }
+        }
+        assert_eq!(
+            codec.codebook_bits(),
+            books,
+            "{bits} bits: eviction rebuilt the codebook instead of reusing the frozen one"
+        );
+
+        // the paged layout rides the same slide schedule and codec
+        let pool = KvPool::with_codec(cfg, 4, Some(codec.clone())).unwrap();
+        let mut paged = PagedKvCache::new(cfg, &pool);
+        let paged_logits = hf.prefill(&stream, &mut paged).unwrap();
+        assert_eq!(paged_logits, slid_logits, "{bits} bits: paged logits after slide");
+        assert_eq!(paged.tokens(), cache.tokens(), "{bits} bits: paged window");
+        assert!(paged.evictions() >= 1);
+        for layer in 0..cfg.n_layer {
+            let (kd, vd) = cache.layer(layer);
+            for pos in 0..cache.len() {
+                assert_eq!(paged.k_row(layer, pos), kd.row(pos), "{bits} bits: paged K");
+                assert_eq!(paged.v_row(layer, pos), vd.row(pos), "{bits} bits: paged V");
+            }
+        }
+        assert_eq!(codec.codebook_bits(), books, "{bits} bits: paged slide rebuilt the codebook");
+    }
+}
