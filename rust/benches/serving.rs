@@ -330,6 +330,71 @@ fn main() {
         piped_tps / single_tps.max(1e-9)
     );
 
+    // --- kv-cached sharded continuous decode (DESIGN.md §16) ---
+    // serve_continuous through node-owned slot caches at requested shard
+    // counts 1/2/4 (the 2-layer fixture caps the chain at 2 nodes, so the
+    // 4-shard run measures the degraded plan), plus the sharded re-forward
+    // oracle on the same traffic. Sanity ordering (asserted against
+    // baselines/): kv-cached ≥ re-forward at every shard count.
+    println!("== sharded kv-cached continuous decode (requested shards 1/2/4) ==");
+    let shard_reqs: Vec<(Vec<u8>, usize)> = (0..6)
+        .map(|j| ((0..24).map(|i| ((i * 7 + j * 31 + 1) % 251) as u8).collect(), 8usize))
+        .collect();
+    let shard_toks: u64 = shard_reqs.iter().map(|(_, m)| *m as u64).sum();
+    for n in [1usize, 2, 4] {
+        let mut srv = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .shards(n)
+            .max_slots(2)
+            .prefill_chunk(16)
+            .build()
+            .unwrap();
+        drive_mixed(&mut srv, &shard_reqs, BatcherConfig::default(), true); // warm-up
+        let m = bench
+            .run_elems(&format!("sharded_vs_single/kv_cached_s{n}_tok"), shard_toks, || {
+                drive_mixed(&mut srv, &shard_reqs, BatcherConfig::default(), true)
+            })
+            .clone();
+        let cached_tps = tok_s(m.median_ns, shard_toks as f64);
+
+        let mut re_srv = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .shards(n)
+            .decode(DecodePolicy::Reforward)
+            .build()
+            .unwrap();
+        drive_mixed(&mut re_srv, &shard_reqs, BatcherConfig::default(), false); // warm-up
+        let re = bench
+            .run_elems(&format!("sharded_vs_single/reforward_s{n}_tok"), shard_toks, || {
+                drive_mixed(&mut re_srv, &shard_reqs, BatcherConfig::default(), false)
+            })
+            .clone();
+        let re_tps = tok_s(re.median_ns, shard_toks as f64);
+
+        // per-node resident bits: node's share of KV pages + its cache
+        // grids, on top of the codebook-once-per-node weight bits above
+        // (recorded as raw bit counts, not durations)
+        match (srv.kv_cache_bits_per_node(), srv.kv_codebook_bits_per_node()) {
+            (Some(cache), Some(grids)) => {
+                for (i, (cb, gb)) in cache.iter().zip(&grids).enumerate() {
+                    bench.record_ns(
+                        &format!("sharded_vs_single/kv_cached_s{n}_node{i}_resident_bits"),
+                        (cb + gb) as f64,
+                    );
+                }
+            }
+            _ => {
+                bench.record_ns(
+                    &format!("sharded_vs_single/kv_cached_s{n}_node0_resident_bits"),
+                    (srv.kv_cache_bits() + srv.kv_codebook_bits()) as f64,
+                );
+            }
+        }
+        println!(
+            "kv-cached, shards {n}: {cached_tps:>10.1} tok/s   (re-forward \
+             {re_tps:>10.1} tok/s, {:.2}x cached/reforward)",
+            cached_tps / re_tps.max(1e-9)
+        );
+    }
+
     // --- ingress_load: closed-loop HTTP traffic through the front end ---
     // Client threads drive POST /v1/generate over a real socket with mixed
     // prompt/output lengths and bursty arrivals (a think-time gap every 4th

@@ -113,8 +113,9 @@ SUBCOMMANDS
                         POST /v1/generate (SSE token stream + usage
                         record), GET /metrics (Prometheus text),
                         GET /healthz; admission gate sheds overload
-                        with 429 + Retry-After. Continuous host path
-                        only (e.g. --host --listen 0.0.0.0:8080)
+                        with 429 + Retry-After. Continuous host path,
+                        single-node or sharded (e.g. --host --listen
+                        0.0.0.0:8080)
              --host     serve on the host backend (codes-resident with
                         --quantized: packed codes + shared codebooks only,
                         no XLA artifacts, no dense weights); decodes
@@ -139,8 +140,9 @@ SUBCOMMANDS
                         (paged layout only; hot prompts re-prefill)
              --shards N  layer-shard the codes-resident model across N
                         worker nodes (host + --quantized only; codebooks
-                        resident once per node; decodes via re-forward
-                        through the shard chain)
+                        resident once per node; KV-cached decode against
+                        node-owned slot caches, honoring --kv-page-size /
+                        --kv-quant; --reforward keeps the oracle)
              --static-batch  coalesce into fixed batches instead of
                         continuous admission (the XLA path always does)
              --reforward  disable the KV cache: windowed re-forward every

@@ -30,8 +30,11 @@
 //!   collection partitions by layer across N worker nodes
 //!   ([`ShardedForward`]), activations pipeline through the shard chain,
 //!   and compression accounting extends to **codebook-once-per-node** bits
-//!   ([`sharded_codebook_bits`]). Bit-identical to the single-node host
-//!   forward at any shard count (DESIGN.md §12).
+//!   ([`sharded_codebook_bits`]). Each node also owns per-slot KV state
+//!   for its layer range, so `serve_continuous` decodes KV-cached through
+//!   the chain ([`ShardedForward::step_slots`], DESIGN.md §16).
+//!   Bit-identical to the single-node host forward at any shard count
+//!   (DESIGN.md §12).
 //! * [`ingress`] — the network front end: a threaded HTTP/1.1 listener
 //!   (`POST /v1/generate` streamed as SSE, `GET /metrics` in Prometheus
 //!   text, `GET /healthz`) with an admission gate that sheds overload
@@ -60,4 +63,4 @@ pub use server::{
     validate_kv_page, validate_kv_quant, DecodePolicy, KvPageAudit, Server, ServerBuilder,
     ServingWeights,
 };
-pub use shard::{shard_layers, ShardBits, ShardedForward};
+pub use shard::{shard_layers, ShardBits, ShardStepJob, ShardedForward};

@@ -562,9 +562,12 @@ impl Server {
     /// range's packed codes plus one copy of every codebook those codes
     /// reference (codebook-once-per-node accounting — the reported
     /// `resident_codebook_bits` is the per-node dedup summed over nodes).
-    /// Sharded serving decodes by windowed re-forward
-    /// ([`DecodePolicy::Reforward`]) through the chain; per-slot KV caches
-    /// stay a single-node feature for now.
+    /// Sharded servers decode incrementally against **node-owned** per-slot
+    /// KV caches ([`DecodePolicy::KvCached`], DESIGN.md §16) and honor the
+    /// same [`Server::kv_page`] / [`Server::kv_quant`] / prefix-sharing
+    /// layout knobs as single-node serving; the windowed re-forward
+    /// ([`DecodePolicy::Reforward`]) survives as the cross-topology parity
+    /// oracle.
     #[deprecated(since = "0.2.0", note = "use `Server::builder(weights).shards(n).build()`")]
     pub fn new_host_sharded(weights: ServingWeights, n_shards: usize) -> Result<Self> {
         Server::sharded_server(weights, n_shards)
@@ -586,7 +589,7 @@ impl Server {
         Ok(Server::with_backend(
             Backend::Sharded(sf),
             config,
-            DecodePolicy::Reforward,
+            DecodePolicy::KvCached,
             payload,
             cb_bits,
         ))
@@ -620,22 +623,57 @@ impl Server {
     /// account ([`Self::kv_codebook_bits`]) and the decoded f32 tiles are
     /// derived state counted by neither.
     pub fn kv_cache_bits(&self) -> u64 {
+        if let Backend::Sharded(sf) = &self.backend {
+            return sf.kv_cache_bits();
+        }
         match &self.kv_pool {
             Some(pool) => pool.pages_created() * pool.page_bits(),
             None => self.slot_caches.iter().map(|c| c.memory_bits()).sum(),
         }
     }
 
+    /// Resident K/V cache bits per shard node, in chain order (`None` on
+    /// single-node backends — use [`Self::kv_cache_bits`]). Each node is
+    /// charged only its own layer range's pages/windows.
+    pub fn kv_cache_bits_per_node(&self) -> Option<Vec<u64>> {
+        match &self.backend {
+            Backend::Sharded(sf) => Some(sf.kv_cache_bits_per_node()),
+            _ => None,
+        }
+    }
+
     /// Bits of the frozen per-layer cache codebooks (directions +
     /// magnitude levels, shared across every slot and page; 0 with an
-    /// exact cache or before the first prefill freezes them).
+    /// exact cache or before the first prefill freezes them). On the
+    /// sharded backend this sums node codecs — K/V grids are per-layer, so
+    /// they partition across nodes and the sum equals the single-node
+    /// codec total bit-for-bit (unlike weight codebooks, which duplicate
+    /// once per node).
     pub fn kv_codebook_bits(&self) -> u64 {
+        if let Backend::Sharded(sf) = &self.backend {
+            return sf.kv_codebook_bits();
+        }
         self.kv_codec.as_ref().map_or(0, |c| c.codebook_bits())
     }
 
+    /// Frozen cache-codebook bits per shard node, in chain order (`None`
+    /// on single-node backends). Each node freezes only the grids of its
+    /// own layer range.
+    pub fn kv_codebook_bits_per_node(&self) -> Option<Vec<u64>> {
+        match &self.backend {
+            Backend::Sharded(sf) => Some(sf.kv_codebook_bits_per_node()),
+            _ => None,
+        }
+    }
+
     /// The shared cache codec, once the slot caches have been built under
-    /// [`Server::kv_quant`] (test/diagnostic hook).
+    /// [`Server::kv_quant`] (test/diagnostic hook). On the sharded backend
+    /// this is node 0's codec — a layout probe (spec/geometry identical on
+    /// every node), with only node 0's layer range frozen.
     pub fn kv_codec(&self) -> Option<&Arc<KvQuantCodec>> {
+        if let Backend::Sharded(sf) = &self.backend {
+            return sf.kv_codec();
+        }
         self.kv_codec.as_ref()
     }
 
@@ -643,7 +681,7 @@ impl Server {
     /// [`Server::kv_quant`] (word-alignment overhead included — the honest
     /// allocated rate), 32.0 for the exact f32 cache.
     pub fn kv_cache_bpw(&self) -> f64 {
-        match &self.kv_codec {
+        match self.kv_codec() {
             Some(c) => c.code_bits_per_row() as f64 / self.config.d_model as f64,
             None => 32.0,
         }
@@ -651,13 +689,21 @@ impl Server {
 
     /// Pool counters since server construction (`None` under the dense
     /// layout). Test hook; the same deltas flow into [`Self::metrics`].
+    /// Summed across node pools on the sharded backend.
     pub fn kv_pool_counters(&self) -> Option<KvPoolCounters> {
+        if let Backend::Sharded(sf) = &self.backend {
+            return sf.kv_pool_counters();
+        }
         self.kv_pool.as_ref().map(|p| p.counters())
     }
 
     /// Pages currently resident in the prefix trie (0 when sharing is off
-    /// or the layout is dense).
+    /// or the layout is dense). Summed across node tries on the sharded
+    /// backend.
     pub fn prefix_resident_pages(&self) -> usize {
+        if let Backend::Sharded(sf) = &self.backend {
+            return sf.prefix_resident_pages();
+        }
         self.prefix.as_ref().map_or(0, |t| t.resident_pages())
     }
 
@@ -665,7 +711,9 @@ impl Server {
     /// accounting as `dropped`). The next request over any prefix is cold
     /// again — parity harnesses use this to compare hot vs cold runs.
     pub fn clear_prefix_cache(&mut self) {
-        if let (Some(trie), Some(pool)) = (self.prefix.as_mut(), self.kv_pool.as_ref()) {
+        if let Backend::Sharded(sf) = &mut self.backend {
+            sf.clear_prefix_caches();
+        } else if let (Some(trie), Some(pool)) = (self.prefix.as_mut(), self.kv_pool.as_ref()) {
             trie.clear(pool);
         }
         self.sync_kv_metrics();
@@ -675,7 +723,29 @@ impl Server {
     /// slots idle (chains reset), `created == slot_free_pages +
     /// prefix_pages + dropped` and `slot_chain_pages == 0` — the no-leak
     /// invariant `tests/paged_kv.rs` asserts after every traffic pattern.
+    /// On the sharded backend the snapshot sums node pools (the invariant
+    /// holds per node — see [`Self::kv_page_audit_per_node`]).
     pub fn kv_page_audit(&self) -> Option<KvPageAudit> {
+        if let Backend::Sharded(sf) = &self.backend {
+            let audits = sf.kv_page_audit_per_node()?;
+            return Some(audits.into_iter().fold(
+                KvPageAudit {
+                    created: 0,
+                    dropped: 0,
+                    slot_chain_pages: 0,
+                    slot_free_pages: 0,
+                    prefix_pages: 0,
+                },
+                |mut acc, a| {
+                    acc.created += a.created;
+                    acc.dropped += a.dropped;
+                    acc.slot_chain_pages += a.slot_chain_pages;
+                    acc.slot_free_pages += a.slot_free_pages;
+                    acc.prefix_pages += a.prefix_pages;
+                    acc
+                },
+            ));
+        }
         let pool = self.kv_pool.as_ref()?;
         let mut chain = 0u64;
         let mut free = 0u64;
@@ -692,6 +762,16 @@ impl Server {
             slot_free_pages: free,
             prefix_pages: self.prefix_resident_pages() as u64,
         })
+    }
+
+    /// Per-node page audit on the sharded backend (`None` on single-node
+    /// backends or dense layouts): the no-leak invariant holds node by
+    /// node, because pages never migrate between node pools.
+    pub fn kv_page_audit_per_node(&self) -> Option<Vec<KvPageAudit>> {
+        match &self.backend {
+            Backend::Sharded(sf) => sf.kv_page_audit_per_node(),
+            _ => None,
+        }
     }
 
     /// Make at least `n` slot caches exist under the *current* layout
@@ -755,9 +835,24 @@ impl Server {
     /// Fold pool-counter and trie-stat deltas (since the last fold) into
     /// [`Self::metrics`]. Called at the end of each serving entry point so
     /// `Metrics::summary` and `BENCH_serving.json` see cumulative totals.
+    /// On the sharded backend the sources are the node-owned pools / tries
+    /// / codecs (summed — except prefix hit/miss/token stats, which are
+    /// logical per-request counts and come from node 0 so the shard count
+    /// doesn't multiply them); the delta registers work identically.
     fn sync_kv_metrics(&mut self) {
-        if let Some(pool) = &self.kv_pool {
-            let c = pool.counters();
+        let (pool_c, trie_s, decoded) = match &self.backend {
+            Backend::Sharded(sf) => (
+                sf.kv_pool_counters(),
+                sf.prefix_stats(),
+                sf.kv_codec().map(|_| sf.kv_decoded_subvecs()),
+            ),
+            _ => (
+                self.kv_pool.as_ref().map(|p| p.counters()),
+                self.prefix.as_ref().map(|t| t.stats()),
+                self.kv_codec.as_ref().map(|c| c.decoded_subvecs()),
+            ),
+        };
+        if let Some(c) = pool_c {
             self.metrics.kv_pages_allocated += c.allocated - self.pool_seen.allocated;
             self.metrics.kv_pages_reused += c.reused - self.pool_seen.reused;
             self.metrics.kv_pages_released += c.released - self.pool_seen.released;
@@ -765,8 +860,7 @@ impl Server {
             self.metrics.kv_cow_copies += c.cow_copies - self.pool_seen.cow_copies;
             self.pool_seen = c;
         }
-        if let Some(trie) = &self.prefix {
-            let s = trie.stats();
+        if let Some(s) = trie_s {
             self.metrics.prefix_hits += s.hits - self.prefix_seen.hits;
             self.metrics.prefix_misses += s.misses - self.prefix_seen.misses;
             self.metrics.prefix_tokens_reused += s.tokens_reused - self.prefix_seen.tokens_reused;
@@ -776,8 +870,7 @@ impl Server {
                 s.pages_evicted - self.prefix_seen.pages_evicted;
             self.prefix_seen = s;
         }
-        if let Some(codec) = &self.kv_codec {
-            let d = codec.decoded_subvecs();
+        if let Some(d) = decoded {
             self.metrics.kv_decoded_subvecs += d - self.kv_decoded_seen;
             self.kv_decoded_seen = d;
         }
@@ -787,7 +880,12 @@ impl Server {
     }
 
     /// Decode one batch of requests to completion; sends responses on each
-    /// request's channel and updates metrics.
+    /// request's channel and updates metrics. The static path runs cached
+    /// decode only on the single-node host backend; on the sharded backend
+    /// it always decodes by windowed re-forward through the chain
+    /// regardless of [`Self::decode`] — that is the cross-topology parity
+    /// oracle (DESIGN.md §16). Sharded KV-cached decode lives in
+    /// [`Self::serve_continuous`].
     pub fn process_batch(&mut self, batch: Vec<GenRequest>) -> Result<()> {
         anyhow::ensure!(
             batch.len() <= self.batch,
@@ -1015,7 +1113,18 @@ impl Server {
     }
 
     /// Serve with **continuous batching + block prefill** until the request
-    /// channel closes (host backend, [`DecodePolicy::KvCached`] only).
+    /// channel closes (host or sharded backend, [`DecodePolicy::KvCached`]
+    /// only).
+    ///
+    /// On the **sharded** backend ([`ServerBuilder::shards`] > 1) the same
+    /// loop runs against node-owned per-slot caches: each shard node holds
+    /// K/V state for its own layer range, the coordinator routes one
+    /// activation block per slot per step through the chain
+    /// ([`super::shard::ShardedForward::step_slots`] — pipelined, one
+    /// worker thread per node), and admission / streaming / publication /
+    /// completion all stay on the coordinator thread in slot order.
+    /// Outputs are token-identical to the single-node cached path at every
+    /// shard count × page size × cache width (DESIGN.md §16).
     ///
     /// The step loop: (1) admit queued requests into free slots — a slot
     /// frees the moment its sequence completes, with no batch barrier;
@@ -1053,14 +1162,22 @@ impl Server {
     /// to the [`DecodePolicy::Reforward`] oracle (DESIGN.md §13).
     pub fn serve_continuous(&mut self, batcher: &mut Batcher) -> Result<()> {
         anyhow::ensure!(
-            matches!(&self.backend, Backend::Host(_)),
-            "continuous batching requires the host backend (per-slot KV caches)"
-        );
-        anyhow::ensure!(
             self.decode == DecodePolicy::KvCached,
             "continuous batching decodes incrementally — use \
              DecodePolicy::KvCached (Reforward is the static-path oracle)"
         );
+        match &self.backend {
+            Backend::Host(_) => self.serve_continuous_host(batcher),
+            Backend::Sharded(_) => self.serve_continuous_sharded(batcher),
+            Backend::Xla(_) => anyhow::bail!(
+                "continuous batching requires the host or sharded backend \
+                 (per-slot KV caches)"
+            ),
+        }
+    }
+
+    /// Single-node body of [`Self::serve_continuous`].
+    fn serve_continuous_host(&mut self, batcher: &mut Batcher) -> Result<()> {
         let n = self.max_slots.max(1);
         let chunk = self.prefill_chunk.max(1);
         let ctx = self.config.ctx;
@@ -1279,6 +1396,235 @@ impl Server {
         self.publish_mirror();
         Ok(())
     }
+
+    /// Sharded body of [`Self::serve_continuous`] (DESIGN.md §16): the
+    /// same admit → step → stream → publish → complete loop as the host
+    /// path, with per-slot K/V state owned by the shard nodes. Each
+    /// scheduler step builds one [`super::shard::ShardStepJob`] per active
+    /// slot (in slot order) and hands the batch to
+    /// [`super::shard::ShardedForward::step_slots`], which pipelines the
+    /// blocks through one worker thread per node — node `i` advances slot
+    /// `j`'s block while node `i+1` still runs slot `j−1`'s. Everything
+    /// else (sampling, streaming, prefix publication, completions, metric
+    /// folds) stays on the coordinator thread in slot order, so outputs
+    /// AND metrics are bit-identical at every `PALLAS_THREADS` *and* every
+    /// shard count (§12 extended to topology).
+    fn serve_continuous_sharded(&mut self, batcher: &mut Batcher) -> Result<()> {
+        let n = self.max_slots.max(1);
+        let chunk = self.prefill_chunk.max(1);
+        let ctx = self.config.ctx;
+        let threads = self.threads.max(1);
+        let capture = self.capture_logits;
+        let (kv_page, kv_quant) = (self.kv_page, self.kv_quant);
+        // same codec seed derivation as the single-node server, and node
+        // codecs keep full-model geometry — that pair is what makes the
+        // frozen grids (and thus logits) bit-identical across topologies
+        let codec_seed = self.sampler_seed ^ 0x6B76_7175_616E_7431;
+        let prefix_cap = self.prefix_page_cap;
+        {
+            let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+            if sf.ensure_slot_caches(n, kv_page, kv_quant, codec_seed, prefix_cap)? {
+                // layout rebuilt from scratch: zero the delta registers so
+                // the next fold doesn't subtract stale high-water marks
+                self.kv_decoded_seen = 0;
+                self.pool_seen = KvPoolCounters::default();
+                self.prefix_seen = PrefixStats::default();
+            }
+        }
+        let mut slots: Vec<Option<Slot>> = (0..n).map(|_| None).collect();
+        let mut seen = (batcher.timed_out(), batcher.shed());
+
+        loop {
+            // ---- admission: fill free slots from the queue ----
+            let mut active = slots.iter().filter(|s| s.is_some()).count();
+            if active == 0 && !batcher.wait_any() {
+                break; // stream closed and fully drained
+            }
+            if active < n {
+                for Admitted { req, seq, admitted } in batcher.poll_admit(n - active) {
+                    let queue_wait = admitted.saturating_duration_since(req.enqueued);
+                    self.metrics.record_queue_wait(queue_wait);
+                    let prompt = truncate_prompt(&req.prompt, ctx);
+                    let rng = request_rng(self.sampler_seed, seq);
+                    let idx = slots
+                        .iter()
+                        .position(|s| s.is_none())
+                        .expect("admission capped at free slots");
+                    let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+                    sf.reset_slot(idx); // new request → fresh windows on every node
+                    let mut reused = 0usize;
+                    if self.prefix_share && !prompt.is_empty() && req.max_new > 0 {
+                        reused = sf.attach_prefix(idx, &prompt);
+                    }
+                    let phase = if prompt.is_empty() || req.max_new == 0 {
+                        SlotPhase::Done
+                    } else {
+                        SlotPhase::Prefill { remaining: prompt.len() - reused }
+                    };
+                    slots[idx] = Some(Slot {
+                        req,
+                        seq,
+                        queue_wait,
+                        prompt,
+                        phase,
+                        rng,
+                        generated: Vec::new(),
+                        logits: Vec::new(),
+                        captured: Vec::new(),
+                        ttft: None,
+                        steps: 0,
+                        reused,
+                        published: false,
+                        streamed: 0,
+                    });
+                    active += 1;
+                }
+            }
+            self.sync_admission_counters(batcher, &mut seen);
+            if active == 0 {
+                self.publish_mirror();
+                continue; // everything admitted had expired — park again
+            }
+
+            // ---- one unit of work per active slot, pipelined on the chain ----
+            // Jobs are built in slot order; `step_slots` commits each
+            // node's writes in that same order (and steps sequentially on
+            // this thread while any node codec is still seeding its
+            // grids), so the §15 freeze determinism carries over.
+            let t0 = Instant::now();
+            let mut jobs: Vec<super::shard::ShardStepJob> = Vec::new();
+            for (idx, entry) in slots.iter().enumerate() {
+                let Some(slot) = entry else { continue };
+                match slot.phase {
+                    SlotPhase::Done => {}
+                    SlotPhase::Prefill { remaining } => {
+                        let fed = slot.prompt.len() - remaining;
+                        let take = chunk.min(remaining);
+                        jobs.push(super::shard::ShardStepJob {
+                            slot: idx,
+                            tokens: slot.prompt[fed..fed + take].to_vec(),
+                            // the final chunk pays the one lazy head
+                            // projection and emits the first token
+                            want_logits: take == remaining,
+                        });
+                    }
+                    SlotPhase::Decode => {
+                        let last =
+                            *slot.generated.last().expect("decode implies a token") as i32;
+                        jobs.push(super::shard::ShardStepJob {
+                            slot: idx,
+                            tokens: vec![last],
+                            want_logits: true,
+                        });
+                    }
+                }
+            }
+            let worked = jobs.len(); // slots that ran model work this step
+            let results = {
+                let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+                crate::exec::with_threads(threads, || sf.step_slots(&jobs))?
+            };
+            // fold outcomes on the coordinator, in slot (= job) order
+            for (job, logits) in jobs.iter().zip(results) {
+                let slot = slots[job.slot].as_mut().expect("job slots are active");
+                slot.steps += 1;
+                match slot.phase {
+                    SlotPhase::Prefill { remaining } => {
+                        if let Some(l) = logits {
+                            slot.logits = l;
+                            slot.phase = SlotPhase::Decode;
+                            slot.emit_token(capture);
+                        } else {
+                            slot.phase = SlotPhase::Prefill {
+                                remaining: remaining - job.tokens.len(),
+                            };
+                        }
+                    }
+                    SlotPhase::Decode => {
+                        slot.logits = logits.expect("decode steps always want logits");
+                        slot.emit_token(capture);
+                        self.metrics.decode_steps += 1;
+                    }
+                    SlotPhase::Done => unreachable!("Done slots are filtered before stepping"),
+                }
+            }
+            self.metrics.record_occupancy(worked, n);
+            self.metrics.wall_s += t0.elapsed().as_secs_f64();
+
+            // ---- streaming: flush freshly generated tokens (slot order) ----
+            for entry in slots.iter_mut() {
+                let Some(slot) = entry else { continue };
+                match &slot.req.stream {
+                    Some(stream) => {
+                        while slot.streamed < slot.generated.len() {
+                            stream.send(slot.generated[slot.streamed]).ok();
+                            slot.streamed += 1;
+                        }
+                    }
+                    None => slot.streamed = slot.generated.len(),
+                }
+            }
+
+            // ---- publication: offer freshly-prefilled prompts' pages ----
+            // Every node publishes its own pages for the same prompt, so
+            // tries stay in lockstep across the chain (which is what makes
+            // `attach_prefix` coverage topology-symmetric).
+            if self.prefix_share {
+                let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+                for (idx, entry) in slots.iter_mut().enumerate() {
+                    let Some(slot) = entry else { continue };
+                    if slot.published
+                        || matches!(slot.phase, SlotPhase::Prefill { .. })
+                        || slot.prompt.is_empty()
+                    {
+                        continue;
+                    }
+                    sf.publish_prefix(idx, &slot.prompt);
+                    slot.published = true;
+                }
+            }
+
+            // ---- completions: respond and free slots ----
+            for (idx, entry) in slots.iter_mut().enumerate() {
+                let done = matches!(entry, Some(s) if s.phase == SlotPhase::Done);
+                if !done {
+                    continue;
+                }
+                let slot = entry.take().expect("checked above");
+                self.metrics.requests += 1;
+                self.metrics.tokens_generated += slot.generated.len() as u64;
+                if let Some(t) = slot.ttft {
+                    self.metrics.record_ttft(t);
+                    if slot.reused > 0 {
+                        self.metrics.record_ttft_hot(t);
+                    } else {
+                        self.metrics.record_ttft_cold(t);
+                    }
+                }
+                let resp = GenResponse {
+                    generated: slot.generated,
+                    latency: slot.req.enqueued.elapsed(),
+                    steps: slot.steps,
+                    seq: slot.seq,
+                    queue_wait: slot.queue_wait,
+                    ttft: slot.ttft,
+                    logits: slot.captured,
+                    finish: FinishReason::Done,
+                };
+                self.metrics.record_latency(resp.latency);
+                slot.req.resp.send(resp).ok();
+                // drop the windows promptly on every node (published pages
+                // stay resident through the tries' refs) — idle slots hold
+                // no pages, keeping the per-node no-leak audit exact
+                let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+                sf.reset_slot(idx);
+            }
+            self.publish_mirror();
+        }
+        self.sync_kv_metrics();
+        self.publish_mirror();
+        Ok(())
+    }
 }
 
 /// Builder for host-backed [`Server`]s — see [`Server::builder`]. Replaces
@@ -1306,8 +1652,13 @@ pub struct ServerBuilder {
 impl ServerBuilder {
     /// Partition the model's layers across `n` worker nodes
     /// ([`crate::coordinator::ShardedForward`]). `0` and `1` both mean
-    /// single-node (the default); sharded servers decode by windowed
-    /// re-forward and require [`ServingWeights::CodesResident`].
+    /// single-node (the default). Sharded servers require
+    /// [`ServingWeights::CodesResident`], decode incrementally against
+    /// node-owned per-slot KV caches (DESIGN.md §16), and honor the same
+    /// [`ServerBuilder::kv_page`] / [`ServerBuilder::kv_quant`] /
+    /// [`ServerBuilder::prefix_share`] layout knobs as single-node
+    /// serving; the static path and [`DecodePolicy::Reforward`] remain the
+    /// cross-topology parity oracles.
     pub fn shards(mut self, n: usize) -> Self {
         self.shards = n;
         self
@@ -1372,8 +1723,8 @@ impl ServerBuilder {
         self
     }
 
-    /// Decode strategy (see [`DecodePolicy`]; defaults to `KvCached`
-    /// single-node, `Reforward` sharded).
+    /// Decode strategy (see [`DecodePolicy`]; defaults to `KvCached` on
+    /// both the single-node and sharded backends).
     pub fn decode(mut self, policy: DecodePolicy) -> Self {
         self.decode = Some(policy);
         self

@@ -27,17 +27,40 @@
 //! deterministic fixed-strip contract every pool fan-out in this crate
 //! uses, so "which node owns which layers" is one formula
 //! ([`shard_layers`]).
+//!
+//! ## Sharded KV-cached decode (DESIGN.md §16)
+//!
+//! Since PR 9 every node also owns **per-slot K/V state for its own layer
+//! range**: a [`crate::model::KvCache`] (dense), a
+//! [`crate::model::PagedKvCache`] over a node-local
+//! [`crate::model::KvPool`] (paged), optionally quantized through a
+//! node-local [`KvQuantCodec`] — plus a node-local [`PrefixCache`] trie.
+//! The coordinator never holds K/V rows; it only routes per-step
+//! activations between nodes ([`ShardedForward::step_slots`]) and drives
+//! the slot lifecycle (`reset_slot` / `attach_prefix` /
+//! `publish_prefix`).
+//! The per-layer unit is the exact [`crate::model::HostForward`] cached
+//! walk (`cached_layer_forward`), caches/pools index layers by their
+//! *absolute* model position, and node codecs keep full-model geometry —
+//! so sharded KV-cached decode is **bit-identical** to the single-node
+//! cached path at every shard count, page size and cache width (the §12
+//! determinism contract extended to topology).
 
 use std::collections::BTreeMap;
 use std::ops::Range;
 use std::sync::mpsc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::prefix::{PrefixCache, PrefixStats};
+use super::server::KvPageAudit;
 use crate::model::{
-    block_layer_forward, embed_block, layer_names, layer_norm, GptConfig, LayerNames,
-    LayerParams, LinearW, QuantizedGpt,
+    block_layer_forward, cached_layer_forward, embed_block, embed_block_at, layer_names,
+    layer_norm, GptConfig, KvCache, KvPool, KvPoolCounters, KvStore, LayerNames, LayerParams,
+    LinearW, PagedKvCache, QuantizedGpt,
 };
+use crate::quant::kv::{KvQuantCodec, KvQuantSpec};
 use crate::tensor::Matrix;
 
 /// Deterministic layer partition: `n_layer` layers into (at most)
@@ -118,6 +141,109 @@ struct ShardNode {
     names: std::sync::Arc<Vec<LayerNames>>,
     first: bool,
     last: bool,
+    /// Per-slot K/V state for this node's layer range (DESIGN.md §16).
+    /// Empty until [`ShardedForward::ensure_slot_caches`] runs.
+    slots: Vec<NodeSlotCache>,
+    /// Node-local page pool backing paged slot caches (covers exactly
+    /// `layers`).
+    pool: Option<KvPool>,
+    /// Node-local K/V codec. Full-model geometry with absolute layer
+    /// indexing, but this node only ever observes/freezes its own range —
+    /// summed over nodes the frozen grids partition, so Σ node
+    /// `codebook_bits()` equals the single-node codec total.
+    codec: Option<Arc<KvQuantCodec>>,
+    /// Node-local prefix trie (paged layouts only); published/looked-up in
+    /// lockstep across nodes so coverage is always topology-symmetric.
+    prefix: Option<PrefixCache>,
+}
+
+/// One slot's K/V state on one node — the sharded mirror of the server's
+/// `SlotCache`, restricted to the node's layer range.
+enum NodeSlotCache {
+    Dense(KvCache),
+    Paged(PagedKvCache),
+}
+
+impl NodeSlotCache {
+    fn len(&self) -> usize {
+        match self {
+            NodeSlotCache::Dense(c) => c.len(),
+            NodeSlotCache::Paged(c) => c.len(),
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        match self {
+            NodeSlotCache::Dense(c) => c.capacity(),
+            NodeSlotCache::Paged(c) => c.capacity(),
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            NodeSlotCache::Dense(c) => c.reset(),
+            NodeSlotCache::Paged(c) => c.reset(),
+        }
+    }
+
+    fn begin_evict(&mut self) -> Vec<i32> {
+        match self {
+            NodeSlotCache::Dense(c) => c.begin_evict(),
+            NodeSlotCache::Paged(c) => c.begin_evict(),
+        }
+    }
+
+    fn memory_bits(&self) -> u64 {
+        match self {
+            NodeSlotCache::Dense(c) => c.memory_bits(),
+            NodeSlotCache::Paged(c) => c.memory_bits(),
+        }
+    }
+}
+
+/// The cached walk over one node's layer range: the exact
+/// [`cached_layer_forward`] unit `HostForward::advance_block` runs, with
+/// absolute layer indices (the cache translates to its local range).
+/// Free function so the `LayerParams` borrows of `fp`/`linears` can
+/// coexist with the `&mut` slot cache.
+#[allow(clippy::too_many_arguments)]
+fn node_cached_walk<C: KvStore>(
+    layers: Range<usize>,
+    names: &[LayerNames],
+    fp: &BTreeMap<String, Matrix>,
+    linears: &BTreeMap<String, LinearW>,
+    x: &mut Matrix,
+    base: usize,
+    cache: &mut C,
+    n_head: usize,
+    hd: usize,
+) -> Result<()> {
+    let g = |n: &str| {
+        fp.get(n)
+            .with_context(|| format!("shard node missing fp tensor '{n}'"))
+    };
+    let w = |n: &str| {
+        linears
+            .get(n)
+            .with_context(|| format!("shard node missing linear '{n}'"))
+    };
+    for l in layers {
+        let nm = &names[l];
+        let p = LayerParams {
+            ln1_g: g(&nm.ln1_g)?,
+            ln1_b: g(&nm.ln1_b)?,
+            wq: w(&nm.wq)?,
+            wk: w(&nm.wk)?,
+            wv: w(&nm.wv)?,
+            wo: w(&nm.wo)?,
+            ln2_g: g(&nm.ln2_g)?,
+            ln2_b: g(&nm.ln2_b)?,
+            w1: w(&nm.w1)?,
+            w2: w(&nm.w2)?,
+        };
+        cached_layer_forward(x, &p, l, base, cache, n_head, hd);
+    }
+    Ok(())
 }
 
 impl ShardNode {
@@ -171,6 +297,70 @@ impl ShardNode {
             return Ok(self.linear("head.w")?.matmul(&xf));
         }
         Ok(x)
+    }
+
+    /// Embeddings at absolute positions `base..base + tokens.len()` (first
+    /// node only) — the cached-decode analogue of [`Self::embed`].
+    fn embed_at(&self, tokens: &[i32], base: usize, cfg: &GptConfig) -> Result<Matrix> {
+        anyhow::ensure!(self.first, "only the first shard node embeds");
+        embed_block_at(
+            self.fp("embed.tok")?,
+            self.fp("embed.pos")?,
+            tokens,
+            base,
+            cfg.vocab,
+        )
+    }
+
+    /// Advance one slot's K/V window through this node's layer range and
+    /// commit the block — the node-local slice of
+    /// `HostForward::advance_block`.
+    fn advance_cached(
+        &mut self,
+        x: &mut Matrix,
+        slot: usize,
+        tokens: &[i32],
+        base: usize,
+        cfg: &GptConfig,
+    ) -> Result<()> {
+        anyhow::ensure!(slot < self.slots.len(), "slot {slot} has no node cache");
+        let ShardNode { layers, linears, fp, names, slots, .. } = self;
+        match &mut slots[slot] {
+            NodeSlotCache::Dense(c) => node_cached_walk(
+                layers.clone(),
+                names,
+                fp,
+                linears,
+                x,
+                base,
+                c,
+                cfg.n_head,
+                cfg.head_dim(),
+            )?,
+            NodeSlotCache::Paged(c) => node_cached_walk(
+                layers.clone(),
+                names,
+                fp,
+                linears,
+                x,
+                base,
+                c,
+                cfg.n_head,
+                cfg.head_dim(),
+            )?,
+        }
+        match &mut slots[slot] {
+            NodeSlotCache::Dense(c) => c.commit_block(tokens),
+            NodeSlotCache::Paged(c) => c.commit_block(tokens),
+        }
+        Ok(())
+    }
+
+    /// Final norm + head over a hidden block (last node only).
+    fn head_logits(&self, x: &Matrix) -> Result<Matrix> {
+        anyhow::ensure!(self.last, "only the last shard node owns the head");
+        let xf = layer_norm(x, self.fp("final_ln.g")?.as_slice(), self.fp("final_ln.b")?.as_slice());
+        Ok(self.linear("head.w")?.matmul(&xf))
     }
 }
 
@@ -235,6 +425,10 @@ impl ShardedForward {
                 names: std::sync::Arc::clone(&names),
                 first,
                 last,
+                slots: Vec::new(),
+                pool: None,
+                codec: None,
+                prefix: None,
             });
         }
         Ok(ShardedForward { config: q.config, name: q.name.clone(), nodes })
@@ -392,6 +586,555 @@ impl ShardedForward {
         }
         Ok(results)
     }
+
+    // ------------------------------------------------------------------
+    // Sharded KV-cached decode (DESIGN.md §16): node-owned slot state.
+    // ------------------------------------------------------------------
+
+    /// Make at least `n` per-slot caches exist **on every node** under the
+    /// requested layout (`kv_page` × `kv_quant` — the same knobs as the
+    /// single-node server). A layout change rebuilds every node from
+    /// scratch (caches, pool, trie and codec drop together); returns `true`
+    /// when that happened so the caller can zero its counter high-water
+    /// marks.
+    pub(crate) fn ensure_slot_caches(
+        &mut self,
+        n: usize,
+        kv_page: Option<usize>,
+        kv_quant: Option<u32>,
+        codec_seed: u64,
+        prefix_page_cap: usize,
+    ) -> Result<bool> {
+        let cfg = self.config;
+        let probe = &self.nodes[0];
+        let quant_stale = probe.codec.as_ref().map(|c| c.spec().bits()) != kv_quant;
+        let stale = quant_stale
+            || match (&kv_page, probe.pool.as_ref()) {
+                (Some(ps), Some(pool)) => pool.page_size() != *ps,
+                (Some(_), None) => !probe.slots.is_empty(),
+                (None, Some(_)) => true,
+                (None, None) => false,
+            };
+        if stale {
+            for node in &mut self.nodes {
+                node.slots.clear();
+                if let (Some(trie), Some(pool)) = (node.prefix.as_mut(), node.pool.as_ref()) {
+                    trie.clear(pool);
+                }
+                node.prefix = None;
+                node.pool = None;
+                node.codec = None;
+            }
+        }
+        for node in &mut self.nodes {
+            if let Some(bits) = kv_quant {
+                if node.codec.is_none() {
+                    // full-model geometry + absolute layer indexing: every
+                    // node derives the same per-layer seed as the
+                    // single-node codec, so frozen grids partition across
+                    // nodes bit-identically
+                    node.codec = Some(Arc::new(KvQuantCodec::new(
+                        KvQuantSpec::new(bits)?,
+                        cfg.n_layer,
+                        cfg.d_model,
+                        codec_seed,
+                    )));
+                }
+            }
+            if let Some(ps) = kv_page {
+                if node.pool.is_none() {
+                    node.pool = Some(KvPool::for_layers(
+                        &cfg,
+                        ps,
+                        node.codec.clone(),
+                        node.layers.clone(),
+                    )?);
+                    node.prefix = Some(PrefixCache::new(ps, prefix_page_cap));
+                }
+            }
+            while node.slots.len() < n {
+                node.slots.push(match &node.pool {
+                    Some(pool) => NodeSlotCache::Paged(PagedKvCache::new(&cfg, pool)),
+                    None => NodeSlotCache::Dense(KvCache::with_layers(
+                        &cfg,
+                        cfg.ctx,
+                        (cfg.ctx / 4).max(1),
+                        node.codec.clone(),
+                        node.layers.clone(),
+                    )),
+                });
+            }
+        }
+        Ok(stale)
+    }
+
+    /// Slot caches currently built per node.
+    pub(crate) fn n_slots(&self) -> usize {
+        self.nodes[0].slots.len()
+    }
+
+    /// Clear one slot's K/V window on every node (admission reset and
+    /// post-completion eviction).
+    pub(crate) fn reset_slot(&mut self, slot: usize) {
+        for node in &mut self.nodes {
+            node.slots[slot].reset();
+        }
+    }
+
+    /// Cached window length of a slot (identical on every node by
+    /// construction — the chain always commits in lockstep).
+    pub(crate) fn slot_len(&self, slot: usize) -> usize {
+        let len = self.nodes[0].slots[slot].len();
+        debug_assert!(
+            self.nodes.iter().all(|n| n.slots[slot].len() == len),
+            "shard nodes' slot windows diverged"
+        );
+        len
+    }
+
+    /// Prefix-trie lookup + attach on every node; returns the covered
+    /// token count (necessarily equal across nodes — tries are published
+    /// in lockstep). `0` for dense layouts or on miss.
+    pub(crate) fn attach_prefix(&mut self, slot: usize, prompt: &[i32]) -> usize {
+        let mut covered_all: Option<usize> = None;
+        for node in &mut self.nodes {
+            let Some(trie) = node.prefix.as_mut() else { return 0 };
+            let NodeSlotCache::Paged(cache) = &mut node.slots[slot] else { return 0 };
+            let (chain, covered) = trie.lookup(prompt);
+            if let Some(c0) = covered_all {
+                assert_eq!(c0, covered, "prefix coverage diverged across shard nodes");
+            }
+            covered_all = Some(covered);
+            if covered > 0 {
+                cache.attach(&chain, &prompt[..covered]);
+            }
+        }
+        covered_all.unwrap_or(0)
+    }
+
+    /// Publish a finished prompt's whole pages into every node's trie
+    /// (no-op for dense layouts or when eviction already slid the window).
+    pub(crate) fn publish_prefix(&mut self, slot: usize, prompt: &[i32]) {
+        for node in &mut self.nodes {
+            let (Some(pool), Some(trie)) = (node.pool.as_ref(), node.prefix.as_mut()) else {
+                continue;
+            };
+            if let NodeSlotCache::Paged(c) = &node.slots[slot] {
+                if c.len() == prompt.len() {
+                    trie.publish(prompt, c.pages(), pool);
+                }
+            }
+        }
+    }
+
+    /// One committed block through the whole chain: node 0 embeds at the
+    /// window's absolute base, every node runs its cached layer walk and
+    /// commits. Returns the hidden block out of the last node's layers
+    /// (pre-head).
+    fn chain_advance_block(&mut self, slot: usize, tokens: &[i32]) -> Result<Matrix> {
+        anyhow::ensure!(!tokens.is_empty(), "advance needs at least one token");
+        let cfg = self.config;
+        let base = self.slot_len(slot);
+        anyhow::ensure!(
+            base + tokens.len() <= self.nodes[0].slots[slot].capacity(),
+            "token block overruns the cache window"
+        );
+        let mut x = self.nodes[0].embed_at(tokens, base, &cfg)?;
+        for node in &mut self.nodes {
+            node.advance_cached(&mut x, slot, tokens, base, &cfg)?;
+        }
+        Ok(x)
+    }
+
+    /// Slide every node's window by the eviction stride and re-feed the
+    /// survivors as one block — the sharded mirror of the single-node
+    /// slide+rebuild eviction, so windows (and logits) stay identical.
+    fn chain_evict(&mut self, slot: usize) -> Result<()> {
+        let keep = self.nodes[0].slots[slot].begin_evict();
+        for node in &mut self.nodes[1..] {
+            let also = node.slots[slot].begin_evict();
+            debug_assert_eq!(keep, also, "shard nodes slid different windows");
+        }
+        if !keep.is_empty() {
+            self.chain_advance_block(slot, &keep)?;
+        }
+        Ok(())
+    }
+
+    /// Feed a token run through the chain in `chunk`-sized blocks with
+    /// window slides exactly where `HostForward::feed_blocks` would put
+    /// them. Returns the hidden block of the final chunk.
+    fn chain_feed_blocks(&mut self, slot: usize, tokens: &[i32], chunk: usize) -> Result<Matrix> {
+        anyhow::ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        let chunk = chunk.max(1);
+        let mut rest = tokens;
+        let mut last = None;
+        while !rest.is_empty() {
+            let (len, cap) = (self.slot_len(slot), self.nodes[0].slots[slot].capacity());
+            if len == cap {
+                self.chain_evict(slot)?;
+                continue;
+            }
+            let take = chunk.min(rest.len()).min(cap - len);
+            let (head, tail) = rest.split_at(take);
+            last = Some(self.chain_advance_block(slot, head)?);
+            rest = tail;
+        }
+        Ok(last.expect("non-empty token stream"))
+    }
+
+    /// Last-row logits out of the chain's final node.
+    fn chain_head_logits(&self, x: &Matrix) -> Result<Vec<f32>> {
+        let d = self.config.d_model;
+        let row = Matrix::from_vec(x.row(x.rows() - 1).to_vec(), 1, d);
+        let y = self.nodes.last().expect("at least one node").head_logits(&row)?;
+        Ok(y.into_vec())
+    }
+
+    /// One generated token through the chain against slot `slot`'s cached
+    /// window — the sharded [`crate::model::HostForward::decode_step`].
+    /// O(t) per step: each node touches only the new row plus its own
+    /// cached K/V.
+    pub fn decode_step(&mut self, slot: usize, token: i32) -> Result<Vec<f32>> {
+        let x = self.chain_feed_blocks(slot, &[token], 1)?;
+        self.chain_head_logits(&x)
+    }
+
+    /// Chunked prompt prefill returning last-position logits — the sharded
+    /// [`crate::model::HostForward::prefill_block`].
+    pub fn prefill_block(&mut self, slot: usize, tokens: &[i32], chunk: usize) -> Result<Vec<f32>> {
+        let x = self.chain_feed_blocks(slot, tokens, chunk)?;
+        self.chain_head_logits(&x)
+    }
+
+    /// Chunked prompt prefill without the head projection — the sharded
+    /// [`crate::model::HostForward::prefill_extend`].
+    pub fn prefill_extend(&mut self, slot: usize, tokens: &[i32], chunk: usize) -> Result<()> {
+        self.chain_feed_blocks(slot, tokens, chunk).map(|_| ())
+    }
+
+    /// True once every node's codec has frozen the grids of its **own**
+    /// layer range (vacuously true for exact caches). Until then stepping
+    /// must stay sequential on the coordinator thread so first-write order
+    /// — which seeds the grids — is schedule-independent.
+    fn kv_codecs_frozen(&self) -> bool {
+        self.nodes.iter().all(|node| {
+            node.codec
+                .as_ref()
+                .is_none_or(|c| c.frozen_range(node.layers.clone()))
+        })
+    }
+
+    /// Step a batch of slots through the chain, pipelined one worker
+    /// thread per node: node `i` advances job `j` while node `i+1` still
+    /// runs job `j−1`. Jobs must target **distinct** slots. Returns, per
+    /// job, `Some(last-row logits)` when `want_logits` was set, else
+    /// `None`.
+    ///
+    /// Falls back to the sequential chain (job order, calling thread) when
+    /// the chain is a single node, the batch has one job, or any node's
+    /// K/V codec is still observing its own layers — the same
+    /// inline-seeding rule as the single-node server, which is what makes
+    /// node codebooks bit-identical to the single-node codec's.
+    pub fn step_slots(&mut self, jobs: &[ShardStepJob]) -> Result<Vec<Option<Vec<f32>>>> {
+        debug_assert!(
+            {
+                let mut slots: Vec<usize> = jobs.iter().map(|j| j.slot).collect();
+                slots.sort_unstable();
+                slots.windows(2).all(|w| w[0] != w[1])
+            },
+            "step_slots jobs must target distinct slots"
+        );
+        let n_nodes = self.nodes.len();
+        if n_nodes == 1 || jobs.len() <= 1 || !self.kv_codecs_frozen() {
+            return jobs
+                .iter()
+                .map(|j| {
+                    if j.want_logits {
+                        self.prefill_block(j.slot, &j.tokens, j.tokens.len().max(1)).map(Some)
+                    } else {
+                        self.prefill_extend(j.slot, &j.tokens, j.tokens.len().max(1))
+                            .map(|_| None)
+                    }
+                })
+                .collect();
+        }
+        // Phase A (coordinator thread, job order): run evictions and
+        // capacity-overflow blocks sequentially until each job is one
+        // in-window block — exactly the blocks the single-node
+        // `feed_blocks` schedule would form, since job blocks are already
+        // at most one chunk long.
+        struct FinalBlock {
+            idx: usize,
+            slot: usize,
+            base: usize,
+            tokens: Vec<i32>,
+        }
+        let mut finals: Vec<FinalBlock> = Vec::with_capacity(jobs.len());
+        for (idx, j) in jobs.iter().enumerate() {
+            anyhow::ensure!(!j.tokens.is_empty(), "step job needs at least one token");
+            let cap = self.nodes[0].slots[j.slot].capacity();
+            let mut rest = j.tokens.as_slice();
+            loop {
+                if self.slot_len(j.slot) == cap {
+                    self.chain_evict(j.slot)?;
+                }
+                let room = cap - self.slot_len(j.slot);
+                if rest.len() <= room {
+                    finals.push(FinalBlock {
+                        idx,
+                        slot: j.slot,
+                        base: self.slot_len(j.slot),
+                        tokens: rest.to_vec(),
+                    });
+                    break;
+                }
+                let (head, tail) = rest.split_at(room);
+                self.chain_advance_block(j.slot, head)?;
+                rest = tail;
+            }
+        }
+        // Phase B: pipeline the final blocks, one stage thread per node.
+        // Distinct slots ⇒ each node's thread is the only writer of the
+        // caches it touches, and it processes jobs in arrival (= job)
+        // order, so the commit order per node matches the sequential
+        // chain.
+        let want: Vec<bool> = jobs.iter().map(|j| j.want_logits).collect();
+        let cfg = self.config;
+        let inner = (crate::exec::current_threads() / n_nodes).max(1);
+        let (first_node, rest_nodes) = self.nodes.split_first_mut().expect("at least one node");
+        let (last_node, mid_nodes) = rest_nodes.split_last_mut().expect("n_nodes >= 2");
+        let collected = std::thread::scope(|scope| -> Result<Vec<(usize, Vec<f32>)>> {
+            let mut txs = Vec::with_capacity(n_nodes - 1);
+            let mut rxs = Vec::with_capacity(n_nodes - 1);
+            for _ in 0..n_nodes - 1 {
+                let (tx, rx) = mpsc::channel::<(usize, Matrix, usize, usize, Vec<i32>)>();
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            let mut tx_iter = txs.into_iter();
+            let mut rx_iter = rxs.into_iter();
+
+            let tx0 = tx_iter.next().expect("n_nodes >= 2");
+            let cfg0 = cfg;
+            let h0 = scope.spawn(move || -> Result<()> {
+                crate::exec::with_threads(inner, || -> Result<()> {
+                    for fb in finals {
+                        let mut x = first_node.embed_at(&fb.tokens, fb.base, &cfg0)?;
+                        first_node.advance_cached(&mut x, fb.slot, &fb.tokens, fb.base, &cfg0)?;
+                        if tx0.send((fb.idx, x, fb.slot, fb.base, fb.tokens)).is_err() {
+                            break; // downstream failed; its error surfaces below
+                        }
+                    }
+                    Ok(())
+                })
+            });
+            let mut mids = Vec::new();
+            for node in mid_nodes {
+                let rx = rx_iter.next().expect("one rx per mid stage");
+                let tx = tx_iter.next().expect("one tx per mid stage");
+                let cfg_m = cfg;
+                mids.push(scope.spawn(move || -> Result<()> {
+                    crate::exec::with_threads(inner, || -> Result<()> {
+                        for (idx, mut x, slot, base, toks) in rx {
+                            node.advance_cached(&mut x, slot, &toks, base, &cfg_m)?;
+                            if tx.send((idx, x, slot, base, toks)).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(())
+                    })
+                }));
+            }
+            let rx_last = rx_iter.next().expect("final stage rx");
+            let want = &want;
+            let cfg_l = cfg;
+            let h_last = scope.spawn(move || -> Result<Vec<(usize, Vec<f32>)>> {
+                crate::exec::with_threads(inner, || -> Result<Vec<(usize, Vec<f32>)>> {
+                    let mut out = Vec::new();
+                    for (idx, mut x, slot, base, toks) in rx_last {
+                        last_node.advance_cached(&mut x, slot, &toks, base, &cfg_l)?;
+                        if want[idx] {
+                            let row =
+                                Matrix::from_vec(x.row(x.rows() - 1).to_vec(), 1, cfg_l.d_model);
+                            out.push((idx, last_node.head_logits(&row)?.into_vec()));
+                        }
+                    }
+                    Ok(out)
+                })
+            });
+            h0.join().expect("shard stage 0 panicked")?;
+            for h in mids {
+                h.join().expect("shard mid stage panicked")?;
+            }
+            h_last.join().expect("final shard stage panicked")
+        })?;
+        let mut results: Vec<Option<Vec<f32>>> = vec![None; jobs.len()];
+        for (idx, r) in collected {
+            results[idx] = Some(r);
+        }
+        Ok(results)
+    }
+
+    // ------------------------------------------------------------------
+    // Per-node KV residency accounting (codes + codebook-once-per-node).
+    // ------------------------------------------------------------------
+
+    /// Resident K/V cache bits per node: paged layouts charge every page
+    /// the pool ever materialized (`pages_created · page_bits` — the
+    /// high-water mark), dense layouts the full per-slot windows. Each
+    /// node's `page_bits` covers only its own layer range.
+    pub fn kv_cache_bits_per_node(&self) -> Vec<u64> {
+        self.nodes
+            .iter()
+            .map(|node| match &node.pool {
+                Some(pool) => pool.pages_created() * pool.page_bits(),
+                None => node.slots.iter().map(|c| c.memory_bits()).sum(),
+            })
+            .collect()
+    }
+
+    /// Total resident K/V cache bits across the deployment.
+    pub fn kv_cache_bits(&self) -> u64 {
+        self.kv_cache_bits_per_node().iter().sum()
+    }
+
+    /// Frozen K/V codebook bits per node. Unlike weight codebooks (shared,
+    /// duplicated per node), K/V grids are per-layer, so they **partition**
+    /// across the chain: the sum over nodes equals the single-node codec's
+    /// total bit-for-bit.
+    pub fn kv_codebook_bits_per_node(&self) -> Vec<u64> {
+        self.nodes
+            .iter()
+            .map(|n| n.codec.as_ref().map_or(0, |c| c.codebook_bits()))
+            .collect()
+    }
+
+    /// K/V codebook bits summed over nodes.
+    pub fn kv_codebook_bits(&self) -> u64 {
+        self.kv_codebook_bits_per_node().iter().sum()
+    }
+
+    /// Node 0's K/V codec (layout probe: spec/bits are identical on every
+    /// node), when caches quantize.
+    pub fn kv_codec(&self) -> Option<&Arc<KvQuantCodec>> {
+        self.nodes[0].codec.as_ref()
+    }
+
+    /// Pool telemetry summed over node pools (`None` for dense layouts).
+    pub(crate) fn kv_pool_counters(&self) -> Option<KvPoolCounters> {
+        let mut total: Option<KvPoolCounters> = None;
+        for node in &self.nodes {
+            if let Some(pool) = &node.pool {
+                let c = pool.counters();
+                let t = total.get_or_insert_with(KvPoolCounters::default);
+                t.allocated += c.allocated;
+                t.reused += c.reused;
+                t.released += c.released;
+                t.dropped += c.dropped;
+                t.cow_copies += c.cow_copies;
+            }
+        }
+        total
+    }
+
+    /// Prefix-trie stats: hit/miss/token counts come from node 0 (every
+    /// node sees the same logical lookups — counting all nodes would
+    /// multiply request-level stats by the shard count), while
+    /// published/evicted **pages** sum over nodes (physical, per-node
+    /// residency).
+    pub(crate) fn prefix_stats(&self) -> Option<PrefixStats> {
+        let s0 = self.nodes[0].prefix.as_ref()?.stats();
+        let mut published = 0;
+        let mut evicted = 0;
+        for node in &self.nodes {
+            if let Some(trie) = &node.prefix {
+                let s = trie.stats();
+                published += s.pages_published;
+                evicted += s.pages_evicted;
+            }
+        }
+        Some(PrefixStats {
+            hits: s0.hits,
+            misses: s0.misses,
+            tokens_reused: s0.tokens_reused,
+            pages_published: published,
+            pages_evicted: evicted,
+        })
+    }
+
+    /// Pages resident in prefix tries, summed over nodes.
+    pub fn prefix_resident_pages(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.prefix.as_ref())
+            .map(|t| t.resident_pages())
+            .sum()
+    }
+
+    /// Drop every node's published prefix chains.
+    pub(crate) fn clear_prefix_caches(&mut self) {
+        for node in &mut self.nodes {
+            if let (Some(trie), Some(pool)) = (node.prefix.as_mut(), node.pool.as_ref()) {
+                trie.clear(pool);
+            }
+        }
+    }
+
+    /// Codec decode-counter summed over nodes.
+    pub(crate) fn kv_decoded_subvecs(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.codec.as_ref())
+            .map(|c| c.decoded_subvecs())
+            .sum()
+    }
+
+    /// Per-node page audit (`None` for dense layouts): every page each
+    /// node's pool created is either live in a slot chain, parked on a
+    /// slot free list, resident in the node's trie, or dropped.
+    pub fn kv_page_audit_per_node(&self) -> Option<Vec<KvPageAudit>> {
+        self.nodes[0].pool.as_ref()?;
+        Some(
+            self.nodes
+                .iter()
+                .map(|node| {
+                    let pool = node.pool.as_ref().expect("pools are built in lockstep");
+                    let mut chain = 0u64;
+                    let mut free = 0u64;
+                    for c in &node.slots {
+                        if let NodeSlotCache::Paged(p) = c {
+                            chain += p.pages().len() as u64;
+                            free += p.local_free_len() as u64;
+                        }
+                    }
+                    KvPageAudit {
+                        created: pool.pages_created(),
+                        dropped: pool.counters().dropped,
+                        slot_chain_pages: chain,
+                        slot_free_pages: free,
+                        prefix_pages: node
+                            .prefix
+                            .as_ref()
+                            .map_or(0, |t| t.resident_pages() as u64),
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
+/// One slot's work item for [`ShardedForward::step_slots`]: a token block
+/// (one prompt chunk, or a single generated token) to advance through the
+/// chain against the slot's cached window.
+pub struct ShardStepJob {
+    /// Slot index (shared across all nodes).
+    pub slot: usize,
+    /// Tokens to commit this step — at most one prefill chunk.
+    pub tokens: Vec<i32>,
+    /// Compute last-row logits on the final node (final prefill chunk and
+    /// every decode step).
+    pub want_logits: bool,
 }
 
 #[cfg(test)]

@@ -408,105 +408,20 @@ impl HostForward {
             "block of {m} tokens overruns cache capacity ({base}+{m} > {})",
             cache.capacity()
         );
-        for &t in tokens {
-            anyhow::ensure!(
-                t >= 0 && (t as usize) < cfg.vocab,
-                "token {t} out of vocab"
-            );
-        }
         let d = cfg.d_model;
         let n_head = cfg.n_head;
         let hd = d / n_head;
 
-        // embeddings of the new positions base..base+m
-        let tok_emb = self.fp("embed.tok");
-        let pos_emb = self.fp("embed.pos");
-        let mut x = Matrix::zeros(m, d);
-        for (j, &t) in tokens.iter().enumerate() {
-            for ((o, &e), &p) in x
-                .row_mut(j)
-                .iter_mut()
-                .zip(tok_emb.row(t as usize))
-                .zip(pos_emb.row(base + j))
-            {
-                *o = e + p;
-            }
-        }
-
-        let scale = 1.0 / (hd as f32).sqrt();
+        let mut x = embed_block_at(
+            self.fp("embed.tok"),
+            self.fp("embed.pos"),
+            tokens,
+            base,
+            cfg.vocab,
+        )?;
         for layer in 0..cfg.n_layer {
-            let nm = &self.names[layer];
-            // attention block: project the whole chunk in one matmul, write
-            // its K/V rows, then attend per position over the cached window
-            // plus the chunk's own prefix (causality: position base+j sees
-            // rows 0..=base+j, which are all already written)
-            let ln1 = layer_norm(
-                &x,
-                self.fp(&nm.ln1_g).as_slice(),
-                self.fp(&nm.ln1_b).as_slice(),
-            );
-            let q = self.linear(&nm.wq, &ln1)?;
-            let k = self.linear(&nm.wk, &ln1)?;
-            let v = self.linear(&nm.wv, &ln1)?;
-            for j in 0..m {
-                cache.write_kv_at(layer, base + j, k.row(j), v.row(j));
-            }
-            // attention reads go through the layout-agnostic view: a
-            // contiguous matrix for the dense cache, a page walk for the
-            // paged one (model::kv_pool) — same rows either way
-            let view = cache.attn_view(layer);
-            let mut y = Matrix::zeros(m, d);
-            // every position's attention depends only on its own query row
-            // plus the already-written K/V, so the chunk fans out as
-            // disjoint y-row strips on the shared pool — bit-identical to
-            // the serial walk at any thread count (a 1-token decode step
-            // stays inline)
-            crate::exec::Pool::current().scope_groups_mut(
-                y.as_mut_slice(),
-                d,
-                MIN_ATTN_ROWS_PER_STRIP,
-                |j0, chunk| {
-                    let mut scores = vec![0.0f32; base + m];
-                    for (jj, yfull) in chunk.chunks_mut(d).enumerate() {
-                        let j = j0 + jj;
-                        let srow = &mut scores[..base + j + 1];
-                        for h in 0..n_head {
-                            let c0 = h * hd;
-                            let qrow = &q.row(j)[c0..c0 + hd];
-                            for (tj, s) in srow.iter_mut().enumerate() {
-                                *s = crate::tensor::dot(qrow, &view.k_row(tj)[c0..c0 + hd])
-                                    * scale;
-                            }
-                            softmax_inplace(srow);
-                            let yrow = &mut yfull[c0..c0 + hd];
-                            for (tj, &a) in srow.iter().enumerate() {
-                                if a == 0.0 {
-                                    continue;
-                                }
-                                let vrow = &view.v_row(tj)[c0..c0 + hd];
-                                for (o, &vv) in yrow.iter_mut().zip(vrow) {
-                                    *o += a * vv;
-                                }
-                            }
-                        }
-                    }
-                },
-            );
-            let attn = self.linear(&nm.wo, &y)?;
-            add_inplace(&mut x, &attn);
-
-            // mlp block
-            let ln2 = layer_norm(
-                &x,
-                self.fp(&nm.ln2_g).as_slice(),
-                self.fp(&nm.ln2_b).as_slice(),
-            );
-            let mut h1 = self.linear(&nm.w1, &ln2)?;
-            for vv in h1.as_mut_slice() {
-                *vv = gelu(*vv);
-            }
-            let h2 = self.linear(&nm.w2, &h1)?;
-            add_inplace(&mut x, &h2);
+            let p = self.layer_params(layer)?;
+            cached_layer_forward(&mut x, &p, layer, base, cache, n_head, hd);
         }
         cache.commit_block(tokens);
         Ok(x)
@@ -560,6 +475,115 @@ pub(crate) fn block_layer_forward(
     let y = causal_self_attention(&q, &k, &v, b, t, n_head, hd);
     let attn = p.wo.matmul(&y);
     add_inplace(x, &attn);
+    let ln2 = layer_norm(x, p.ln2_g.as_slice(), p.ln2_b.as_slice());
+    let mut h1 = p.w1.matmul(&ln2);
+    for vv in h1.as_mut_slice() {
+        *vv = gelu(*vv);
+    }
+    let h2 = p.w2.matmul(&h1);
+    add_inplace(x, &h2);
+}
+
+/// Token + position embeddings of a chunk at absolute positions
+/// `base..base+m` — the cache-tail companion of [`embed_block`], shared by
+/// `HostForward::advance_block` and shard node 0's cached walk
+/// ([`crate::coordinator::ShardedForward`], DESIGN.md §16).
+pub(crate) fn embed_block_at(
+    tok: &Matrix,
+    pos: &Matrix,
+    tokens: &[i32],
+    base: usize,
+    vocab: usize,
+) -> Result<Matrix> {
+    let d = tok.cols();
+    let mut x = Matrix::zeros(tokens.len(), d);
+    for (j, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < vocab, "token {t} out of vocab");
+        for ((o, &e), &p) in x
+            .row_mut(j)
+            .iter_mut()
+            .zip(tok.row(t as usize))
+            .zip(pos.row(base + j))
+        {
+            *o = e + p;
+        }
+    }
+    Ok(x)
+}
+
+/// One pre-norm transformer layer over an `(m, d)` chunk at the KV-cache
+/// tail (absolute positions `base..base+m`), in place: project the whole
+/// chunk in one matmul, write its K/V rows at `base..base+m`, then attend
+/// per position over the cached window plus the chunk's own prefix
+/// (causality: position `base+j` sees rows `0..=base+j`, which are all
+/// already written).
+///
+/// This is the cached counterpart of [`block_layer_forward`] and the single
+/// per-layer unit behind `HostForward::advance_block` **and** every shard
+/// node's cached walk ([`crate::coordinator::ShardedForward`]) — the
+/// sharded KV-cached decode is bit-identical to the single-node one by
+/// construction (DESIGN.md §16). Attention reads go through the
+/// layout-agnostic [`KvStore`] view: a contiguous matrix for the dense
+/// cache, a page walk for the paged one — same rows either way.
+pub(crate) fn cached_layer_forward<C: KvStore>(
+    x: &mut Matrix,
+    p: &LayerParams<'_>,
+    layer: usize,
+    base: usize,
+    cache: &mut C,
+    n_head: usize,
+    hd: usize,
+) {
+    let m = x.rows();
+    let d = n_head * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let ln1 = layer_norm(x, p.ln1_g.as_slice(), p.ln1_b.as_slice());
+    let q = p.wq.matmul(&ln1);
+    let k = p.wk.matmul(&ln1);
+    let v = p.wv.matmul(&ln1);
+    for j in 0..m {
+        cache.write_kv_at(layer, base + j, k.row(j), v.row(j));
+    }
+    let view = cache.attn_view(layer);
+    let mut y = Matrix::zeros(m, d);
+    // every position's attention depends only on its own query row plus
+    // the already-written K/V, so the chunk fans out as disjoint y-row
+    // strips on the shared pool — bit-identical to the serial walk at any
+    // thread count (a 1-token decode step stays inline)
+    crate::exec::Pool::current().scope_groups_mut(
+        y.as_mut_slice(),
+        d,
+        MIN_ATTN_ROWS_PER_STRIP,
+        |j0, chunk| {
+            let mut scores = vec![0.0f32; base + m];
+            for (jj, yfull) in chunk.chunks_mut(d).enumerate() {
+                let j = j0 + jj;
+                let srow = &mut scores[..base + j + 1];
+                for h in 0..n_head {
+                    let c0 = h * hd;
+                    let qrow = &q.row(j)[c0..c0 + hd];
+                    for (tj, s) in srow.iter_mut().enumerate() {
+                        *s = crate::tensor::dot(qrow, &view.k_row(tj)[c0..c0 + hd]) * scale;
+                    }
+                    softmax_inplace(srow);
+                    let yrow = &mut yfull[c0..c0 + hd];
+                    for (tj, &a) in srow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let vrow = &view.v_row(tj)[c0..c0 + hd];
+                        for (o, &vv) in yrow.iter_mut().zip(vrow) {
+                            *o += a * vv;
+                        }
+                    }
+                }
+            }
+        },
+    );
+    let attn = p.wo.matmul(&y);
+    add_inplace(x, &attn);
+
+    // mlp block
     let ln2 = layer_norm(x, p.ln2_g.as_slice(), p.ln2_b.as_slice());
     let mut h1 = p.w1.matmul(&ln2);
     for vv in h1.as_mut_slice() {

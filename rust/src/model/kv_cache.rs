@@ -61,6 +61,11 @@ use super::GptConfig;
 /// [`crate::model::HostForward::prefill`].
 #[derive(Clone, Debug)]
 pub struct KvCache {
+    /// First absolute layer index this cache owns (0 for a full-model
+    /// cache; a shard node's cache owns only its layer range, DESIGN.md
+    /// §16). All layer arguments to the accessors/write path are absolute.
+    layer_base: usize,
+    /// Number of owned layers (`cfg.n_layer` for a full-model cache).
     n_layer: usize,
     d_model: usize,
     capacity: usize,
@@ -113,14 +118,37 @@ impl KvCache {
         Self::with_stride_codec(cfg, cfg.ctx, (cfg.ctx / 4).max(1), codec)
     }
 
-    /// The general constructor: window geometry plus an optional cache
-    /// codec shared with sibling caches.
+    /// The general full-model constructor: window geometry plus an optional
+    /// cache codec shared with sibling caches.
     pub fn with_stride_codec(
         cfg: &GptConfig,
         capacity: usize,
         stride: usize,
         codec: Option<Arc<KvQuantCodec>>,
     ) -> Self {
+        Self::with_layers(cfg, capacity, stride, codec, 0..cfg.n_layer)
+    }
+
+    /// Cache owning only the layers in `layers` — the shard-node form
+    /// (DESIGN.md §16): a node allocates K/V rows for its own layer range,
+    /// while the layer arguments of [`Self::write_kv_at`] / [`Self::layer`]
+    /// stay *absolute* model indices, so the node-side write path is
+    /// identical code to the single-node one. The codec (when present) keeps
+    /// full-model geometry and is indexed by the same absolute layers, which
+    /// is what makes per-node codebooks bit-identical to the single-node
+    /// ones (same layer → same seed → same frozen grid).
+    pub(crate) fn with_layers(
+        cfg: &GptConfig,
+        capacity: usize,
+        stride: usize,
+        codec: Option<Arc<KvQuantCodec>>,
+        layers: std::ops::Range<usize>,
+    ) -> Self {
+        assert!(
+            layers.start <= layers.end && layers.end <= cfg.n_layer,
+            "kv cache layer range {layers:?} out of model range 0..{}",
+            cfg.n_layer
+        );
         if let Some(c) = &codec {
             assert!(
                 c.n_layer() == cfg.n_layer && c.d_model() == cfg.d_model,
@@ -131,23 +159,37 @@ impl KvCache {
                 cfg.d_model
             );
         }
+        let owned = layers.len();
         let capacity = capacity.clamp(1, cfg.ctx);
         let evict_stride = stride.clamp(1, capacity);
         let words = codec.as_ref().map_or(0, |c| c.words_per_row());
         KvCache {
-            n_layer: cfg.n_layer,
+            layer_base: layers.start,
+            n_layer: owned,
             d_model: cfg.d_model,
             capacity,
             evict_stride,
             tokens: Vec::with_capacity(capacity),
-            k: (0..cfg.n_layer).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
-            v: (0..cfg.n_layer).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
+            k: (0..owned).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
+            v: (0..owned).map(|_| Matrix::zeros(capacity, cfg.d_model)).collect(),
             codec,
-            ck: (0..cfg.n_layer).map(|_| vec![0u64; capacity * words]).collect(),
-            cv: (0..cfg.n_layer).map(|_| vec![0u64; capacity * words]).collect(),
+            ck: (0..owned).map(|_| vec![0u64; capacity * words]).collect(),
+            cv: (0..owned).map(|_| vec![0u64; capacity * words]).collect(),
             total_fed: 0,
             evictions: 0,
         }
+    }
+
+    /// Map an absolute model layer index onto this cache's local arrays.
+    #[inline]
+    fn local(&self, layer: usize) -> usize {
+        debug_assert!(
+            layer >= self.layer_base && layer < self.layer_base + self.n_layer,
+            "layer {layer} outside owned range {}..{}",
+            self.layer_base,
+            self.layer_base + self.n_layer
+        );
+        layer - self.layer_base
     }
 
     /// Valid cached positions (= tokens in the current window).
@@ -186,10 +228,17 @@ impl KvCache {
         self.evictions
     }
 
-    /// K and V buffers of one layer (rows `0..len()` valid). With a codec
-    /// these hold the decoded tile — reads are layout-blind.
+    /// K and V buffers of one (absolute) layer (rows `0..len()` valid).
+    /// With a codec these hold the decoded tile — reads are layout-blind.
     pub fn layer(&self, layer: usize) -> (&Matrix, &Matrix) {
-        (&self.k[layer], &self.v[layer])
+        let l = self.local(layer);
+        (&self.k[l], &self.v[l])
+    }
+
+    /// The absolute layer range this cache owns (`0..cfg.n_layer` for the
+    /// full-model constructors).
+    pub fn layers(&self) -> std::ops::Range<usize> {
+        self.layer_base..self.layer_base + self.n_layer
     }
 
     /// The cache codec, when rows are stored as codes.
@@ -201,13 +250,13 @@ impl KvCache {
     /// row's actual resident payload.
     pub fn k_codes(&self, layer: usize, pos: usize) -> &[u64] {
         let w = self.codec.as_ref().map_or(0, |c| c.words_per_row());
-        &self.ck[layer][pos * w..(pos + 1) * w]
+        &self.ck[self.local(layer)][pos * w..(pos + 1) * w]
     }
 
     /// Packed V code words of one position (empty without a codec).
     pub fn v_codes(&self, layer: usize, pos: usize) -> &[u64] {
         let w = self.codec.as_ref().map_or(0, |c| c.words_per_row());
-        &self.cv[layer][pos * w..(pos + 1) * w]
+        &self.cv[self.local(layer)][pos * w..(pos + 1) * w]
     }
 
     /// Resident payload bits (allocation, not fill level): the f32 buffers
@@ -222,10 +271,15 @@ impl KvCache {
         }
     }
 
-    /// True when this cache's geometry matches `cfg` (a cache built for one
-    /// model must not be fed through another).
+    /// True when this is a *full-model* cache whose geometry matches `cfg`
+    /// (a cache built for one model must not be fed through another; a
+    /// shard-node layer-range cache is never compatible with the host
+    /// forward, which writes every layer).
     pub fn compatible_with(&self, cfg: &GptConfig) -> bool {
-        self.n_layer == cfg.n_layer && self.d_model == cfg.d_model && self.capacity <= cfg.ctx
+        self.layer_base == 0
+            && self.n_layer == cfg.n_layer
+            && self.d_model == cfg.d_model
+            && self.capacity <= cfg.ctx
     }
 
     /// Drop all cached state: the explicit new-request boundary. Telemetry
@@ -256,18 +310,22 @@ impl KvCache {
     /// rebuilt rows re-quantize against the *same* frozen grid.
     pub(crate) fn write_kv_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(pos < self.capacity, "write_kv_at past capacity");
+        let l = self.local(layer);
         match self.codec.clone() {
             None => {
-                self.k[layer].row_mut(pos).copy_from_slice(k_row);
-                self.v[layer].row_mut(pos).copy_from_slice(v_row);
+                self.k[l].row_mut(pos).copy_from_slice(k_row);
+                self.v[l].row_mut(pos).copy_from_slice(v_row);
             }
             Some(codec) => {
+                // The codec is indexed by the *absolute* layer: a node-range
+                // cache observes/encodes against the same per-layer grids a
+                // full-model cache would.
                 let lc = codec.observe(layer, k_row, v_row);
                 let w = codec.words_per_row();
-                let kw = &mut self.ck[layer][pos * w..(pos + 1) * w];
-                codec.encode_row(lc, k_row, kw, self.k[layer].row_mut(pos));
-                let vw = &mut self.cv[layer][pos * w..(pos + 1) * w];
-                codec.encode_row(lc, v_row, vw, self.v[layer].row_mut(pos));
+                let kw = &mut self.ck[l][pos * w..(pos + 1) * w];
+                codec.encode_row(lc, k_row, kw, self.k[l].row_mut(pos));
+                let vw = &mut self.cv[l][pos * w..(pos + 1) * w];
+                codec.encode_row(lc, v_row, vw, self.v[l].row_mut(pos));
             }
         }
     }
@@ -413,6 +471,24 @@ mod tests {
         // exact caches expose no code payload
         let exact = KvCache::new(&cfg);
         assert!(exact.k_codes(0, 0).is_empty());
+    }
+
+    #[test]
+    fn layer_range_cache_uses_absolute_indices() {
+        let cfg = cfg();
+        let mut node = KvCache::with_layers(&cfg, 8, 2, None, 1..3);
+        assert_eq!(node.layers(), 1..3);
+        // owns 2 of the 3 layers → 2/3 of the full-model footprint
+        assert_eq!(node.memory_bits(), 2 * 2 * 8 * 32 * 32);
+        assert!(!node.compatible_with(&cfg), "range caches are node-only");
+        let d = cfg.d_model;
+        for l in 1..3 {
+            node.write_kv_at(l, 0, &vec![l as f32; d], &vec![-(l as f32); d]);
+        }
+        node.commit_block(&[42]);
+        let (k, v) = node.layer(2);
+        assert_eq!(k.row(0)[0], 2.0);
+        assert_eq!(v.row(0)[0], -2.0);
     }
 
     #[test]

@@ -174,6 +174,11 @@ pub struct KvPoolCounters {
 
 #[derive(Debug)]
 struct PoolInner {
+    /// First absolute layer index this pool's pages hold rows for (0 for a
+    /// full-model pool; a shard node's pool covers only its layer range,
+    /// DESIGN.md §16).
+    layer_base: usize,
+    /// Number of owned layers (`cfg.n_layer` for a full-model pool).
     n_layer: usize,
     d_model: usize,
     page_size: usize,
@@ -214,10 +219,30 @@ impl KvPool {
         page_size: usize,
         codec: Option<Arc<KvQuantCodec>>,
     ) -> Result<Self> {
+        Self::for_layers(cfg, page_size, codec, 0..cfg.n_layer)
+    }
+
+    /// Pool whose pages hold rows for only the layers in `layers` — the
+    /// shard-node form (DESIGN.md §16): each node draws pages sized to its
+    /// own layer range, while the layer arguments of the write/read paths
+    /// stay *absolute* model indices. The codec (when present) keeps
+    /// full-model geometry and absolute indexing, so per-node frozen
+    /// codebooks are bit-identical to the single-node ones.
+    pub(crate) fn for_layers(
+        cfg: &GptConfig,
+        page_size: usize,
+        codec: Option<Arc<KvQuantCodec>>,
+        layers: std::ops::Range<usize>,
+    ) -> Result<Self> {
         anyhow::ensure!(
             (1..=cfg.ctx).contains(&page_size),
             "kv page size {page_size} out of range 1..={} (model ctx)",
             cfg.ctx
+        );
+        anyhow::ensure!(
+            layers.start <= layers.end && layers.end <= cfg.n_layer,
+            "kv pool layer range {layers:?} out of model range 0..{}",
+            cfg.n_layer
         );
         if let Some(c) = &codec {
             anyhow::ensure!(
@@ -231,7 +256,8 @@ impl KvPool {
         }
         Ok(KvPool {
             inner: Arc::new(PoolInner {
-                n_layer: cfg.n_layer,
+                layer_base: layers.start,
+                n_layer: layers.len(),
                 d_model: cfg.d_model,
                 page_size,
                 codec,
@@ -247,6 +273,23 @@ impl KvPool {
     /// Tokens per page.
     pub fn page_size(&self) -> usize {
         self.inner.page_size
+    }
+
+    /// The absolute layer range this pool's pages cover (`0..cfg.n_layer`
+    /// for the full-model constructors).
+    pub fn layers(&self) -> std::ops::Range<usize> {
+        self.inner.layer_base..self.inner.layer_base + self.inner.n_layer
+    }
+
+    /// Map an absolute model layer index onto the pages' local arrays.
+    #[inline]
+    fn local(&self, layer: usize) -> usize {
+        debug_assert!(
+            layer >= self.inner.layer_base && layer < self.inner.layer_base + self.inner.n_layer,
+            "layer {layer} outside pool range {:?}",
+            self.layers()
+        );
+        layer - self.inner.layer_base
     }
 
     /// The shared cache codec, when pages store codes.
@@ -295,9 +338,20 @@ impl KvPool {
         }
     }
 
-    /// True when pages from this pool can hold `cfg`'s K/V rows.
+    /// True when this is a *full-model* pool whose pages can hold `cfg`'s
+    /// K/V rows (a shard node's layer-range pool never matches — its caches
+    /// must only be fed by the owning node).
     pub fn matches(&self, cfg: &GptConfig) -> bool {
-        self.inner.n_layer == cfg.n_layer && self.inner.d_model == cfg.d_model
+        self.inner.layer_base == 0
+            && self.inner.n_layer == cfg.n_layer
+            && self.inner.d_model == cfg.d_model
+    }
+
+    /// True when this pool's layer range fits inside `cfg` — the weaker
+    /// check node-range caches construct under.
+    pub(crate) fn fits(&self, cfg: &GptConfig) -> bool {
+        self.inner.layer_base + self.inner.n_layer <= cfg.n_layer
+            && self.inner.d_model == cfg.d_model
     }
 
     /// A writable page buffer: recycled from `local` when possible, freshly
@@ -370,7 +424,7 @@ impl PagedKvCache {
     /// Full control over window capacity and eviction stride, clamped
     /// exactly like [`KvCache::with_stride`].
     pub fn with_stride(cfg: &GptConfig, pool: &KvPool, capacity: usize, stride: usize) -> Self {
-        debug_assert!(pool.matches(cfg), "pool geometry mismatch");
+        debug_assert!(pool.fits(cfg), "pool geometry mismatch");
         let capacity = capacity.clamp(1, cfg.ctx);
         PagedKvCache {
             pool: pool.clone(),
@@ -453,17 +507,17 @@ impl PagedKvCache {
         self.pool.matches(cfg) && self.capacity <= cfg.ctx
     }
 
-    /// K row of `layer` at chain position `pos` (`pos < len()`), for parity
-    /// tests against the dense layout.
+    /// K row of (absolute) `layer` at chain position `pos` (`pos < len()`),
+    /// for parity tests against the dense layout.
     pub fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
         let ps = self.pool.page_size();
-        self.pages[pos / ps].k_row(layer, pos % ps)
+        self.pages[pos / ps].k_row(self.pool.local(layer), pos % ps)
     }
 
-    /// V row of `layer` at chain position `pos` (`pos < len()`).
+    /// V row of (absolute) `layer` at chain position `pos` (`pos < len()`).
     pub fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
         let ps = self.pool.page_size();
-        self.pages[pos / ps].v_row(layer, pos % ps)
+        self.pages[pos / ps].v_row(self.pool.local(layer), pos % ps)
     }
 
     /// Drop all cached state (new-request boundary): the page chain releases
@@ -560,20 +614,23 @@ impl PagedKvCache {
         debug_assert!(pos < self.capacity, "write_kv_at past capacity");
         let ps = self.pool.page_size();
         let (page_idx, off) = (pos / ps, pos % ps);
+        // Page arrays are local to the pool's layer range; the codec is
+        // indexed by the absolute layer (same grids as a full-model cache).
+        let l = self.pool.local(layer);
         let codec = self.pool.codec().cloned();
         let page = self.writable_page(page_idx);
         match codec {
             None => {
-                page.k[layer].row_mut(off).copy_from_slice(k_row);
-                page.v[layer].row_mut(off).copy_from_slice(v_row);
+                page.k[l].row_mut(off).copy_from_slice(k_row);
+                page.v[l].row_mut(off).copy_from_slice(v_row);
             }
             Some(codec) => {
                 let lc = codec.observe(layer, k_row, v_row);
                 let w = codec.words_per_row();
-                let kw = &mut page.ck[layer][off * w..(off + 1) * w];
-                codec.encode_row(lc, k_row, kw, page.k[layer].row_mut(off));
-                let vw = &mut page.cv[layer][off * w..(off + 1) * w];
-                codec.encode_row(lc, v_row, vw, page.v[layer].row_mut(off));
+                let kw = &mut page.ck[l][off * w..(off + 1) * w];
+                codec.encode_row(lc, k_row, kw, page.k[l].row_mut(off));
+                let vw = &mut page.cv[l][off * w..(off + 1) * w];
+                codec.encode_row(lc, v_row, vw, page.v[l].row_mut(off));
             }
         }
     }
@@ -602,6 +659,8 @@ impl Drop for PagedKvCache {
 /// `Sync` so [`crate::exec::Pool::scope_groups_mut`] strips can share it.
 pub enum KvLayerView<'a> {
     Dense { k: &'a Matrix, v: &'a Matrix },
+    /// `layer` here is *pool-local* (absolute minus the pool's first owned
+    /// layer) — [`PagedKvCache::attn_view`] converts before constructing.
     Paged { pages: &'a [Arc<KvPage>], layer: usize, page_size: usize },
 }
 
@@ -724,7 +783,7 @@ impl KvStore for PagedKvCache {
     fn attn_view(&self, layer: usize) -> KvLayerView<'_> {
         KvLayerView::Paged {
             pages: &self.pages,
-            layer,
+            layer: self.pool.local(layer),
             page_size: self.pool.page_size(),
         }
     }

@@ -15,7 +15,8 @@ pub mod kv_pool;
 pub use config::GptConfig;
 pub use forward::{HostForward, LinearW};
 pub(crate) use forward::{
-    block_layer_forward, embed_block, layer_names, layer_norm, LayerNames, LayerParams,
+    block_layer_forward, cached_layer_forward, embed_block, embed_block_at, layer_names,
+    layer_norm, LayerNames, LayerParams,
 };
 pub use gpt::{GptModel, QuantizedGpt};
 pub use kv_cache::KvCache;

@@ -187,13 +187,26 @@ pub fn verify_kv_cache_resident(server: &Server) -> Result<f64> {
          than one u64 of word-packing slack"
     );
 
-    // codebooks once, at the codec — and the decode LUT stays derived state
-    anyhow::ensure!(
-        server.kv_codebook_bits() == codec.codebook_bits(),
-        "server cache codebook bits ({}) diverge from the codec's ({})",
-        server.kv_codebook_bits(),
-        codec.codebook_bits(),
-    );
+    // codebooks once, at the codec — and the decode LUT stays derived
+    // state. On the sharded backend the grids partition across node codecs
+    // (each freezes only its own layer range), so the check becomes
+    // "per-node bits sum to the server total" instead of equality with
+    // node 0's codec, which under-counts by construction.
+    match server.kv_codebook_bits_per_node() {
+        Some(per_node) => anyhow::ensure!(
+            per_node.iter().sum::<u64>() == server.kv_codebook_bits(),
+            "per-node cache codebook bits {:?} do not sum to the server \
+             total ({})",
+            per_node,
+            server.kv_codebook_bits(),
+        ),
+        None => anyhow::ensure!(
+            server.kv_codebook_bits() == codec.codebook_bits(),
+            "server cache codebook bits ({}) diverge from the codec's ({})",
+            server.kv_codebook_bits(),
+            codec.codebook_bits(),
+        ),
+    }
     let codebook_before = codec.codebook_bits();
     let cache_before = server.kv_cache_bits();
     let mut out = vec![0.0f32; codec.d_model()];

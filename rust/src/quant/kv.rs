@@ -304,7 +304,15 @@ impl KvQuantCodec {
 
     /// True once every layer's codebook pair is frozen.
     pub fn frozen(&self) -> bool {
-        self.layers.iter().all(|l| l.get().is_some())
+        self.frozen_range(0..self.layers.len())
+    }
+
+    /// True once every layer in `range` is frozen — the shard-node form
+    /// (DESIGN.md §16): a node's codec keeps full-model geometry but the
+    /// node only ever writes (and therefore freezes) its own layer range,
+    /// so [`Self::frozen`] would never fire for it.
+    pub fn frozen_range(&self, range: std::ops::Range<usize>) -> bool {
+        self.layers[range].iter().all(|l| l.get().is_some())
     }
 
     /// The freeze-on-first-write gate: returns `layer`'s codec, building it

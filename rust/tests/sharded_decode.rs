@@ -1,0 +1,430 @@
+//! Sharded KV-cached decode vs the cross-topology parity matrix.
+//!
+//! The contract (DESIGN.md §16): `Server::serve_continuous` on the sharded
+//! backend — node-owned per-slot KV state, activations pipelined through
+//! `ShardedForward::step_slots` — produces **token-identical** per-request
+//! outputs to the single-node host path at every cell of
+//! shards {1,2,3} × kv_page {0,4} × kv_quant {0,4}, for greedy *and*
+//! sampled decodes, including sequences that straddle the slide+rebuild
+//! eviction boundary. The windowed re-forward survives as the sharded
+//! parity oracle (`DecodePolicy::Reforward`), and the §12 determinism
+//! contract (outputs and metrics invariant under `PALLAS_THREADS`) extends
+//! to shard count: named CI steps run this suite at 1 and 4 threads.
+//!
+//! Plus: `shard_layers` obeys the partition contract property-wise,
+//! interleaved multi-request traffic is token-identical and leak-free per
+//! node, per-node resident-bit accounting partitions (KV grids sum to the
+//! single-node codec; `paper::verify_kv_cache_resident` holds on the
+//! sharded backend), and prefix sharing engages symmetrically across
+//! topologies.
+
+use std::sync::mpsc::channel;
+
+use pcdvq::coordinator::{
+    shard_layers, Batcher, BatcherConfig, DecodePolicy, GenRequest, GenResponse, Server,
+    ServingWeights,
+};
+use pcdvq::model::{GptConfig, GptModel, QuantizedGpt};
+use pcdvq::proptest::{for_cases, synthetic_tinygpt, tiny_pcdvq};
+
+/// Synthetic tinygpt (d=64, 2 layers, ctx=64) — the sharded-decode testbed.
+fn synthetic_model(name: &str) -> GptModel {
+    synthetic_tinygpt("pcdvq_shard_decode_tests", name, 23)
+}
+
+fn quantize(model: &GptModel) -> QuantizedGpt {
+    QuantizedGpt::quantize(model, &tiny_pcdvq())
+}
+
+fn prompt_bytes(n: usize, salt: usize) -> Vec<u8> {
+    (0..n).map(|i| ((i * 11 + salt * 17 + 3) % 251) as u8).collect()
+}
+
+/// One cell of the topology matrix. `kv_page == 0` selects the dense
+/// per-slot layout, `kv_quant == 0` the exact (unquantized) cache.
+struct Cell {
+    shards: usize,
+    kv_page: usize,
+    kv_quant: u32,
+}
+
+impl Cell {
+    fn tag(&self) -> String {
+        format!("shards={} kv_page={} kv_quant={}", self.shards, self.kv_page, self.kv_quant)
+    }
+}
+
+/// Serve `reqs` = (prompt, max_new, temperature) through the continuous
+/// loop at one matrix cell — all requests pre-queued so admission order
+/// (and therefore `request_rng` seeding) is deterministic.
+fn run_continuous(
+    q: &QuantizedGpt,
+    cell: &Cell,
+    max_slots: usize,
+    prefill_chunk: usize,
+    threads: Option<usize>,
+    prefix_share: Option<bool>,
+    reqs: &[(Vec<u8>, usize, f32)],
+) -> (Vec<GenResponse>, Server) {
+    let mut b = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .shards(cell.shards)
+        .kv_page(cell.kv_page)
+        .kv_quant(cell.kv_quant)
+        .max_slots(max_slots)
+        .prefill_chunk(prefill_chunk);
+    if let Some(t) = threads {
+        b = b.threads(t);
+    }
+    if let Some(share) = prefix_share {
+        b = b.prefix_share(share);
+    }
+    let mut server = b.build().unwrap();
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rxs = Vec::new();
+    for (p, max_new, temp) in reqs {
+        let (rtx, rrx) = channel();
+        batcher.push(GenRequest::builder(p.clone()).max_new(*max_new).temperature(*temp).build(rtx));
+        rxs.push(rrx);
+    }
+    server.serve_continuous(&mut batcher).unwrap();
+    let resps = rxs.iter().map(|r| r.recv().expect("response missing")).collect();
+    (resps, server)
+}
+
+/// Single-request run through the static path under `policy` at `shards`
+/// nodes — the oracle helper (`Reforward` on the sharded backend is the
+/// windowed re-forward parity oracle, DESIGN.md §16).
+fn run_single(
+    q: &QuantizedGpt,
+    shards: usize,
+    policy: DecodePolicy,
+    prompt: &[u8],
+    max_new: usize,
+) -> Vec<u8> {
+    let mut server = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .shards(shards)
+        .decode(policy)
+        .build()
+        .unwrap();
+    let (rtx, rrx) = channel();
+    server
+        .process_batch(vec![GenRequest::builder(prompt.to_vec()).max_new(max_new).build(rtx)])
+        .unwrap();
+    rrx.recv().unwrap().generated
+}
+
+/// The headline matrix: one mixed greedy/sampled request set (including
+/// eviction-straddling lengths) served at every cell of
+/// shards {1,2,3} × kv_page {0,4} × kv_quant {0,4}. Within a `kv_quant`
+/// class every cell must produce byte-identical per-request tokens —
+/// sharding and the page layout are pure implementation choices; only the
+/// cache codec may move logits.
+#[test]
+fn sharded_continuous_matches_the_cross_topology_matrix() {
+    let model = synthetic_model("matrix");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+
+    let reqs: Vec<(Vec<u8>, usize, f32)> = vec![
+        (prompt_bytes(1, 0), 6, 0.0),
+        (prompt_bytes(ctx / 2, 1), 8, 0.0),
+        // prompt + max_new > ctx: crosses the slide+rebuild eviction boundary
+        (prompt_bytes(ctx - 8, 2), 30, 0.0),
+        (prompt_bytes(5, 3), 8, 0.8),
+        // sampled + eviction-straddling
+        (prompt_bytes(ctx - 4, 4), 24, 0.7),
+    ];
+
+    for kv_quant in [0u32, 4] {
+        let mut baseline: Option<Vec<Vec<u8>>> = None;
+        for shards in [1usize, 2, 3] {
+            for kv_page in [0usize, 4] {
+                let cell = Cell { shards, kv_page, kv_quant };
+                let (resps, server) = run_continuous(&q, &cell, 3, 5, None, None, &reqs);
+                assert_eq!(
+                    server.metrics.requests as usize,
+                    reqs.len(),
+                    "{}: request count",
+                    cell.tag()
+                );
+                assert!(server.metrics.decode_steps > 0, "{}: decoded KV-cached", cell.tag());
+                let toks: Vec<Vec<u8>> = resps.iter().map(|r| r.generated.clone()).collect();
+                match &baseline {
+                    None => baseline = Some(toks),
+                    Some(want) => {
+                        for (i, (got, want)) in toks.iter().zip(want).enumerate() {
+                            assert_eq!(
+                                got,
+                                want,
+                                "req {i} at {} diverged from the single-node dense cell",
+                                cell.tag()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Greedy sharded continuous decodes equal both oracles token-for-token
+/// while the window fits in ctx (trunc + max_new ≤ ctx + 1, where the
+/// cached and re-forward schedules coincide, DESIGN.md §9): the sharded
+/// static `Reforward` path and the single-node host KV-cached path.
+#[test]
+fn sharded_decode_matches_reforward_and_host_cached_oracles() {
+    let model = synthetic_model("oracle");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+
+    let cases: Vec<(usize, usize)> = vec![(1, 6), (ctx / 2, 6), (ctx - 9, 8)];
+    let reqs: Vec<(Vec<u8>, usize, f32)> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, &(plen, max_new))| (prompt_bytes(plen, i), max_new, 0.0))
+        .collect();
+
+    for shards in [2usize, 3] {
+        // exact-cache cells only: the re-forward oracle never quantizes
+        for kv_page in [0usize, 4] {
+            let cell = Cell { shards, kv_page, kv_quant: 0 };
+            let (resps, _) = run_continuous(&q, &cell, 2, 7, None, None, &reqs);
+            for (i, (prompt, max_new, _)) in reqs.iter().enumerate() {
+                let reforward =
+                    run_single(&q, shards, DecodePolicy::Reforward, prompt, *max_new);
+                let host_cached =
+                    run_single(&q, 1, DecodePolicy::KvCached, prompt, *max_new);
+                assert_eq!(
+                    resps[i].generated,
+                    reforward,
+                    "req {i} at {}: vs sharded re-forward oracle",
+                    cell.tag()
+                );
+                assert_eq!(
+                    resps[i].generated,
+                    host_cached,
+                    "req {i} at {}: vs single-node cached oracle",
+                    cell.tag()
+                );
+            }
+        }
+    }
+}
+
+/// §12 determinism extended to the sharded backend: explicit 1- vs
+/// 4-thread runs of the same traffic (paged + quantized cell, sampled +
+/// eviction-straddling requests) produce identical tokens, per-request
+/// steps, and scheduler/cache counters.
+#[test]
+fn sharded_outputs_and_metrics_invariant_under_thread_count() {
+    let model = synthetic_model("threads");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+
+    let reqs: Vec<(Vec<u8>, usize, f32)> = vec![
+        (prompt_bytes(7, 0), 9, 0.0),
+        (prompt_bytes(ctx - 6, 1), 26, 0.0),
+        (prompt_bytes(19, 2), 12, 0.9),
+    ];
+    let cell = Cell { shards: 3, kv_page: 4, kv_quant: 4 };
+    let (r1, s1) = run_continuous(&q, &cell, 3, 5, Some(1), None, &reqs);
+    let (r4, s4) = run_continuous(&q, &cell, 3, 5, Some(4), None, &reqs);
+    for (i, (a, b)) in r1.iter().zip(&r4).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: tokens moved with thread count");
+        assert_eq!(a.steps, b.steps, "req {i}: steps moved with thread count");
+    }
+    assert_eq!(s1.metrics.decode_steps, s4.metrics.decode_steps, "decode steps");
+    assert_eq!(s1.metrics.tokens_generated, s4.metrics.tokens_generated, "tokens");
+    assert_eq!(s1.metrics.slot_steps_busy, s4.metrics.slot_steps_busy, "occupancy");
+    assert_eq!(s1.metrics.slot_steps_total, s4.metrics.slot_steps_total, "occupancy total");
+    assert_eq!(s1.metrics.kv_decoded_subvecs, s4.metrics.kv_decoded_subvecs, "codec reads");
+    assert_eq!(s1.metrics.kv_pages_allocated, s4.metrics.kv_pages_allocated, "pool allocs");
+    assert_eq!(s1.metrics.kv_cache_resident_bits, s4.metrics.kv_cache_resident_bits, "bits");
+}
+
+/// Per-node resident-bit accounting partitions: slot-cache bits and KV
+/// codebook bits per node sum to the server totals, the summed grids equal
+/// a single-node codec's codebooks (grids are built once per layer,
+/// wherever the layer lives), and the paper-grade resident verifiers hold
+/// on the sharded backend.
+#[test]
+fn sharded_resident_accounting_partitions_across_nodes() {
+    let model = synthetic_model("bits");
+    let q = quantize(&model);
+    let n_nodes = shard_layers(&model.config, 2).len();
+
+    let reqs: Vec<(Vec<u8>, usize, f32)> =
+        vec![(prompt_bytes(20, 0), 10, 0.0), (prompt_bytes(33, 1), 12, 0.0)];
+    let cell = Cell { shards: 2, kv_page: 4, kv_quant: 4 };
+    let (_, server) = run_continuous(&q, &cell, 2, 5, None, None, &reqs);
+
+    pcdvq::paper::verify_codes_resident(&q).expect("codes stay resident under sharding");
+    pcdvq::paper::verify_kv_cache_resident(&server).expect("sharded kv accounting verifies");
+
+    let cache_per_node = server.kv_cache_bits_per_node().expect("sharded per-node cache bits");
+    assert_eq!(cache_per_node.len(), n_nodes);
+    assert_eq!(cache_per_node.iter().sum::<u64>(), server.kv_cache_bits(), "cache bits sum");
+    assert!(cache_per_node.iter().all(|&b| b > 0), "every node holds cache state");
+
+    let cb_per_node = server.kv_codebook_bits_per_node().expect("sharded per-node grids");
+    assert_eq!(cb_per_node.len(), n_nodes);
+    assert_eq!(cb_per_node.iter().sum::<u64>(), server.kv_codebook_bits(), "codebook bits sum");
+    assert!(cb_per_node.iter().all(|&b| b > 0), "every node froze its own layers");
+
+    // KV grids PARTITION across nodes (unlike weight codebooks, which are
+    // resident once per node): the summed per-node grids equal a
+    // single-node server's codec total for the same traffic.
+    let single = Cell { shards: 1, kv_page: 4, kv_quant: 4 };
+    let (_, host) = run_continuous(&q, &single, 2, 5, None, None, &reqs);
+    assert_eq!(
+        server.kv_codebook_bits(),
+        host.kv_codebook_bits(),
+        "sharded grids sum to the single-node codec"
+    );
+    assert!(host.kv_cache_bits_per_node().is_none(), "per-node bits are a sharded accessor");
+}
+
+/// Cross-request prefix sharing works on the sharded backend — node tries
+/// publish and attach in lockstep, so coverage is topology-symmetric: hot
+/// prompts reuse prefill, logical hit counters match the single-node run,
+/// disabling the knob changes counters but never tokens, and every node's
+/// page audit balances afterwards.
+#[test]
+fn sharded_prefix_sharing_is_topology_symmetric_and_leak_free() {
+    let model = synthetic_model("prefix");
+    let q = quantize(&model);
+
+    let shared = prompt_bytes(24, 9);
+    let reqs: Vec<(Vec<u8>, usize, f32)> = (0..3)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend(prompt_bytes(4, 40 + i));
+            (p, 6, 0.0)
+        })
+        .collect();
+
+    // max_slots = 1 serializes requests, so publication lands before the
+    // next admission and the trie can actually hit
+    let cell = Cell { shards: 2, kv_page: 4, kv_quant: 0 };
+    let (r_share, s_share) = run_continuous(&q, &cell, 1, 8, None, Some(true), &reqs);
+    let (r_plain, s_plain) = run_continuous(&q, &cell, 1, 8, None, Some(false), &reqs);
+    let host = Cell { shards: 1, kv_page: 4, kv_quant: 0 };
+    let (r_host, s_host) = run_continuous(&q, &host, 1, 8, None, Some(true), &reqs);
+
+    for (i, ((a, b), c)) in r_share.iter().zip(&r_plain).zip(&r_host).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: sharing changed tokens");
+        assert_eq!(a.generated, c.generated, "req {i}: sharded vs host prefix run");
+    }
+    assert!(s_share.metrics.prefix_tokens_reused > 0, "sharing never engaged");
+    assert_eq!(s_plain.metrics.prefix_tokens_reused, 0, "disabled knob still reused");
+    assert_eq!(s_share.metrics.prefix_hits, s_host.metrics.prefix_hits, "hit symmetry");
+    assert_eq!(s_share.metrics.prefix_misses, s_host.metrics.prefix_misses, "miss symmetry");
+    assert_eq!(
+        s_share.metrics.prefix_tokens_reused, s_host.metrics.prefix_tokens_reused,
+        "reuse symmetry"
+    );
+
+    for (n, audit) in s_share.kv_page_audit_per_node().expect("paged audit").iter().enumerate() {
+        assert_eq!(audit.slot_chain_pages, 0, "node {n}: idle slots hold pages");
+        assert_eq!(
+            audit.created,
+            audit.slot_free_pages + audit.prefix_pages + audit.dropped,
+            "node {n}: page leak — audit was {audit:?}"
+        );
+    }
+}
+
+/// Property: `shard_layers` yields a deterministic, contiguous, disjoint
+/// cover of `0..n_layer` that equals `exec::partition`, never emits an
+/// empty range, and degrades to one-layer nodes when more shards are
+/// requested than layers exist.
+#[test]
+fn prop_shard_layers_partition_contract() {
+    for_cases(64, 0xA11C, |g| {
+        let n_layer = g.usize_in(1, 12);
+        let n_shards = g.usize_in(0, 16);
+        let cfg =
+            GptConfig { vocab: 256, d_model: 64, n_layer, n_head: 4, d_ff: 256, ctx: 64 };
+        let ranges = shard_layers(&cfg, n_shards);
+        assert_eq!(ranges, shard_layers(&cfg, n_shards), "case {}: deterministic", g.case_seed);
+        assert_eq!(
+            ranges,
+            pcdvq::exec::partition(n_layer, n_shards.max(1)),
+            "case {}: matches exec::partition",
+            g.case_seed
+        );
+        assert_eq!(ranges[0].start, 0, "case {}: starts at layer 0", g.case_seed);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "case {}: contiguous + disjoint", g.case_seed);
+        }
+        assert_eq!(ranges.last().unwrap().end, n_layer, "case {}: covers", g.case_seed);
+        assert!(ranges.iter().all(|r| !r.is_empty()), "case {}: no empty node", g.case_seed);
+        assert!(ranges.len() <= n_layer.min(n_shards.max(1)), "case {}: width", g.case_seed);
+        if n_shards > n_layer {
+            assert_eq!(ranges.len(), n_layer, "case {}: one layer per node", g.case_seed);
+        }
+    });
+
+    // degenerate geometry: a 0-layer config still yields a single empty plan
+    let cfg0 = GptConfig { vocab: 256, d_model: 64, n_layer: 0, n_head: 4, d_ff: 256, ctx: 64 };
+    assert_eq!(shard_layers(&cfg0, 3), vec![0..0]);
+}
+
+/// Property: interleaved multi-request traffic (random topology cell, slot
+/// width, chunk size, request mix with sampled temperatures and
+/// past-eviction lengths) through the sharded continuous loop is
+/// per-request token-identical to the single-node host run, and every
+/// node's page audit balances to zero leaks afterwards.
+#[test]
+fn prop_interleaved_sharded_serving_token_identical_and_leak_free() {
+    let model = synthetic_model("prop_interleave");
+    let ctx = model.config.ctx;
+    let q = quantize(&model);
+
+    for_cases(4, 0x5ADE, |g| {
+        let shards = g.usize_in(2, 3);
+        let kv_page = [0usize, 4][g.usize_in(0, 1)];
+        let kv_quant = [0u32, 4][g.usize_in(0, 1)];
+        let slots = g.usize_in(2, 3);
+        let chunk = [1usize, 5, 16][g.usize_in(0, 2)];
+        let n_req = g.usize_in(3, 6);
+        let reqs: Vec<(Vec<u8>, usize, f32)> = (0..n_req)
+            .map(|i| {
+                let plen = g.usize_in(1, ctx + 6);
+                let max_new = g.usize_in(1, 20);
+                let temp = if g.usize_in(0, 1) == 1 { 0.7 } else { 0.0 };
+                (prompt_bytes(plen, i), max_new, temp)
+            })
+            .collect();
+        let tag = format!(
+            "case {} (shards={shards} kv_page={kv_page} kv_quant={kv_quant} \
+             slots={slots} chunk={chunk})",
+            g.case_seed
+        );
+
+        let cell = Cell { shards, kv_page, kv_quant };
+        let host = Cell { shards: 1, kv_page, kv_quant };
+        let (rs, server) = run_continuous(&q, &cell, slots, chunk, None, None, &reqs);
+        let (rh, _) = run_continuous(&q, &host, slots, chunk, None, None, &reqs);
+        for (i, (a, b)) in rs.iter().zip(&rh).enumerate() {
+            assert_eq!(a.generated, b.generated, "{tag}: req {i} diverged from host");
+        }
+
+        if kv_page > 0 {
+            let audits = server.kv_page_audit_per_node().expect("paged sharded audit");
+            assert_eq!(audits.len(), shard_layers(&model.config, shards).len(), "{tag}: nodes");
+            for (n, audit) in audits.iter().enumerate() {
+                assert_eq!(audit.slot_chain_pages, 0, "{tag}: node {n} idle slots hold pages");
+                assert_eq!(
+                    audit.created,
+                    audit.slot_free_pages + audit.prefix_pages + audit.dropped,
+                    "{tag}: node {n} page leak — audit was {audit:?}"
+                );
+            }
+        } else {
+            assert!(server.kv_page_audit_per_node().is_none(), "{tag}: dense cell has no audit");
+        }
+    });
+}
