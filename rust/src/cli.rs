@@ -111,11 +111,15 @@ SUBCOMMANDS
              --model NAME --quantized --requests N (32) --max-new N (32)
              --listen ADDR  serve HTTP instead of the synthetic loop:
                         POST /v1/generate (SSE token stream + usage
-                        record), GET /metrics (Prometheus text),
-                        GET /healthz; admission gate sheds overload
-                        with 429 + Retry-After. Continuous host path,
-                        single-node or sharded (e.g. --host --listen
-                        0.0.0.0:8080)
+                        record; faults terminate with event: error),
+                        GET /metrics (Prometheus text), GET /healthz
+                        liveness, GET /readyz readiness (503 while
+                        starting or draining); admission gate sheds
+                        overload with 429 + Retry-After. Continuous host
+                        path, single-node or sharded (e.g. --host
+                        --listen 0.0.0.0:8080)
+             --read-timeout-ms N  socket read budget per connection
+                        (default 30000); dribbling clients get 408
              --host     serve on the host backend (codes-resident with
                         --quantized: packed codes + shared codebooks only,
                         no XLA artifacts, no dense weights); decodes

@@ -92,6 +92,12 @@ pub enum FinishReason {
     /// [`BatcherConfig::tenant_queue_cap`], or the ingress gate) before
     /// entering a queue; no tokens were generated.
     Shed,
+    /// A supervised step panicked or errored while this request held the
+    /// slot (see [`crate::coordinator::fault`]): the request fails with the
+    /// tokens generated so far, its slot's KV state is quarantined and
+    /// rebuilt, and every other in-flight request is unaffected
+    /// (DESIGN.md §17). Surfaces as SSE `event: error` on the ingress.
+    Faulted,
 }
 
 impl FinishReason {
@@ -101,6 +107,7 @@ impl FinishReason {
             FinishReason::Done => "done",
             FinishReason::TimedOut => "timed_out",
             FinishReason::Shed => "shed",
+            FinishReason::Faulted => "faulted",
         }
     }
 }

@@ -1,0 +1,328 @@
+//! Fault taxonomy and deterministic fault injection for the serving stack.
+//!
+//! DESIGN.md §17: a panic or error inside one slot's step must fail *that
+//! request only* — every other in-flight request's tokens and per-request
+//! metrics stay bit-identical to a fault-free run (§12 determinism extended
+//! to the failure domain). This module supplies the two halves of that
+//! contract:
+//!
+//! * **Supervision** — [`run_supervised`] wraps one slot's step in
+//!   `catch_unwind` and converts a panic or `Err` into a typed [`Fault`]
+//!   carrying its (node, slot) coordinate, so the scheduler can finish the
+//!   affected request as `FinishReason::Faulted`, quarantine the slot's KV
+//!   state, and keep serving.
+//! * **Injection** — [`FaultPlan`] triggers exactly one synthetic fault at
+//!   an exact (node, slot, step) coordinate, either as a real `panic!`
+//!   (exercising the unwind path) or as an injected corruption error. The
+//!   plan is deterministic: the same plan against the same request set
+//!   fires at the same scheduler step every run, which is what lets the
+//!   chaos suite (`tests/fault_tolerance.rs`) compare a faulted run
+//!   token-for-token against a fault-free one.
+
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use anyhow::{bail, Result};
+
+/// What kind of failure a supervised step produced. The spelling of
+/// [`FaultKind::as_str`] is the `kind` label on the
+/// `pallas_faults_total{kind,node}` Prometheus counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The step panicked and was caught by the supervisor.
+    StepPanic,
+    /// The step returned an error (including injected corruption).
+    StepError,
+}
+
+impl FaultKind {
+    /// Metric-label spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::StepPanic => "panic",
+            FaultKind::StepError => "error",
+        }
+    }
+}
+
+/// One supervised per-request failure: what happened, and at which
+/// (node, slot) coordinate. Produced by [`run_supervised`]; consumed by the
+/// serving loops, which finish the affected request as `Faulted`, bump
+/// `pallas_faults_total{kind,node}`, and reset the slot's KV state on every
+/// node before the slot is reused (the quarantine/rebuild step).
+#[derive(Clone, Debug)]
+pub struct Fault {
+    /// Failure class (metric label).
+    pub kind: FaultKind,
+    /// Shard node the failure surfaced on (0 on the single-node backend).
+    pub node: usize,
+    /// Slot index of the affected request.
+    pub slot: usize,
+    /// Human-readable detail (panic payload or error chain).
+    pub detail: String,
+}
+
+impl Fault {
+    /// A caught panic at (node, slot).
+    pub fn step_panic(node: usize, slot: usize, detail: impl Into<String>) -> Self {
+        Fault { kind: FaultKind::StepPanic, node, slot, detail: detail.into() }
+    }
+
+    /// A step error at (node, slot).
+    pub fn step_error(node: usize, slot: usize, err: &anyhow::Error) -> Self {
+        Fault { kind: FaultKind::StepError, node, slot, detail: format!("{err:#}") }
+    }
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "step {} on node {} slot {}: {}",
+            self.kind.as_str(),
+            self.node,
+            self.slot,
+            self.detail
+        )
+    }
+}
+
+/// How an armed [`FaultPlan`] manifests when its coordinate is hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// `panic!` inside the supervised step — exercises the full
+    /// catch_unwind path (caught as [`FaultKind::StepPanic`]).
+    Panic,
+    /// Return an injected-corruption error from the supervised step
+    /// (caught as [`FaultKind::StepError`]).
+    Corrupt,
+}
+
+impl FaultMode {
+    fn as_str(self) -> &'static str {
+        match self {
+            FaultMode::Panic => "panic",
+            FaultMode::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// A deterministic one-shot fault-injection plan: fire `mode` the first
+/// time step `step` of the request occupying slot `slot` runs on shard
+/// node `node`.
+///
+/// * `step` counts *completed scheduler steps* of the occupying request
+///   when the faulty step begins — i.e. `step = 0` is the request's first
+///   prefill chunk, and a request with `p` prefill chunks decodes at steps
+///   `p, p+1, …`. For the parity guarantee of the chaos suite, pick a step
+///   at which the KV codecs are already frozen (any `step >= 1` single
+///   node, `step >= 2` sharded): while codecs are still seeding, the loops
+///   step sequentially and the supervisor attributes the whole chain to
+///   the armed node.
+/// * The plan fires **once per server lifetime** (an internal latch flips
+///   on the first coordinate match), so a quarantined-and-reused slot is
+///   not re-faulted.
+///
+/// Wire format (the `PALLAS_FAULT` environment variable and
+/// [`FaultPlan::parse`]): `<mode>@node=<N>,slot=<S>,step=<K>` with mode
+/// `panic` or `corrupt`, e.g. `PALLAS_FAULT=panic@node=1,slot=0,step=3`.
+/// Threaded through `ServerBuilder::fault`; the env var is the default
+/// when the builder knob is unset.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// How the fault manifests.
+    pub mode: FaultMode,
+    /// Target shard node (0 on the single-node backend).
+    pub node: usize,
+    /// Target slot index.
+    pub slot: usize,
+    /// Target scheduler step of the occupying request (see type docs).
+    pub step: u64,
+    fired: AtomicBool,
+}
+
+impl FaultPlan {
+    /// A plan that fires `mode` at (node, slot, step).
+    pub fn new(mode: FaultMode, node: usize, slot: usize, step: u64) -> Self {
+        FaultPlan { mode, node, slot, step, fired: AtomicBool::new(false) }
+    }
+
+    /// Parse the `PALLAS_FAULT` wire form
+    /// (`panic@node=N,slot=S,step=K` / `corrupt@...`).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let (mode, rest) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault plan '{s}': expected '<mode>@<coords>'"))?;
+        let mode = match mode {
+            "panic" => FaultMode::Panic,
+            "corrupt" => FaultMode::Corrupt,
+            other => bail!("fault plan '{s}': unknown mode '{other}' (panic|corrupt)"),
+        };
+        let (mut node, mut slot, mut step) = (None, None, None);
+        for part in rest.split(',') {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault plan '{s}': bad coordinate '{part}'"))?;
+            let n: u64 = val
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault plan '{s}': '{key}' is not an integer"))?;
+            match key {
+                "node" => node = Some(n as usize),
+                "slot" => slot = Some(n as usize),
+                "step" => step = Some(n),
+                other => bail!("fault plan '{s}': unknown coordinate '{other}'"),
+            }
+        }
+        match (node, slot, step) {
+            (Some(node), Some(slot), Some(step)) => Ok(FaultPlan::new(mode, node, slot, step)),
+            _ => bail!("fault plan '{s}': needs node=, slot= and step="),
+        }
+    }
+
+    /// Atomically consume the plan if `(node, slot, step)` is its target
+    /// coordinate. Returns the mode to inject exactly once; `None` on a
+    /// coordinate miss or if the plan already fired.
+    pub fn fire(&self, node: usize, slot: usize, step: u64) -> Option<FaultMode> {
+        if node != self.node || slot != self.slot || step != self.step {
+            return None;
+        }
+        self.fired
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+            .then_some(self.mode)
+    }
+
+    /// Whether the plan has fired.
+    pub fn has_fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+impl Clone for FaultPlan {
+    fn clone(&self) -> Self {
+        FaultPlan {
+            mode: self.mode,
+            node: self.node,
+            slot: self.slot,
+            step: self.step,
+            fired: AtomicBool::new(self.fired.load(Ordering::SeqCst)),
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@node={},slot={},step={}", self.mode.as_str(), self.node, self.slot, self.step)
+    }
+}
+
+/// Render a `catch_unwind` payload as text (`&str` / `String` payloads,
+/// which is what `panic!` produces; anything else is opaque).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Supervise one slot step attributed to `(node, slot)`: optionally inject
+/// `injected` first (so the injection exercises the same catch path a real
+/// failure would), then run `f` under `catch_unwind`, converting a panic
+/// into [`FaultKind::StepPanic`] and an `Err` into [`FaultKind::StepError`].
+///
+/// Note: the process-global panic hook still prints the payload of a caught
+/// panic to stderr before unwinding reaches us — cosmetic under injection,
+/// and genuinely useful signal for real faults — so it is left installed.
+pub fn run_supervised<T>(
+    node: usize,
+    slot: usize,
+    injected: Option<FaultMode>,
+    f: impl FnOnce() -> Result<T>,
+) -> std::result::Result<T, Fault> {
+    let out = catch_unwind(AssertUnwindSafe(|| -> Result<T> {
+        if let Some(mode) = injected {
+            match mode {
+                FaultMode::Panic => panic!("injected fault: node {node} slot {slot}"),
+                FaultMode::Corrupt => bail!("injected corruption: node {node} slot {slot}"),
+            }
+        }
+        f()
+    }));
+    match out {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(Fault::step_error(node, slot, &e)),
+        Err(payload) => Err(Fault::step_panic(node, slot, panic_message(payload.as_ref()))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_both_modes_and_round_trips() {
+        let p = FaultPlan::parse("panic@node=1,slot=0,step=3").unwrap();
+        assert_eq!((p.mode, p.node, p.slot, p.step), (FaultMode::Panic, 1, 0, 3));
+        assert_eq!(p.to_string(), "panic@node=1,slot=0,step=3");
+        let c = FaultPlan::parse("corrupt@node=0,slot=2,step=7").unwrap();
+        assert_eq!((c.mode, c.node, c.slot, c.step), (FaultMode::Corrupt, 0, 2, 7));
+        assert_eq!(FaultPlan::parse(&c.to_string()).unwrap().slot, 2);
+    }
+
+    #[test]
+    fn plan_rejects_malformed_specs() {
+        for bad in [
+            "panic",
+            "explode@node=0,slot=0,step=0",
+            "panic@node=0,slot=0",
+            "panic@node=x,slot=0,step=0",
+            "panic@node=0,slot=0,step=0,extra=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn plan_fires_exactly_once_at_its_coordinate() {
+        let p = FaultPlan::new(FaultMode::Panic, 1, 2, 5);
+        assert_eq!(p.fire(0, 2, 5), None, "node miss");
+        assert_eq!(p.fire(1, 0, 5), None, "slot miss");
+        assert_eq!(p.fire(1, 2, 4), None, "step miss");
+        assert!(!p.has_fired());
+        assert_eq!(p.fire(1, 2, 5), Some(FaultMode::Panic));
+        assert!(p.has_fired());
+        assert_eq!(p.fire(1, 2, 5), None, "one-shot");
+    }
+
+    #[test]
+    fn supervision_converts_panics_and_errors_into_faults() {
+        let ok = run_supervised(0, 0, None, || Ok(41));
+        assert_eq!(ok.unwrap(), 41);
+
+        let err = run_supervised(2, 1, None, || -> Result<()> { bail!("bad block") });
+        let f = err.unwrap_err();
+        assert_eq!((f.kind, f.node, f.slot), (FaultKind::StepError, 2, 1));
+        assert!(f.detail.contains("bad block"));
+
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence the expected panic
+        let caught = run_supervised(1, 3, None, || -> Result<()> { panic!("kaboom") });
+        let injected = run_supervised(0, 4, Some(FaultMode::Panic), || Ok(()));
+        std::panic::set_hook(prev);
+
+        let f = caught.unwrap_err();
+        assert_eq!((f.kind, f.node, f.slot), (FaultKind::StepPanic, 1, 3));
+        assert!(f.detail.contains("kaboom"));
+        let f = injected.unwrap_err();
+        assert_eq!(f.kind, FaultKind::StepPanic);
+        assert!(f.detail.contains("injected fault"));
+
+        let f = run_supervised(0, 5, Some(FaultMode::Corrupt), || Ok(())).unwrap_err();
+        assert_eq!(f.kind, FaultKind::StepError);
+        assert!(f.detail.contains("injected corruption"));
+    }
+}

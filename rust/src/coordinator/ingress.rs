@@ -9,14 +9,26 @@
 //!   Server-Sent-Events stream: one `data: {"token":N}` event per generated
 //!   token as the scheduler produces it, terminated by an `event: usage`
 //!   record (token/step counts, queue wait, TTFT, admission seq, finish
-//!   reason). Requests are built through the same [`GenRequest::builder`]
-//!   the in-process path uses, so tenant / priority / deadline semantics
-//!   are identical no matter how a request enters.
+//!   reason) — or by an `event: error` record when the request's
+//!   supervised step faulted ([`FinishReason::Faulted`], DESIGN.md §17),
+//!   so a fault is always a structured stream terminator, never a hung
+//!   connection. Bodies are validated at this boundary: a shape error
+//!   (empty prompt, `max_new == 0`, prompt longer than the model context)
+//!   is a structured 400 naming the offending field.
 //! * `GET /metrics` — Prometheus text format: the serving loop's counters
 //!   and latency quantiles ([`Metrics::prometheus_text`] via
 //!   [`Server::metrics_mirror`]) plus the gate's per-tenant admitted/shed
 //!   counters and live queue-pressure gauges.
-//! * `GET /healthz` — liveness probe.
+//! * `GET /healthz` — liveness probe: 200 whenever the process can answer.
+//! * `GET /readyz` — readiness probe: 503 before the serving loop's first
+//!   scheduler iteration and while draining ([`Ingress::begin_drain`] /
+//!   [`Ingress::shutdown`]), 200 otherwise — the signal a load balancer
+//!   uses to route traffic away without killing in-flight requests.
+//!
+//! Slow clients are bounded too: every socket read runs under
+//! [`IngressConfig::read_timeout`]; a client that dribbles its request
+//! (slowloris) gets `408 Request Timeout` and its connection closed instead
+//! of wedging a handler thread.
 //!
 //! # Admission control and load shedding
 //!
@@ -58,7 +70,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{Batcher, BatcherConfig, GenRequest, GenResponse, Priority};
+use super::batcher::{Batcher, BatcherConfig, FinishReason, GenRequest, GenResponse, Priority};
 use super::metrics::Metrics;
 use super::server::Server;
 
@@ -80,6 +92,11 @@ pub struct IngressConfig {
     /// Weighted-round-robin weights handed to
     /// [`Batcher::set_tenant_weight`] at spawn (default weight is 1).
     pub tenant_weights: Vec<(String, usize)>,
+    /// Socket read budget per connection (request line, headers, body):
+    /// a client that dribbles past it gets `408 Request Timeout` and the
+    /// connection closed (`serve --read-timeout-ms`). Zero keeps the
+    /// default (30 s).
+    pub read_timeout: Duration,
 }
 
 impl Default for IngressConfig {
@@ -90,6 +107,7 @@ impl Default for IngressConfig {
             queue_wait_budget: Duration::ZERO,
             max_connections: 256,
             tenant_weights: Vec::new(),
+            read_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -270,12 +288,23 @@ struct Ctx {
     stop: Arc<AtomicBool>,
     live_conns: AtomicUsize,
     max_conns: usize,
+    /// Serving-loop readiness latch ([`Server::ready_signal`]) — `/readyz`
+    /// answers 503 until it flips.
+    ready: Arc<AtomicBool>,
+    /// Graceful-shutdown flag ([`Ingress::begin_drain`]) — `/readyz`
+    /// answers 503 while set, in-flight requests keep streaming.
+    draining: Arc<AtomicBool>,
+    /// Per-connection socket read budget (see [`IngressConfig`]).
+    read_timeout: Duration,
+    /// Model context length, for boundary validation of prompt sizes.
+    model_ctx: usize,
 }
 
 /// A running HTTP front end — see the [module docs](self).
 pub struct Ingress {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     gate: Arc<AdmissionGate>,
     accept: Option<JoinHandle<()>>,
     serve: Option<JoinHandle<Result<Server>>>,
@@ -296,8 +325,11 @@ impl Ingress {
             TcpListener::bind(addr).with_context(|| format!("binding ingress on {addr}"))?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let mirror = server.metrics_mirror();
+        let ready = server.ready_signal();
+        let model_ctx = server.config.ctx;
         let gate = Arc::new(AdmissionGate::new(&cfg, server.max_slots));
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
 
         let (req_tx, req_rx) = channel();
         let mut batcher = Batcher::new(req_rx, batcher_cfg);
@@ -319,13 +351,21 @@ impl Ingress {
             stop: stop.clone(),
             live_conns: AtomicUsize::new(0),
             max_conns: cfg.max_connections.max(1),
+            ready,
+            draining: draining.clone(),
+            read_timeout: if cfg.read_timeout.is_zero() {
+                Duration::from_secs(30)
+            } else {
+                cfg.read_timeout
+            },
+            model_ctx,
         });
         let accept = std::thread::Builder::new()
             .name("pallas-ingress".into())
             .spawn(move || accept_loop(listener, ctx))
             .context("spawning accept thread")?;
 
-        Ok(Ingress { addr, stop, gate, accept: Some(accept), serve: Some(serve) })
+        Ok(Ingress { addr, stop, draining, gate, accept: Some(accept), serve: Some(serve) })
     }
 
     /// The bound socket address (resolves `:0` test binds).
@@ -344,9 +384,21 @@ impl Ingress {
         self.gate.shed_total()
     }
 
+    /// Flip `/readyz` to 503 while the listener keeps accepting — the
+    /// graceful-degradation window (DESIGN.md §17) where a load balancer
+    /// routes new traffic away while in-flight requests finish streaming.
+    /// [`Self::shutdown`] enters this state first; tests call it directly
+    /// to observe draining readiness.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
     /// Stop accepting, drain every in-flight request, and hand the
     /// [`Server`] back (its [`Server::metrics`] hold the final counters).
+    /// Readiness flips first ([`Self::begin_drain`]), then the listener
+    /// closes.
     pub fn shutdown(mut self) -> Result<Server> {
+        self.begin_drain();
         self.stop.store(true, Ordering::SeqCst);
         // the accept loop is parked in accept(): poke it awake so it can
         // observe the flag and exit
@@ -405,18 +457,51 @@ fn accept_loop(listener: TcpListener, ctx: Arc<Ctx>) {
     }
 }
 
+/// Guard one socket read against a dribbling client: a timed-out read
+/// answers `408 Request Timeout` and yields `None` so the handler returns
+/// (closing the connection) instead of wedging its thread; any other I/O
+/// error propagates as before.
+fn guard_read_timeout<T>(
+    r: std::io::Result<T>,
+    stream: &mut TcpStream,
+    what: &str,
+) -> Result<Option<T>> {
+    use std::io::ErrorKind;
+    match r {
+        Ok(v) => Ok(Some(v)),
+        // both kinds, because platforms disagree on which one a timed-out
+        // blocking read reports
+        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+            write_simple(
+                stream,
+                408,
+                "Request Timeout",
+                "application/json",
+                &[],
+                "{\"error\":\"read timed out\"}\n",
+            )?;
+            Ok(None)
+        }
+        Err(e) => Err(e).with_context(|| format!("reading {what}")),
+    }
+}
+
 fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    stream.set_read_timeout(Some(ctx.read_timeout)).ok();
     let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    if guard_read_timeout(reader.read_line(&mut line), &mut stream, "request line")?.is_none() {
+        return Ok(());
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
     let mut content_len = 0usize;
     loop {
         let mut header = String::new();
-        reader.read_line(&mut header).context("reading header")?;
+        if guard_read_timeout(reader.read_line(&mut header), &mut stream, "header")?.is_none() {
+            return Ok(());
+        }
         let header = header.trim_end();
         if header.is_empty() {
             break;
@@ -439,7 +524,9 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
         );
     }
     let mut body = vec![0u8; content_len];
-    reader.read_exact(&mut body).context("reading body")?;
+    if guard_read_timeout(reader.read_exact(&mut body), &mut stream, "body")?.is_none() {
+        return Ok(());
+    }
 
     match (method.as_str(), path.as_str()) {
         ("POST", "/v1/generate") => handle_generate(&mut stream, &body, ctx),
@@ -458,8 +545,23 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> Result<()> {
                 &text,
             )
         }
+        // liveness: 200 whenever the process can answer at all
         ("GET", "/healthz") => {
             write_simple(&mut stream, 200, "OK", "text/plain; charset=utf-8", &[], "ok\n")
+        }
+        // readiness: 503 while draining / shutting down, or before the
+        // serving loop's first scheduler iteration
+        ("GET", "/readyz") => {
+            let (status, reason, body) = if ctx.draining.load(Ordering::SeqCst)
+                || ctx.stop.load(Ordering::SeqCst)
+            {
+                (503, "Service Unavailable", "draining\n")
+            } else if !ctx.ready.load(Ordering::SeqCst) {
+                (503, "Service Unavailable", "starting\n")
+            } else {
+                (200, "OK", "ready\n")
+            };
+            write_simple(&mut stream, status, reason, "text/plain; charset=utf-8", &[], body)
         }
         _ => write_simple(
             &mut stream,
@@ -486,6 +588,19 @@ fn handle_generate(stream: &mut TcpStream, body: &[u8], ctx: &Ctx) -> Result<()>
             )
         }
     };
+    // shape validation at the boundary (DESIGN.md §14): a degenerate
+    // request is a structured 400 naming the field, not a zero-token
+    // generation downstream
+    if let Err(e) = validate_generate(&spec, ctx.model_ctx) {
+        return write_simple(
+            stream,
+            400,
+            "Bad Request",
+            "application/json",
+            &[],
+            &format!("{{\"error\":{}}}\n", json_quote(&format!("{e:#}"))),
+        );
+    }
     // The shed decision happens here, synchronously, before any response
     // byte: a rejected request costs the server nothing downstream.
     if let Err(retry_after) = ctx.gate.try_admit(&spec.tenant) {
@@ -527,10 +642,12 @@ fn handle_generate(stream: &mut TcpStream, body: &[u8], ctx: &Ctx) -> Result<()>
         );
     }
     let result = stream_sse(stream, tok_rx, resp_rx);
+    // only cleanly-completed requests feed the wait estimator: a faulted
+    // or expired request's latency says nothing about healthy service time
     let service = result
         .as_ref()
         .ok()
-        .filter(|r| !r.generated.is_empty())
+        .filter(|r| !r.generated.is_empty() && r.finish == FinishReason::Done)
         .map(|r| r.latency.saturating_sub(r.queue_wait));
     ctx.gate.complete(&spec.tenant, service);
     result.map(|_| ())
@@ -558,6 +675,20 @@ fn stream_sse(
     // the token sender dropping means the request resolved: its response
     // is already in (or about to enter) the channel
     let resp = resp_rx.recv().context("serving thread dropped the request")?;
+    // a supervised fault terminates the stream with a structured error
+    // event (DESIGN.md §17) — the client always sees an explicit
+    // terminator, never a silently-truncated stream or a hung connection
+    if resp.finish == FinishReason::Faulted {
+        let event = format!(
+            "event: error\ndata: {{\"error\":\"faulted\",\"seq\":{},\"tokens\":{}}}\n\n",
+            resp.seq,
+            resp.generated.len(),
+        );
+        if !client_gone {
+            let _ = stream.write_all(event.as_bytes()).and_then(|_| stream.flush());
+        }
+        return Ok(resp);
+    }
     let ttft_ms = match resp.ttft {
         Some(d) => format!("{:.3}", d.as_secs_f64() * 1e3),
         None => "null".to_string(),
@@ -644,16 +775,29 @@ impl HttpResponse {
 }
 
 /// Issue one blocking HTTP/1.1 request (`Connection: close`) and read the
-/// response to EOF.
+/// response to EOF, with the default 120 s client-side read timeout.
 pub fn http_request(
     addr: SocketAddr,
     method: &str,
     path: &str,
     body: Option<&str>,
 ) -> Result<HttpResponse> {
+    http_request_with_timeout(addr, method, path, body, Duration::from_secs(120))
+}
+
+/// As [`http_request`], with an explicit client-side socket read timeout
+/// (the slowloris test uses a short budget so a stalled server read
+/// surfaces quickly instead of after two minutes).
+pub fn http_request_with_timeout(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    read_timeout: Duration,
+) -> Result<HttpResponse> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    stream.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    stream.set_read_timeout(Some(read_timeout)).ok();
     let body = body.unwrap_or("");
     let req = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
@@ -948,6 +1092,24 @@ fn parse_generate(body: &[u8]) -> Result<GenSpec> {
     Ok(spec)
 }
 
+/// Boundary validation of a parsed request against the serving model
+/// (DESIGN.md §17): every rejection names the offending field, so the 400
+/// body tells the caller exactly what to fix. Shapes rejected here would
+/// otherwise resolve as degenerate zero-token generations (empty prompt,
+/// `max_new == 0`) or be silently truncated (prompt at or beyond the
+/// context, which leaves no room to generate).
+fn validate_generate(spec: &GenSpec, model_ctx: usize) -> Result<()> {
+    anyhow::ensure!(!spec.prompt.is_empty(), "invalid field 'prompt': must be non-empty");
+    anyhow::ensure!(spec.max_new > 0, "invalid field 'max_new': must be at least 1");
+    anyhow::ensure!(
+        spec.prompt.len() < model_ctx,
+        "invalid field 'prompt': {} tokens do not fit the model context \
+         ({model_ctx} positions, one reserved for generation)",
+        spec.prompt.len(),
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -980,6 +1142,27 @@ mod tests {
         assert!(parse_generate(br#"{"prompt":"x","bogus":1}"#).is_err());
         assert!(parse_generate(br#"{"prompt":["x"]}"#).is_err(), "no nested values");
         assert!(parse_generate(b"not json").is_err());
+    }
+
+    #[test]
+    fn boundary_validation_names_the_offending_field() {
+        let ok = |body: &[u8]| parse_generate(body).unwrap();
+        assert!(validate_generate(&ok(br#"{"prompt":"hello"}"#), 64).is_ok());
+
+        let e = validate_generate(&ok(br#"{"prompt":""}"#), 64).unwrap_err();
+        assert!(e.to_string().contains("'prompt'"), "{e}");
+        assert!(e.to_string().contains("non-empty"), "{e}");
+
+        let e = validate_generate(&ok(br#"{"prompt":"x","max_new":0}"#), 64).unwrap_err();
+        assert!(e.to_string().contains("'max_new'"), "{e}");
+
+        let long = format!("{{\"prompt\":{}}}", json_quote(&"p".repeat(64)));
+        let e = validate_generate(&ok(long.as_bytes()), 64).unwrap_err();
+        assert!(e.to_string().contains("'prompt'"), "{e}");
+        assert!(e.to_string().contains("context"), "{e}");
+        // one position is reserved for generation: ctx - 1 still fits
+        let fits = format!("{{\"prompt\":{}}}", json_quote(&"p".repeat(63)));
+        assert!(validate_generate(&ok(fits.as_bytes()), 64).is_ok());
     }
 
     #[test]

@@ -79,6 +79,12 @@ pub struct Metrics {
     ttft_hot_us: Vec<u64>,
     /// TTFT samples of requests that prefilled from scratch.
     ttft_cold_us: Vec<u64>,
+    /// Supervised per-slot faults by `(kind, node)` — kind is the
+    /// [`crate::coordinator::fault::FaultKind`] label ("panic" / "error"),
+    /// node the shard node the fault surfaced on. Kept sorted by (kind,
+    /// node) so exposition order is deterministic; exported as
+    /// `pallas_faults_total{kind,node}` (DESIGN.md §17).
+    faults: Vec<(String, usize, u64)>,
 }
 
 impl Metrics {
@@ -125,6 +131,29 @@ impl Metrics {
     /// TTFT of a request that prefilled its whole prompt from scratch.
     pub fn record_ttft_cold(&mut self, d: Duration) {
         self.ttft_cold_us.push(d.as_micros() as u64);
+    }
+
+    /// Count one supervised fault of `kind` ("panic" / "error") on shard
+    /// `node`. Called from the coordinator's fold (never from workers), so
+    /// the counter is thread-count-invariant like every other metric.
+    pub fn record_fault(&mut self, kind: &str, node: usize) {
+        match self.faults.iter_mut().find(|(k, n, _)| k == kind && *n == node) {
+            Some(entry) => entry.2 += 1,
+            None => {
+                self.faults.push((kind.to_string(), node, 1));
+                self.faults.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+            }
+        }
+    }
+
+    /// Per-(kind, node) fault counts, sorted by (kind, node).
+    pub fn faults(&self) -> &[(String, usize, u64)] {
+        &self.faults
+    }
+
+    /// Total supervised faults across kinds and nodes.
+    pub fn faults_total(&self) -> u64 {
+        self.faults.iter().map(|(_, _, n)| n).sum()
     }
 
     /// Latency percentile in milliseconds (p in [0,100]).
@@ -249,6 +278,9 @@ impl Metrics {
         if self.shed > 0 {
             s.push_str(&format!(" shed={}", self.shed));
         }
+        if self.faults_total() > 0 {
+            s.push_str(&format!(" faults={}", self.faults_total()));
+        }
         s
     }
 
@@ -281,6 +313,15 @@ impl Metrics {
         ];
         for (name, help, v) in counters {
             out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+        }
+        out.push_str(
+            "# HELP pallas_faults_total Supervised per-slot step faults by kind and shard node\n\
+             # TYPE pallas_faults_total counter\n",
+        );
+        for (kind, node, count) in &self.faults {
+            out.push_str(&format!(
+                "pallas_faults_total{{kind=\"{kind}\",node=\"{node}\"}} {count}\n"
+            ));
         }
         let gauges: [(&str, &str, f64); 5] = [
             ("pallas_slot_occupancy", "Busy fraction of offered slot-steps", self.slot_occupancy()),
@@ -456,11 +497,16 @@ mod tests {
         m.record_queue_wait(Duration::from_millis(1));
         m.record_occupancy(3, 4);
         m.wall_s = 0.5;
+        m.record_fault("panic", 1);
+        m.record_fault("panic", 1);
+        m.record_fault("error", 0);
         let text = m.prometheus_text();
         assert!(text.contains("# TYPE pallas_requests_total counter"));
         assert!(text.contains("pallas_requests_total 2\n"));
         assert!(text.contains("pallas_shed_total 3\n"));
         assert!(text.contains("pallas_timeouts_total 1\n"));
+        assert!(text.contains("pallas_faults_total{kind=\"error\",node=\"0\"} 1\n"));
+        assert!(text.contains("pallas_faults_total{kind=\"panic\",node=\"1\"} 2\n"));
         assert!(text.contains("pallas_slot_occupancy 0.75\n"));
         assert!(text.contains("pallas_ttft_ms{quantile=\"0.5\"}"));
         // every exposition line is either a comment or `name[{labels}] value`

@@ -37,11 +37,21 @@
 //!   (DESIGN.md §12).
 //! * [`ingress`] — the network front end: a threaded HTTP/1.1 listener
 //!   (`POST /v1/generate` streamed as SSE, `GET /metrics` in Prometheus
-//!   text, `GET /healthz`) with an admission gate that sheds overload
-//!   early with 429 instead of timing out late, in front of the batcher's
-//!   per-tenant weighted-round-robin queues (DESIGN.md §14).
+//!   text, `GET /healthz` liveness + `GET /readyz` readiness) with an
+//!   admission gate that sheds overload early with 429 instead of timing
+//!   out late, in front of the batcher's per-tenant weighted-round-robin
+//!   queues (DESIGN.md §14). Request bodies are validated at the boundary
+//!   (structured 400s) and slow clients are cut off with 408 after a
+//!   configurable read timeout.
+//! * [`fault`] — the fault-tolerance layer (DESIGN.md §17): supervised
+//!   slot stepping converts a per-slot panic/error into a typed
+//!   [`Fault`], failing only the affected request
+//!   ([`FinishReason::Faulted`]) while its slot is quarantined and
+//!   rebuilt; [`FaultPlan`] (`PALLAS_FAULT`) injects deterministic faults
+//!   at an exact (node, slot, step) coordinate for the chaos suite.
 
 pub mod batcher;
+pub mod fault;
 pub mod ingress;
 pub mod metrics;
 pub mod prefix;
@@ -53,6 +63,7 @@ pub use batcher::{
     Admitted, Batcher, BatcherConfig, FinishReason, GenRequest, GenRequestBuilder, GenResponse,
     Priority,
 };
+pub use fault::{Fault, FaultKind, FaultMode, FaultPlan};
 pub use ingress::{Ingress, IngressConfig};
 pub use metrics::Metrics;
 pub use prefix::{PrefixCache, PrefixStats};
@@ -63,4 +74,4 @@ pub use server::{
     validate_kv_page, validate_kv_quant, DecodePolicy, KvPageAudit, Server, ServerBuilder,
     ServingWeights,
 };
-pub use shard::{shard_layers, ShardBits, ShardStepJob, ShardedForward};
+pub use shard::{shard_layers, ShardBits, ShardStepJob, ShardedForward, SlotStepOutcome};

@@ -50,12 +50,14 @@
 //! parity oracle and as the only option for the fixed-geometry XLA
 //! executables.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::batcher::{Admitted, Batcher, FinishReason, GenRequest, GenResponse};
+use super::fault::{run_supervised, Fault, FaultPlan};
 use super::metrics::Metrics;
 use super::prefix::{PrefixCache, PrefixStats};
 use crate::codebook::{DirectionCodebook, MagnitudeCodebook};
@@ -159,6 +161,10 @@ struct Slot {
     /// flushes `generated[streamed..]` after every scheduler step's join,
     /// in slot order, so streams are as deterministic as the outputs.
     streamed: usize,
+    /// How this request will resolve. `Done` unless a supervised step
+    /// faulted ([`FinishReason::Faulted`]) or the deadline expired
+    /// mid-flight ([`FinishReason::TimedOut`]).
+    finish: FinishReason,
 }
 
 impl Slot {
@@ -218,6 +224,9 @@ impl SlotCache {
 /// target positions past them — see `model::kv_pool`'s COW rule for why
 /// even a violation of that would stay correct).
 struct SlotWork<'a> {
+    /// Slot index — the coordinate faults are attributed to, and the key
+    /// the coordinator folds outcomes back by.
+    idx: usize,
     slot: &'a mut Slot,
     cache: &'a mut SlotCache,
 }
@@ -263,6 +272,28 @@ fn step_slot<C: KvStore>(
         }
         SlotPhase::Done => unreachable!("Done slots are filtered before stepping"),
     }
+}
+
+/// [`step_slot`] under fault supervision (single-node continuous loop):
+/// checks the injection plan for a (node 0, slot idx, step) coordinate
+/// match, then runs the step inside `catch_unwind` so a panic or error
+/// fails only this slot's request ([`super::fault`], DESIGN.md §17). Used
+/// both by the inline codec-seeding step and inside the pool fan-out —
+/// without it, a panic in a worker closure would unwind through
+/// `exec::Pool::map_mut`'s join and kill the whole serving loop.
+fn supervised_step(
+    hf: &HostForward,
+    w: &mut SlotWork<'_>,
+    chunk: usize,
+    capture: bool,
+    plan: Option<&FaultPlan>,
+) -> std::result::Result<StepKind, Fault> {
+    let injected = plan.and_then(|p| p.fire(0, w.idx, w.slot.steps as u64));
+    let idx = w.idx;
+    run_supervised(0, idx, injected, || match w.cache {
+        SlotCache::Dense(c) => step_slot(hf, w.slot, c, chunk, capture),
+        SlotCache::Paged(c) => step_slot(hf, w.slot, c, chunk, capture),
+    })
 }
 
 /// Decode one static-path request to completion against its own cache:
@@ -404,6 +435,14 @@ pub struct Server {
     /// in after every scheduler step, so `GET /metrics` on the ingress can
     /// read them while the serving thread owns the server.
     mirror: Option<Arc<Mutex<Metrics>>>,
+    /// One-shot deterministic fault injection ([`FaultPlan`], DESIGN.md
+    /// §17): set via `ServerBuilder::fault` or the `PALLAS_FAULT` env var;
+    /// `None` in normal serving. `Arc` because pool workers check the plan
+    /// concurrently during the slot fan-out.
+    fault: Option<Arc<FaultPlan>>,
+    /// Readiness latch for `/readyz` ([`Self::ready_signal`]): flips true
+    /// at the first scheduler iteration of a continuous serve call.
+    ready: Arc<AtomicBool>,
     /// Weight bits actually resident for the quantizable matrices (fp32 vs
     /// packed codes) — reported by the efficiency harness.
     pub resident_weight_bits: u64,
@@ -447,6 +486,8 @@ impl Server {
             pool_seen: KvPoolCounters::default(),
             prefix_seen: PrefixStats::default(),
             mirror: None,
+            fault: None,
+            ready: Arc::new(AtomicBool::new(false)),
             resident_weight_bits,
             resident_codebook_bits,
         }
@@ -484,6 +525,7 @@ impl Server {
             sampler_seed: None,
             capture_logits: false,
             batch: None,
+            fault: None,
         }
     }
 
@@ -1080,6 +1122,14 @@ impl Server {
         self.mirror.as_ref().expect("just installed").clone()
     }
 
+    /// Readiness flag for the ingress `/readyz` probe: `false` until the
+    /// continuous loop has completed its first scheduler iteration, `true`
+    /// from then on. Cloned by [`super::Ingress::spawn`] before the server
+    /// moves onto its serving thread.
+    pub fn ready_signal(&self) -> Arc<AtomicBool> {
+        self.ready.clone()
+    }
+
     /// Refresh the out-of-band snapshot, if anyone asked for one.
     fn publish_mirror(&self) {
         if let Some(m) = &self.mirror {
@@ -1185,6 +1235,7 @@ impl Server {
         let Backend::Host(hf) = &self.backend else { unreachable!() };
         let mut slots: Vec<Option<Slot>> = (0..n).map(|_| None).collect();
         let mut seen = (batcher.timed_out(), batcher.shed());
+        self.ready.store(true, Ordering::SeqCst);
 
         loop {
             // ---- admission: fill free slots from the queue ----
@@ -1243,6 +1294,7 @@ impl Server {
                         reused,
                         published: false,
                         streamed: 0,
+                        finish: FinishReason::Done,
                     });
                     active += 1;
                 }
@@ -1251,6 +1303,23 @@ impl Server {
             if active == 0 {
                 self.publish_mirror();
                 continue; // everything admitted had expired — park again
+            }
+
+            // ---- deadlines: expire in-flight requests before model work ----
+            // A deadline that lapses mid-prefill (or mid-decode) finishes
+            // the request as `TimedOut` with whatever tokens it has; the
+            // completion pass below reclaims the slot and its pages, so the
+            // next admission reuses them cleanly.
+            let now = Instant::now();
+            for entry in slots.iter_mut() {
+                let Some(slot) = entry else { continue };
+                if slot.phase != SlotPhase::Done
+                    && slot.req.deadline.is_some_and(|d| now >= d)
+                {
+                    slot.phase = SlotPhase::Done;
+                    slot.finish = FinishReason::TimedOut;
+                    self.metrics.timeouts += 1;
+                }
             }
 
             // ---- one unit of work per active slot, fanned out on the pool ----
@@ -1264,9 +1333,10 @@ impl Server {
             let mut work: Vec<SlotWork> = slots
                 .iter_mut()
                 .zip(self.slot_caches.iter_mut())
-                .filter_map(|(entry, cache)| match entry {
+                .enumerate()
+                .filter_map(|(idx, (entry, cache))| match entry {
                     Some(slot) if slot.phase != SlotPhase::Done => {
-                        Some(SlotWork { slot, cache })
+                        Some(SlotWork { idx, slot, cache })
                     }
                     _ => None,
                 })
@@ -1278,14 +1348,13 @@ impl Server {
             // row to every layer, freezing all codebooks from the same
             // deterministic seed rows at every thread count. Slots are
             // independent within a round, so outputs are unchanged.
+            let fault = self.fault.clone();
             let mut inline_outcome = None;
             if let Some(codec) = self.kv_codec.clone() {
                 if !codec.frozen() && !work.is_empty() {
-                    let w = work.remove(0);
-                    inline_outcome = Some(match w.cache {
-                        SlotCache::Dense(c) => step_slot(hf, w.slot, c, chunk, capture),
-                        SlotCache::Paged(c) => step_slot(hf, w.slot, c, chunk, capture),
-                    });
+                    let mut w = work.remove(0);
+                    let r = supervised_step(hf, &mut w, chunk, capture, fault.as_deref());
+                    inline_outcome = Some((w.idx, r));
                 }
             }
             // the shared nesting policy: pin inner kernels to one thread
@@ -1294,14 +1363,31 @@ impl Server {
             // attention-row parallelism (exec::Pool::inner_threads)
             let inner = pool.inner_threads(work.len());
             let outcomes = pool.map_mut(&mut work, |_, w| {
-                crate::exec::with_threads(inner, || match w.cache {
-                    SlotCache::Dense(c) => step_slot(hf, w.slot, c, chunk, capture),
-                    SlotCache::Paged(c) => step_slot(hf, w.slot, c, chunk, capture),
-                })
+                let idx = w.idx;
+                let r = crate::exec::with_threads(inner, || {
+                    supervised_step(hf, w, chunk, capture, fault.as_deref())
+                });
+                (idx, r)
             });
-            for outcome in inline_outcome.into_iter().chain(outcomes) {
-                if outcome? == StepKind::Decode {
-                    self.metrics.decode_steps += 1;
+            drop(work);
+            // fold in slot order (inline outcome is always the lowest busy
+            // slot): successful decode steps count; a fault fails only its
+            // own request — `Faulted`, slot quarantined, cache rebuilt —
+            // every other slot's outcome is untouched (DESIGN.md §17)
+            for (idx, outcome) in inline_outcome.into_iter().chain(outcomes) {
+                match outcome {
+                    Ok(StepKind::Decode) => self.metrics.decode_steps += 1,
+                    Ok(_) => {}
+                    Err(f) => {
+                        self.metrics.record_fault(f.kind.as_str(), f.node);
+                        if let Some(slot) = slots[idx].as_mut() {
+                            slot.phase = SlotPhase::Done;
+                            slot.finish = FinishReason::Faulted;
+                        }
+                        // quarantine: drop the poisoned KV state so the
+                        // next admission starts from a clean rebuild
+                        self.slot_caches[idx].reset();
+                    }
                 }
             }
             // occupancy counts slots that actually ran model work — a
@@ -1341,6 +1427,7 @@ impl Server {
                         if slot.published
                             || matches!(slot.phase, SlotPhase::Prefill { .. })
                             || slot.prompt.is_empty()
+                            || slot.finish != FinishReason::Done
                         {
                             continue;
                         }
@@ -1381,7 +1468,7 @@ impl Server {
                     queue_wait: slot.queue_wait,
                     ttft: slot.ttft,
                     logits: slot.captured,
-                    finish: FinishReason::Done,
+                    finish: slot.finish,
                 };
                 self.metrics.record_latency(resp.latency);
                 slot.req.resp.send(resp).ok();
@@ -1433,6 +1520,7 @@ impl Server {
         }
         let mut slots: Vec<Option<Slot>> = (0..n).map(|_| None).collect();
         let mut seen = (batcher.timed_out(), batcher.shed());
+        self.ready.store(true, Ordering::SeqCst);
 
         loop {
             // ---- admission: fill free slots from the queue ----
@@ -1476,6 +1564,7 @@ impl Server {
                         reused,
                         published: false,
                         streamed: 0,
+                        finish: FinishReason::Done,
                     });
                     active += 1;
                 }
@@ -1484,6 +1573,22 @@ impl Server {
             if active == 0 {
                 self.publish_mirror();
                 continue; // everything admitted had expired — park again
+            }
+
+            // ---- deadlines: expire in-flight requests before model work ----
+            // Same contract as the host loop: a lapsed deadline finishes
+            // the request as `TimedOut` with the tokens it has; completion
+            // below reclaims the slot's windows on every node.
+            let now = Instant::now();
+            for entry in slots.iter_mut() {
+                let Some(slot) = entry else { continue };
+                if slot.phase != SlotPhase::Done
+                    && slot.req.deadline.is_some_and(|d| now >= d)
+                {
+                    slot.phase = SlotPhase::Done;
+                    slot.finish = FinishReason::TimedOut;
+                    self.metrics.timeouts += 1;
+                }
             }
 
             // ---- one unit of work per active slot, pipelined on the chain ----
@@ -1520,13 +1625,44 @@ impl Server {
                 }
             }
             let worked = jobs.len(); // slots that ran model work this step
+            // fault injection (DESIGN.md §17): if the plan's (slot, step)
+            // coordinate is stepping this round, arm the chain so the
+            // plan's node trips inside that slot's supervised stage
+            let mut armed = None;
+            if let Some(plan) = self.fault.clone() {
+                for job in &jobs {
+                    let steps =
+                        slots[job.slot].as_ref().expect("job slots are active").steps as u64;
+                    if let Some(mode) = plan.fire(plan.node, job.slot, steps) {
+                        armed = Some((plan.node, job.slot, mode));
+                    }
+                }
+            }
             let results = {
                 let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+                sf.arm_fault(armed);
                 crate::exec::with_threads(threads, || sf.step_slots(&jobs))?
             };
-            // fold outcomes on the coordinator, in slot (= job) order
-            for (job, logits) in jobs.iter().zip(results) {
+            // fold outcomes on the coordinator, in slot (= job) order: a
+            // faulted job fails only its own request (`Faulted`, windows
+            // rebuilt on every node); every other outcome is exactly what
+            // a fault-free run produces (the poisoned marker never touches
+            // other jobs' activations or cache writes)
+            for (job, outcome) in jobs.iter().zip(results) {
                 let slot = slots[job.slot].as_mut().expect("job slots are active");
+                let logits = match outcome {
+                    super::shard::SlotStepOutcome::Logits(l) => l,
+                    super::shard::SlotStepOutcome::Fault(f) => {
+                        self.metrics.record_fault(f.kind.as_str(), f.node);
+                        slot.phase = SlotPhase::Done;
+                        slot.finish = FinishReason::Faulted;
+                        // quarantine: drop the poisoned windows on every
+                        // node so the next admission rebuilds from clean
+                        let Backend::Sharded(sf) = &mut self.backend else { unreachable!() };
+                        sf.reset_slot(job.slot);
+                        continue;
+                    }
+                };
                 slot.steps += 1;
                 match slot.phase {
                     SlotPhase::Prefill { remaining } => {
@@ -1576,6 +1712,7 @@ impl Server {
                     if slot.published
                         || matches!(slot.phase, SlotPhase::Prefill { .. })
                         || slot.prompt.is_empty()
+                        || slot.finish != FinishReason::Done
                     {
                         continue;
                     }
@@ -1609,7 +1746,7 @@ impl Server {
                     queue_wait: slot.queue_wait,
                     ttft: slot.ttft,
                     logits: slot.captured,
-                    finish: FinishReason::Done,
+                    finish: slot.finish,
                 };
                 self.metrics.record_latency(resp.latency);
                 slot.req.resp.send(resp).ok();
@@ -1647,6 +1784,7 @@ pub struct ServerBuilder {
     sampler_seed: Option<u64>,
     capture_logits: bool,
     batch: Option<usize>,
+    fault: Option<FaultPlan>,
 }
 
 impl ServerBuilder {
@@ -1750,6 +1888,17 @@ impl ServerBuilder {
         self
     }
 
+    /// Arm a deterministic fault-injection plan ([`FaultPlan`], DESIGN.md
+    /// §17): the continuous loop trips exactly one supervised fault at the
+    /// plan's `(node, slot, step)` coordinate, finishing that request as
+    /// [`FinishReason::Faulted`] while every other request is served
+    /// bit-identically to a fault-free run. Unset keeps the
+    /// environment-driven default (`PALLAS_FAULT`, else no injection).
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
     /// Construct the server. Fails on an invalid weights/backend pairing
     /// (e.g. sharding non-codes-resident weights) or an out-of-range
     /// [`ServerBuilder::kv_page`].
@@ -1794,6 +1943,7 @@ impl ServerBuilder {
             server.batch = n.max(1);
         }
         server.capture_logits = self.capture_logits;
+        server.fault = self.fault.map(Arc::new).or_else(|| default_fault_plan().map(Arc::new));
         Ok(server)
     }
 }
@@ -1810,6 +1960,18 @@ fn default_kv_page(ctx: usize) -> Option<usize> {
             Err(_) => Some((ctx / 8).max(1)),
         },
         Err(_) => Some((ctx / 8).max(1)),
+    }
+}
+
+/// Default fault-injection plan for a fresh server: none. `PALLAS_FAULT`
+/// overrides it with a [`FaultPlan`] spec (e.g.
+/// `panic@node=0,slot=1,step=2`); unset or unparseable means no injection
+/// — the chaos suite sets the plan explicitly through
+/// [`ServerBuilder::fault`].
+fn default_fault_plan() -> Option<FaultPlan> {
+    match std::env::var("PALLAS_FAULT") {
+        Ok(s) => FaultPlan::parse(&s).ok(),
+        Err(_) => None,
     }
 }
 

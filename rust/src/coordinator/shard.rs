@@ -53,6 +53,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::fault::{panic_message, run_supervised, Fault, FaultMode};
 use super::prefix::{PrefixCache, PrefixStats};
 use super::server::KvPageAudit;
 use crate::model::{
@@ -375,6 +376,10 @@ pub struct ShardedForward {
     pub config: GptConfig,
     pub name: String,
     nodes: Vec<ShardNode>,
+    /// One-shot injection armed by the server for the *next*
+    /// [`Self::step_slots`] call: `(node, slot, mode)` — see
+    /// [`Self::arm_fault`] and [`super::fault::FaultPlan`].
+    armed_fault: Option<(usize, usize, FaultMode)>,
 }
 
 impl ShardedForward {
@@ -431,7 +436,17 @@ impl ShardedForward {
                 prefix: None,
             });
         }
-        Ok(ShardedForward { config: q.config, name: q.name.clone(), nodes })
+        Ok(ShardedForward { config: q.config, name: q.name.clone(), nodes, armed_fault: None })
+    }
+
+    /// Arm (or clear) a one-shot fault injection for the next
+    /// [`Self::step_slots`] call: the supervised stage for `node` injects
+    /// `mode` into the job targeting `slot`. The server translates a
+    /// [`super::fault::FaultPlan`] coordinate match into this call; the
+    /// armed value is consumed at the top of `step_slots` whether or not
+    /// any job matches.
+    pub(crate) fn arm_fault(&mut self, armed: Option<(usize, usize, FaultMode)>) {
+        self.armed_fault = armed;
     }
 
     /// Number of worker nodes in the chain.
@@ -574,11 +589,11 @@ impl ShardedForward {
                     Ok(out)
                 })
             });
-            h0.join().expect("shard stage 0 panicked")?;
-            for h in mids {
-                h.join().expect("shard mid stage panicked")?;
+            join_stage(h0, 0)?;
+            for (m, h) in mids.into_iter().enumerate() {
+                join_stage(h, m + 1)?;
             }
-            h_last.join().expect("final shard stage panicked")
+            join_stage(h_last, n_nodes - 1)
         })?;
         let mut results: Vec<Vec<f32>> = vec![Vec::new(); jobs.len()];
         for (idx, r) in collected {
@@ -828,15 +843,25 @@ impl ShardedForward {
     /// Step a batch of slots through the chain, pipelined one worker
     /// thread per node: node `i` advances job `j` while node `i+1` still
     /// runs job `j−1`. Jobs must target **distinct** slots. Returns, per
-    /// job, `Some(last-row logits)` when `want_logits` was set, else
-    /// `None`.
+    /// job, a [`SlotStepOutcome`]: logits (`Some(last-row)` when
+    /// `want_logits` was set, else `None`) — or the [`Fault`] that stopped
+    /// it.
+    ///
+    /// Every per-job unit of stage work runs under
+    /// [`run_supervised`], so a panic or error inside one job's
+    /// `advance_cached` poisons *that job only*: downstream stages forward
+    /// the poisoned marker untouched, every other job's activations and
+    /// cache writes are exactly those of a fault-free run, and the
+    /// pipeline keeps flowing (DESIGN.md §17). A `Err` from this function
+    /// is reserved for systemic failures (coordinator-side eviction in
+    /// Phase A, a stage thread dying outside supervision).
     ///
     /// Falls back to the sequential chain (job order, calling thread) when
     /// the chain is a single node, the batch has one job, or any node's
     /// K/V codec is still observing its own layers — the same
     /// inline-seeding rule as the single-node server, which is what makes
     /// node codebooks bit-identical to the single-node codec's.
-    pub fn step_slots(&mut self, jobs: &[ShardStepJob]) -> Result<Vec<Option<Vec<f32>>>> {
+    pub fn step_slots(&mut self, jobs: &[ShardStepJob]) -> Result<Vec<SlotStepOutcome>> {
         debug_assert!(
             {
                 let mut slots: Vec<usize> = jobs.iter().map(|j| j.slot).collect();
@@ -846,18 +871,31 @@ impl ShardedForward {
             "step_slots jobs must target distinct slots"
         );
         let n_nodes = self.nodes.len();
+        let armed = self.armed_fault.take();
         if n_nodes == 1 || jobs.len() <= 1 || !self.kv_codecs_frozen() {
-            return jobs
-                .iter()
-                .map(|j| {
+            let mut out = Vec::with_capacity(jobs.len());
+            for j in jobs {
+                // the whole chain runs inline here, so a slot match
+                // injects regardless of the chain position the plan names;
+                // the fault is still attributed to the armed node
+                let (node, injected) = match armed {
+                    Some((n, s, mode)) if s == j.slot => (n, Some(mode)),
+                    _ => (0, None),
+                };
+                let r = run_supervised(node, j.slot, injected, || {
                     if j.want_logits {
                         self.prefill_block(j.slot, &j.tokens, j.tokens.len().max(1)).map(Some)
                     } else {
                         self.prefill_extend(j.slot, &j.tokens, j.tokens.len().max(1))
                             .map(|_| None)
                     }
-                })
-                .collect();
+                });
+                out.push(match r {
+                    Ok(l) => SlotStepOutcome::Logits(l),
+                    Err(f) => SlotStepOutcome::Fault(f),
+                });
+            }
+            return Ok(out);
         }
         // Phase A (coordinator thread, job order): run evictions and
         // capacity-overflow blocks sequentially until each job is one
@@ -898,17 +936,19 @@ impl ShardedForward {
         // Distinct slots ⇒ each node's thread is the only writer of the
         // caches it touches, and it processes jobs in arrival (= job)
         // order, so the commit order per node matches the sequential
-        // chain.
+        // chain. Each per-job unit is supervised: a fault replaces the
+        // job's activations with a poisoned marker that downstream stages
+        // relay as-is, so the other jobs never notice.
         let want: Vec<bool> = jobs.iter().map(|j| j.want_logits).collect();
         let cfg = self.config;
         let inner = (crate::exec::current_threads() / n_nodes).max(1);
         let (first_node, rest_nodes) = self.nodes.split_first_mut().expect("at least one node");
         let (last_node, mid_nodes) = rest_nodes.split_last_mut().expect("n_nodes >= 2");
-        let collected = std::thread::scope(|scope| -> Result<Vec<(usize, Vec<f32>)>> {
+        let collected = std::thread::scope(|scope| -> Result<Vec<JobOutcome>> {
             let mut txs = Vec::with_capacity(n_nodes - 1);
             let mut rxs = Vec::with_capacity(n_nodes - 1);
             for _ in 0..n_nodes - 1 {
-                let (tx, rx) = mpsc::channel::<(usize, Matrix, usize, usize, Vec<i32>)>();
+                let (tx, rx) = mpsc::channel::<StageItem>();
                 txs.push(tx);
                 rxs.push(rx);
             }
@@ -920,25 +960,43 @@ impl ShardedForward {
             let h0 = scope.spawn(move || -> Result<()> {
                 crate::exec::with_threads(inner, || -> Result<()> {
                     for fb in finals {
-                        let mut x = first_node.embed_at(&fb.tokens, fb.base, &cfg0)?;
-                        first_node.advance_cached(&mut x, fb.slot, &fb.tokens, fb.base, &cfg0)?;
-                        if tx0.send((fb.idx, x, fb.slot, fb.base, fb.tokens)).is_err() {
-                            break; // downstream failed; its error surfaces below
+                        let FinalBlock { idx, slot, base, tokens } = fb;
+                        let payload =
+                            run_supervised(0, slot, injected_mode(armed, 0, slot), || {
+                                let mut x = first_node.embed_at(&tokens, base, &cfg0)?;
+                                first_node.advance_cached(&mut x, slot, &tokens, base, &cfg0)?;
+                                Ok((x, base, tokens))
+                            });
+                        if tx0.send((idx, slot, payload)).is_err() {
+                            break; // downstream died; its error surfaces below
                         }
                     }
                     Ok(())
                 })
             });
             let mut mids = Vec::new();
-            for node in mid_nodes {
+            for (m, node) in mid_nodes.iter_mut().enumerate() {
                 let rx = rx_iter.next().expect("one rx per mid stage");
                 let tx = tx_iter.next().expect("one tx per mid stage");
                 let cfg_m = cfg;
+                let node_idx = m + 1;
                 mids.push(scope.spawn(move || -> Result<()> {
                     crate::exec::with_threads(inner, || -> Result<()> {
-                        for (idx, mut x, slot, base, toks) in rx {
-                            node.advance_cached(&mut x, slot, &toks, base, &cfg_m)?;
-                            if tx.send((idx, x, slot, base, toks)).is_err() {
+                        for (idx, slot, payload) in rx {
+                            let fwd = match payload {
+                                // poisoned upstream: relay untouched
+                                Err(fault) => Err(fault),
+                                Ok((mut x, base, toks)) => run_supervised(
+                                    node_idx,
+                                    slot,
+                                    injected_mode(armed, node_idx, slot),
+                                    || {
+                                        node.advance_cached(&mut x, slot, &toks, base, &cfg_m)?;
+                                        Ok((x, base, toks))
+                                    },
+                                ),
+                            };
+                            if tx.send((idx, slot, fwd)).is_err() {
                                 break;
                             }
                         }
@@ -949,29 +1007,50 @@ impl ShardedForward {
             let rx_last = rx_iter.next().expect("final stage rx");
             let want = &want;
             let cfg_l = cfg;
-            let h_last = scope.spawn(move || -> Result<Vec<(usize, Vec<f32>)>> {
-                crate::exec::with_threads(inner, || -> Result<Vec<(usize, Vec<f32>)>> {
+            let last_idx = n_nodes - 1;
+            let h_last = scope.spawn(move || -> Result<Vec<JobOutcome>> {
+                crate::exec::with_threads(inner, || -> Result<Vec<JobOutcome>> {
                     let mut out = Vec::new();
-                    for (idx, mut x, slot, base, toks) in rx_last {
-                        last_node.advance_cached(&mut x, slot, &toks, base, &cfg_l)?;
-                        if want[idx] {
-                            let row =
-                                Matrix::from_vec(x.row(x.rows() - 1).to_vec(), 1, cfg_l.d_model);
-                            out.push((idx, last_node.head_logits(&row)?.into_vec()));
-                        }
+                    for (idx, slot, payload) in rx_last {
+                        let r = match payload {
+                            Err(fault) => Err(fault),
+                            Ok((mut x, base, toks)) => run_supervised(
+                                last_idx,
+                                slot,
+                                injected_mode(armed, last_idx, slot),
+                                || {
+                                    last_node.advance_cached(&mut x, slot, &toks, base, &cfg_l)?;
+                                    if want[idx] {
+                                        let row = Matrix::from_vec(
+                                            x.row(x.rows() - 1).to_vec(),
+                                            1,
+                                            cfg_l.d_model,
+                                        );
+                                        Ok(Some(last_node.head_logits(&row)?.into_vec()))
+                                    } else {
+                                        Ok(None)
+                                    }
+                                },
+                            ),
+                        };
+                        out.push((idx, r));
                     }
                     Ok(out)
                 })
             });
-            h0.join().expect("shard stage 0 panicked")?;
-            for h in mids {
-                h.join().expect("shard mid stage panicked")?;
+            join_stage(h0, 0)?;
+            for (m, h) in mids.into_iter().enumerate() {
+                join_stage(h, m + 1)?;
             }
-            h_last.join().expect("final shard stage panicked")
+            join_stage(h_last, last_idx)
         })?;
-        let mut results: Vec<Option<Vec<f32>>> = vec![None; jobs.len()];
+        let mut results: Vec<SlotStepOutcome> =
+            jobs.iter().map(|_| SlotStepOutcome::Logits(None)).collect();
         for (idx, r) in collected {
-            results[idx] = Some(r);
+            results[idx] = match r {
+                Ok(l) => SlotStepOutcome::Logits(l),
+                Err(f) => SlotStepOutcome::Fault(f),
+            };
         }
         Ok(results)
     }
@@ -1135,6 +1214,55 @@ pub struct ShardStepJob {
     /// Compute last-row logits on the final node (final prefill chunk and
     /// every decode step).
     pub want_logits: bool,
+}
+
+/// Per-job result of [`ShardedForward::step_slots`]: the step's logits, or
+/// the supervised [`Fault`] that stopped this job (and only this job — the
+/// rest of the batch completed exactly as in a fault-free run).
+#[derive(Debug)]
+pub enum SlotStepOutcome {
+    /// The job completed: `Some(last-row logits)` when `want_logits` was
+    /// set, else `None`.
+    Logits(Option<Vec<f32>>),
+    /// The job's supervised stage work panicked or errored; the server
+    /// finishes the occupying request as `Faulted` and quarantines the
+    /// slot.
+    Fault(Fault),
+}
+
+/// One job flowing between pipeline stages: `(job idx, slot, payload)`.
+/// A poisoned payload (`Err(Fault)`) is relayed downstream untouched so
+/// the pipeline keeps moving for every other job.
+type StageItem =
+    (usize, usize, std::result::Result<(Matrix, usize, Vec<i32>), Fault>);
+
+/// What the final stage hands back per job before reassembly into
+/// [`SlotStepOutcome`]s.
+type JobOutcome = (usize, std::result::Result<Option<Vec<f32>>, Fault>);
+
+/// The mode to inject for `(node, slot)` if the armed one-shot matches.
+fn injected_mode(
+    armed: Option<(usize, usize, FaultMode)>,
+    node: usize,
+    slot: usize,
+) -> Option<FaultMode> {
+    match armed {
+        Some((n, s, mode)) if n == node && s == slot => Some(mode),
+        _ => None,
+    }
+}
+
+/// Join one pipeline stage thread, converting a panic that escaped per-job
+/// supervision (a systemic bug, not a per-request fault) into a structured
+/// error instead of unwinding the serving loop.
+fn join_stage<T>(h: std::thread::ScopedJoinHandle<'_, Result<T>>, stage: usize) -> Result<T> {
+    match h.join() {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow::anyhow!(
+            "shard stage {stage} panicked outside per-job supervision: {}",
+            panic_message(payload.as_ref())
+        )),
+    }
 }
 
 #[cfg(test)]

@@ -27,6 +27,12 @@
 //! re-shared on load (every weight referencing table `i` gets the same
 //! `Arc`; all DACC weights share one decoder), so a load-then-serve cycle
 //! keeps the same resident-memory profile as the original quantization run.
+//!
+//! Containers are **sealed** with integrity entries before writing
+//! ([`crate::io::integrity::seal`]: format version, per-section CRC32s,
+//! entry count) and verified immediately after parsing on load — corruption
+//! fails with an error naming the damaged section (DESIGN.md §17) before
+//! any per-weight validation runs.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -199,6 +205,7 @@ pub fn save_quantized(q: &QuantizedGpt, path: impl AsRef<Path>) -> Result<()> {
         };
         pct.insert(&format!("q.{name}.decoder"), decoder_entry);
     }
+    crate::io::integrity::seal(&mut pct);
     pct.save(path)
 }
 
@@ -207,6 +214,9 @@ pub fn save_quantized(q: &QuantizedGpt, path: impl AsRef<Path>) -> Result<()> {
 /// table `i` reference one table.
 pub fn load_quantized(path: impl AsRef<Path>, name: impl Into<String>) -> Result<QuantizedGpt> {
     let pct = Pct::load(path)?;
+    // integrity first (DESIGN.md §17): a damaged container is rejected
+    // naming its corrupted section before any per-weight validation runs
+    crate::io::integrity::verify(&pct)?;
     let meta = |key: &str| -> Result<usize> {
         Ok(pct.get(&format!("meta.{key}"))?.scalar_u64()? as usize)
     };
@@ -512,6 +522,12 @@ mod tests {
         save_quantized(&q, &path).unwrap();
         let name = q.weights.keys().next().unwrap().clone();
 
+        // Each mutation is RE-SEALED before saving: the container passes
+        // the integrity check with internally-consistent checksums, so the
+        // deep per-weight validation below it stays genuinely exercised
+        // (unsealed tampering is covered by tests/io_cross_language.rs and
+        // the integrity module's own suite).
+
         // 1. truncated word array (width claims more bits than stored)
         let mut pct = Pct::load(&path).unwrap();
         let meta = pct
@@ -524,6 +540,7 @@ mod tests {
             &format!("q.{name}.stream0.meta"),
             Entry::u64(&[2], vec![31, meta[1]]),
         );
+        crate::io::integrity::seal(&mut pct);
         let p = tmp_path("corrupt_trunc.pctq");
         pct.save(&p).unwrap();
         assert!(load_quantized(&p, "x").is_err(), "truncated stream must be Err");
@@ -532,6 +549,7 @@ mod tests {
         //    reinterpreted against a 1-bit grid)
         let mut pct = Pct::load(&path).unwrap();
         pct.insert(&format!("q.{name}.decoder"), Entry::u32(&[2], vec![2, 1]));
+        crate::io::integrity::seal(&mut pct);
         let p = tmp_path("corrupt_range.pctq");
         pct.save(&p).unwrap();
         assert!(load_quantized(&p, "x").is_err(), "out-of-range records must be Err");
@@ -543,9 +561,19 @@ mod tests {
             &format!("q.{name}.shape"),
             Entry::u64(&[2], vec![shape[0], shape[1] * 2]),
         );
+        crate::io::integrity::seal(&mut pct);
         let p = tmp_path("corrupt_shape.pctq");
         pct.save(&p).unwrap();
         assert!(load_quantized(&p, "x").is_err(), "bad shape must be Err");
+
+        // 4. stale checksum (tamper WITHOUT re-sealing): rejected by the
+        //    integrity layer, naming the damaged section
+        let mut pct = Pct::load(&path).unwrap();
+        pct.insert(&format!("q.{name}.decoder"), Entry::u32(&[2], vec![2, 1]));
+        let p = tmp_path("corrupt_unsealed.pctq");
+        pct.save(&p).unwrap();
+        let err = load_quantized(&p, "x").unwrap_err().to_string();
+        assert!(err.contains("section 'layout'"), "integrity should name the section: {err}");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Artifact integrity: versioned self-checksums inside the `.pct` container.
+//!
+//! A quantized artifact is the thing we ship and serve — a flipped bit in a
+//! packed stream or a codebook must fail the *load* with a structured error
+//! naming the damaged section, never surface later as silently-wrong logits
+//! (DESIGN.md §17). [`seal`] adds three kinds of reserved entries before the
+//! container is written:
+//!
+//! ```text
+//! integrity.version          u64 [1]     format version (currently 1)
+//! integrity.entries          u64 [1]     total entry count, this one included
+//! integrity.<section>.crc32  u32 [1]     CRC32 over the section's entries
+//! ```
+//!
+//! Sections partition every non-reserved entry by name ([`section_of`]):
+//! `meta` (model config), `fp` (unquantized tensors), `codebooks` (shared
+//! codebooks), `scales` (per-column scales), `streams` (packed code words),
+//! and `layout` (shapes, decoder tags, stream counts — everything else).
+//! Each CRC runs over the section's entries in container (BTreeMap) order,
+//! feeding per entry: name bytes, a `0` separator, the dtype tag, the rank,
+//! and the dims + payload as little-endian bytes — the same information the
+//! wire format serializes, so any byte flip that survives parsing lands in
+//! exactly one section's checksum. The `integrity.entries` count guards the
+//! remaining gap: the container's entry *count* field, whose corruption
+//! would otherwise silently drop trailing entries (the parser ignores
+//! trailing bytes).
+//!
+//! [`verify`] recomputes everything on load. Containers without
+//! `integrity.version` (pre-integrity artifacts, plain tensor files) verify
+//! trivially — the checks are opt-in at save time.
+
+use anyhow::{bail, Result};
+
+use super::pct::{Entry, Pct, PctData};
+
+/// Integrity format version written by [`seal`] / required by [`verify`].
+pub const INTEGRITY_VERSION: u64 = 1;
+
+/// Reserved-entry prefix; [`section_of`] excludes these from every section.
+const PREFIX: &str = "integrity.";
+
+/// The fixed section vocabulary, in the order CRC entries are emitted.
+const SECTIONS: [&str; 6] = ["codebooks", "fp", "layout", "meta", "scales", "streams"];
+
+/// CRC32 (IEEE 802.3, reflected, polynomial `0xEDB8_8320`) — the same
+/// checksum gzip/zip/PNG use, implemented here because the offline crate
+/// set has no checksum dependency.
+pub fn crc32(data: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        table
+    };
+    let mut state = !0u32;
+    for &b in data {
+        state = TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    !state
+}
+
+/// Which integrity section a container entry belongs to; `None` for the
+/// reserved `integrity.*` entries themselves.
+pub fn section_of(name: &str) -> Option<&'static str> {
+    if name.starts_with(PREFIX) {
+        None
+    } else if name.starts_with("meta.") {
+        Some("meta")
+    } else if name.starts_with("fp.") {
+        Some("fp")
+    } else if name.starts_with("codebook.") {
+        Some("codebooks")
+    } else if name.ends_with(".scales") {
+        Some("scales")
+    } else if name.contains(".stream") {
+        Some("streams")
+    } else {
+        Some("layout")
+    }
+}
+
+/// Feed one entry into a section's running byte stream: name, separator,
+/// dtype tag, rank, dims, payload — all little-endian, mirroring what the
+/// wire format serializes for the entry.
+fn feed_entry(buf: &mut Vec<u8>, name: &str, e: &Entry) {
+    buf.extend_from_slice(name.as_bytes());
+    buf.push(0);
+    let tag: u8 = match &e.data {
+        PctData::F32(_) => 0,
+        PctData::U32(_) => 1,
+        PctData::U64(_) => 2,
+        PctData::I32(_) => 3,
+    };
+    buf.push(tag);
+    buf.push(e.dims.len() as u8);
+    for &d in &e.dims {
+        buf.extend_from_slice(&d.to_le_bytes());
+    }
+    match &e.data {
+        PctData::F32(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+        PctData::U32(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+        PctData::U64(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+        PctData::I32(v) => v.iter().for_each(|x| buf.extend_from_slice(&x.to_le_bytes())),
+    }
+}
+
+/// Recompute every section checksum over the container's current entries
+/// (container order, reserved entries excluded). Sections with no entries
+/// are omitted.
+fn section_crcs(pct: &Pct) -> Vec<(&'static str, u32)> {
+    let mut bufs: Vec<(&'static str, Vec<u8>)> =
+        SECTIONS.iter().map(|&s| (s, Vec::new())).collect();
+    for name in pct.names() {
+        let Some(section) = section_of(name) else { continue };
+        let e = pct.get(name).expect("iterating existing names");
+        let buf = &mut bufs
+            .iter_mut()
+            .find(|(s, _)| *s == section)
+            .expect("section vocabulary is fixed")
+            .1;
+        feed_entry(buf, name, e);
+    }
+    bufs.into_iter()
+        .filter(|(_, b)| !b.is_empty())
+        .map(|(s, b)| (s, crc32(&b)))
+        .collect()
+}
+
+/// Add the integrity entries to a container about to be written: format
+/// version, per-section CRC32s, and the total entry count (itself
+/// included). Idempotent — re-sealing recomputes everything.
+pub fn seal(pct: &mut Pct) {
+    // re-seal cleanly: stale reserved entries must not feed the new count
+    let stale: Vec<String> =
+        pct.names().filter(|n| n.starts_with(PREFIX)).map(String::from).collect();
+    for name in &stale {
+        pct.remove(name);
+    }
+    pct.insert("integrity.version", Entry::u64(&[1], vec![INTEGRITY_VERSION]));
+    for (section, crc) in section_crcs(pct) {
+        pct.insert(&format!("{PREFIX}{section}.crc32"), Entry::u32(&[1], vec![crc]));
+    }
+    let total = pct.len() as u64 + 1; // the count entry itself
+    pct.insert("integrity.entries", Entry::u64(&[1], vec![total]));
+}
+
+/// Verify a loaded container against its integrity entries. Containers
+/// without `integrity.version` pass trivially (pre-integrity artifacts);
+/// sealed containers fail with an error naming the damaged section on any
+/// CRC mismatch, a missing/extra entry, or an unsupported version.
+pub fn verify(pct: &Pct) -> Result<()> {
+    let version = match pct.get("integrity.version") {
+        Ok(e) => e.scalar_u64()?,
+        Err(_) => return Ok(()), // unsealed container: nothing to check
+    };
+    if version != INTEGRITY_VERSION {
+        bail!(
+            "artifact integrity check failed: unsupported integrity format \
+             version {version} (this build reads version {INTEGRITY_VERSION})"
+        );
+    }
+    let expected = pct.get("integrity.entries")?.scalar_u64()?;
+    if expected != pct.len() as u64 {
+        bail!(
+            "artifact integrity check failed: section 'integrity' is corrupted \
+             (container holds {} entries, seal recorded {expected} — \
+             truncated or damaged entry table)",
+            pct.len()
+        );
+    }
+    for (section, computed) in section_crcs(pct) {
+        let key = format!("{PREFIX}{section}.crc32");
+        let stored = match pct.get(&key) {
+            Ok(e) => {
+                let v = e.as_u32()?;
+                anyhow::ensure!(v.len() == 1, "artifact integrity check failed: bad '{key}'");
+                v[0]
+            }
+            Err(_) => bail!(
+                "artifact integrity check failed: section '{section}' has no \
+                 stored checksum (damaged entry table)"
+            ),
+        };
+        if stored != computed {
+            bail!(
+                "artifact integrity check failed: section '{section}' is \
+                 corrupted (stored CRC32 {stored:08x}, computed {computed:08x})"
+            );
+        }
+    }
+    // a CRC entry whose own section vanished means entries were dropped in
+    // a way the count above could miss only by collision — cheap to pin
+    let live: Vec<&'static str> = section_crcs(pct).iter().map(|(s, _)| *s).collect();
+    for name in pct.names() {
+        if let Some(rest) = name.strip_prefix(PREFIX) {
+            if let Some(section) = rest.strip_suffix(".crc32") {
+                anyhow::ensure!(
+                    live.iter().any(|s| *s == section),
+                    "artifact integrity check failed: section '{section}' is \
+                     corrupted (checksum present but section empty)"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // the standard CRC-32/IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn sections_partition_the_artifact_namespace() {
+        assert_eq!(section_of("meta.vocab"), Some("meta"));
+        assert_eq!(section_of("fp.tok_emb"), Some("fp"));
+        assert_eq!(section_of("codebook.dacc.dir.vectors"), Some("codebooks"));
+        assert_eq!(section_of("q.layer0.attn_q.scales"), Some("scales"));
+        assert_eq!(section_of("q.layer0.attn_q.stream0.words"), Some("streams"));
+        assert_eq!(section_of("q.layer0.attn_q.stream1.meta"), Some("streams"));
+        assert_eq!(section_of("q.layer0.attn_q.shape"), Some("layout"));
+        assert_eq!(section_of("q.layer0.attn_q.decoder"), Some("layout"));
+        assert_eq!(section_of("integrity.version"), None);
+        assert_eq!(section_of("integrity.streams.crc32"), None);
+    }
+
+    fn sample() -> Pct {
+        let mut pct = Pct::new();
+        pct.insert("meta.vocab", Entry::u64(&[1], vec![256]));
+        pct.insert("fp.emb", Entry::f32(&[2, 2], vec![0.0, 1.0, 2.0, 3.0]));
+        pct.insert("q.w.shape", Entry::u64(&[2], vec![4, 4]));
+        pct.insert("q.w.scales", Entry::f32(&[2], vec![0.5, 0.25]));
+        pct.insert("q.w.stream0.words", Entry::u64(&[1], vec![0xDEAD_BEEF]));
+        pct.insert("codebook.table0.data", Entry::f32(&[1, 2], vec![1.0, -1.0]));
+        pct
+    }
+
+    #[test]
+    fn seal_then_verify_round_trips_and_is_idempotent() {
+        let mut pct = sample();
+        seal(&mut pct);
+        verify(&pct).unwrap();
+        assert_eq!(
+            pct.get("integrity.entries").unwrap().scalar_u64().unwrap(),
+            pct.len() as u64
+        );
+        let once = pct.clone();
+        seal(&mut pct); // re-seal: same entries, same checksums
+        assert_eq!(once, pct);
+        // bytes round-trip through the wire format too
+        let loaded = Pct::from_bytes(&pct.to_bytes()).unwrap();
+        verify(&loaded).unwrap();
+    }
+
+    #[test]
+    fn unsealed_containers_verify_trivially() {
+        verify(&sample()).unwrap();
+        verify(&Pct::new()).unwrap();
+    }
+
+    #[test]
+    fn tampering_names_the_damaged_section() {
+        for (name, entry, want) in [
+            ("fp.emb", Entry::f32(&[2, 2], vec![0.0, 1.0, 2.0, 3.5]), "'fp'"),
+            ("q.w.shape", Entry::u64(&[2], vec![4, 8]), "'layout'"),
+            ("q.w.scales", Entry::f32(&[2], vec![0.5, 0.125]), "'scales'"),
+            ("q.w.stream0.words", Entry::u64(&[1], vec![0xDEAD_BEE0]), "'streams'"),
+            ("codebook.table0.data", Entry::f32(&[1, 2], vec![1.0, -2.0]), "'codebooks'"),
+            ("meta.vocab", Entry::u64(&[1], vec![512]), "'meta'"),
+        ] {
+            let mut pct = sample();
+            seal(&mut pct);
+            pct.insert(name, entry);
+            let err = verify(&pct).unwrap_err().to_string();
+            assert!(err.contains(want), "tampering {name}: {err}");
+            assert!(err.contains("corrupted"), "tampering {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn dropped_and_extra_entries_fail_the_count_check() {
+        let mut pct = sample();
+        seal(&mut pct);
+        let mut dropped = pct.clone();
+        dropped.remove("q.w.scales");
+        let err = verify(&dropped).unwrap_err().to_string();
+        assert!(err.contains("'integrity'"), "{err}");
+
+        let mut extra = pct.clone();
+        extra.insert("q.w.smuggled", Entry::u64(&[1], vec![7]));
+        assert!(verify(&extra).is_err());
+    }
+
+    #[test]
+    fn unsupported_versions_are_rejected() {
+        let mut pct = sample();
+        seal(&mut pct);
+        pct.insert("integrity.version", Entry::u64(&[1], vec![99]));
+        let err = verify(&pct).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+}

@@ -18,8 +18,18 @@
 //!
 //! The python writer lives in `python/compile/pct.py`; the round-trip is
 //! integration-tested from both sides.
+//!
+//! Quantized artifacts additionally carry **integrity entries**
+//! ([`integrity`], DESIGN.md §17): a format version, per-section CRC32
+//! checksums, and a total entry count, written by
+//! [`artifact::save_quantized`] and verified by
+//! [`artifact::load_quantized`] — a flipped byte fails the load with an
+//! error naming the damaged section instead of serving wrong logits.
+//! Plain tensor containers (and python-written files) carry no integrity
+//! entries and verify trivially.
 
 pub mod artifact;
+pub mod integrity;
 mod pct;
 
 pub use artifact::{load_quantized, save_quantized};

@@ -136,6 +136,11 @@ impl Pct {
         self.entries.contains_key(name)
     }
 
+    /// Remove an entry by name, returning it if present.
+    pub fn remove(&mut self, name: &str) -> Option<Entry> {
+        self.entries.remove(name)
+    }
+
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }
@@ -208,11 +213,20 @@ impl Pct {
             for _ in 0..ndim {
                 dims.push(r.u64()?);
             }
-            let n: u64 = dims.iter().product();
-            let n = n as usize;
+            // corrupt dims must fail the parse — never overflow into a
+            // panic or wrap into a bogus short read
+            let n: u64 = dims
+                .iter()
+                .try_fold(1u64, |acc, &d| acc.checked_mul(d))
+                .with_context(|| format!("entry '{name}': element count overflows"))?;
+            let nbytes = |width: u64| -> Result<usize> {
+                n.checked_mul(width)
+                    .and_then(|b| usize::try_from(b).ok())
+                    .with_context(|| format!("entry '{name}': byte length overflows"))
+            };
             let data = match dtype {
                 0 => {
-                    let raw = r.take(n * 4)?;
+                    let raw = r.take(nbytes(4)?)?;
                     PctData::F32(
                         raw.chunks_exact(4)
                             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -220,7 +234,7 @@ impl Pct {
                     )
                 }
                 1 => {
-                    let raw = r.take(n * 4)?;
+                    let raw = r.take(nbytes(4)?)?;
                     PctData::U32(
                         raw.chunks_exact(4)
                             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -228,7 +242,7 @@ impl Pct {
                     )
                 }
                 2 => {
-                    let raw = r.take(n * 8)?;
+                    let raw = r.take(nbytes(8)?)?;
                     PctData::U64(
                         raw.chunks_exact(8)
                             .map(|c| {
@@ -240,7 +254,7 @@ impl Pct {
                     )
                 }
                 3 => {
-                    let raw = r.take(n * 4)?;
+                    let raw = r.take(nbytes(4)?)?;
                     PctData::I32(
                         raw.chunks_exact(4)
                             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -344,6 +358,22 @@ mod tests {
         for cut in [bytes.len() - 1, bytes.len() / 2, 6] {
             assert!(Pct::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn rejects_overflowing_dims_without_panicking() {
+        // hand-built header whose dims product overflows u64 — a shape a
+        // flipped byte in a real file can produce
+        let mut b = Vec::new();
+        b.extend_from_slice(b"PCT1");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'w');
+        b.push(0); // f32
+        b.push(2); // ndim
+        b.extend_from_slice(&(1u64 << 62).to_le_bytes());
+        b.extend_from_slice(&16u64.to_le_bytes());
+        assert!(Pct::from_bytes(&b).is_err(), "overflowing dims must be a parse error");
     }
 
     #[test]

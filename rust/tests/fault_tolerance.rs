@@ -1,0 +1,449 @@
+//! Chaos suite for the fault-tolerance layer (DESIGN.md §17).
+//!
+//! The contract under test: a panic or error inside one slot's supervised
+//! step fails exactly that request — `FinishReason::Faulted`, SSE
+//! `event: error`, fault counters incremented — while every *other*
+//! in-flight request finishes token-for-token identical to a fault-free
+//! run, at every cell of shards {1,2} × kv_page {0,4} × kv_quant {0,4}.
+//! The poisoned slot is quarantined and its KV state rebuilt, so the
+//! no-leak page audit still balances afterwards and the slot is reusable.
+//! Fault counters obey the §12 determinism contract (invariant under
+//! `PALLAS_THREADS` — named CI steps run this suite at 1 and 4 threads).
+//!
+//! Plus the degradation surfaces: deadlines expiring mid-prefill reclaim
+//! the slot as `TimedOut`, dribbling clients get `408` without wedging a
+//! handler, and `/readyz` flips 503 while draining as `/healthz` stays up.
+//!
+//! Injected panics print through the default panic hook — the "thread
+//! panicked: injected fault ..." lines in this suite's output are the
+//! tests working, not failing.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use pcdvq::coordinator::ingress::{http_request, parse_sse, post_generate};
+use pcdvq::coordinator::{
+    Batcher, BatcherConfig, FaultMode, FaultPlan, FinishReason, GenRequest, GenResponse, Ingress,
+    IngressConfig, Server, ServingWeights,
+};
+use pcdvq::model::QuantizedGpt;
+use pcdvq::proptest::{synthetic_tinygpt, tiny_pcdvq};
+
+fn quantized(name: &str) -> QuantizedGpt {
+    let model = synthetic_tinygpt("pcdvq_fault_tolerance_tests", name, 23);
+    QuantizedGpt::quantize(&model, &tiny_pcdvq())
+}
+
+fn prompt_bytes(n: usize, salt: usize) -> Vec<u8> {
+    (0..n).map(|i| ((i * 11 + salt * 17 + 3) % 251) as u8).collect()
+}
+
+/// One cell of the fault matrix (same axes as `tests/sharded_decode.rs`).
+struct Cell {
+    shards: usize,
+    kv_page: usize,
+    kv_quant: u32,
+}
+
+impl Cell {
+    fn tag(&self) -> String {
+        format!("shards={} kv_page={} kv_quant={}", self.shards, self.kv_page, self.kv_quant)
+    }
+}
+
+/// Serve pre-queued requests through the continuous loop at one cell,
+/// optionally with an armed fault plan. All requests are queued before the
+/// loop starts and `max_slots >= reqs.len()`, so admission order, slot
+/// assignment, and `request_rng` seeding are identical with and without
+/// the fault — exactly the setup the isolation contract is stated for.
+fn run_continuous(
+    q: &QuantizedGpt,
+    cell: &Cell,
+    threads: Option<usize>,
+    fault: Option<FaultPlan>,
+    reqs: &[(Vec<u8>, usize, f32)],
+) -> (Vec<GenResponse>, Server) {
+    let mut b = Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+        .shards(cell.shards)
+        .kv_page(cell.kv_page)
+        .kv_quant(cell.kv_quant)
+        .max_slots(reqs.len())
+        .prefill_chunk(5);
+    if let Some(t) = threads {
+        b = b.threads(t);
+    }
+    if let Some(plan) = fault {
+        b = b.fault(plan);
+    }
+    let mut server = b.build().unwrap();
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let mut rxs = Vec::new();
+    for (p, max_new, temp) in reqs {
+        let (rtx, rrx) = channel();
+        batcher.push(GenRequest::builder(p.clone()).max_new(*max_new).temperature(*temp).build(rtx));
+        rxs.push(rrx);
+    }
+    server.serve_continuous(&mut batcher).unwrap();
+    let resps = rxs.iter().map(|r| r.recv().expect("response missing")).collect();
+    (resps, server)
+}
+
+/// The traffic mix every matrix cell serves: four requests, slot i ==
+/// request i (pre-queued, max_slots 4). Slot 1 is the fault target; its
+/// 6-token prompt prefills in two chunk-5 steps, so step 4 lands
+/// mid-decode and past the KV-codec freeze point on every topology.
+fn chaos_reqs() -> Vec<(Vec<u8>, usize, f32)> {
+    vec![
+        (prompt_bytes(3, 0), 8, 0.0),
+        (prompt_bytes(6, 1), 10, 0.0), // the victim
+        (prompt_bytes(9, 2), 8, 0.7),  // sampled: catches RNG-stream perturbation
+        (prompt_bytes(12, 3), 6, 0.0),
+    ]
+}
+
+const VICTIM: usize = 1;
+const FAULT_STEP: u64 = 4;
+
+/// Assert the page audit balances with every slot idle — no leaks, no
+/// pages stranded on the quarantined slot's chain.
+fn assert_no_leaks(server: &Server, cell: &Cell, what: &str) {
+    if cell.kv_page == 0 {
+        assert!(server.kv_page_audit().is_none(), "{}: dense cell has no audit", cell.tag());
+        return;
+    }
+    let audit = server.kv_page_audit().expect("paged cell audits");
+    assert_eq!(audit.slot_chain_pages, 0, "{} at {}: idle slots hold pages", what, cell.tag());
+    assert_eq!(
+        audit.created,
+        audit.slot_free_pages + audit.prefix_pages + audit.dropped,
+        "{} at {}: page leak — audit was {audit:?}",
+        what,
+        cell.tag()
+    );
+}
+
+/// The headline isolation matrix: at every cell of shards {1,2} ×
+/// kv_page {0,4} × kv_quant {0,4}, for both fault modes, a fault injected
+/// into slot 1 mid-decode fails exactly that request (`Faulted`, its
+/// tokens a strict prefix of the fault-free run's) while the other three
+/// requests finish byte-identical — same tokens, steps, seq, and
+/// `Done` — and the fault counter reads exactly one (kind, node) hit.
+/// Afterwards the quarantined slot's pages are back in the pool.
+#[test]
+fn faults_isolate_the_affected_request_across_the_topology_matrix() {
+    let q = quantized("matrix");
+    let reqs = chaos_reqs();
+
+    for shards in [1usize, 2] {
+        for kv_page in [0usize, 4] {
+            for kv_quant in [0u32, 4] {
+                let cell = Cell { shards, kv_page, kv_quant };
+                let (baseline, b_server) = run_continuous(&q, &cell, None, None, &reqs);
+                assert_eq!(b_server.metrics.faults_total(), 0, "{}: clean run", cell.tag());
+                assert!(
+                    baseline.iter().all(|r| r.finish == FinishReason::Done),
+                    "{}: clean run all Done",
+                    cell.tag()
+                );
+
+                // inject on the *last* node so sharded supervision is
+                // exercised deep in the pipeline, not just at its mouth
+                let node = shards - 1;
+                for mode in [FaultMode::Panic, FaultMode::Corrupt] {
+                    let plan = FaultPlan::new(mode, node, VICTIM, FAULT_STEP);
+                    let (resps, server) =
+                        run_continuous(&q, &cell, None, Some(plan), &reqs);
+                    let tag = format!("{} mode={mode:?}", cell.tag());
+
+                    let victim = &resps[VICTIM];
+                    assert_eq!(victim.finish, FinishReason::Faulted, "{tag}: victim finish");
+                    assert!(
+                        victim.generated.len() < baseline[VICTIM].generated.len(),
+                        "{tag}: victim was cut short"
+                    );
+                    assert!(
+                        baseline[VICTIM].generated.starts_with(&victim.generated),
+                        "{tag}: victim tokens diverged before the fault"
+                    );
+
+                    for i in [0usize, 2, 3] {
+                        assert_eq!(
+                            resps[i].generated, baseline[i].generated,
+                            "{tag}: req {i} tokens perturbed by the fault"
+                        );
+                        assert_eq!(resps[i].steps, baseline[i].steps, "{tag}: req {i} steps");
+                        assert_eq!(resps[i].seq, baseline[i].seq, "{tag}: req {i} seq");
+                        assert_eq!(
+                            resps[i].finish,
+                            FinishReason::Done,
+                            "{tag}: req {i} finish"
+                        );
+                    }
+
+                    let kind = match mode {
+                        FaultMode::Panic => "panic",
+                        FaultMode::Corrupt => "error",
+                    };
+                    assert_eq!(
+                        server.metrics.faults(),
+                        &[(kind.to_string(), node, 1)],
+                        "{tag}: fault counter"
+                    );
+                    assert_eq!(server.metrics.requests, reqs.len() as u64, "{tag}: all respond");
+                    assert_no_leaks(&server, &cell, "post-fault");
+                }
+            }
+        }
+    }
+}
+
+/// §12 extended to faults: the same injected panic at 1 and 4 worker
+/// threads yields identical per-request outputs AND identical
+/// `(kind, node)` fault counters — supervision happens in the workers,
+/// but the fold (and the counter) stays on the coordinator in slot order.
+#[test]
+fn fault_counters_and_outputs_are_thread_invariant() {
+    let q = quantized("threads");
+    let reqs = chaos_reqs();
+    let cell = Cell { shards: 2, kv_page: 4, kv_quant: 4 };
+
+    let plan = || Some(FaultPlan::new(FaultMode::Panic, 1, VICTIM, FAULT_STEP));
+    let (r1, s1) = run_continuous(&q, &cell, Some(1), plan(), &reqs);
+    let (r4, s4) = run_continuous(&q, &cell, Some(4), plan(), &reqs);
+
+    for (i, (a, b)) in r1.iter().zip(&r4).enumerate() {
+        assert_eq!(a.generated, b.generated, "req {i}: tokens moved with thread count");
+        assert_eq!(a.steps, b.steps, "req {i}: steps moved with thread count");
+        assert_eq!(a.finish, b.finish, "req {i}: finish moved with thread count");
+    }
+    assert_eq!(r1[VICTIM].finish, FinishReason::Faulted, "victim faulted at 1 thread");
+    assert_eq!(s1.metrics.faults(), s4.metrics.faults(), "fault counters moved with threads");
+    assert_eq!(s1.metrics.faults_total(), 1);
+    assert_eq!(s1.metrics.decode_steps, s4.metrics.decode_steps, "decode steps");
+    assert_eq!(s1.metrics.tokens_generated, s4.metrics.tokens_generated, "tokens");
+}
+
+/// Over the wire, a faulted request terminates its SSE stream with
+/// `event: error` — never a silently truncated or hung stream — and the
+/// fault shows up in `/metrics` as `pallas_faults_total{kind,node}`.
+#[test]
+fn faulted_stream_terminates_with_an_sse_error_event() {
+    let q = quantized("sse");
+    let server = Server::builder(ServingWeights::CodesResident(Box::new(q)))
+        .max_slots(2)
+        .prefill_chunk(16)
+        .fault(FaultPlan::new(FaultMode::Corrupt, 0, 0, 3))
+        .build()
+        .unwrap();
+    let ingress =
+        Ingress::spawn(server, BatcherConfig::default(), IngressConfig::default(), "127.0.0.1:0")
+            .unwrap();
+    let addr = ingress.addr();
+
+    // 2-byte prompt prefills in one chunk-16 step; the fault lands a few
+    // decode steps in, with the stream already flowing
+    let resp = post_generate(addr, "hi", 64, 0.0, "", 0).unwrap();
+    assert_eq!(resp.status, 200, "SSE streams start 200; body: {}", resp.body);
+    assert_eq!(resp.header("content-type"), Some("text/event-stream"));
+    assert!(resp.body.contains("event: error"), "no error event in: {}", resp.body);
+    let events = parse_sse(&resp.body);
+    let last = events.last().expect("stream has events");
+    assert_eq!(last.event, "error", "stream must END on the error event: {events:?}");
+    assert!(last.data.contains("\"error\":\"faulted\""), "error payload: {}", last.data);
+    assert!(!events.iter().any(|e| e.event == "usage"), "no usage record for a faulted stream");
+
+    // the mirror publishes at the end of the scheduler iteration — poll
+    // rather than racing it
+    let t0 = Instant::now();
+    let needle = "pallas_faults_total{kind=\"error\",node=\"0\"} 1";
+    loop {
+        let scrape = http_request(addr, "GET", "/metrics", None).unwrap();
+        if scrape.body.contains(needle) {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "fault never scraped: {}", scrape.body);
+        std::thread::yield_now();
+    }
+
+    // the slot was quarantined and rebuilt: the next request serves fine
+    let resp = post_generate(addr, "hi again", 4, 0.0, "", 0).unwrap();
+    assert_eq!(resp.status, 200);
+    let events = parse_sse(&resp.body);
+    assert_eq!(events.last().unwrap().event, "usage", "post-fault stream completes");
+
+    let server = ingress.shutdown().unwrap();
+    assert_eq!(server.metrics.faults_total(), 1);
+}
+
+/// Slowloris: a client that sends half a request line and then stalls is
+/// cut off with `408 Request Timeout` once the read budget expires — it
+/// cannot wedge a handler — and the server keeps serving normal traffic.
+#[test]
+fn slowloris_dribbler_gets_408_and_the_handler_survives() {
+    let q = quantized("slowloris");
+    let server = Server::builder(ServingWeights::CodesResident(Box::new(q)))
+        .max_slots(2)
+        .prefill_chunk(16)
+        .build()
+        .unwrap();
+    let cfg = IngressConfig {
+        read_timeout: Duration::from_millis(200),
+        ..IngressConfig::default()
+    };
+    let ingress =
+        Ingress::spawn(server, BatcherConfig::default(), cfg, "127.0.0.1:0").unwrap();
+    let addr = ingress.addr();
+
+    let mut dribbler = TcpStream::connect(addr).unwrap();
+    dribbler.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // half a request line, then silence — the server's read blocks until
+    // its 200ms budget expires
+    dribbler.write_all(b"POST /v1/gen").unwrap();
+    dribbler.flush().unwrap();
+    let mut raw = String::new();
+    dribbler.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 408"), "expected 408, got: {raw}");
+    assert!(raw.contains("read timed out"), "timeout body: {raw}");
+
+    // a header-phase dribbler is cut off the same way
+    let mut dribbler = TcpStream::connect(addr).unwrap();
+    dribbler.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    dribbler.write_all(b"POST /v1/generate HTTP/1.1\r\ncontent-le").unwrap();
+    dribbler.flush().unwrap();
+    let mut raw = String::new();
+    dribbler.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 408"), "header dribbler: {raw}");
+
+    // the handlers survived: normal traffic still flows
+    let resp = post_generate(addr, "hello", 4, 0.0, "", 0).unwrap();
+    assert_eq!(resp.status, 200, "server wedged after slowloris: {}", resp.body);
+    assert_eq!(parse_sse(&resp.body).last().unwrap().event, "usage");
+
+    let server = ingress.shutdown().unwrap();
+    assert_eq!(server.metrics.requests, 1, "dribblers never reached the scheduler");
+}
+
+/// `/healthz` is liveness (always 200 while the process accepts), and
+/// `/readyz` is readiness: 200 once the scheduler is looping, 503 with a
+/// reason once draining begins — while `/healthz` stays green so an
+/// orchestrator restarts nothing during a graceful drain.
+#[test]
+fn readyz_flips_through_the_serving_lifecycle() {
+    let q = quantized("readyz");
+    let server = Server::builder(ServingWeights::CodesResident(Box::new(q)))
+        .max_slots(2)
+        .prefill_chunk(16)
+        .build()
+        .unwrap();
+    let ingress =
+        Ingress::spawn(server, BatcherConfig::default(), IngressConfig::default(), "127.0.0.1:0")
+            .unwrap();
+    let addr = ingress.addr();
+
+    // starting → ready: poll until the scheduler's first iteration flips
+    // the latch (any 503 before that must say why)
+    let t0 = Instant::now();
+    loop {
+        let r = http_request(addr, "GET", "/readyz", None).unwrap();
+        if r.status == 200 {
+            assert!(r.body.contains("ready"), "ready body: {}", r.body);
+            break;
+        }
+        assert_eq!(r.status, 503, "readyz is 200 or 503, got {}", r.status);
+        assert!(r.body.contains("starting"), "pre-ready body: {}", r.body);
+        assert!(t0.elapsed() < Duration::from_secs(10), "server never became ready");
+        std::thread::yield_now();
+    }
+    assert_eq!(http_request(addr, "GET", "/healthz", None).unwrap().status, 200);
+
+    let resp = post_generate(addr, "warm", 4, 0.0, "", 0).unwrap();
+    assert_eq!(resp.status, 200);
+
+    ingress.begin_drain();
+    let r = http_request(addr, "GET", "/readyz", None).unwrap();
+    assert_eq!(r.status, 503, "draining server must fail readiness");
+    assert!(r.body.contains("draining"), "drain body: {}", r.body);
+    assert_eq!(
+        http_request(addr, "GET", "/healthz", None).unwrap().status,
+        200,
+        "liveness stays green through a drain"
+    );
+
+    ingress.shutdown().unwrap();
+}
+
+/// A deadline that expires mid-prefill finishes the request as `TimedOut`
+/// with its slot and pages reclaimed — the no-leak audit balances — and
+/// the very next admission reuses the slot and decodes exactly what a
+/// solo greedy run produces.
+#[test]
+fn deadline_expiring_mid_prefill_reclaims_the_slot() {
+    let q = quantized("deadline");
+    let build = || {
+        Server::builder(ServingWeights::CodesResident(Box::new(q.clone())))
+            .max_slots(1)
+            .prefill_chunk(1)
+            .kv_page(4)
+            .build()
+            .unwrap()
+    };
+
+    // solo reference for the survivor (greedy, so seq-seeded RNG is moot)
+    let follow_up = prompt_bytes(8, 1);
+    let mut server = build();
+    let (tx, rx) = channel::<GenRequest>();
+    drop(tx);
+    let mut batcher = Batcher::new(rx, BatcherConfig::default());
+    let (rtx, rrx) = channel();
+    batcher.push(GenRequest::builder(follow_up.clone()).max_new(6).build(rtx));
+    server.serve_continuous(&mut batcher).unwrap();
+    let solo = rrx.recv().unwrap().generated;
+
+    // deadlines at 0ms (expires before the first chunk) and 1ms (a
+    // 60-chunk prefill plus thousands of decode steps dwarfs it, so it
+    // expires somewhere inside prefill): both must reclaim identically
+    for deadline in [Duration::ZERO, Duration::from_millis(1)] {
+        let mut server = build();
+        let (tx, rx) = channel::<GenRequest>();
+        drop(tx);
+        let mut batcher = Batcher::new(rx, BatcherConfig::default());
+        let (dtx, drx) = channel();
+        batcher.push(
+            GenRequest::builder(prompt_bytes(60, 0))
+                .max_new(4000)
+                .deadline_in(deadline)
+                .build(dtx),
+        );
+        let (ftx, frx) = channel();
+        batcher.push(GenRequest::builder(follow_up.clone()).max_new(6).build(ftx));
+        server.serve_continuous(&mut batcher).unwrap();
+
+        let doomed = drx.recv().unwrap();
+        assert_eq!(
+            doomed.finish,
+            FinishReason::TimedOut,
+            "deadline {deadline:?}: 4000 tokens cannot beat it"
+        );
+        assert!(doomed.generated.len() < 4000, "deadline {deadline:?}: cut short");
+
+        let survivor = frx.recv().unwrap();
+        assert_eq!(survivor.finish, FinishReason::Done, "deadline {deadline:?}");
+        assert_eq!(
+            survivor.generated, solo,
+            "deadline {deadline:?}: reused slot diverged from the solo run"
+        );
+
+        assert!(server.metrics.timeouts >= 1, "deadline {deadline:?}: timeout counted");
+        let audit = server.kv_page_audit().expect("paged server audits");
+        assert_eq!(audit.slot_chain_pages, 0, "deadline {deadline:?}: slot still holds pages");
+        assert_eq!(
+            audit.created,
+            audit.slot_free_pages + audit.prefix_pages + audit.dropped,
+            "deadline {deadline:?}: page leak — audit was {audit:?}"
+        );
+    }
+}

@@ -1,8 +1,13 @@
 //! Cross-language IO: rust reads what python wrote (and vice versa via a
-//! subprocess), plus the trained-artifact containers themselves.
+//! subprocess), plus the trained-artifact containers themselves — and the
+//! integrity seal on quantized artifacts (DESIGN.md §17): a flipped byte
+//! anywhere in a saved `.pctq` fails the load with an error naming the
+//! damaged section, never a silent wrong-logits model.
 
 use pcdvq::config::Paths;
-use pcdvq::io::{Entry, Pct};
+use pcdvq::io::{load_quantized, save_quantized, Entry, Pct};
+use pcdvq::model::QuantizedGpt;
+use pcdvq::proptest::{synthetic_tinygpt, tiny_pcdvq};
 
 #[test]
 fn rust_reads_python_written_containers() {
@@ -62,6 +67,80 @@ fn python_reads_rust_written_container() {
         "python failed to read rust PCT1: {}\n{}",
         stdout,
         String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Save a real quantized tinygpt and return (artifact bytes, path dir).
+fn saved_artifact(name: &str) -> (Vec<u8>, std::path::PathBuf) {
+    let model = synthetic_tinygpt("pcdvq_xlang_integrity", name, 23);
+    let q = QuantizedGpt::quantize(&model, &tiny_pcdvq());
+    let dir = std::env::temp_dir().join("pcdvq_xlang_integrity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.pctq"));
+    save_quantized(&q, &path).unwrap();
+    (std::fs::read(&path).unwrap(), dir)
+}
+
+/// Tampering with a section's payload without re-sealing is rejected on
+/// load with an error that names the damaged section — here a codebook
+/// entry, so the message must say `codebooks`.
+#[test]
+fn tampered_codebook_is_rejected_naming_its_section() {
+    let (_, dir) = saved_artifact("tamper");
+    let path = dir.join("tamper.pctq");
+
+    let mut pct = Pct::load(&path).unwrap();
+    let cb = pct
+        .names()
+        .find(|n| n.starts_with("codebook."))
+        .expect("quantized artifact carries codebooks")
+        .to_string();
+    let entry = pct.get(&cb).unwrap();
+    let dims = entry.dims.clone();
+    let mut data = entry.as_f32().unwrap().to_vec();
+    data[0] += 0.5;
+    pct.insert(&cb, Entry::f32(&dims, data));
+    let evil = dir.join("tamper_evil.pctq");
+    pct.save(&evil).unwrap();
+
+    let err = load_quantized(&evil, "x").unwrap_err().to_string();
+    assert!(err.contains("section 'codebooks'"), "should name the section: {err}");
+    assert!(err.contains("corrupted"), "should say corrupted: {err}");
+    // the untampered original still loads
+    load_quantized(&path, "x").unwrap();
+}
+
+/// Flip one byte at offsets spread through the whole file: every variant
+/// must fail the load (CRC mismatch, count mismatch, or a parse error for
+/// structural bytes) — and the CRC path's message names a section.
+#[test]
+fn any_flipped_byte_fails_the_load() {
+    let (bytes, dir) = saved_artifact("byteflip");
+    assert!(bytes.len() > 64, "artifact suspiciously small: {} bytes", bytes.len());
+
+    let mut named_a_section = 0usize;
+    let n_probes = 24usize;
+    for i in 0..n_probes {
+        // skew probes toward the front (header, names, metadata) but walk
+        // the payload tail too
+        let offset = (i * (bytes.len() - 1)) / (n_probes - 1);
+        let mut evil = bytes.clone();
+        evil[offset] ^= 0x40;
+        let path = dir.join(format!("byteflip_{offset}.pctq"));
+        std::fs::write(&path, &evil).unwrap();
+        let err = match load_quantized(&path, "x") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("flipped byte at offset {offset} loaded clean"),
+        };
+        if err.contains("section '") && err.contains("corrupted") {
+            named_a_section += 1;
+        }
+    }
+    // deep-payload flips land in CRC territory, so most probes must have
+    // produced the structured section-naming error (not just parse noise)
+    assert!(
+        named_a_section >= n_probes / 2,
+        "only {named_a_section}/{n_probes} probes named a section"
     );
 }
 
